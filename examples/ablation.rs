@@ -1,0 +1,67 @@
+//! Rank/bin ablation (interactive version of Fig. M.1's sweep; the full
+//! series is `bench_figm1_ablation`).
+//!
+//! ```bash
+//! cargo run --release --example ablation -- --n 8192 --ranks 64,128,256 --bins 2,16,64
+//! ```
+//!
+//! For each (r, B) prints runtime and ‖O − Ô‖_max against exact attention,
+//! showing the paper's time-accuracy trade-off (Sec. 2.5: larger B =
+//! faster, slightly less accurate).
+
+use std::time::Instant;
+use wildcat::attention::{exact_attention, wildcat_attention, WildcatParams};
+use wildcat::linalg::norms::max_abs_diff;
+use wildcat::rng::Rng;
+use wildcat::util::cli::Args;
+use wildcat::util::table::Table;
+use wildcat::workload::gaussian_qkv;
+
+fn main() {
+    let args = Args::from_env();
+    let n = args.get_parse::<usize>("n", 8192);
+    let d = args.get_parse::<usize>("d", 64);
+    let seed = args.get_parse::<u64>("seed", 0);
+    let ranks: Vec<usize> = args.get_list("ranks", &[64, 128, 256]);
+    let bins: Vec<usize> = args.get_list("bins", &[2, 16, 64]);
+    let seeds = args.get_parse::<u64>("seeds", 3);
+
+    let mut rng = Rng::seed_from(seed);
+    let w = gaussian_qkv(&mut rng, n, n, d, d);
+    println!("computing exact attention baseline at n={n}...");
+    let t0 = Instant::now();
+    let exact = exact_attention(&w.q, &w.k, &w.v, w.beta);
+    let t_exact = t0.elapsed().as_secs_f64();
+    println!("exact: {:.1} ms", t_exact * 1e3);
+
+    let mut table = Table::new(
+        &format!("WildCat (r, B) ablation at n={n}, d={d} ({seeds} seeds)"),
+        &["r", "B", "time", "speed-up", "err_max"],
+    );
+    for &r in &ranks {
+        for &b in &bins {
+            if b > r {
+                continue;
+            }
+            let mut t_sum = 0.0;
+            let mut err_sum = 0.0;
+            for s in 0..seeds {
+                let mut run_rng = Rng::seed_from(seed + 100 + s);
+                let params = WildcatParams { rank: r, bins: b, beta: Some(w.beta as f64) };
+                let t1 = Instant::now();
+                let approx = wildcat_attention(&w.q, &w.k, &w.v, &params, &mut run_rng);
+                t_sum += t1.elapsed().as_secs_f64();
+                err_sum += max_abs_diff(&approx, &exact);
+            }
+            let t_avg = t_sum / seeds as f64;
+            table.add_row(vec![
+                r.to_string(),
+                b.to_string(),
+                format!("{:.1} ms", t_avg * 1e3),
+                format!("{:.2}x", t_exact / t_avg),
+                format!("{:.3e}", err_sum / seeds as f64),
+            ]);
+        }
+    }
+    table.print();
+}

@@ -1,0 +1,99 @@
+//! Long-context QA under KV-cache compression — the interactive version
+//! of the Tab. 4 benchmark (the full table is `bench_table4_kvcache`).
+//!
+//! ```bash
+//! cargo run --release --example longcontext_qa -- \
+//!     --compressors compresskv,snapkv,uniform --budget 96 --trials 8
+//! ```
+//!
+//! Evaluates the chosen compression policies on the 13-task suite with the
+//! build-time-trained LM and prints per-task scores.
+
+use wildcat::kvcache::{
+    BalanceKv, CompressKvPolicy, KvCompressor, PyramidKv, SnapKv, StreamingLlm, UniformKv,
+};
+use wildcat::model::{generate::greedy_decode_with_query, ModelConfig, Transformer, WeightFile};
+use wildcat::rng::Rng;
+use wildcat::util::cli::Args;
+use wildcat::util::table::Table;
+use wildcat::workload::tasks::{score, task_suite};
+
+fn by_name(name: &str) -> Box<dyn KvCompressor> {
+    match name {
+        "compresskv" => Box::new(CompressKvPolicy::default()),
+        "streaming" => Box::new(StreamingLlm),
+        "snapkv" => Box::new(SnapKv::default()),
+        "pyramidkv" => Box::new(PyramidKv::default()),
+        "balancekv" => Box::new(BalanceKv),
+        "uniform" => Box::new(UniformKv),
+        other => panic!("unknown compressor {other:?}"),
+    }
+}
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env();
+    let artifacts = args.get_or("artifacts", "artifacts");
+    let budget = args.get_parse::<usize>("budget", 96);
+    let context = args.get_parse::<usize>("context", 256);
+    let trials = args.get_parse::<usize>("trials", 8);
+    let seed = args.get_parse::<u64>("seed", 0);
+    let names: Vec<String> = args.get_list(
+        "compressors",
+        &["compresskv".to_string(), "snapkv".to_string(), "uniform".to_string()],
+    );
+
+    let w = WeightFile::load(format!("{artifacts}/weights.bin"))
+        .expect("weights.bin missing — run `make artifacts` first");
+    let model = Transformer::from_weights(&w, ModelConfig::default())?;
+
+    let suite = task_suite();
+    let mut header: Vec<&str> = vec!["method"];
+    let task_names: Vec<String> = suite.iter().map(|t| t.name.to_string()).collect();
+    for tn in &task_names {
+        header.push(tn);
+    }
+    header.push("average");
+    let mut table = Table::new(
+        &format!("long-context QA, budget={budget}, context={context}, {trials} trials/task"),
+        &header,
+    );
+
+    for name in &names {
+        let comp = by_name(name);
+        let mut row = vec![comp.name().to_string()];
+        let mut total = 0.0;
+        for task in &suite {
+            // fixed per-task seed: every method sees identical instances
+            let mut task_rng = Rng::seed_from(seed ^ fxhash(task.name));
+            let mut s = 0.0;
+            for _ in 0..trials {
+                let inst = task.kind.generate(&mut task_rng, context, model.cfg.vocab as u32);
+                let mut decode_rng = Rng::seed_from(seed + 1);
+                let out = greedy_decode_with_query(
+                    &model,
+                    &inst.context,
+                    &inst.query,
+                    inst.expected.len(),
+                    budget,
+                    comp.as_ref(),
+                    &mut decode_rng,
+                );
+                s += score(&inst.expected, &out.tokens);
+            }
+            let pct = 100.0 * s / trials as f64;
+            total += pct;
+            row.push(format!("{pct:.1}"));
+        }
+        row.push(format!("{:.1}", total / suite.len() as f64));
+        table.add_row(row);
+    }
+    table.print();
+    Ok(())
+}
+
+/// Tiny deterministic string hash for per-task seeds.
+fn fxhash(s: &str) -> u64 {
+    s.bytes().fold(0xcbf29ce484222325u64, |h, b| {
+        (h ^ b as u64).wrapping_mul(0x100000001b3)
+    })
+}

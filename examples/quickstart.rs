@@ -1,0 +1,72 @@
+//! Quickstart: WildCat attention as a drop-in replacement.
+//!
+//! ```bash
+//! cargo run --release --example quickstart -- --n 4096 --rank 96 --bins 8
+//! ```
+//!
+//! Generates a synthetic attention problem, runs exact attention and
+//! WILDCAT (Alg. 4), and reports the speed-up and the paper's error
+//! metric ‖O − Ô‖_max, plus the COMPRESSKV coreset that produced it.
+
+use std::time::Instant;
+use wildcat::attention::{
+    compress_kv, exact_attention, wildcat_attention, CompressOpts, WildcatParams,
+};
+use wildcat::linalg::norms::{max_abs, max_abs_diff};
+use wildcat::rng::Rng;
+use wildcat::util::cli::Args;
+use wildcat::workload::gaussian_qkv;
+
+fn main() {
+    let args = Args::from_env();
+    let n = args.get_parse::<usize>("n", 4096);
+    let d = args.get_parse::<usize>("d", 64);
+    let rank = args.get_parse::<usize>("rank", 96);
+    let bins = args.get_parse::<usize>("bins", 8);
+    let seed = args.get_parse::<u64>("seed", 0);
+
+    let mut rng = Rng::seed_from(seed);
+    let w = gaussian_qkv(&mut rng, n, n, d, d);
+    println!("workload: {} (beta = {:.4})", w.label, w.beta);
+
+    // --- exact attention ------------------------------------------------
+    let t0 = Instant::now();
+    let exact = exact_attention(&w.q, &w.k, &w.v, w.beta);
+    let t_exact = t0.elapsed();
+    println!("exact attention:   {:>8.1} ms", t_exact.as_secs_f64() * 1e3);
+
+    // --- WildCat ----------------------------------------------------------
+    let params = WildcatParams { rank, bins, beta: Some(w.beta as f64) };
+    let t1 = Instant::now();
+    let approx = wildcat_attention(&w.q, &w.k, &w.v, &params, &mut rng);
+    let t_wc = t1.elapsed();
+    println!(
+        "wildcat (r={rank}, B={bins}): {:>8.1} ms   speed-up {:.2}x",
+        t_wc.as_secs_f64() * 1e3,
+        t_exact.as_secs_f64() / t_wc.as_secs_f64()
+    );
+    let err = max_abs_diff(&approx, &exact);
+    println!(
+        "‖O − Ô‖_max = {err:.4e}   (‖V‖_max = {:.3}, relative {:.2e})",
+        max_abs(&w.v),
+        err / max_abs(&w.v)
+    );
+
+    // --- peek inside the coreset -----------------------------------------
+    let opts = CompressOpts {
+        rank,
+        bins,
+        beta: w.beta as f64,
+        r_q: w.q.max_row_norm(),
+    };
+    let c = compress_kv(&w.k, &w.v, &opts, &mut rng);
+    println!(
+        "coreset: {} weighted keys summarise {} tokens ({:.1}x memory reduction)",
+        c.rank(),
+        c.source_len,
+        (c.source_len * (d + d)) as f64 / c.footprint_floats() as f64
+    );
+    let wmin = c.weights.iter().cloned().fold(f64::INFINITY, f64::min);
+    let wmax = c.weights.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+    println!("Nystrom weight range: [{wmin:.3}, {wmax:.3}]");
+}

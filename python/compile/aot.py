@@ -1,0 +1,198 @@
+"""AOT export: lower every serving entry point to HLO *text* and dump the
+trained weights + a manifest for the Rust runtime.
+
+HLO text (not `.serialize()`) is the interchange format: jax ≥ 0.5 emits
+HloModuleProtos with 64-bit instruction ids that the image's
+xla_extension 0.5.1 rejects (`proto.id() <= INT_MAX`); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Exports (see DESIGN.md §1):
+  * `wtd_attn_*.hlo.txt`    — standalone Layer-1 WTDATTN kernel
+  * `exact_attn_*.hlo.txt`  — standalone blocked exact-attention kernel
+  * `model_prefill_*.hlo.txt` / `model_decode_*.hlo.txt` — the serving LM
+    (weights baked in as constants)
+  * `weights.bin`           — flat tensor dump for the native Rust model
+  * `manifest.json`         — name → file/shape index
+
+Usage: `python -m compile.aot --out ../artifacts` (from python/).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import struct
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+from .kernels.exact_attn import exact_attention_pallas
+from .kernels.wtd_attn import wtd_attention_pallas
+
+PREFILL_LENS = (128, 512)
+DECODE_CAPS = (64, 192, 320)
+TRAIN_STEPS = int(os.environ.get("WILDCAT_TRAIN_STEPS", "7000"))
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    # print_large_constants=True: the default printer elides big constant
+    # tensors (the baked model weights!) as `{...}`, which the HLO text
+    # parser silently reads back as zeros.
+    return comp.as_hlo_text(print_large_constants=True)
+
+
+def spec(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def get_or_train_params(out_dir: str):
+    """Load cached weights or train the LM (compile/train.py)."""
+    cache = os.path.join(out_dir, "weights.npz")
+    if os.path.exists(cache):
+        print(f"[aot] loading cached weights from {cache}")
+        with np.load(cache) as z:
+            return {k: jnp.asarray(z[k]) for k in z.files}
+    from .train import train_full
+
+    print(f"[aot] training serving LM (curriculum, phase-1 {TRAIN_STEPS} steps)...")
+    params, loss, acc = train_full(phase1_steps=TRAIN_STEPS)
+    np.savez(cache, **{k: np.asarray(v) for k, v in params.items()})
+    meta = {"final_loss": loss, "answer_accuracy": acc, "steps": TRAIN_STEPS}
+    with open(os.path.join(out_dir, "training_meta.json"), "w") as f:
+        json.dump(meta, f, indent=1)
+    return params
+
+
+def dump_weights_bin(params, path: str):
+    """Binary tensor dump: magic 'WCWT', u32 version, u32 count, then per
+    tensor u16 name_len, name bytes, u8 ndim, u32 dims..., f32 LE data."""
+    with open(path, "wb") as f:
+        f.write(b"WCWT")
+        f.write(struct.pack("<II", 1, len(params)))
+        for name in sorted(params):
+            arr = np.asarray(params[name], dtype=np.float32)
+            nb = name.encode()
+            f.write(struct.pack("<H", len(nb)))
+            f.write(nb)
+            f.write(struct.pack("<B", arr.ndim))
+            for d in arr.shape:
+                f.write(struct.pack("<I", d))
+            f.write(arr.astype("<f4").tobytes())
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--skip-model", action="store_true", help="kernels only")
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+    cfg = M.CFG
+    manifest = {"version": 1, "model": dict(cfg._asdict(), beta=cfg.beta), "artifacts": []}
+
+    def export(name, lowered, inputs, outputs):
+        text = to_hlo_text(lowered)
+        fname = f"{name}.hlo.txt"
+        with open(os.path.join(args.out, fname), "w") as f:
+            f.write(text)
+        manifest["artifacts"].append(
+            {"name": name, "file": fname, "inputs": inputs, "outputs": outputs}
+        )
+        print(f"[aot] wrote {fname} ({len(text)} chars)")
+
+    # ---- standalone Layer-1 kernels ------------------------------------
+    m_, r_, d_, dv_ = 256, 96, 64, 64
+    wtd = jax.jit(
+        lambda q, ks, vs, w, vmin, vmax: (
+            wtd_attention_pallas(q, ks, vs, w, vmin, vmax, beta=float(cfg.beta)),
+        )
+    )
+    export(
+        f"wtd_attn_{m_}x{r_}x{d_}",
+        wtd.lower(
+            spec((m_, d_)), spec((r_, d_)), spec((r_, dv_)), spec((r_,)),
+            spec((dv_,)), spec((dv_,)),
+        ),
+        [
+            {"dtype": "f32", "shape": [m_, d_]},
+            {"dtype": "f32", "shape": [r_, d_]},
+            {"dtype": "f32", "shape": [r_, dv_]},
+            {"dtype": "f32", "shape": [r_]},
+            {"dtype": "f32", "shape": [dv_]},
+            {"dtype": "f32", "shape": [dv_]},
+        ],
+        [{"dtype": "f32", "shape": [m_, dv_]}],
+    )
+    n_ = 256
+    exact = jax.jit(
+        lambda q, k, v: (exact_attention_pallas(q, k, v, beta=float(cfg.beta)),)
+    )
+    export(
+        f"exact_attn_{m_}x{n_}x{d_}",
+        exact.lower(spec((m_, d_)), spec((n_, d_)), spec((n_, dv_))),
+        [
+            {"dtype": "f32", "shape": [m_, d_]},
+            {"dtype": "f32", "shape": [n_, d_]},
+            {"dtype": "f32", "shape": [n_, dv_]},
+        ],
+        [{"dtype": "f32", "shape": [m_, dv_]}],
+    )
+
+    # ---- serving model --------------------------------------------------
+    if not args.skip_model:
+        params = get_or_train_params(args.out)
+        dump_weights_bin(params, os.path.join(args.out, "weights.bin"))
+        print("[aot] wrote weights.bin")
+        l, h, dh, v = cfg.n_layers, cfg.n_heads, cfg.d_head, cfg.vocab
+
+        for n in PREFILL_LENS:
+            fn = jax.jit(lambda toks, length: M.prefill(params, toks, length, cfg))
+            export(
+                f"model_prefill_n{n}",
+                fn.lower(spec((n,), jnp.int32), spec((), jnp.int32)),
+                [{"dtype": "i32", "shape": [n]}, {"dtype": "i32", "shape": []}],
+                [
+                    {"dtype": "f32", "shape": [v]},
+                    {"dtype": "f32", "shape": [l, h, n, dh]},
+                    {"dtype": "f32", "shape": [l, h, n, dh]},
+                ],
+            )
+        for cap in DECODE_CAPS:
+            fn = jax.jit(
+                lambda tok, pos, kc, vc, wc: M.decode_step(params, tok, pos, kc, vc, wc, cfg)
+            )
+            export(
+                f"model_decode_r{cap}",
+                fn.lower(
+                    spec((), jnp.int32), spec((), jnp.int32),
+                    spec((l, h, cap, dh)), spec((l, h, cap, dh)), spec((l, h, cap)),
+                ),
+                [
+                    {"dtype": "i32", "shape": []},
+                    {"dtype": "i32", "shape": []},
+                    {"dtype": "f32", "shape": [l, h, cap, dh]},
+                    {"dtype": "f32", "shape": [l, h, cap, dh]},
+                    {"dtype": "f32", "shape": [l, h, cap]},
+                ],
+                [
+                    {"dtype": "f32", "shape": [v]},
+                    {"dtype": "f32", "shape": [l, h, dh]},
+                    {"dtype": "f32", "shape": [l, h, dh]},
+                ],
+            )
+
+    with open(os.path.join(args.out, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"[aot] wrote manifest.json with {len(manifest['artifacts'])} artifacts")
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,86 @@
+"""Layer-1 Pallas kernel: blocked online-softmax *exact* attention — the
+baseline kernel the paper measures WildCat against (FlashAttention-style
+HBM↔VMEM schedule expressed with BlockSpec).
+
+The grid is (query tiles × key tiles); each step updates a running
+(max, normaliser, numerator) triple held in the output accumulators, the
+TPU translation of FA2's threadblock loop. `interpret=True` for CPU-PJRT
+execution (see wtd_attn.py).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BLOCK_M = 128
+DEFAULT_BLOCK_N = 128
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, *, beta, n_kv_blocks):
+    kb = pl.program_id(1)
+
+    @pl.when(kb == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, -jnp.inf)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    q = q_ref[...]                  # (bm, d)
+    k = k_ref[...]                  # (bn, d)
+    v = v_ref[...]                  # (bn, dv)
+    logits = beta * jnp.dot(q, k.T, preferred_element_type=jnp.float32)  # (bm, bn)
+    m_prev = m_ref[...]             # (bm,)
+    l_prev = l_ref[...]
+    o_prev = o_ref[...]
+    m_new = jnp.maximum(m_prev, logits.max(axis=-1))
+    corr = jnp.where(jnp.isfinite(m_prev), jnp.exp(m_prev - m_new), 0.0)
+    p = jnp.exp(logits - m_new[:, None])
+    l_new = l_prev * corr + p.sum(axis=-1)
+    o_new = o_prev * corr[:, None] + jnp.dot(p, v, preferred_element_type=jnp.float32)
+    m_ref[...] = m_new
+    l_ref[...] = l_new
+
+    @pl.when(kb == n_kv_blocks - 1)
+    def _final():
+        o_ref[...] = o_new / jnp.maximum(l_new, 1e-30)[:, None]
+
+    @pl.when(kb < n_kv_blocks - 1)
+    def _partial():
+        o_ref[...] = o_new
+
+
+@functools.partial(jax.jit, static_argnames=("beta", "block_m", "block_n"))
+def exact_attention_pallas(q, k, v, *, beta, block_m=DEFAULT_BLOCK_M, block_n=DEFAULT_BLOCK_N):
+    """Exact attention via a blocked online-softmax Pallas kernel."""
+    m, d = q.shape
+    n, dv = v.shape
+    bm = min(block_m, m)
+    bn = min(block_n, n)
+    assert m % bm == 0, f"m={m} must tile by {bm}"
+    assert n % bn == 0, f"n={n} must tile by {bn}"
+    grid = (m // bm, n // bn)
+    out, _m, _l = pl.pallas_call(
+        functools.partial(_flash_kernel, beta=beta, n_kv_blocks=n // bn),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, d), lambda i, j: (i, 0)),
+            pl.BlockSpec((bn, d), lambda i, j: (j, 0)),
+            pl.BlockSpec((bn, dv), lambda i, j: (j, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bm, dv), lambda i, j: (i, 0)),
+            pl.BlockSpec((bm,), lambda i, j: (i,)),
+            pl.BlockSpec((bm,), lambda i, j: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((m, dv), jnp.float32),
+            jax.ShapeDtypeStruct((m,), jnp.float32),
+            jax.ShapeDtypeStruct((m,), jnp.float32),
+        ],
+        interpret=True,
+    )(q, k, v)
+    return out

@@ -1,0 +1,184 @@
+"""Pure-jnp correctness oracles for every Layer-1 kernel and the WildCat
+pipeline. These are the ground truth the Pallas kernels and the Rust
+implementations are validated against (pytest + hypothesis on this side,
+`rust/tests/` integration tests on the other).
+
+Everything here is straight-line jnp written for clarity, not speed.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+
+def exact_attention(q, k, v, beta):
+    """Softmax attention (paper Eq. 1), numerically stabilised."""
+    logits = beta * (q @ k.T)
+    logits = logits - logits.max(axis=-1, keepdims=True)
+    p = jnp.exp(logits)
+    return (p @ v) / p.sum(axis=-1, keepdims=True)
+
+
+def causal_attention(q, k, v, beta):
+    """Causal softmax attention for the prefill path (m == n)."""
+    n = q.shape[0]
+    logits = beta * (q @ k.T)
+    mask = jnp.tril(jnp.ones((n, n), dtype=bool))
+    logits = jnp.where(mask, logits, -jnp.inf)
+    logits = logits - logits.max(axis=-1, keepdims=True)
+    p = jnp.exp(logits)
+    return (p @ v) / p.sum(axis=-1, keepdims=True)
+
+
+def wtd_attention(q, k_s, v_s, w, v_min, v_max, beta):
+    """WTDATTN (Alg. 3) with per-query max-logit stabilisation.
+
+    q: (m, d); k_s: (r, d); v_s: (r, d_v); w: (r,);
+    v_min/v_max: (d_v,) clip range. Rows with non-positive normaliser
+    are zeroed before clipping, per Alg. 3.
+    """
+    logits = beta * (q @ k_s.T)                       # (m, r)
+    logits = logits - logits.max(axis=-1, keepdims=True)
+    a_hat = jnp.exp(logits)
+    denom = a_hat @ w                                  # (m,)
+    num = a_hat @ v_s                                  # (m, d_v)
+    safe = denom > 0
+    out = jnp.where(safe[:, None], num / jnp.where(safe, denom, 1.0)[:, None], 0.0)
+    return jnp.clip(out, v_min[None, :], v_max[None, :])
+
+
+def nystrom_weights(k, coreset_idx, scale_eff, jitter=1e-8):
+    """W = h(K_S, K_S)^+ h(K_S, K) for the exponential kernel
+    h(x, y) = exp(scale_eff * <x, y>). numpy f64 for stability."""
+    k = np.asarray(k, dtype=np.float64)
+    ks = k[np.asarray(coreset_idx)]
+    h_ss = np.exp(scale_eff * (ks @ ks.T))
+    h_sn = np.exp(scale_eff * (ks @ k.T))
+    r = h_ss.shape[0]
+    h_ss = h_ss + jitter * np.trace(h_ss) / max(r, 1) * np.eye(r)
+    return np.linalg.solve(h_ss, h_sn)
+
+
+def rpnys(k, scale_eff, rank, rng):
+    """Sequential randomly pivoted Nyström (Alg. 1), numpy reference.
+
+    Returns (indices, weights) with weights shaped (r, n).
+    """
+    k = np.asarray(k, dtype=np.float64)
+    n = k.shape[0]
+    rank = min(rank, n)
+    res = np.exp(scale_eff * np.sum(k * k, axis=1))
+    total0 = res.sum()
+    floor = 1e-12 * max(total0, 1e-300) / max(n, 1)
+    cols = []
+    pivots = []
+    for _ in range(rank):
+        total = res.sum()
+        if total <= 0:
+            break
+        s = rng.choice(n, p=np.maximum(res, 0) / np.maximum(res, 0).sum())
+        c = np.exp(scale_eff * (k @ k[s]))
+        for col in cols:
+            c = c - col[s] * col
+        rho = min(c[s], res[s])
+        if rho <= floor:
+            res[s] = 0.0
+            continue
+        c = c / np.sqrt(rho)
+        res = np.maximum(res - c * c, 0.0)
+        res[s] = 0.0
+        cols.append(c)
+        pivots.append(int(s))
+    if not pivots:
+        return [], np.zeros((0, n))
+    w = nystrom_weights(k, pivots, scale_eff)
+    return pivots, w
+
+
+def lambert_w0(z, iters=24):
+    """Principal Lambert-W via the Lóczi (2022) iteration (paper Thm L.1)."""
+    z = float(z)
+    assert z > 0, "temperature path only needs z > 0"
+    e = float(np.e)
+    b = (np.log(z) - np.log(np.log(z))) if z > e else z / e
+    if b <= 0:
+        b = z / e
+    for _ in range(iters):
+        b = b / (1.0 + b) * (1.0 + np.log(z) - np.log(b))
+    return float(b)
+
+
+RHO0 = float(np.sqrt(1.0 + np.exp(lambert_w0(2.0 / np.e**2) + 2.0)))
+
+
+def temperature(beta, r_q, r_k, n):
+    """The paper's closed-form rescaling rule (Eq. 4)."""
+    if beta <= 0 or r_q <= 0 or r_k <= 0 or n <= 1:
+        return 1.0
+    b0 = np.log(n) / (beta * r_q * r_k) + 2.0
+    w = lambert_w0(b0 / (2.0 * RHO0))
+    if w <= 0:
+        return 1.0
+    return float(np.sqrt(max((r_k / r_q) * b0 / (2.0 * w), 1e-12)))
+
+
+def compress_kv(k, v, r_q, beta, rank, bins, rng):
+    """COMPRESSKV (Alg. 2) reference: recentre -> binned RPNYS -> weights.
+
+    Returns (k_s, v_s, w, indices).
+    """
+    k = np.asarray(k, dtype=np.float64)
+    v = np.asarray(v, dtype=np.float64)
+    n = k.shape[0]
+    if rank >= n:
+        return k.copy(), v.copy(), np.ones(n), list(range(n))
+    bins = max(1, min(bins, rank, n))
+    rank_per_bin = -(-rank // bins)  # ceil
+    mean = k.mean(axis=0)
+    kc = k - mean
+    base, rem = divmod(n, bins)
+    out_k, out_v, out_w, out_idx = [], [], [], []
+    start = 0
+    for b in range(bins):
+        size = base + (1 if b < rem else 0)
+        kb = kc[start:start + size]
+        vb = v[start:start + size]
+        r_kb = float(np.sqrt((kb * kb).sum(axis=1).max())) if size else 0.0
+        tau = temperature(beta, r_q, r_kb, size)
+        scale_eff = beta / (tau * tau)
+        piv, w = rpnys(kb, scale_eff, min(rank_per_bin, size), rng)
+        if piv:
+            out_k.append(kb[piv] + mean)
+            out_v.append(w @ vb)
+            out_w.append(w.sum(axis=1))
+            out_idx.extend(int(p) + start for p in piv)
+        start += size
+    if not out_k:
+        return np.zeros((0, k.shape[1])), np.zeros((0, v.shape[1])), np.zeros(0), []
+    return (
+        np.concatenate(out_k, axis=0),
+        np.concatenate(out_v, axis=0),
+        np.concatenate(out_w, axis=0),
+        out_idx,
+    )
+
+
+def wildcat_attention(q, k, v, beta, rank, bins, rng):
+    """WILDCAT (Alg. 4) reference."""
+    q64 = np.asarray(q, dtype=np.float64)
+    r_q = float(np.sqrt((q64 * q64).sum(axis=1).max()))
+    v_min = np.asarray(v).min(axis=0)
+    v_max = np.asarray(v).max(axis=0)
+    k_s, v_s, w, _ = compress_kv(k, v, r_q, beta, rank, bins, rng)
+    return np.asarray(
+        wtd_attention(
+            jnp.asarray(q, dtype=jnp.float32),
+            jnp.asarray(k_s, dtype=jnp.float32),
+            jnp.asarray(v_s, dtype=jnp.float32),
+            jnp.asarray(w, dtype=jnp.float32),
+            jnp.asarray(v_min, dtype=jnp.float32),
+            jnp.asarray(v_max, dtype=jnp.float32),
+            beta,
+        )
+    )

@@ -1,0 +1,69 @@
+"""Layer-1 Pallas kernel: WTDATTN (Alg. 3), the paper's serving hot spot.
+
+TPU-shaped design (DESIGN.md §Hardware-Adaptation): the grid tiles the
+queries into VMEM-sized blocks; the whole coreset `(K_S, V_S, w)` is small
+enough (r ≤ 512) to pin in VMEM, so each grid step performs two MXU
+matmuls — `Q_blk @ K_Sᵀ` (logits) and `P @ V_S` (output) — plus VPU
+exp/normalise/clip. Per-block max-subtraction over the r coreset logits is
+exact (the softmax ratio is invariant), so no FA2-style running rescale is
+needed.
+
+`interpret=True` everywhere: the CPU PJRT plugin cannot execute Mosaic
+custom-calls; interpret mode lowers the kernel to plain HLO so the same
+artifact runs under the Rust runtime. Correctness is pinned against
+`ref.wtd_attention` by pytest/hypothesis.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Query-tile size: 128 rows × d=64 f32 = 32 KiB in VMEM — comfortably
+# double-bufferable against the ~0.2 MiB coreset block.
+DEFAULT_BLOCK_M = 128
+
+
+def _wtd_attn_kernel(q_ref, ks_ref, vs_ref, w_ref, vmin_ref, vmax_ref, o_ref, *, beta):
+    """One grid step: weighted softmax of a query block over the coreset."""
+    q = q_ref[...]            # (bm, d)
+    ks = ks_ref[...]          # (r, d)
+    vs = vs_ref[...]          # (r, dv)
+    w = w_ref[...]            # (r,)
+    logits = beta * jnp.dot(q, ks.T, preferred_element_type=jnp.float32)
+    logits = logits - jnp.max(logits, axis=-1, keepdims=True)
+    p = jnp.exp(logits)       # (bm, r)
+    denom = jnp.dot(p, w, preferred_element_type=jnp.float32)      # (bm,)
+    num = jnp.dot(p, vs, preferred_element_type=jnp.float32)       # (bm, dv)
+    safe = denom > 0
+    out = jnp.where(safe[:, None], num / jnp.where(safe, denom, 1.0)[:, None], 0.0)
+    o_ref[...] = jnp.clip(out, vmin_ref[...][None, :], vmax_ref[...][None, :])
+
+
+@functools.partial(jax.jit, static_argnames=("beta", "block_m"))
+def wtd_attention_pallas(q, k_s, v_s, w, v_min, v_max, *, beta, block_m=DEFAULT_BLOCK_M):
+    """WTDATTN via Pallas. Shapes: q (m,d), k_s (r,d), v_s (r,dv), w (r,),
+    v_min/v_max (dv,). m must be a multiple of block_m or smaller than it."""
+    m, d = q.shape
+    r, dv = v_s.shape
+    bm = min(block_m, m)
+    assert m % bm == 0, f"m={m} must tile by block_m={bm}"
+    grid = (m // bm,)
+    return pl.pallas_call(
+        functools.partial(_wtd_attn_kernel, beta=beta),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, d), lambda i: (i, 0)),   # stream Q tiles
+            pl.BlockSpec((r, d), lambda i: (0, 0)),    # coreset pinned
+            pl.BlockSpec((r, dv), lambda i: (0, 0)),
+            pl.BlockSpec((r,), lambda i: (0,)),
+            pl.BlockSpec((dv,), lambda i: (0,)),
+            pl.BlockSpec((dv,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((bm, dv), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((m, dv), jnp.float32),
+        interpret=True,
+    )(q, k_s, v_s, w, v_min, v_max)

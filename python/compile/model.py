@@ -1,0 +1,213 @@
+"""Layer-2: the JAX compute graph.
+
+Two things live here:
+
+1. The WildCat attention entry points that wrap the Layer-1 Pallas kernels
+   (`wtd_attention_pallas`, `exact_attention_pallas`) for standalone AOT
+   export.
+2. A small transformer language model (2 layers, 2 heads, d=64) whose
+   prefill and decode steps are AOT-lowered to HLO text and served by the
+   Rust coordinator. The decode step attends over a *compressed weighted
+   KV cache* `(K_S, V_S, w)` through the Pallas WTDATTN kernel — the
+   paper's KV-compression serving path (Sec. 4.3) end to end.
+
+The architecture is deliberately simple and exactly mirrored by
+`rust/src/model/` (pre-norm RMSNorm, sinusoidal positions, GELU MLP,
+untied unembedding) so the native and PJRT paths can be cross-checked.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .kernels.wtd_attn import wtd_attention_pallas
+
+
+class Config(NamedTuple):
+    vocab: int = 64
+    d_model: int = 64
+    n_layers: int = 2
+    n_heads: int = 2
+    d_ff: int = 128
+    max_len: int = 1024
+
+    @property
+    def d_head(self) -> int:
+        return self.d_model // self.n_heads
+
+    @property
+    def beta(self) -> float:
+        return 1.0 / float(np.sqrt(self.d_head))
+
+
+CFG = Config()
+
+
+# --------------------------------------------------------------------------
+# Parameters
+# --------------------------------------------------------------------------
+
+def init_params(key, cfg: Config = CFG):
+    """Initialise parameters as a flat dict name -> array."""
+    ks = jax.random.split(key, 4 + 8 * cfg.n_layers)
+    it = iter(ks)
+    # 1/sqrt(fan_in)-style init: attention logits need O(1) scale early or
+    # the induction/retrieval circuits never receive gradient signal.
+    scale = 1.0 / float(np.sqrt(cfg.d_model))
+    emb_scale = 0.05
+    p = {
+        "embed": emb_scale * jax.random.normal(next(it), (cfg.vocab, cfg.d_model)),
+        "unembed": emb_scale * jax.random.normal(next(it), (cfg.d_model, cfg.vocab)),
+        "ln_f": jnp.ones((cfg.d_model,)),
+    }
+    for l in range(cfg.n_layers):
+        p[f"l{l}.wq"] = scale * jax.random.normal(next(it), (cfg.d_model, cfg.d_model))
+        p[f"l{l}.wk"] = scale * jax.random.normal(next(it), (cfg.d_model, cfg.d_model))
+        p[f"l{l}.wv"] = scale * jax.random.normal(next(it), (cfg.d_model, cfg.d_model))
+        p[f"l{l}.wo"] = scale * jax.random.normal(next(it), (cfg.d_model, cfg.d_model))
+        p[f"l{l}.w1"] = scale * jax.random.normal(next(it), (cfg.d_model, cfg.d_ff))
+        p[f"l{l}.w2"] = scale * jax.random.normal(next(it), (cfg.d_ff, cfg.d_model))
+        p[f"l{l}.ln1"] = jnp.ones((cfg.d_model,))
+        p[f"l{l}.ln2"] = jnp.ones((cfg.d_model,))
+    return p
+
+
+def positional_encoding(cfg: Config = CFG):
+    """Sinusoidal positions (max_len, d_model) — no learned state, so the
+    Rust mirror recomputes them bit-identically."""
+    pos = np.arange(cfg.max_len)[:, None].astype(np.float64)
+    dim = np.arange(cfg.d_model // 2)[None, :].astype(np.float64)
+    angle = pos / np.power(10000.0, 2.0 * dim / cfg.d_model)
+    enc = np.zeros((cfg.max_len, cfg.d_model), dtype=np.float32)
+    enc[:, 0::2] = np.sin(angle)
+    enc[:, 1::2] = np.cos(angle)
+    return jnp.asarray(enc)
+
+
+def rmsnorm(x, g, eps=1e-6):
+    return x * g / jnp.sqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps)
+
+
+def gelu(x):
+    return 0.5 * x * (1.0 + jnp.tanh(0.7978845608028654 * (x + 0.044715 * x**3)))
+
+
+def _split_heads(x, cfg: Config):
+    # (..., N, D) -> (..., H, N, dh)
+    n = x.shape[-2]
+    return x.reshape(*x.shape[:-1], cfg.n_heads, cfg.d_head).swapaxes(-3, -2).reshape(
+        *x.shape[:-2], cfg.n_heads, n, cfg.d_head
+    )
+
+
+# --------------------------------------------------------------------------
+# Training / prefill forward (causal, batched)
+# --------------------------------------------------------------------------
+
+def forward_train(params, tokens, cfg: Config = CFG):
+    """tokens (B, N) int32 -> logits (B, N, V). Plain jnp causal attention
+    (differentiable path; the Pallas kernels serve inference)."""
+    b, n = tokens.shape
+    pe = positional_encoding(cfg)[:n]
+    x = params["embed"][tokens] + pe[None, :, :]
+    mask = jnp.tril(jnp.ones((n, n), dtype=bool))
+    for l in range(cfg.n_layers):
+        h = rmsnorm(x, params[f"l{l}.ln1"])
+        q = _split_heads(h @ params[f"l{l}.wq"], cfg)  # (B, H, N, dh)
+        k = _split_heads(h @ params[f"l{l}.wk"], cfg)
+        v = _split_heads(h @ params[f"l{l}.wv"], cfg)
+        logits = cfg.beta * jnp.einsum("bhnd,bhmd->bhnm", q, k)
+        logits = jnp.where(mask[None, None], logits, -jnp.inf)
+        logits = logits - logits.max(axis=-1, keepdims=True)
+        p = jnp.exp(logits)
+        att = jnp.einsum("bhnm,bhmd->bhnd", p / p.sum(-1, keepdims=True), v)
+        att = att.swapaxes(1, 2).reshape(b, n, cfg.d_model)
+        x = x + att @ params[f"l{l}.wo"]
+        h2 = rmsnorm(x, params[f"l{l}.ln2"])
+        x = x + gelu(h2 @ params[f"l{l}.w1"]) @ params[f"l{l}.w2"]
+    return rmsnorm(x, params["ln_f"]) @ params["unembed"]
+
+
+# --------------------------------------------------------------------------
+# Serving entry points (AOT-exported)
+# --------------------------------------------------------------------------
+
+def prefill(params, tokens, length, cfg: Config = CFG):
+    """Prefill over a fixed-size padded token buffer.
+
+    tokens (N,) int32 (padded), length () int32 — number of real tokens.
+    Returns (logits_last (V,), k_cache (L, H, N, dh), v_cache (L, H, N, dh)).
+    Causal masking makes positions ≥ length irrelevant to position
+    length−1; the Rust side slices caches to `length`.
+    """
+    n = tokens.shape[0]
+    pe = positional_encoding(cfg)[:n]
+    x = params["embed"][tokens] + pe
+    mask = jnp.tril(jnp.ones((n, n), dtype=bool))
+    k_caches = []
+    v_caches = []
+    for l in range(cfg.n_layers):
+        h = rmsnorm(x, params[f"l{l}.ln1"])
+        q = _split_heads(h @ params[f"l{l}.wq"], cfg)  # (H, N, dh)
+        k = _split_heads(h @ params[f"l{l}.wk"], cfg)
+        v = _split_heads(h @ params[f"l{l}.wv"], cfg)
+        k_caches.append(k)
+        v_caches.append(v)
+        logits = cfg.beta * jnp.einsum("hnd,hmd->hnm", q, k)
+        logits = jnp.where(mask[None], logits, -jnp.inf)
+        logits = logits - logits.max(axis=-1, keepdims=True)
+        p = jnp.exp(logits)
+        att = jnp.einsum("hnm,hmd->hnd", p / p.sum(-1, keepdims=True), v)
+        att = att.swapaxes(0, 1).reshape(n, cfg.d_model)
+        x = x + att @ params[f"l{l}.wo"]
+        h2 = rmsnorm(x, params[f"l{l}.ln2"])
+        x = x + gelu(h2 @ params[f"l{l}.w1"]) @ params[f"l{l}.w2"]
+    logits_all = rmsnorm(x, params["ln_f"]) @ params["unembed"]
+    logits_last = logits_all[jnp.clip(length - 1, 0, n - 1)]
+    return logits_last, jnp.stack(k_caches), jnp.stack(v_caches)
+
+
+def decode_step(params, token, pos, k_cache, v_cache, w_cache, cfg: Config = CFG):
+    """One decode step over a compressed weighted cache.
+
+    token () int32, pos () int32 — absolute position for the positional
+    encoding. k_cache/v_cache (L, H, R, dh), w_cache (L, H, R): weighted
+    coreset entries; padding rows carry weight 0 and are inert.
+
+    Returns (logits (V,), new_k (L, H, dh), new_v (L, H, dh)) — the Rust
+    coordinator appends (new_k, new_v, weight=1) to the cache.
+    """
+    pe = positional_encoding(cfg)
+    x = params["embed"][token] + pe[pos]
+    new_ks = []
+    new_vs = []
+    for l in range(cfg.n_layers):
+        h = rmsnorm(x, params[f"l{l}.ln1"])
+        q = (h @ params[f"l{l}.wq"]).reshape(cfg.n_heads, cfg.d_head)
+        k_new = (h @ params[f"l{l}.wk"]).reshape(cfg.n_heads, cfg.d_head)
+        v_new = (h @ params[f"l{l}.wv"]).reshape(cfg.n_heads, cfg.d_head)
+        new_ks.append(k_new)
+        new_vs.append(v_new)
+        head_outs = []
+        for hh in range(cfg.n_heads):
+            # coreset ∪ {self}: the current token attends to itself with
+            # weight 1 alongside the weighted cache.
+            ks = jnp.concatenate([k_cache[l, hh], k_new[hh][None]], axis=0)
+            vs = jnp.concatenate([v_cache[l, hh], v_new[hh][None]], axis=0)
+            w = jnp.concatenate([w_cache[l, hh], jnp.ones((1,), jnp.float32)])
+            v_min = vs.min(axis=0)
+            v_max = vs.max(axis=0)
+            out = wtd_attention_pallas(
+                q[hh][None], ks, vs, w, v_min, v_max, beta=cfg.beta, block_m=1
+            )
+            head_outs.append(out[0])
+        att = jnp.concatenate(head_outs).reshape(cfg.d_model)
+        x = x + att @ params[f"l{l}.wo"]
+        h2 = rmsnorm(x, params[f"l{l}.ln2"])
+        x = x + gelu(h2 @ params[f"l{l}.w1"]) @ params[f"l{l}.w2"]
+    logits = rmsnorm(x, params["ln_f"]) @ params["unembed"]
+    return logits, jnp.stack(new_ks), jnp.stack(new_vs)

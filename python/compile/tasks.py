@@ -1,0 +1,119 @@
+"""Synthetic long-context task generators (build-time twin of
+`rust/src/workload/tasks.rs`).
+
+These stand in for the paper's LongBench-E suite (Tab. 4): the model is
+*trained* here on retrieval + induction mixtures with dense supervision,
+and *evaluated* in Rust on 13 held-out task variants. Token conventions
+are shared with the Rust side and must not drift:
+
+    PAD=0  BOS=1  KEY=2  VAL=3  QUERY=4  SEP=5  content: 6..vocab-1
+
+Supervision design: random filler is information-theoretically
+unpredictable, so its loss is down-weighted to `FILLER_WEIGHT`; the
+learnable positions (retrieval answers, repeated-segment continuations)
+carry weight 1. This concentrates training on the skills the Tab. 4
+analogue evaluates under KV-cache compression.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+PAD, BOS, KEY, VAL, QUERY, SEP = 0, 1, 2, 3, 4, 5
+CONTENT_START = 6
+# Disjoint sub-ranges: keys never collide with filler, so the successor of
+# a key occurrence is unambiguous (without this split, a query key can
+# also appear as random filler with a random successor, making retrieval
+# information-theoretically ambiguous). Mirrored in rust workload/tasks.rs.
+KEY_LO, KEY_HI = 6, 20
+VAL_LO, VAL_HI = 20, 34
+FILLER_LO = 34
+FILLER_WEIGHT = 0.05
+
+
+def content_tokens(rng, size, vocab):
+    return rng.integers(CONTENT_START, vocab, size=size)
+
+
+def filler_tokens(rng, size, vocab):
+    return rng.integers(FILLER_LO, vocab, size=size)
+
+
+def gen_kv_lookup(rng, n, vocab, n_pairs=4, n_queries=4):
+    """Key→value retrieval with dense queries.
+
+    Body: `[KEY k v]` triplets scattered through random filler.
+    Tail: `n_queries` blocks `[KEY k v]` — re-stating `KEY k` makes the
+    answer the induction continuation of its earlier occurrence, so the
+    retrieval circuit and the induction circuit coincide (the classic
+    2-layer induction-head mechanism) and training converges quickly,
+    while evaluation still probes genuine long-range retrieval.
+
+    Returns (tokens (n,), weights (n,), answers) where `answers` is a
+    list of (answer_pos, answer_token): logits at answer_pos−1 should
+    predict answer_token.
+    """
+    assert n_pairs >= 1 and n_queries >= 1
+    tail_len = 3 * n_queries
+    body_hi = n - tail_len
+    assert body_hi > 3 * n_pairs + 4, "sequence too short for the pair count"
+    toks = filler_tokens(rng, n, vocab)
+    wts = np.full(n, FILLER_WEIGHT, dtype=np.float32)
+    toks[0] = BOS
+    keys = rng.choice(np.arange(KEY_LO, KEY_HI), size=n_pairs, replace=False)
+    vals = rng.integers(VAL_LO, VAL_HI, size=n_pairs)
+    # non-overlapping slots of width 3 in the body
+    n_slots = (body_hi - 2) // 3
+    slots = 1 + rng.choice(np.arange(n_slots), size=n_pairs, replace=False) * 3
+    for (s, k, v) in zip(slots, keys, vals):
+        toks[s] = KEY
+        toks[s + 1] = k
+        toks[s + 2] = v
+        # the value after an already-seen "KEY k" is predictable in
+        # principle only at the tail; body values are filler-weighted
+    answers = []
+    pos = body_hi
+    targets = rng.permutation(n_pairs).tolist()
+    while len(targets) < n_queries:
+        targets.append(int(rng.integers(0, n_pairs)))
+    for target in targets[:n_queries]:
+        toks[pos] = KEY
+        toks[pos + 1] = keys[target]
+        toks[pos + 2] = vals[target]
+        wts[pos + 2] = 4.0
+        answers.append((pos + 2, int(vals[target])))
+        pos += 3
+    return toks.astype(np.int32), wts, answers
+
+
+def gen_induction(rng, n, vocab, period=None):
+    """Copy/induction: a random segment repeats; positions ≥ period are
+    predictable and carry weight 1."""
+    if period is None:
+        period = int(rng.integers(3, max(9, n // 4)))
+    seg = content_tokens(rng, period, vocab)
+    reps = -(-n // period)
+    toks = np.tile(seg, reps)[:n]
+    toks[0] = BOS
+    wts = np.full(n, FILLER_WEIGHT, dtype=np.float32)
+    wts[period:] = 1.0
+    answers = [(n - 1, int(toks[n - 1]))]
+    return toks.astype(np.int32), wts, answers
+
+
+def gen_batch(rng, batch, n, vocab, kv_fraction=0.5):
+    """Training batch mixing kv-lookup and induction rows.
+    Returns (tokens (B, n) int32, loss weights (B, n) f32)."""
+    toks = np.zeros((batch, n), dtype=np.int32)
+    wts = np.ones((batch, n), dtype=np.float32)
+    n_kv = int(round(batch * kv_fraction))
+    for b in range(batch):
+        if b < n_kv:
+            t, w, _ = gen_kv_lookup(
+                rng, n, vocab, n_pairs=int(rng.integers(2, 7)), n_queries=6
+            )
+        else:
+            t, w, _ = gen_induction(rng, n, vocab)
+        toks[b] = t
+        wts[b] = w
+    return toks, wts

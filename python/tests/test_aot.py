@@ -1,0 +1,94 @@
+"""AOT artifact tests: manifest integrity and HLO-text round-trip through
+the same xla_client conversion the export uses. Artifact-dependent tests
+skip when `make artifacts` has not run yet."""
+
+import json
+import os
+import struct
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+ART = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+
+def test_hlo_text_lowering_roundtrip():
+    """The to_hlo_text conversion must produce parseable HLO with the
+    expected entry computation (independent of built artifacts)."""
+    from compile.aot import to_hlo_text
+
+    fn = jax.jit(lambda x, y: (jnp.matmul(x, y) + 1.0,))
+    spec = jax.ShapeDtypeStruct((4, 4), jnp.float32)
+    text = to_hlo_text(fn.lower(spec, spec))
+    assert "ENTRY" in text
+    assert "f32[4,4]" in text
+
+
+def test_weights_bin_format(tmp_path):
+    from compile.aot import dump_weights_bin
+
+    params = {"a": jnp.ones((2, 3)), "b": jnp.zeros((4,))}
+    path = tmp_path / "w.bin"
+    dump_weights_bin(params, str(path))
+    data = path.read_bytes()
+    assert data[:4] == b"WCWT"
+    ver, count = struct.unpack_from("<II", data, 4)
+    assert (ver, count) == (1, 2)
+    # first tensor: name "a"
+    off = 12
+    (nlen,) = struct.unpack_from("<H", data, off)
+    off += 2
+    assert data[off : off + nlen] == b"a"
+    off += nlen
+    (ndim,) = struct.unpack_from("<B", data, off)
+    off += 1
+    dims = struct.unpack_from(f"<{ndim}I", data, off)
+    assert dims == (2, 3)
+
+
+@pytest.mark.skipif(not os.path.exists(os.path.join(ART, "manifest.json")),
+                    reason="artifacts not built (run `make artifacts`)")
+def test_manifest_references_existing_files():
+    with open(os.path.join(ART, "manifest.json")) as f:
+        manifest = json.load(f)
+    assert manifest["version"] == 1
+    assert manifest["model"]["vocab"] > 0
+    assert len(manifest["artifacts"]) >= 2
+    for art in manifest["artifacts"]:
+        path = os.path.join(ART, art["file"])
+        assert os.path.exists(path), art["file"]
+        assert os.path.getsize(path) > 100
+        assert art["inputs"] and art["outputs"]
+
+
+@pytest.mark.skipif(not os.path.exists(os.path.join(ART, "weights.bin")),
+                    reason="artifacts not built")
+def test_weights_bin_loads_and_matches_npz():
+    with np.load(os.path.join(ART, "weights.npz")) as z:
+        names = set(z.files)
+        embed = z["embed"]
+    data = open(os.path.join(ART, "weights.bin"), "rb").read()
+    assert data[:4] == b"WCWT"
+    _, count = struct.unpack_from("<II", data, 4)
+    assert count == len(names)
+    # walk tensors, check 'embed' payload matches npz bit-exactly
+    off = 12
+    found = False
+    for _ in range(count):
+        (nlen,) = struct.unpack_from("<H", data, off)
+        off += 2
+        name = data[off : off + nlen].decode()
+        off += nlen
+        (ndim,) = struct.unpack_from("<B", data, off)
+        off += 1
+        dims = struct.unpack_from(f"<{ndim}I", data, off)
+        off += 4 * ndim
+        numel = int(np.prod(dims)) if ndim else 1
+        payload = np.frombuffer(data, dtype="<f4", count=numel, offset=off)
+        off += 4 * numel
+        if name == "embed":
+            np.testing.assert_array_equal(payload.reshape(dims), embed.astype(np.float32))
+            found = True
+    assert found

@@ -1,0 +1,140 @@
+"""Layer-1 correctness: Pallas kernels vs the pure-jnp oracle (ref.py).
+
+Hypothesis sweeps shapes/scales; assert_allclose is the contract. This is
+the CORE correctness signal for the AOT artifacts — what passes here is
+exactly what the Rust runtime executes (interpret=True lowers to the same
+HLO ops).
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.exact_attn import exact_attention_pallas
+from compile.kernels.wtd_attn import wtd_attention_pallas
+
+
+def rand(rng, *shape, scale=1.0):
+    return jnp.asarray(rng.normal(size=shape) * scale, jnp.float32)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    m=st.sampled_from([1, 32, 128, 256]),
+    r=st.integers(1, 64),
+    d=st.sampled_from([4, 16, 64]),
+    dv=st.sampled_from([1, 8, 64]),
+    beta=st.sampled_from([0.05, 0.125, 0.5]),
+    scale=st.sampled_from([0.3, 1.0, 3.0]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_wtd_attn_matches_ref(m, r, d, dv, beta, scale, seed):
+    rng = np.random.default_rng(seed)
+    q = rand(rng, m, d, scale=scale)
+    ks = rand(rng, r, d, scale=scale)
+    vs = rand(rng, r, dv)
+    w = jnp.asarray(rng.uniform(0.0, 2.0, size=(r,)), jnp.float32)
+    vmin = vs.min(axis=0)
+    vmax = vs.max(axis=0)
+    block_m = m if m < 128 else 128
+    got = wtd_attention_pallas(q, ks, vs, w, vmin, vmax, beta=beta, block_m=block_m)
+    want = ref.wtd_attention(q, ks, vs, w, vmin, vmax, beta)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=2e-5, rtol=2e-4)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    m=st.sampled_from([1, 64, 128, 256]),
+    n=st.sampled_from([32, 128, 256]),
+    d=st.sampled_from([8, 32]),
+    dv=st.sampled_from([4, 32]),
+    beta=st.sampled_from([0.125, 0.5]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_exact_attn_matches_ref(m, n, d, dv, beta, seed):
+    rng = np.random.default_rng(seed)
+    q = rand(rng, m, d)
+    k = rand(rng, n, d)
+    v = rand(rng, n, dv)
+    bm = m if m < 128 else 128
+    bn = n if n < 128 else 128
+    got = exact_attention_pallas(q, k, v, beta=beta, block_m=bm, block_n=bn)
+    want = ref.exact_attention(q, k, v, beta)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=2e-5, rtol=2e-4)
+
+
+def test_wtd_attn_zero_weights_row_clips_to_zero():
+    q = jnp.ones((1, 4))
+    ks = jnp.ones((3, 4))
+    vs = jnp.asarray(np.arange(6).reshape(3, 2), jnp.float32)
+    w = jnp.zeros((3,))
+    vmin = vs.min(axis=0)
+    vmax = vs.max(axis=0)
+    out = wtd_attention_pallas(q, ks, vs, w, vmin, vmax, beta=0.5, block_m=1)
+    # denom == 0 -> 0, clipped into [vmin, vmax]
+    np.testing.assert_allclose(np.asarray(out[0]), np.asarray(jnp.clip(0.0, vmin, vmax)))
+
+
+def test_wtd_attn_padding_rows_are_inert():
+    """Padding contract (used by the Rust decode cache): pad rows carry
+    v = 0 AND w = 0. The numerator uses V_S directly (V_S = W·V already
+    embeds the Nyström weights), so zero *values* silence the numerator
+    and zero *weights* silence the normaliser. Keys may be arbitrary."""
+    rng = np.random.default_rng(0)
+    q = rand(rng, 8, 8)
+    ks = rand(rng, 16, 8)
+    vs = rand(rng, 16, 4)
+    w = jnp.asarray(rng.uniform(0.5, 1.5, size=(16,)), jnp.float32)
+    vmin = vs.min(axis=0) - 1.0  # widened clip so padding's effect on the
+    vmax = vs.max(axis=0) + 1.0  # range cannot mask a real difference
+    base = wtd_attention_pallas(q, ks, vs, w, vmin, vmax, beta=0.3, block_m=8)
+    ks_pad = jnp.concatenate([ks, rand(rng, 5, 8)], axis=0)  # junk keys OK
+    vs_pad = jnp.concatenate([vs, jnp.zeros((5, 4))], axis=0)
+    w_pad = jnp.concatenate([w, jnp.zeros((5,))])
+    padded = wtd_attention_pallas(q, ks_pad, vs_pad, w_pad, vmin, vmax, beta=0.3, block_m=8)
+    np.testing.assert_allclose(np.asarray(base), np.asarray(padded), atol=1e-5)
+
+
+def test_wtd_unit_weights_equal_exact_attention():
+    rng = np.random.default_rng(1)
+    q = rand(rng, 32, 8)
+    k = rand(rng, 24, 8)
+    v = rand(rng, 24, 4)
+    w = jnp.ones((24,))
+    out = wtd_attention_pallas(q, k, v, w, v.min(0), v.max(0), beta=0.4, block_m=32)
+    want = ref.exact_attention(q, k, v, 0.4)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want), atol=1e-5, rtol=1e-4)
+
+
+def test_exact_attn_multi_block_boundary():
+    rng = np.random.default_rng(2)
+    q = rand(rng, 256, 16)
+    k = rand(rng, 384, 16)
+    v = rand(rng, 384, 8)
+    got = exact_attention_pallas(q, k, v, beta=0.25)
+    want = ref.exact_attention(q, k, v, 0.25)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=2e-5, rtol=2e-4)
+
+
+def test_extreme_scale_stability():
+    rng = np.random.default_rng(3)
+    q = rand(rng, 4, 4, scale=30.0)
+    ks = rand(rng, 8, 4, scale=30.0)
+    vs = rand(rng, 8, 2)
+    w = jnp.ones((8,))
+    out = wtd_attention_pallas(q, ks, vs, w, vs.min(0), vs.max(0), beta=1.0, block_m=4)
+    assert np.isfinite(np.asarray(out)).all()
+
+
+@pytest.mark.parametrize("m,bm", [(128, 128), (256, 128), (512, 128), (64, 64)])
+def test_wtd_attn_grid_tilings(m, bm):
+    rng = np.random.default_rng(4)
+    q = rand(rng, m, 16)
+    ks = rand(rng, 32, 16)
+    vs = rand(rng, 32, 8)
+    w = jnp.ones((32,))
+    got = wtd_attention_pallas(q, ks, vs, w, vs.min(0), vs.max(0), beta=0.25, block_m=bm)
+    want = ref.wtd_attention(q, ks, vs, w, vs.min(0), vs.max(0), 0.25)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=2e-5, rtol=2e-4)

@@ -1,0 +1,130 @@
+"""Layer-2 model tests: shapes, prefill/decode consistency (the contract
+the Rust runtime depends on), and task generators."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import tasks
+from compile.model import CFG, decode_step, forward_train, init_params, prefill
+
+
+@pytest.fixture(scope="module")
+def params():
+    return init_params(jax.random.PRNGKey(0))
+
+
+def test_forward_shapes(params):
+    toks = jnp.zeros((2, 16), jnp.int32)
+    logits = forward_train(params, toks)
+    assert logits.shape == (2, 16, CFG.vocab)
+    assert np.isfinite(np.asarray(logits)).all()
+
+
+def test_prefill_shapes_and_padding_invariance(params):
+    n = 32
+    rng = np.random.default_rng(0)
+    toks = jnp.asarray(rng.integers(1, CFG.vocab, size=(n,)), jnp.int32)
+    logits, kc, vc = prefill(params, toks, jnp.asarray(16, jnp.int32))
+    assert logits.shape == (CFG.vocab,)
+    assert kc.shape == (CFG.n_layers, CFG.n_heads, n, CFG.d_head)
+    assert vc.shape == kc.shape
+    # causal masking: junk past `length` must not change the answer
+    toks2 = toks.at[16:].set(7)
+    logits2, kc2, _ = prefill(params, toks2, jnp.asarray(16, jnp.int32))
+    np.testing.assert_allclose(np.asarray(logits), np.asarray(logits2), atol=1e-5)
+    # caches up to length agree as well
+    np.testing.assert_allclose(
+        np.asarray(kc[:, :, :16]), np.asarray(kc2[:, :, :16]), atol=1e-6
+    )
+
+
+def test_prefill_matches_forward_train(params):
+    rng = np.random.default_rng(1)
+    n = 24
+    toks = jnp.asarray(rng.integers(1, CFG.vocab, size=(n,)), jnp.int32)
+    logits, _, _ = prefill(params, toks, jnp.asarray(n, jnp.int32))
+    full = forward_train(params, toks[None])[0, -1]
+    np.testing.assert_allclose(np.asarray(logits), np.asarray(full), atol=1e-4, rtol=1e-3)
+
+
+def test_decode_with_exact_cache_matches_forward(params):
+    """Decode over an uncompressed (w=1) cache must reproduce the full
+    causal forward's next-token logits — the contract that lets the Rust
+    coordinator treat compression as a drop-in."""
+    rng = np.random.default_rng(2)
+    n = 20
+    toks = np.concatenate([[tasks.BOS], rng.integers(6, CFG.vocab, size=(n - 1,))])
+    toks = jnp.asarray(toks, jnp.int32)
+    # prefill the first n-1 tokens
+    _, kc, vc = prefill(params, toks[: n - 1], jnp.asarray(n - 1, jnp.int32))
+    w = jnp.ones((CFG.n_layers, CFG.n_heads, n - 1), jnp.float32)
+    logits, new_k, new_v = decode_step(
+        params, toks[n - 1], jnp.asarray(n - 1, jnp.int32), kc, vc, w
+    )
+    want = forward_train(params, toks[None])[0, -1]
+    np.testing.assert_allclose(np.asarray(logits), np.asarray(want), atol=1e-4, rtol=1e-3)
+    assert new_k.shape == (CFG.n_layers, CFG.n_heads, CFG.d_head)
+    assert new_v.shape == new_k.shape
+
+
+def test_decode_padding_rows_inert(params):
+    rng = np.random.default_rng(3)
+    n = 12
+    toks = jnp.asarray(rng.integers(1, CFG.vocab, size=(n,)), jnp.int32)
+    _, kc, vc = prefill(params, toks[: n - 1], jnp.asarray(n - 1, jnp.int32))
+    w = jnp.ones((CFG.n_layers, CFG.n_heads, n - 1), jnp.float32)
+    logits, _, _ = decode_step(params, toks[n - 1], jnp.asarray(n - 1, jnp.int32), kc, vc, w)
+    # pad cache per the contract: arbitrary keys, ZERO values, zero weights
+    pad = 5
+    kc_p = jnp.concatenate(
+        [kc, jnp.asarray(rng.normal(size=(CFG.n_layers, CFG.n_heads, pad, CFG.d_head)), jnp.float32)],
+        axis=2,
+    )
+    vc_p = jnp.concatenate(
+        [vc, jnp.zeros((CFG.n_layers, CFG.n_heads, pad, CFG.d_head), jnp.float32)],
+        axis=2,
+    )
+    w_p = jnp.concatenate([w, jnp.zeros((CFG.n_layers, CFG.n_heads, pad))], axis=2)
+    logits_p, _, _ = decode_step(
+        params, toks[n - 1], jnp.asarray(n - 1, jnp.int32), kc_p, vc_p, w_p
+    )
+    np.testing.assert_allclose(np.asarray(logits), np.asarray(logits_p), atol=2e-4)
+
+
+def test_task_generators():
+    rng = np.random.default_rng(4)
+    t, w, answers = tasks.gen_kv_lookup(rng, 128, CFG.vocab, n_pairs=4, n_queries=3)
+    assert t.shape == (128,)
+    assert t[0] == tasks.BOS
+    assert len(answers) == 3
+    for pos, ans in answers:
+        assert t[pos] == ans
+        assert w[pos] == 4.0  # answer positions carry boosted weight
+    t2, w2, a2 = tasks.gen_induction(rng, 96, CFG.vocab, period=10)
+    # positions ≥ period repeat with the period (position 0 is BOS-patched)
+    np.testing.assert_array_equal(t2[20:90], t2[10:80])
+    toks, wts = tasks.gen_batch(rng, 6, 128, CFG.vocab)
+    assert toks.shape == (6, 128)
+    assert wts.shape == (6, 128)
+    assert (toks >= 0).all() and (toks < CFG.vocab).all()
+
+
+def test_training_step_decreases_loss():
+    """Three Adam steps on one batch must reduce the weighted loss (smoke
+    test of the build-time training loop)."""
+    from compile.train import adam_init, adam_update, loss_fn
+
+    rng = np.random.default_rng(5)
+    toks, wts = tasks.gen_batch(rng, 8, 64, CFG.vocab)
+    toks = jnp.asarray(toks)
+    wts = jnp.asarray(wts)
+    params = init_params(jax.random.PRNGKey(1))
+    opt = adam_init(params)
+    l0 = float(loss_fn(params, toks, wts, CFG))
+    for _ in range(5):
+        loss, grads = jax.value_and_grad(loss_fn)(params, toks, wts, CFG)
+        params, opt = adam_update(params, grads, opt, 1e-3)
+    l1 = float(loss_fn(params, toks, wts, CFG))
+    assert l1 < l0, (l0, l1)

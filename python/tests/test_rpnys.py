@@ -1,0 +1,110 @@
+"""Reference-implementation tests for RPNYS, the temperature rule and the
+COMPRESSKV pipeline (compile/kernels/ref.py). The Rust implementation is
+cross-validated against the same invariants in rust/src/rpnys/."""
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+
+
+def kernel_matrix(k, scale_eff):
+    k = np.asarray(k, dtype=np.float64)
+    return np.exp(scale_eff * (k @ k.T))
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    n=st.integers(8, 48),
+    d=st.integers(1, 6),
+    rank=st.integers(1, 12),
+    seed=st.integers(0, 10_000),
+)
+def test_rpnys_pivots_distinct_and_weights_shaped(n, d, rank, seed):
+    rng = np.random.default_rng(seed)
+    k = rng.normal(size=(n, d))
+    piv, w = ref.rpnys(k, 0.3, rank, rng)
+    assert len(set(piv)) == len(piv)
+    assert w.shape == (len(piv), n)
+    assert all(0 <= p < n for p in piv)
+
+
+def test_rpnys_error_decreases_with_rank():
+    rng = np.random.default_rng(0)
+    k = rng.normal(size=(40, 4))
+    h = kernel_matrix(k, 0.3)
+    errs = []
+    for rank in (2, 10, 40):
+        piv, w = ref.rpnys(k, 0.3, rank, np.random.default_rng(7))
+        h_hat = np.exp(0.3 * (k @ k[piv].T)) @ w
+        errs.append(np.linalg.norm(h - h_hat, 2))
+    assert errs[2] < errs[0]
+    assert errs[2] < 1e-6 * np.linalg.norm(h, 2)  # full rank ≈ exact
+
+
+def test_nystrom_weights_interpolate_at_pivots():
+    rng = np.random.default_rng(1)
+    k = rng.normal(size=(20, 3))
+    piv, w = ref.rpnys(k, 0.5, 6, rng)
+    for i, _ in enumerate(piv):
+        for j, pj in enumerate(piv):
+            want = 1.0 if i == j else 0.0
+            assert abs(w[i, pj] - want) < 1e-6
+
+
+def test_temperature_matches_eq4_shape():
+    # τ² · R_Q/R_K = b0 / (2 W0(b0/(2ρ0)))  (Eq. 4)
+    beta, rq, rk, n = 0.125, 4.0, 3.0, 4096
+    tau = ref.temperature(beta, rq, rk, n)
+    b0 = np.log(n) / (beta * rq * rk) + 2.0
+    lhs = tau * tau * rq / rk
+    rhs = b0 / (2.0 * ref.lambert_w0(b0 / (2.0 * ref.RHO0)))
+    assert abs(lhs - rhs) < 1e-9
+
+
+def test_lambert_w_identity():
+    for z in (1e-6, 0.1, 1.0, 2.7, 100.0, 1e8):
+        w = ref.lambert_w0(z)
+        assert abs(w * np.exp(w) - z) < 1e-9 * max(z, 1.0)
+
+
+def test_rho0_value():
+    assert abs(ref.RHO0 - 3.19) < 0.02  # paper: ρ0 ≈ 3.19
+
+
+@settings(max_examples=8, deadline=None)
+@given(
+    n=st.integers(24, 64),
+    rank=st.integers(4, 16),
+    bins=st.integers(1, 4),
+    seed=st.integers(0, 10_000),
+)
+def test_compress_kv_shapes(n, rank, bins, seed):
+    rng = np.random.default_rng(seed)
+    k = rng.normal(size=(n, 4))
+    v = rng.normal(size=(n, 3))
+    k_s, v_s, w, idx = ref.compress_kv(k, v, 2.0, 0.25, rank, bins, rng)
+    assert k_s.shape[0] == v_s.shape[0] == w.shape[0] == len(idx)
+    assert k_s.shape[0] <= rank + bins
+    assert len(set(idx)) == len(idx)
+    # coreset keys are original rows (mean removed then re-added)
+    for row, gi in enumerate(idx):
+        np.testing.assert_allclose(k_s[row], k[gi], atol=1e-9)
+
+
+def test_wildcat_error_decreases_with_rank():
+    rng = np.random.default_rng(3)
+    n = 192
+    q = rng.normal(size=(64, 8)).astype(np.float32)
+    k = rng.normal(size=(n, 8)).astype(np.float32)
+    v = rng.normal(size=(n, 4)).astype(np.float32)
+    exact = np.asarray(ref.exact_attention(q, k, v, 0.35))
+    errs = []
+    for rank in (4, 48, 160):
+        tot = 0.0
+        for s in range(3):
+            o = ref.wildcat_attention(q, k, v, 0.35, rank, 1, np.random.default_rng(10 + s))
+            tot += np.abs(o - exact).max()
+        errs.append(tot / 3)
+    assert errs[2] < errs[0], errs
+    assert errs[2] < 0.3, errs

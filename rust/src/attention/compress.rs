@@ -1,0 +1,300 @@
+//! COMPRESSKV (Alg. 2): distil `(K, V)` into a weighted coreset
+//! `(K_S, V_S, w)` of size `r`.
+//!
+//! Pipeline per the paper: recentre keys (Sec. 2.4) → split into `B`
+//! contiguous bins → per bin, compute the key radius, the temperature
+//! (Eq. 4) and run RPNYS at rank `r/B` with kernel
+//! `h_τ = exp(β⟨·,·⟩/τ²)` → concatenate, re-add the key mean, and form
+//! `V_S = W V`, `w = W 1_n` with the block-diagonal weights.
+//!
+//! Bins run in parallel on the [`crate::exec`] pool with independent
+//! forked RNG streams (deterministic given the input seed).
+
+use crate::exec;
+use crate::kernels::{recenter_keys, temperature};
+use crate::linalg::Matrix;
+use crate::rng::Rng;
+use crate::rpnys::rpnys;
+
+/// Options for COMPRESSKV.
+#[derive(Clone, Copy, Debug)]
+pub struct CompressOpts {
+    /// Total coreset size `r` (split evenly across bins).
+    pub rank: usize,
+    /// Number of parallel bins `B` (Sec. 2.5).
+    pub bins: usize,
+    /// Attention scale `β` (typically `1/√d`).
+    pub beta: f64,
+    /// Query radius `R_Q = ‖Q‖_{2,∞}`; used only by the temperature rule.
+    pub r_q: f64,
+}
+
+/// The compressed cache: coreset keys (original coordinates), compressed
+/// values, normalisation weights and the global indices of the coreset.
+#[derive(Clone, Debug)]
+pub struct CompressedKV {
+    /// `K_S ∈ R^{r×d}` — selected keys with the mean re-added.
+    pub keys: Matrix,
+    /// `V_S = W V ∈ R^{r×d_v}` — every value row participates.
+    pub values: Matrix,
+    /// `w = W 1_n` — softmax normalisation weights.
+    pub weights: Vec<f64>,
+    /// Global indices of the selected keys (into the original `K`).
+    pub indices: Vec<usize>,
+    /// Original sequence length this coreset summarises.
+    pub source_len: usize,
+}
+
+impl CompressedKV {
+    pub fn rank(&self) -> usize {
+        self.keys.rows()
+    }
+
+    /// Memory footprint in f32-equivalents (keys + values + weights) —
+    /// the Tab. 4 compression accounting.
+    pub fn footprint_floats(&self) -> usize {
+        self.keys.rows() * self.keys.cols()
+            + self.values.rows() * self.values.cols()
+            + self.weights.len()
+    }
+}
+
+/// Result of compressing one bin (local to the bin's row range).
+struct BinResult {
+    indices: Vec<usize>, // global
+    keys: Matrix,
+    values: Matrix,
+    weights: Vec<f64>,
+}
+
+impl Default for BinResult {
+    fn default() -> Self {
+        BinResult {
+            indices: Vec::new(),
+            keys: Matrix::zeros(0, 0),
+            values: Matrix::zeros(0, 0),
+            weights: Vec::new(),
+        }
+    }
+}
+
+impl Clone for BinResult {
+    fn clone(&self) -> Self {
+        BinResult {
+            indices: self.indices.clone(),
+            keys: self.keys.clone(),
+            values: self.values.clone(),
+            weights: self.weights.clone(),
+        }
+    }
+}
+
+/// COMPRESSKV (Alg. 2). `k` is n×d, `v` is n×d_v. Returns a coreset of at
+/// most `opts.rank` weighted key/value pairs.
+pub fn compress_kv(k: &Matrix, v: &Matrix, opts: &CompressOpts, rng: &mut Rng) -> CompressedKV {
+    assert_eq!(k.rows(), v.rows(), "key/value length mismatch");
+    let n = k.rows();
+    if n == 0 || opts.rank == 0 {
+        return CompressedKV {
+            keys: Matrix::zeros(0, k.cols()),
+            values: Matrix::zeros(0, v.cols()),
+            weights: Vec::new(),
+            indices: Vec::new(),
+            source_len: n,
+        };
+    }
+    // Degenerate: coreset at least as large as the input — keep everything
+    // with unit weights (exact).
+    if opts.rank >= n {
+        return CompressedKV {
+            keys: k.clone(),
+            values: v.clone(),
+            weights: vec![1.0; n],
+            indices: (0..n).collect(),
+            source_len: n,
+        };
+    }
+
+    let bins = opts.bins.clamp(1, opts.rank.min(n));
+    let rank_per_bin = opts.rank.div_ceil(bins);
+    let recentred = recenter_keys(k);
+
+    // Contiguous binning (Alg. 2 "evenly divide rows").
+    let base = n / bins;
+    let rem = n % bins;
+    let bin_range = |b: usize| {
+        let start = b * base + b.min(rem);
+        let end = start + base + usize::from(b < rem);
+        start..end
+    };
+
+    // Independent RNG stream per bin: deterministic and order-free.
+    let seeds: Vec<Rng> = (0..bins).map(|b| rng.fork(b as u64)).collect();
+    let seed_cells: Vec<std::sync::Mutex<Rng>> =
+        seeds.into_iter().map(std::sync::Mutex::new).collect();
+
+    let results: Vec<BinResult> = exec::parallel_map(bins, |b| {
+        let range = bin_range(b);
+        let start = range.start;
+        let kb = recentred.keys.slice_rows(range.start, range.end);
+        let vb = v.slice_rows(range.start, range.end);
+        let n_b = kb.rows();
+        let r_k = kb.max_row_norm();
+        let tau = temperature(opts.beta, opts.r_q, r_k, n_b);
+        let scale_eff = opts.beta / (tau * tau);
+        let mut bin_rng = seed_cells[b].lock().unwrap().clone();
+        let approx = rpnys(&kb, scale_eff, rank_per_bin.min(n_b), &mut bin_rng);
+        let values = approx.compress_values(&vb);
+        let weights = approx.weight_row_sums();
+        let keys = kb.select_rows(&approx.indices);
+        BinResult {
+            indices: approx.indices.iter().map(|&i| i + start).collect(),
+            keys,
+            values,
+            weights,
+        }
+    });
+
+    // Concatenate bins and re-add the key mean.
+    let mut indices = Vec::new();
+    let mut weights = Vec::new();
+    let key_parts: Vec<&Matrix> = results.iter().filter(|r| r.keys.rows() > 0).map(|r| &r.keys).collect();
+    let val_parts: Vec<&Matrix> =
+        results.iter().filter(|r| r.values.rows() > 0).map(|r| &r.values).collect();
+    for r in &results {
+        indices.extend_from_slice(&r.indices);
+        weights.extend_from_slice(&r.weights);
+    }
+    let mut keys = if key_parts.is_empty() {
+        Matrix::zeros(0, k.cols())
+    } else {
+        Matrix::vcat(&key_parts)
+    };
+    keys.add_row_vector_mut(&recentred.mean);
+    let values = if val_parts.is_empty() {
+        Matrix::zeros(0, v.cols())
+    } else {
+        Matrix::vcat(&val_parts)
+    };
+    CompressedKV { keys, values, weights, indices, source_len: n }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::Cases;
+
+    fn opts(rank: usize, bins: usize) -> CompressOpts {
+        CompressOpts { rank, bins, beta: 0.25, r_q: 3.0 }
+    }
+
+    #[test]
+    fn shapes_and_indices() {
+        Cases::new(12).run(|rng| {
+            let n = 16 + rng.below(60);
+            let d = 2 + rng.below(6);
+            let dv = 1 + rng.below(5);
+            let k = Matrix::randn(rng, n, d);
+            let v = Matrix::randn(rng, n, dv);
+            let bins = 1 + rng.below(4);
+            let rank = (4 + rng.below(12)).min(n - 1);
+            let c = compress_kv(&k, &v, &opts(rank, bins), rng);
+            assert!(c.rank() <= rank + bins); // ceil split may add < bins
+            assert_eq!(c.keys.rows(), c.values.rows());
+            assert_eq!(c.keys.rows(), c.weights.len());
+            assert_eq!(c.keys.cols(), d);
+            assert_eq!(c.values.cols(), dv);
+            assert_eq!(c.source_len, n);
+            // indices valid and unique
+            let mut idx = c.indices.clone();
+            idx.sort_unstable();
+            let len0 = idx.len();
+            idx.dedup();
+            assert_eq!(idx.len(), len0);
+            assert!(idx.iter().all(|&i| i < n));
+        });
+    }
+
+    #[test]
+    fn coreset_keys_are_original_rows() {
+        let mut rng = Rng::seed_from(2);
+        let k = Matrix::randn(&mut rng, 40, 4);
+        let v = Matrix::randn(&mut rng, 40, 3);
+        let c = compress_kv(&k, &v, &opts(8, 2), &mut rng);
+        for (row, &gi) in c.indices.iter().enumerate() {
+            for j in 0..4 {
+                assert!(
+                    (c.keys.get(row, j) - k.get(gi, j)).abs() < 1e-4,
+                    "coreset key {row} != original row {gi}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn full_rank_is_identity_compression() {
+        let mut rng = Rng::seed_from(3);
+        let k = Matrix::randn(&mut rng, 10, 3);
+        let v = Matrix::randn(&mut rng, 10, 2);
+        let c = compress_kv(&k, &v, &opts(10, 1), &mut rng);
+        assert_eq!(c.rank(), 10);
+        assert_eq!(c.keys, k);
+        assert_eq!(c.values, v);
+        assert!(c.weights.iter().all(|&w| (w - 1.0).abs() < 1e-12));
+    }
+
+    #[test]
+    fn empty_and_zero_rank() {
+        let mut rng = Rng::seed_from(4);
+        let k = Matrix::zeros(0, 3);
+        let v = Matrix::zeros(0, 2);
+        let c = compress_kv(&k, &v, &opts(5, 2), &mut rng);
+        assert_eq!(c.rank(), 0);
+        let k2 = Matrix::randn(&mut rng, 8, 3);
+        let v2 = Matrix::randn(&mut rng, 8, 2);
+        let c2 = compress_kv(&k2, &v2, &opts(0, 2), &mut rng);
+        assert_eq!(c2.rank(), 0);
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let mut rng1 = Rng::seed_from(77);
+        let mut rng2 = Rng::seed_from(77);
+        let mut data_rng = Rng::seed_from(5);
+        let k = Matrix::randn(&mut data_rng, 64, 4);
+        let v = Matrix::randn(&mut data_rng, 64, 4);
+        let c1 = compress_kv(&k, &v, &opts(16, 4), &mut rng1);
+        let c2 = compress_kv(&k, &v, &opts(16, 4), &mut rng2);
+        assert_eq!(c1.indices, c2.indices);
+        assert_eq!(c1.weights, c2.weights);
+    }
+
+    #[test]
+    fn binning_covers_all_bins() {
+        // with B bins, the coreset should draw from every bin's range
+        let mut rng = Rng::seed_from(6);
+        let k = Matrix::randn(&mut rng, 80, 4);
+        let v = Matrix::randn(&mut rng, 80, 2);
+        let bins = 4;
+        let c = compress_kv(&k, &v, &opts(16, bins), &mut rng);
+        for b in 0..bins {
+            let lo = b * 20;
+            let hi = lo + 20;
+            assert!(
+                c.indices.iter().any(|&i| i >= lo && i < hi),
+                "bin {b} contributed no pivots: {:?}",
+                c.indices
+            );
+        }
+    }
+
+    #[test]
+    fn footprint_accounting() {
+        let mut rng = Rng::seed_from(7);
+        let k = Matrix::randn(&mut rng, 50, 4);
+        let v = Matrix::randn(&mut rng, 50, 6);
+        let c = compress_kv(&k, &v, &opts(10, 1), &mut rng);
+        let r = c.rank();
+        assert_eq!(c.footprint_floats(), r * 4 + r * 6 + r);
+    }
+}

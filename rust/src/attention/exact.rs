@@ -1,0 +1,150 @@
+//! Exact softmax attention (Eq. 1), numerically stabilised with per-query
+//! max subtraction. `O(m n d)` time, `O(n)` extra memory per thread.
+
+use crate::exec;
+use crate::linalg::gemm::dot;
+use crate::linalg::Matrix;
+
+/// `O = softmax(β Q Kᵀ) V` — the reference the whole paper approximates.
+///
+/// Parallel over query rows; logits for one query are materialised at a
+/// time (O(n) scratch), so this scales to the Fig. 3 sequence lengths
+/// without O(mn) memory.
+pub fn exact_attention(q: &Matrix, k: &Matrix, v: &Matrix, beta: f32) -> Matrix {
+    assert_eq!(q.cols(), k.cols(), "q/k head dim mismatch");
+    assert_eq!(k.rows(), v.rows(), "k/v length mismatch");
+    let (m, n, dv) = (q.rows(), k.rows(), v.cols());
+    let mut out = Matrix::zeros(m, dv);
+    exec::parallel_chunks_mut(out.as_mut_slice(), 16 * dv.max(1), |chunk_idx, rows| {
+        let row0 = chunk_idx * 16;
+        let mut logits = vec![0.0f32; n];
+        let rows_here = rows.len() / dv.max(1);
+        for r in 0..rows_here {
+            let i = row0 + r;
+            let qi = q.row(i);
+            let mut mx = f32::NEG_INFINITY;
+            for (j, l) in logits.iter_mut().enumerate() {
+                *l = beta * dot(qi, k.row(j));
+                if *l > mx {
+                    mx = *l;
+                }
+            }
+            let mut denom = 0.0f64;
+            let out_row = &mut rows[r * dv..(r + 1) * dv];
+            let mut acc = vec![0.0f64; dv];
+            for (j, &l) in logits.iter().enumerate() {
+                let p = ((l - mx) as f64).exp();
+                denom += p;
+                for (a, &x) in acc.iter_mut().zip(v.row(j)) {
+                    *a += p * x as f64;
+                }
+            }
+            for (o, a) in out_row.iter_mut().zip(&acc) {
+                *o = (*a / denom) as f32;
+            }
+        }
+    });
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+    use crate::util::prop::Cases;
+
+    /// Brute force oracle in f64.
+    pub(crate) fn attention_oracle(q: &Matrix, k: &Matrix, v: &Matrix, beta: f32) -> Matrix {
+        let (m, n, dv) = (q.rows(), k.rows(), v.cols());
+        let mut out = Matrix::zeros(m, dv);
+        for i in 0..m {
+            let logits: Vec<f64> = (0..n)
+                .map(|j| beta as f64 * Matrix::row_dot(q, i, k, j))
+                .collect();
+            let mx = logits.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+            let ps: Vec<f64> = logits.iter().map(|l| (l - mx).exp()).collect();
+            let denom: f64 = ps.iter().sum();
+            for jd in 0..dv {
+                let num: f64 = (0..n).map(|j| ps[j] * v.get(j, jd) as f64).sum();
+                out.set(i, jd, (num / denom) as f32);
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn matches_oracle() {
+        Cases::new(16).run(|rng| {
+            let m = 1 + rng.below(40);
+            let n = 1 + rng.below(50);
+            let d = 1 + rng.below(16);
+            let dv = 1 + rng.below(12);
+            let q = Matrix::randn(rng, m, d);
+            let k = Matrix::randn(rng, n, d);
+            let v = Matrix::randn(rng, n, dv);
+            let got = exact_attention(&q, &k, &v, 0.3);
+            let want = attention_oracle(&q, &k, &v, 0.3);
+            for (a, b) in got.as_slice().iter().zip(want.as_slice()) {
+                assert!((a - b).abs() < 1e-4, "{a} vs {b}");
+            }
+        });
+    }
+
+    #[test]
+    fn rows_are_convex_combinations() {
+        // each output row lies in the convex hull of value rows
+        let mut rng = Rng::seed_from(1);
+        let q = Matrix::randn(&mut rng, 20, 8);
+        let k = Matrix::randn(&mut rng, 30, 8);
+        let v = Matrix::randn(&mut rng, 30, 4);
+        let o = exact_attention(&q, &k, &v, 0.125);
+        let (mn, mx) = v.col_min_max();
+        for i in 0..o.rows() {
+            for j in 0..o.cols() {
+                let x = o.get(i, j);
+                assert!(x >= mn[j] - 1e-4 && x <= mx[j] + 1e-4);
+            }
+        }
+    }
+
+    #[test]
+    fn shift_invariance_of_keys() {
+        // Sec 2.4: output invariant under global key recentring.
+        let mut rng = Rng::seed_from(2);
+        let q = Matrix::randn(&mut rng, 10, 6);
+        let k = Matrix::randn(&mut rng, 25, 6);
+        let v = Matrix::randn(&mut rng, 25, 3);
+        let shift: Vec<f32> = (0..6).map(|i| i as f32 * 0.5 - 1.0).collect();
+        let k_shift = k.sub_row_vector(&shift);
+        let a = exact_attention(&q, &k, &v, 0.2);
+        let b = exact_attention(&q, &k_shift, &v, 0.2);
+        for (x, y) in a.as_slice().iter().zip(b.as_slice()) {
+            assert!((x - y).abs() < 2e-4, "{x} vs {y}");
+        }
+    }
+
+    #[test]
+    fn scale_invariance_of_qk() {
+        // A invariant under Q→τQ, K→K/τ.
+        let mut rng = Rng::seed_from(3);
+        let q = Matrix::randn(&mut rng, 8, 5);
+        let k = Matrix::randn(&mut rng, 12, 5);
+        let v = Matrix::randn(&mut rng, 12, 4);
+        let tau = 2.5f32;
+        let a = exact_attention(&q, &k, &v, 0.3);
+        let b = exact_attention(&q.scale(tau), &k.scale(1.0 / tau), &v, 0.3);
+        for (x, y) in a.as_slice().iter().zip(b.as_slice()) {
+            assert!((x - y).abs() < 2e-4, "{x} vs {y}");
+        }
+    }
+
+    #[test]
+    fn extreme_logits_stay_finite() {
+        let q = Matrix::from_vec(vec![100.0, 100.0], 1, 2);
+        let k = Matrix::from_vec(vec![100.0, 100.0, -100.0, -100.0], 2, 2);
+        let v = Matrix::from_vec(vec![1.0, 2.0], 2, 1);
+        let o = exact_attention(&q, &k, &v, 1.0);
+        assert!(o.get(0, 0).is_finite());
+        assert!((o.get(0, 0) - 1.0).abs() < 1e-5); // fully attends first key
+    }
+}

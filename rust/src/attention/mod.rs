@@ -1,0 +1,26 @@
+//! Attention algorithms: the paper's WildCat pipeline and the exact
+//! baselines it is measured against.
+//!
+//! * [`exact`] — textbook softmax attention (numerically stabilised).
+//! * [`flash`] — blocked online-softmax exact attention, the repo's
+//!   FlashAttention-2 stand-in for Fig. 3 (multi-threaded over query
+//!   blocks, streaming key/value tiles).
+//! * [`wtd`] — WTDATTN (Alg. 3): weighted attention over a compressed
+//!   coreset `(K_S, V_S, w)` with per-column clipping (Lem. 1).
+//! * [`compress`] — COMPRESSKV (Alg. 2): recentring, per-bin temperature
+//!   (Eq. 4), binned RPNYS and block-diagonal Nyström weighting.
+//! * [`wildcat`] — WILDCAT (Alg. 4): the drop-in attention module.
+
+pub mod compress;
+pub mod exact;
+pub mod flash;
+pub mod streaming;
+pub mod wildcat;
+pub mod wtd;
+
+pub use compress::{compress_kv, CompressedKV, CompressOpts};
+pub use exact::exact_attention;
+pub use flash::flash_attention;
+pub use streaming::{causal_wildcat_attention, StreamingWildcat};
+pub use wildcat::{wildcat_attention, WildcatParams};
+pub use wtd::{wtd_attention, ClipRange};

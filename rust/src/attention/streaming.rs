@@ -1,0 +1,265 @@
+//! Streaming / causal WildCat — the paper's §5 future-work extension,
+//! built with the divide-and-conquer evaluation it suggests (à la
+//! HyperAttention's causal recursion, here in its simplest chunked form).
+//!
+//! Keys are consumed in arrival order and grouped into chunks of size
+//! `chunk`. Completed chunks are frozen into COMPRESSKV coresets
+//! (`rank_per_chunk` weighted points each); the *current* chunk stays
+//! exact. A query at position `i` then attends over
+//!
+//! `coresets(chunks fully before i)  ∪  exact keys of i's own chunk ≤ i`,
+//!
+//! which respects causality exactly at the chunk granularity and
+//! approximately (via the coreset) for the past. Cost per token:
+//! `O((n/c)·r·d + c·d)` — near-linear overall for `r, c ∈ n^{o(1)}`-ish
+//! choices, versus `O(n·d)` per token for exact causal attention.
+
+use super::compress::{compress_kv, CompressOpts};
+use super::wtd::{wtd_attention, ClipRange};
+use crate::linalg::Matrix;
+use crate::rng::Rng;
+
+/// Streaming attention state: frozen coresets + the live tail chunk.
+pub struct StreamingWildcat {
+    pub chunk: usize,
+    pub rank_per_chunk: usize,
+    pub bins: usize,
+    beta: f64,
+    d_k: usize,
+    d_v: usize,
+    // frozen summary of all completed chunks
+    frozen_keys: Matrix,
+    frozen_values: Matrix,
+    frozen_weights: Vec<f64>,
+    // live (uncompressed) tail
+    tail_keys: Matrix,
+    tail_values: Matrix,
+    /// total keys consumed
+    len: usize,
+    rng: Rng,
+}
+
+impl StreamingWildcat {
+    pub fn new(
+        chunk: usize,
+        rank_per_chunk: usize,
+        bins: usize,
+        beta: f64,
+        d_k: usize,
+        d_v: usize,
+        seed: u64,
+    ) -> Self {
+        assert!(chunk >= 1 && rank_per_chunk >= 1);
+        StreamingWildcat {
+            chunk,
+            rank_per_chunk,
+            bins: bins.max(1),
+            beta,
+            d_k,
+            d_v,
+            frozen_keys: Matrix::zeros(0, d_k),
+            frozen_values: Matrix::zeros(0, d_v),
+            frozen_weights: Vec::new(),
+            tail_keys: Matrix::zeros(0, d_k),
+            tail_values: Matrix::zeros(0, d_v),
+            len: 0,
+            rng: Rng::seed_from(seed),
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Physical summary size (frozen coreset points + live tail).
+    pub fn state_size(&self) -> usize {
+        self.frozen_keys.rows() + self.tail_keys.rows()
+    }
+
+    /// Ingest one (key, value); freezes the tail into a coreset when the
+    /// chunk completes.
+    pub fn push(&mut self, key: &[f32], value: &[f32]) {
+        assert_eq!(key.len(), self.d_k);
+        assert_eq!(value.len(), self.d_v);
+        self.tail_keys.push_row(key);
+        self.tail_values.push_row(value);
+        self.len += 1;
+        if self.tail_keys.rows() >= self.chunk {
+            self.freeze_tail();
+        }
+    }
+
+    fn freeze_tail(&mut self) {
+        let n_tail = self.tail_keys.rows();
+        if n_tail == 0 {
+            return;
+        }
+        let opts = CompressOpts {
+            rank: self.rank_per_chunk.min(n_tail),
+            bins: self.bins,
+            beta: self.beta,
+            // query radius proxy: keys of the same stream share scale
+            r_q: self.tail_keys.max_row_norm().max(1e-9),
+        };
+        let c = compress_kv(&self.tail_keys, &self.tail_values, &opts, &mut self.rng);
+        self.frozen_keys = Matrix::vcat(&[&self.frozen_keys, &c.keys]);
+        self.frozen_values = Matrix::vcat(&[&self.frozen_values, &c.values]);
+        self.frozen_weights.extend_from_slice(&c.weights);
+        self.tail_keys = Matrix::zeros(0, self.d_k);
+        self.tail_values = Matrix::zeros(0, self.d_v);
+    }
+
+    /// Causal attention of `q` (1×d or m×d, all at the *current* position)
+    /// over everything ingested so far.
+    pub fn attend(&self, q: &Matrix) -> Matrix {
+        assert_eq!(q.cols(), self.d_k);
+        assert!(self.len > 0, "attend on empty stream");
+        // assemble frozen ∪ tail (tail carries unit weights)
+        let keys = Matrix::vcat(&[&self.frozen_keys, &self.tail_keys]);
+        let values = Matrix::vcat(&[&self.frozen_values, &self.tail_values]);
+        let mut weights = self.frozen_weights.clone();
+        weights.extend(std::iter::repeat(1.0).take(self.tail_keys.rows()));
+        let clip = ClipRange::from_values(&values);
+        wtd_attention(q, &keys, &values, &weights, &clip, self.beta as f32)
+    }
+}
+
+/// Full causal WildCat over a (Q, K, V) batch: the offline equivalent of
+/// feeding the stream token by token and attending at every position.
+/// Returns the m×d_v causal outputs (row i attends over keys 0..=i).
+pub fn causal_wildcat_attention(
+    q: &Matrix,
+    k: &Matrix,
+    v: &Matrix,
+    chunk: usize,
+    rank_per_chunk: usize,
+    bins: usize,
+    beta: f64,
+    seed: u64,
+) -> Matrix {
+    assert_eq!(q.rows(), k.rows(), "causal attention needs m == n");
+    let mut state =
+        StreamingWildcat::new(chunk, rank_per_chunk, bins, beta, k.cols(), v.cols(), seed);
+    let mut out = Matrix::zeros(q.rows(), v.cols());
+    for i in 0..q.rows() {
+        state.push(k.row(i), v.row(i));
+        let qi = Matrix::from_vec(q.row(i).to_vec(), 1, q.cols());
+        let o = state.attend(&qi);
+        out.row_mut(i).copy_from_slice(o.row(0));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::norms::{max_abs, max_abs_diff};
+
+    /// Exact causal attention oracle.
+    fn causal_exact(q: &Matrix, k: &Matrix, v: &Matrix, beta: f32) -> Matrix {
+        let mut out = Matrix::zeros(q.rows(), v.cols());
+        for i in 0..q.rows() {
+            let qi = Matrix::from_vec(q.row(i).to_vec(), 1, q.cols());
+            let ki = k.slice_rows(0, i + 1);
+            let vi = v.slice_rows(0, i + 1);
+            let o = crate::attention::exact_attention(&qi, &ki, &vi, beta);
+            out.row_mut(i).copy_from_slice(o.row(0));
+        }
+        out
+    }
+
+    #[test]
+    fn huge_chunk_is_exact_causal() {
+        // chunk larger than the stream ⇒ tail never freezes ⇒ exact
+        let mut rng = Rng::seed_from(1);
+        let n = 24;
+        let q = Matrix::randn(&mut rng, n, 6);
+        let k = Matrix::randn(&mut rng, n, 6);
+        let v = Matrix::randn(&mut rng, n, 4);
+        let got = causal_wildcat_attention(&q, &k, &v, 1000, 8, 1, 0.3, 7);
+        let want = causal_exact(&q, &k, &v, 0.3);
+        assert!(max_abs_diff(&got, &want) < 1e-4);
+    }
+
+    #[test]
+    fn compressed_stream_tracks_exact() {
+        let mut rng = Rng::seed_from(2);
+        let n = 160;
+        let q = Matrix::randn(&mut rng, n, 8);
+        let k = Matrix::randn(&mut rng, n, 8);
+        let v = Matrix::randn(&mut rng, n, 4);
+        let want = causal_exact(&q, &k, &v, 0.35);
+        let got = causal_wildcat_attention(&q, &k, &v, 32, 16, 1, 0.35, 7);
+        let err = max_abs_diff(&got, &want) / max_abs(&v);
+        assert!(err < 0.5, "relative causal error too high: {err}");
+        // and better than dropping the past entirely (StreamingLLM-style)
+        let mut drop_err = 0.0f64;
+        for i in 0..n {
+            let lo = i.saturating_sub(31);
+            let qi = Matrix::from_vec(q.row(i).to_vec(), 1, 8);
+            let o = crate::attention::exact_attention(
+                &qi,
+                &k.slice_rows(lo, i + 1),
+                &v.slice_rows(lo, i + 1),
+                0.35,
+            );
+            for (a, b) in o.row(0).iter().zip(want.row(i)) {
+                drop_err = drop_err.max((a - b).abs() as f64 / max_abs(&v));
+            }
+        }
+        assert!(
+            err < drop_err,
+            "coreset past ({err}) should beat dropped past ({drop_err})"
+        );
+    }
+
+    #[test]
+    fn state_size_near_constant_per_chunk() {
+        let mut rng = Rng::seed_from(3);
+        let mut s = StreamingWildcat::new(32, 8, 1, 0.3, 4, 4, 9);
+        for i in 0..320 {
+            let kr: Vec<f32> = (0..4).map(|_| rng.gaussian() as f32).collect();
+            let vr: Vec<f32> = (0..4).map(|_| rng.gaussian() as f32).collect();
+            s.push(&kr, &vr);
+            let _ = i;
+        }
+        assert_eq!(s.len(), 320);
+        // 10 frozen chunks × ≤8 points + empty tail
+        assert!(s.state_size() <= 10 * 8, "state={}", s.state_size());
+        // compression ratio ≥ 4x
+        assert!(s.state_size() * 4 <= 320);
+    }
+
+    #[test]
+    fn causality_future_keys_ignored() {
+        // output at position i must not change when future keys change
+        let mut rng = Rng::seed_from(4);
+        let n = 64;
+        let q = Matrix::randn(&mut rng, n, 4);
+        let k = Matrix::randn(&mut rng, n, 4);
+        let v = Matrix::randn(&mut rng, n, 4);
+        let a = causal_wildcat_attention(&q, &k, &v, 16, 8, 1, 0.3, 5);
+        // perturb the future half
+        let mut k2 = k.clone();
+        let mut v2 = v.clone();
+        for i in 48..n {
+            for j in 0..4 {
+                k2.set(i, j, -k.get(i, j) + 1.0);
+                v2.set(i, j, 3.0 * v.get(i, j));
+            }
+        }
+        let b = causal_wildcat_attention(&q, &k2, &v2, 16, 8, 1, 0.3, 5);
+        for i in 0..48 {
+            for j in 0..4 {
+                assert!(
+                    (a.get(i, j) - b.get(i, j)).abs() < 1e-5,
+                    "future leak at ({i},{j})"
+                );
+            }
+        }
+    }
+}

@@ -1,0 +1,143 @@
+//! WILDCAT (Alg. 4): the drop-in attention module.
+//!
+//! Computes the per-column value range, the query radius `R_Q`, compresses
+//! `(K, V)` with COMPRESSKV, and runs the weighted forward pass WTDATTN.
+//! Runtime `O(nr²/B² + nrd/B + mrd)` — near-linear for `r ∈ n^{o(1)}`.
+
+use super::compress::{compress_kv, CompressOpts};
+use super::wtd::{wtd_attention, ClipRange};
+use crate::linalg::Matrix;
+use crate::rng::Rng;
+
+/// WildCat hyper-parameters (Alg. 4 inputs).
+#[derive(Clone, Copy, Debug)]
+pub struct WildcatParams {
+    /// Coreset size `r`.
+    pub rank: usize,
+    /// Bin count `B` (Sec. 2.5). `1` = unbinned.
+    pub bins: usize,
+    /// Attention scale `β`; `None` selects `1/√d` at call time.
+    pub beta: Option<f64>,
+}
+
+impl Default for WildcatParams {
+    fn default() -> Self {
+        WildcatParams { rank: 64, bins: 1, beta: None }
+    }
+}
+
+impl WildcatParams {
+    pub fn beta_for(&self, d: usize) -> f64 {
+        self.beta.unwrap_or(1.0 / (d.max(1) as f64).sqrt())
+    }
+}
+
+/// WILDCAT attention (Alg. 4): approximate `softmax(β Q Kᵀ) V`.
+pub fn wildcat_attention(
+    q: &Matrix,
+    k: &Matrix,
+    v: &Matrix,
+    params: &WildcatParams,
+    rng: &mut Rng,
+) -> Matrix {
+    assert_eq!(q.cols(), k.cols(), "q/k head dim mismatch");
+    assert_eq!(k.rows(), v.rows(), "k/v length mismatch");
+    let beta = params.beta_for(q.cols());
+    let clip = ClipRange::from_values(v);
+    let r_q = q.max_row_norm();
+    let opts = CompressOpts { rank: params.rank, bins: params.bins, beta, r_q };
+    let c = compress_kv(k, v, &opts, rng);
+    wtd_attention(q, &c.keys, &c.values, &c.weights, &clip, beta as f32)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::attention::exact_attention;
+    use crate::linalg::norms::max_abs_diff;
+
+    #[test]
+    fn full_rank_recovers_exact() {
+        let mut rng = Rng::seed_from(1);
+        let q = Matrix::randn(&mut rng, 20, 6);
+        let k = Matrix::randn(&mut rng, 30, 6);
+        let v = Matrix::randn(&mut rng, 30, 4);
+        let params = WildcatParams { rank: 30, bins: 1, beta: None };
+        let o = wildcat_attention(&q, &k, &v, &params, &mut rng);
+        let e = exact_attention(&q, &k, &v, params.beta_for(6) as f32);
+        assert!(max_abs_diff(&o, &e) < 2e-4, "err={}", max_abs_diff(&o, &e));
+    }
+
+    #[test]
+    fn error_decreases_with_rank() {
+        let mut data_rng = Rng::seed_from(2);
+        let n = 256;
+        let q = Matrix::randn(&mut data_rng, 128, 16);
+        let k = Matrix::randn(&mut data_rng, n, 16);
+        let v = Matrix::randn(&mut data_rng, n, 8);
+        let e = exact_attention(&q, &k, &v, 0.25);
+        let mut errs = Vec::new();
+        for rank in [4usize, 32, 128] {
+            // average over seeds (RPNYS is randomised)
+            let mut tot = 0.0;
+            for seed in 0..3 {
+                let mut rng = Rng::seed_from(100 + seed);
+                let params = WildcatParams { rank, bins: 1, beta: Some(0.25) };
+                let o = wildcat_attention(&q, &k, &v, &params, &mut rng);
+                tot += max_abs_diff(&o, &e);
+            }
+            errs.push(tot / 3.0);
+        }
+        assert!(
+            errs[2] < errs[0],
+            "error should decrease from r=4 to r=128: {errs:?}"
+        );
+        // and at r = n/2 the approximation should be decent
+        assert!(errs[2] < 0.5, "errs={errs:?}");
+    }
+
+    #[test]
+    fn output_within_value_hull() {
+        let mut rng = Rng::seed_from(3);
+        let q = Matrix::randn(&mut rng, 40, 8);
+        let k = Matrix::randn(&mut rng, 100, 8);
+        let v = Matrix::randn(&mut rng, 100, 4);
+        let params = WildcatParams { rank: 12, bins: 2, beta: None };
+        let o = wildcat_attention(&q, &k, &v, &params, &mut rng);
+        let (mn, mx) = v.col_min_max();
+        for i in 0..o.rows() {
+            for j in 0..o.cols() {
+                assert!(o.get(i, j) >= mn[j] - 1e-6 && o.get(i, j) <= mx[j] + 1e-6);
+            }
+        }
+    }
+
+    #[test]
+    fn binned_matches_unbinned_quality_ballpark() {
+        let mut data_rng = Rng::seed_from(4);
+        let q = Matrix::randn(&mut data_rng, 64, 8);
+        let k = Matrix::randn(&mut data_rng, 256, 8);
+        let v = Matrix::randn(&mut data_rng, 256, 4);
+        let e = exact_attention(&q, &k, &v, 0.35);
+        let err_of = |bins: usize| {
+            let mut tot = 0.0;
+            for seed in 0..3 {
+                let mut rng = Rng::seed_from(10 + seed);
+                let params = WildcatParams { rank: 64, bins, beta: Some(0.35) };
+                tot += max_abs_diff(&wildcat_attention(&q, &k, &v, &params, &mut rng), &e);
+            }
+            tot / 3.0
+        };
+        let e1 = err_of(1);
+        let e4 = err_of(4);
+        // binning trades some accuracy for speed but stays the same order
+        assert!(e4 < e1 * 4.0 + 0.2, "e1={e1} e4={e4}");
+    }
+
+    #[test]
+    fn beta_default_is_inv_sqrt_d() {
+        let p = WildcatParams::default();
+        assert!((p.beta_for(64) - 0.125).abs() < 1e-12);
+        assert!((p.beta_for(0) - 1.0).abs() < 1e-12);
+    }
+}

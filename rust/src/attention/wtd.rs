@@ -1,0 +1,169 @@
+//! WTDATTN (Alg. 3): weighted attention over a compressed coreset.
+//!
+//! Given the coreset `(K_S, V_S, w)` produced by COMPRESSKV, each query
+//! attends only over the `r` coreset keys:
+//!
+//! `Ô_i = clip( Σ_j exp(β⟨q_i, k_j⟩) V_S[j,:] / Σ_j exp(β⟨q_i, k_j⟩) w_j )`
+//!
+//! The ratio is invariant to subtracting the per-query max logit, which we
+//! do for overflow safety (the paper's Alg. 3 exponentiates raw logits;
+//! see DESIGN.md §Algorithms). Rows with a non-positive normaliser are
+//! zeroed before clipping, exactly per Alg. 3.
+
+use crate::exec;
+use crate::linalg::gemm::dot;
+use crate::linalg::Matrix;
+
+/// Per-column clip range `(v_min, v_max)` of Lem. 1 / Alg. 4.
+#[derive(Clone, Debug)]
+pub struct ClipRange {
+    pub lo: Vec<f32>,
+    pub hi: Vec<f32>,
+}
+
+impl ClipRange {
+    /// Derive from a value matrix (per-column min/max).
+    pub fn from_values(v: &Matrix) -> Self {
+        let (lo, hi) = v.col_min_max();
+        ClipRange { lo, hi }
+    }
+
+    /// Unbounded range (clipping disabled).
+    pub fn unbounded(cols: usize) -> Self {
+        ClipRange { lo: vec![f32::NEG_INFINITY; cols], hi: vec![f32::INFINITY; cols] }
+    }
+}
+
+/// Weighted attention forward pass over the compressed cache.
+///
+/// * `q` — m×d queries,
+/// * `k_s` — r×d coreset keys (original coordinates, mean re-added),
+/// * `v_s` — r×d_v compressed values `W V`,
+/// * `w` — length-r normalisation weights `W 1_n`,
+/// * `clip` — per-column output range.
+pub fn wtd_attention(
+    q: &Matrix,
+    k_s: &Matrix,
+    v_s: &Matrix,
+    w: &[f64],
+    clip: &ClipRange,
+    beta: f32,
+) -> Matrix {
+    assert_eq!(q.cols(), k_s.cols(), "q/k_s head dim mismatch");
+    assert_eq!(k_s.rows(), v_s.rows(), "coreset key/value mismatch");
+    assert_eq!(w.len(), k_s.rows(), "weight length mismatch");
+    let (m, r, dv) = (q.rows(), k_s.rows(), v_s.cols());
+    assert_eq!(clip.lo.len(), dv);
+    let mut out = Matrix::zeros(m, dv);
+    exec::parallel_chunks_mut(out.as_mut_slice(), 32 * dv.max(1), |chunk_idx, rows| {
+        let row0 = chunk_idx * 32;
+        let rows_here = rows.len() / dv.max(1);
+        let mut logits = vec![0.0f32; r];
+        for rr in 0..rows_here {
+            let i = row0 + rr;
+            let qi = q.row(i);
+            let mut mx = f32::NEG_INFINITY;
+            for (j, l) in logits.iter_mut().enumerate() {
+                *l = beta * dot(qi, k_s.row(j));
+                if *l > mx {
+                    mx = *l;
+                }
+            }
+            let mut denom = 0.0f64;
+            let mut acc = vec![0.0f64; dv];
+            for (j, &l) in logits.iter().enumerate() {
+                let p = ((l - mx) as f64).exp();
+                denom += p * w[j];
+                for (a, &x) in acc.iter_mut().zip(v_s.row(j)) {
+                    *a += p * x as f64;
+                }
+            }
+            let out_row = &mut rows[rr * dv..(rr + 1) * dv];
+            if denom > 0.0 {
+                for ((o, a), (lo, hi)) in out_row
+                    .iter_mut()
+                    .zip(&acc)
+                    .zip(clip.lo.iter().zip(&clip.hi))
+                {
+                    *o = ((*a / denom) as f32).clamp(*lo, *hi);
+                }
+            } else {
+                // Alg. 3: Âw ≤ 0 ⇒ 0, then clip into the value range.
+                for (o, (lo, hi)) in out_row.iter_mut().zip(clip.lo.iter().zip(&clip.hi)) {
+                    *o = 0.0f32.clamp(*lo, *hi);
+                }
+            }
+        }
+    });
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::attention::exact_attention;
+    use crate::rng::Rng;
+    use crate::util::prop::Cases;
+
+    #[test]
+    fn unit_weights_full_coreset_equals_exact() {
+        // With K_S = K, V_S = V, w = 1 the weighted pass is exact attention.
+        Cases::new(12).run(|rng| {
+            let m = 1 + rng.below(20);
+            let n = 1 + rng.below(30);
+            let d = 1 + rng.below(8);
+            let q = Matrix::randn(rng, m, d);
+            let k = Matrix::randn(rng, n, d);
+            let v = Matrix::randn(rng, n, 3);
+            let w = vec![1.0f64; n];
+            let clip = ClipRange::from_values(&v);
+            let a = wtd_attention(&q, &k, &v, &w, &clip, 0.4);
+            let b = exact_attention(&q, &k, &v, 0.4);
+            for (x, y) in a.as_slice().iter().zip(b.as_slice()) {
+                assert!((x - y).abs() < 1e-4, "{x} vs {y}");
+            }
+        });
+    }
+
+    #[test]
+    fn output_respects_clip() {
+        let mut rng = Rng::seed_from(1);
+        let q = Matrix::randn(&mut rng, 10, 4);
+        let k = Matrix::randn(&mut rng, 6, 4);
+        // adversarial V_S and negative weights can push the ratio outside
+        // the hull; clip must bound it
+        let v = Matrix::randn(&mut rng, 6, 2).scale(10.0);
+        let w: Vec<f64> = (0..6).map(|i| if i % 2 == 0 { 1.0 } else { -0.8 }).collect();
+        let clip = ClipRange { lo: vec![-1.0, -2.0], hi: vec![1.0, 2.0] };
+        let o = wtd_attention(&q, &k, &v, &w, &clip, 1.0);
+        for i in 0..o.rows() {
+            assert!(o.get(i, 0) >= -1.0 && o.get(i, 0) <= 1.0);
+            assert!(o.get(i, 1) >= -2.0 && o.get(i, 1) <= 2.0);
+        }
+    }
+
+    #[test]
+    fn zero_normaliser_falls_back_to_zero() {
+        let q = Matrix::from_vec(vec![1.0, 0.0], 1, 2);
+        let k = Matrix::from_vec(vec![1.0, 0.0], 1, 2);
+        let v = Matrix::from_vec(vec![5.0], 1, 1);
+        let clip = ClipRange { lo: vec![-10.0], hi: vec![10.0] };
+        let o = wtd_attention(&q, &k, &v, &[0.0], &clip, 1.0);
+        assert_eq!(o.get(0, 0), 0.0);
+        // and when clip excludes zero, fallback is clipped
+        let clip2 = ClipRange { lo: vec![2.0], hi: vec![10.0] };
+        let o2 = wtd_attention(&q, &k, &v, &[0.0], &clip2, 1.0);
+        assert_eq!(o2.get(0, 0), 2.0);
+    }
+
+    #[test]
+    fn stable_at_extreme_scale() {
+        let q = Matrix::from_vec(vec![80.0, 80.0], 1, 2);
+        let k = Matrix::from_vec(vec![80.0, 80.0, -80.0, -80.0], 2, 2);
+        let v = Matrix::from_vec(vec![1.0, -1.0], 2, 1);
+        let clip = ClipRange::from_values(&v);
+        let o = wtd_attention(&q, &k, &v, &[1.0, 1.0], &clip, 1.0);
+        assert!(o.get(0, 0).is_finite());
+        assert!((o.get(0, 0) - 1.0).abs() < 1e-5);
+    }
+}

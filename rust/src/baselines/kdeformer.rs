@@ -1,0 +1,180 @@
+//! KDEformer (Zandieh et al. 2023): attention via kernel-density
+//! importance sampling.
+//!
+//! The softmax numerator `Σ_j exp(β q·k_j) v_j` is an expectation that can
+//! be estimated unbiasedly by sampling keys from any proposal `p_j > 0`
+//! and reweighting by `1/(r p_j)`. KDEformer's insight is to use a fast
+//! kernel-density estimate of each key's total attention mass as the
+//! proposal, concentrating samples on the keys that matter.
+//!
+//! Simplification: the original builds its KDE with hashing-based
+//! estimators (HBE); here the proposal is the exact column mass computed
+//! on a small uniform subsample of queries (`n_probe` of them) — the same
+//! "sample ∝ estimated column mass" mechanism with a simpler estimator,
+//! per DESIGN.md §Algorithms.
+
+use super::AttentionApprox;
+use crate::kernels::safe_exp;
+use crate::linalg::gemm::dot;
+use crate::linalg::Matrix;
+use crate::rng::Rng;
+
+pub struct KdeFormer {
+    /// Number of keys sampled per forward pass.
+    pub n_samples: usize,
+    /// Number of probe queries used to estimate column masses.
+    pub n_probe: usize,
+}
+
+impl KdeFormer {
+    pub fn new(n_samples: usize, n_probe: usize) -> Self {
+        assert!(n_samples > 0 && n_probe > 0);
+        KdeFormer { n_samples, n_probe }
+    }
+}
+
+impl AttentionApprox for KdeFormer {
+    fn name(&self) -> &'static str {
+        "KDEformer"
+    }
+
+    fn attend(&self, q: &Matrix, k: &Matrix, v: &Matrix, beta: f32, rng: &mut Rng) -> Matrix {
+        let (m, n, dv) = (q.rows(), k.rows(), v.cols());
+        let r = self.n_samples.min(n);
+
+        // --- proposal: estimated column masses on probe queries ---------
+        let probes = rng.sample_without_replacement(m, self.n_probe.min(m));
+        let mut col_mass = vec![0.0f64; n];
+        // per-probe max subtraction keeps the mass estimate stable
+        for &pi in &probes {
+            let qrow = q.row(pi);
+            let logits: Vec<f64> = (0..n)
+                .map(|j| beta as f64 * dot(qrow, k.row(j)) as f64)
+                .collect();
+            let mx = logits.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+            for (c, &l) in col_mass.iter_mut().zip(&logits) {
+                *c += safe_exp(l - mx);
+            }
+        }
+        let total: f64 = col_mass.iter().sum();
+        // guard: degenerate probes ⇒ uniform proposal
+        let probs: Vec<f64> = if total > 0.0 {
+            // mix with uniform to keep the estimator's variance bounded
+            col_mass
+                .iter()
+                .map(|&c| 0.9 * c / total + 0.1 / n as f64)
+                .collect()
+        } else {
+            vec![1.0 / n as f64; n]
+        };
+
+        // --- sample r keys with replacement from the proposal ------------
+        let mut sampled: Vec<(usize, f64)> = Vec::with_capacity(r);
+        for _ in 0..r {
+            let j = rng.categorical(&probs).unwrap_or(0);
+            sampled.push((j, probs[j]));
+        }
+
+        // --- unbiased softmax estimate over sampled keys ----------------
+        let mut out = Matrix::zeros(m, dv);
+        for i in 0..m {
+            let qi = q.row(i);
+            let mut mx = f64::NEG_INFINITY;
+            let logits: Vec<f64> = sampled
+                .iter()
+                .map(|&(j, _)| {
+                    let l = beta as f64 * dot(qi, k.row(j)) as f64;
+                    if l > mx {
+                        mx = l;
+                    }
+                    l
+                })
+                .collect();
+            let mut denom = 0.0f64;
+            let mut acc = vec![0.0f64; dv];
+            for ((&(j, pj), &l) , _) in sampled.iter().zip(&logits).zip(0..) {
+                let w = safe_exp(l - mx) / pj; // importance weight (1/r cancels)
+                denom += w;
+                for (a, &x) in acc.iter_mut().zip(v.row(j)) {
+                    *a += w * x as f64;
+                }
+            }
+            for (o, a) in out.row_mut(i).iter_mut().zip(&acc) {
+                *o = if denom > 0.0 { (*a / denom) as f32 } else { 0.0 };
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::attention::exact_attention;
+    use crate::linalg::norms::rel_frobenius_err;
+
+    #[test]
+    fn error_decreases_with_sample_budget() {
+        // Paper metric: absolute ‖·‖_max error (Lem. 1), averaged over seeds.
+        let mut data_rng = Rng::seed_from(1);
+        let q = Matrix::randn(&mut data_rng, 32, 8);
+        let k = Matrix::randn(&mut data_rng, 128, 8);
+        let v = Matrix::randn(&mut data_rng, 128, 4);
+        let exact = exact_attention(&q, &k, &v, 0.35);
+        let err_at = |r: usize| {
+            let mut tot = 0.0;
+            for s in 0..4 {
+                let mut rng = Rng::seed_from(40 + s);
+                let kf = KdeFormer::new(r, 8);
+                tot += crate::linalg::norms::max_abs_diff(
+                    &kf.attend(&q, &k, &v, 0.35, &mut rng),
+                    &exact,
+                );
+            }
+            tot / 4.0
+        };
+        let small = err_at(8);
+        let large = err_at(120);
+        assert!(large < small, "small={small} large={large}");
+        let v_max = crate::linalg::norms::max_abs(&v);
+        assert!(large < 0.15 * v_max, "large-budget error too high: {large}");
+    }
+
+    #[test]
+    fn importance_sampling_beats_uniform_on_sharp_attention() {
+        // KDEformer's contribution over naive subsampling: sampling ∝
+        // estimated column mass concentrates on the keys that matter.
+        let mut rng = Rng::seed_from(2);
+        let k = Matrix::randn(&mut rng, 64, 6);
+        let q = k.slice_rows(0, 16); // queries collide with keys: sharp mass
+        let v = Matrix::randn(&mut rng, 64, 3);
+        let exact = exact_attention(&q, &k, &v, 4.0);
+        let trials = 8;
+        let mut kde_err = 0.0;
+        let mut unif_err = 0.0;
+        for s in 0..trials {
+            let mut r1 = Rng::seed_from(60 + s);
+            let kf = KdeFormer::new(32, 16);
+            kde_err += rel_frobenius_err(&kf.attend(&q, &k, &v, 4.0, &mut r1), &exact);
+            let idx = r1.sample_without_replacement(64, 32);
+            let o = exact_attention(&q, &k.select_rows(&idx), &v.select_rows(&idx), 4.0);
+            unif_err += rel_frobenius_err(&o, &exact);
+        }
+        assert!(
+            kde_err < unif_err,
+            "kde ({kde_err}) should beat uniform subsampling ({unif_err})"
+        );
+    }
+
+    #[test]
+    fn finite_on_degenerate_input() {
+        // all-zero queries/keys: uniform attention; sampler must not panic
+        let q = Matrix::zeros(4, 3);
+        let k = Matrix::zeros(10, 3);
+        let v = Matrix::from_fn(10, 2, |i, j| (i + j) as f32);
+        let kf = KdeFormer::new(5, 2);
+        let mut rng = Rng::seed_from(3);
+        let o = kf.attend(&q, &k, &v, 0.5, &mut rng);
+        assert!(o.as_slice().iter().all(|x| x.is_finite()));
+    }
+}

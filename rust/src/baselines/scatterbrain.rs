@@ -1,0 +1,229 @@
+//! ScatterBrain (Chen et al. 2021a): unified sparse + low-rank attention.
+//!
+//! Decomposes `A ≈ Φ_Q Φ_Kᵀ + S` where the low-rank part is a Performer
+//! (FAVOR+) estimate and the sparse part `S` corrects the low-rank
+//! estimate exactly on LSH collision pairs:
+//! `S_ij = exp(β q_i·k_j) − φ(q_i)·φ(k_j)` for colliding `(i, j)`.
+//! The softmax output then uses numerator `Φ_Q (Φ_Kᵀ V) + S V` and
+//! normaliser `Φ_Q (Φ_Kᵀ 1) + S 1`, each in `O((m+n)Md + nnz(S))`.
+//!
+//! Simplification: the LSH used to find collisions is the same spherical
+//! argmax hash as our Reformer baseline (the original uses tied
+//! Reformer-style hashing too).
+
+use super::performer::Performer;
+use super::reformer::Reformer;
+use super::AttentionApprox;
+use crate::linalg::gemm::{self, dot};
+use crate::linalg::Matrix;
+use crate::rng::Rng;
+
+pub struct ScatterBrain {
+    /// Random-feature count for the low-rank part.
+    pub n_features: usize,
+    /// LSH buckets for the sparse correction.
+    pub n_buckets: usize,
+}
+
+impl ScatterBrain {
+    pub fn new(n_features: usize, n_buckets: usize) -> Self {
+        assert!(n_features > 0 && n_buckets >= 2);
+        ScatterBrain { n_features, n_buckets }
+    }
+}
+
+impl AttentionApprox for ScatterBrain {
+    fn name(&self) -> &'static str {
+        "ScatterBrain"
+    }
+
+    fn attend(&self, q: &Matrix, k: &Matrix, v: &Matrix, beta: f32, rng: &mut Rng) -> Matrix {
+        let (m, n, d, dv) = (q.rows(), k.rows(), q.cols(), v.cols());
+        let m_feat = self.n_features;
+        let omega = Matrix::randn(rng, m_feat, d);
+
+        // ---- low-rank part: unnormalised positive features -------------
+        // exponent matrices: e_q[i,f] = √β ω_f·q_i − β‖q_i‖²/2
+        let sqrt_beta = (beta as f64).sqrt() as f32;
+        let proj_q = gemm::matmul_transb(&q.scale(sqrt_beta), &omega);
+        let proj_k = gemm::matmul_transb(&k.scale(sqrt_beta), &omega);
+        let sq_shift = |x: &Matrix, i: usize| -> f32 {
+            let sq: f64 = x.row(i).iter().map(|&a| (a as f64) * (a as f64)).sum();
+            (beta as f64 * sq / 2.0) as f32
+        };
+        // A single global shift keeps everything positive & finite; it is a
+        // uniform scale on numerator and denominator, so it cancels.
+        let mut max_expo = f32::NEG_INFINITY;
+        for i in 0..m {
+            let s = sq_shift(q, i);
+            for &p in proj_q.row(i) {
+                max_expo = max_expo.max(p - s);
+            }
+        }
+        let mut kmax_expo = f32::NEG_INFINITY;
+        for j in 0..n {
+            let s = sq_shift(k, j);
+            for &p in proj_k.row(j) {
+                kmax_expo = kmax_expo.max(p - s);
+            }
+        }
+        let phi = |proj: &Matrix, x: &Matrix, i: usize, shift: f32| -> Vec<f64> {
+            let s = sq_shift(x, i);
+            proj.row(i)
+                .iter()
+                .map(|&p| ((p - s - shift) as f64).exp())
+                .collect()
+        };
+        let mut phi_q: Vec<Vec<f64>> = Vec::with_capacity(m);
+        for i in 0..m {
+            phi_q.push(phi(&proj_q, q, i, max_expo));
+        }
+        let mut phi_k: Vec<Vec<f64>> = Vec::with_capacity(n);
+        for j in 0..n {
+            phi_k.push(phi(&proj_k, k, j, kmax_expo));
+        }
+        // feature-space summaries of keys: Σ φ(k_j) v_j  and  Σ φ(k_j)
+        let mut kv = vec![0.0f64; m_feat * dv];
+        let mut k1 = vec![0.0f64; m_feat];
+        for j in 0..n {
+            let pk = &phi_k[j];
+            let vr = v.row(j);
+            for f in 0..m_feat {
+                let p = pk[f];
+                if p == 0.0 {
+                    continue;
+                }
+                k1[f] += p;
+                for (c, &x) in kv[f * dv..(f + 1) * dv].iter_mut().zip(vr) {
+                    *c += p * x as f64;
+                }
+            }
+        }
+
+        // ---- sparse part: LSH collision pairs --------------------------
+        let half = self.n_buckets.div_ceil(2);
+        let r_mat = Matrix::randn(rng, half, d);
+        let mut buckets: Vec<Vec<u32>> = vec![Vec::new(); 2 * half];
+        for j in 0..n {
+            buckets[bucket_of(k.row(j), &r_mat)].push(j as u32);
+        }
+
+        // the low-rank estimate is scaled by exp(−max_expo − kmax_expo)
+        // relative to the true kernel; the sparse correction must live on
+        // the same scale (computed in log space for overflow safety).
+        let lr_log_scale = (max_expo + kmax_expo) as f64;
+
+        let mut out = Matrix::zeros(m, dv);
+        for i in 0..m {
+            let pq = &phi_q[i];
+            let mut denom = 0.0f64;
+            let mut acc = vec![0.0f64; dv];
+            for f in 0..m_feat {
+                let p = pq[f];
+                if p == 0.0 {
+                    continue;
+                }
+                denom += p * k1[f];
+                for (a, &c) in acc.iter_mut().zip(&kv[f * dv..(f + 1) * dv]) {
+                    *a += p * c;
+                }
+            }
+            // sparse correction on this query's bucket
+            let b = bucket_of(q.row(i), &r_mat);
+            for &j in &buckets[b] {
+                let j = j as usize;
+                let true_a =
+                    crate::kernels::safe_exp(beta as f64 * dot(q.row(i), k.row(j)) as f64 - lr_log_scale);
+                let lowrank_a: f64 = pq.iter().zip(&phi_k[j]).map(|(a, b)| a * b).sum();
+                let s = true_a - lowrank_a;
+                denom += s;
+                for (a, &x) in acc.iter_mut().zip(v.row(j)) {
+                    *a += s * x as f64;
+                }
+            }
+            for (o, a) in out.row_mut(i).iter_mut().zip(&acc) {
+                *o = if denom > 0.0 { (*a / denom) as f32 } else { 0.0 };
+            }
+        }
+        out
+    }
+}
+
+fn bucket_of(x: &[f32], r_mat: &Matrix) -> usize {
+    let half = r_mat.rows();
+    let mut best = 0usize;
+    let mut best_v = f32::NEG_INFINITY;
+    for j in 0..half {
+        let p = dot(x, r_mat.row(j));
+        if p > best_v {
+            best_v = p;
+            best = j;
+        }
+        if -p > best_v {
+            best_v = -p;
+            best = half + j;
+        }
+    }
+    best
+}
+
+/// The combination components are reused by tests; keep them nameable.
+pub type LowRankPart = Performer;
+pub type SparsePart = Reformer;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::attention::exact_attention;
+    use crate::linalg::norms::rel_frobenius_err;
+
+    #[test]
+    fn improves_on_pure_performer_for_clustered_data() {
+        // Clustered keys ⇒ concentrated attention the sparse part captures.
+        let mut rng = Rng::seed_from(11);
+        let k = Matrix::randn(&mut rng, 96, 8);
+        let q = k.slice_rows(0, 48).scale(1.0); // queries near keys
+        let v = Matrix::randn(&mut rng, 96, 4);
+        let beta = 2.0f32;
+        let exact = exact_attention(&q, &k, &v, beta);
+        let avg_err = |f: &dyn Fn(&mut Rng) -> Matrix| {
+            let mut tot = 0.0;
+            for s in 0..4 {
+                let mut r = Rng::seed_from(100 + s);
+                tot += rel_frobenius_err(&f(&mut r), &exact);
+            }
+            tot / 4.0
+        };
+        let perf = Performer::with_features(64);
+        let sb = ScatterBrain::new(64, 8);
+        let e_perf = avg_err(&|r: &mut Rng| perf.attend(&q, &k, &v, beta, r));
+        let e_sb = avg_err(&|r: &mut Rng| sb.attend(&q, &k, &v, beta, r));
+        assert!(
+            e_sb < e_perf,
+            "scatterbrain ({e_sb}) should beat performer ({e_perf}) on concentrated attention"
+        );
+    }
+
+    #[test]
+    fn finite_and_shaped() {
+        let mut rng = Rng::seed_from(2);
+        let q = Matrix::randn(&mut rng, 17, 5);
+        let k = Matrix::randn(&mut rng, 33, 5);
+        let v = Matrix::randn(&mut rng, 33, 3);
+        let sb = ScatterBrain::new(32, 4);
+        let o = sb.attend(&q, &k, &v, 0.5, &mut rng);
+        assert_eq!((o.rows(), o.cols()), (17, 3));
+        assert!(o.as_slice().iter().all(|x| x.is_finite()));
+    }
+
+    #[test]
+    fn stable_under_scale() {
+        let mut rng = Rng::seed_from(3);
+        let q = Matrix::randn(&mut rng, 8, 4).scale(10.0);
+        let k = Matrix::randn(&mut rng, 16, 4).scale(10.0);
+        let v = Matrix::randn(&mut rng, 16, 2);
+        let sb = ScatterBrain::new(32, 4);
+        let o = sb.attend(&q, &k, &v, 1.0, &mut rng);
+        assert!(o.as_slice().iter().all(|x| x.is_finite()));
+    }
+}

@@ -1,0 +1,184 @@
+//! Thinformer (Carrell et al. 2025): attention over a *thinned* coreset
+//! produced by low-rank kernel halving.
+//!
+//! Kernel thinning repeatedly halves the key set: keys are paired and a
+//! self-balancing signed walk decides which element of each pair survives,
+//! keeping the running feature-space discrepancy small. After `rounds`
+//! halvings, `n/2^rounds` keys remain whose empirical kernel distribution
+//! tracks the full set's to `O(√log n / n_out)` discrepancy; attention is
+//! then computed exactly over the surviving coreset (uniform weights
+//! cancel in the softmax ratio).
+//!
+//! Simplification: the discrepancy walk runs on FAVOR+ random features of
+//! the attention kernel (Carrell et al.'s "low-rank thinning") with a
+//! deterministic greedy sign rule instead of the probabilistic one — the
+//! greedy rule has the same discrepancy guarantee up to constants
+//! (Dwivedi & Mackey 2024) and is seed-stable for benches.
+
+use super::AttentionApprox;
+use crate::attention::exact_attention;
+use crate::linalg::gemm;
+use crate::linalg::Matrix;
+use crate::rng::Rng;
+
+pub struct Thinformer {
+    /// Number of halving rounds: coreset size is `n / 2^rounds`.
+    pub rounds: usize,
+    /// Random-feature dimension for the discrepancy walk.
+    pub n_features: usize,
+}
+
+impl Thinformer {
+    pub fn new(rounds: usize) -> Self {
+        Thinformer { rounds, n_features: 64 }
+    }
+
+    /// One halving round over `idx`, returning the survivors.
+    fn halve(feat: &Matrix, idx: &[usize], rng: &mut Rng) -> Vec<usize> {
+        let f = feat.cols();
+        let mut order = idx.to_vec();
+        rng.shuffle(&mut order);
+        let mut sigma = vec![0.0f64; f];
+        let mut keep = Vec::with_capacity(order.len().div_ceil(2));
+        let mut t = 0;
+        while t + 1 < order.len() {
+            let (a, b) = (order[t], order[t + 1]);
+            let fa = feat.row(a);
+            let fb = feat.row(b);
+            // δ = ψ_a − ψ_b ; sign s = −sign⟨σ, δ⟩ keeps ‖σ‖ small
+            let mut ip = 0.0f64;
+            for ((&x, &y), &s) in fa.iter().zip(fb).zip(sigma.iter()) {
+                ip += s * (x as f64 - y as f64);
+            }
+            let keep_a = ip <= 0.0;
+            let sign = if keep_a { 1.0 } else { -1.0 };
+            for ((s, &x), &y) in sigma.iter_mut().zip(fa).zip(fb) {
+                *s += sign * (x as f64 - y as f64);
+            }
+            keep.push(if keep_a { a } else { b });
+            t += 2;
+        }
+        if t < order.len() {
+            keep.push(order[t]); // odd element survives
+        }
+        keep
+    }
+}
+
+impl AttentionApprox for Thinformer {
+    fn name(&self) -> &'static str {
+        "Thinformer"
+    }
+
+    fn attend(&self, q: &Matrix, k: &Matrix, v: &Matrix, beta: f32, rng: &mut Rng) -> Matrix {
+        let n = k.rows();
+        if n <= 2 || self.rounds == 0 {
+            return exact_attention(q, k, v, beta);
+        }
+        // FAVOR+ positive features of the keys (shared global stabiliser).
+        let d = k.cols();
+        let omega = Matrix::randn(rng, self.n_features, d);
+        let sqrt_beta = (beta as f64).sqrt() as f32;
+        let proj = gemm::matmul_transb(&k.scale(sqrt_beta), &omega);
+        let mut expo = proj;
+        for j in 0..n {
+            let sq: f64 = k.row(j).iter().map(|&x| (x as f64) * (x as f64)).sum();
+            let shift = (beta as f64 * sq / 2.0) as f32;
+            for e in expo.row_mut(j) {
+                *e -= shift;
+            }
+        }
+        let gmax = expo.as_slice().iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+        let feat = Matrix::from_fn(n, self.n_features, |j, f| {
+            ((expo.get(j, f) - gmax) as f64).exp() as f32
+        });
+
+        let mut survivors: Vec<usize> = (0..n).collect();
+        for _ in 0..self.rounds {
+            if survivors.len() <= 2 {
+                break;
+            }
+            survivors = Self::halve(&feat, &survivors, rng);
+        }
+        survivors.sort_unstable();
+        let ks = k.select_rows(&survivors);
+        let vs = v.select_rows(&survivors);
+        exact_attention(q, &ks, &vs, beta)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::norms::rel_frobenius_err;
+
+    #[test]
+    fn zero_rounds_is_exact() {
+        let mut rng = Rng::seed_from(1);
+        let q = Matrix::randn(&mut rng, 10, 4);
+        let k = Matrix::randn(&mut rng, 20, 4);
+        let v = Matrix::randn(&mut rng, 20, 3);
+        let t = Thinformer::new(0);
+        let o = t.attend(&q, &k, &v, 0.4, &mut rng);
+        let e = exact_attention(&q, &k, &v, 0.4);
+        assert_eq!(o, e);
+    }
+
+    #[test]
+    fn halving_reduces_key_count_correctly() {
+        let mut rng = Rng::seed_from(2);
+        let feat = Matrix::randn(&mut rng, 33, 8);
+        let idx: Vec<usize> = (0..33).collect();
+        let kept = Thinformer::halve(&feat, &idx, &mut rng);
+        assert_eq!(kept.len(), 17); // ceil(33/2)
+        let mut sorted = kept.clone();
+        sorted.sort_unstable();
+        sorted.dedup();
+        assert_eq!(sorted.len(), kept.len());
+        assert!(sorted.iter().all(|&i| i < 33));
+    }
+
+    #[test]
+    fn one_round_beats_random_half_on_average() {
+        // Kernel-halving coreset should track the full attention better
+        // than a uniform random half, averaged over seeds.
+        let mut data_rng = Rng::seed_from(3);
+        let q = Matrix::randn(&mut data_rng, 48, 8);
+        let k = Matrix::randn(&mut data_rng, 256, 8);
+        let v = Matrix::randn(&mut data_rng, 256, 4);
+        let beta = 0.35f32;
+        let exact = exact_attention(&q, &k, &v, beta);
+        let mut thin_err = 0.0;
+        let mut rand_err = 0.0;
+        let trials = 8;
+        for s in 0..trials {
+            let mut rng = Rng::seed_from(200 + s);
+            let t = Thinformer::new(1);
+            thin_err += rel_frobenius_err(&t.attend(&q, &k, &v, beta, &mut rng), &exact);
+            let idx = rng.sample_without_replacement(256, 128);
+            let o = exact_attention(&q, &k.select_rows(&idx), &v.select_rows(&idx), beta);
+            rand_err += rel_frobenius_err(&o, &exact);
+        }
+        assert!(
+            thin_err < rand_err * 1.05,
+            "thinning ({thin_err}) should not lose to random halving ({rand_err})"
+        );
+    }
+
+    #[test]
+    fn multi_round_output_valid() {
+        let mut rng = Rng::seed_from(4);
+        let q = Matrix::randn(&mut rng, 16, 6);
+        let k = Matrix::randn(&mut rng, 100, 6);
+        let v = Matrix::randn(&mut rng, 100, 3);
+        let t = Thinformer::new(3); // 100 -> 13 keys
+        let o = t.attend(&q, &k, &v, 0.3, &mut rng);
+        assert_eq!((o.rows(), o.cols()), (16, 3));
+        let (mn, mx) = v.col_min_max();
+        for i in 0..o.rows() {
+            for j in 0..o.cols() {
+                assert!(o.get(i, j) >= mn[j] - 1e-5 && o.get(i, j) <= mx[j] + 1e-5);
+            }
+        }
+    }
+}

@@ -1,0 +1,128 @@
+//! Timing harness: warmup + repeated measurement + robust summary, the
+//! moral equivalent of a small criterion. Every `rust/benches/bench_*.rs`
+//! binary builds its paper table through this.
+
+use crate::util::stats::{summarize, Summary};
+use std::time::Instant;
+
+/// Result of benchmarking one closure.
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    pub name: String,
+    /// Per-iteration wall time in seconds.
+    pub seconds: Summary,
+}
+
+impl BenchResult {
+    pub fn median(&self) -> f64 {
+        self.seconds.median
+    }
+}
+
+/// Benchmark configuration.
+#[derive(Clone, Copy, Debug)]
+pub struct BenchOpts {
+    pub warmup_iters: usize,
+    pub measure_iters: usize,
+    /// Hard cap on total measured time; iterations stop early past this.
+    pub max_seconds: f64,
+}
+
+impl Default for BenchOpts {
+    fn default() -> Self {
+        BenchOpts { warmup_iters: 3, measure_iters: 10, max_seconds: 30.0 }
+    }
+}
+
+impl BenchOpts {
+    /// Honour `WILDCAT_BENCH_FAST=1` for CI smoke runs.
+    pub fn from_env() -> Self {
+        if std::env::var("WILDCAT_BENCH_FAST").as_deref() == Ok("1") {
+            BenchOpts { warmup_iters: 1, measure_iters: 3, max_seconds: 5.0 }
+        } else {
+            Self::default()
+        }
+    }
+}
+
+/// Time `f` under `opts`; the closure's return value is black-boxed so the
+/// optimiser cannot elide the work.
+pub fn bench<T, F: FnMut() -> T>(name: &str, opts: BenchOpts, mut f: F) -> BenchResult {
+    for _ in 0..opts.warmup_iters {
+        black_box(f());
+    }
+    let mut samples = Vec::with_capacity(opts.measure_iters);
+    let start_all = Instant::now();
+    for _ in 0..opts.measure_iters {
+        let t0 = Instant::now();
+        black_box(f());
+        samples.push(t0.elapsed().as_secs_f64());
+        if start_all.elapsed().as_secs_f64() > opts.max_seconds && !samples.is_empty() {
+            break;
+        }
+    }
+    BenchResult { name: name.to_string(), seconds: summarize(&samples) }
+}
+
+/// Opaque value sink (std::hint::black_box wrapper, kept local so benches
+/// don't depend on unstable features).
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+/// Speed-up of `baseline` over `candidate` using median times, the paper's
+/// "Speed-up over Exact" convention (>1 means candidate is faster).
+pub fn speedup(baseline: &BenchResult, candidate: &BenchResult) -> f64 {
+    baseline.median() / candidate.median()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_positive_time() {
+        let r = bench(
+            "spin",
+            BenchOpts { warmup_iters: 1, measure_iters: 5, max_seconds: 5.0 },
+            || {
+                let mut acc = 0u64;
+                for i in 0..10_000u64 {
+                    acc = acc.wrapping_add(i * i);
+                }
+                acc
+            },
+        );
+        assert!(r.seconds.median > 0.0);
+        assert_eq!(r.name, "spin");
+        assert!(r.seconds.count >= 1);
+    }
+
+    #[test]
+    fn speedup_direction() {
+        let slow = bench(
+            "slow",
+            BenchOpts { warmup_iters: 0, measure_iters: 3, max_seconds: 5.0 },
+            || std::thread::sleep(std::time::Duration::from_millis(4)),
+        );
+        let fast = bench(
+            "fast",
+            BenchOpts { warmup_iters: 0, measure_iters: 3, max_seconds: 5.0 },
+            || std::thread::sleep(std::time::Duration::from_micros(200)),
+        );
+        assert!(speedup(&slow, &fast) > 2.0);
+    }
+
+    #[test]
+    fn respects_time_cap() {
+        let t0 = Instant::now();
+        let r = bench(
+            "capped",
+            BenchOpts { warmup_iters: 0, measure_iters: 1_000_000, max_seconds: 0.05 },
+            || std::thread::sleep(std::time::Duration::from_millis(2)),
+        );
+        assert!(t0.elapsed().as_secs_f64() < 2.0);
+        assert!(r.seconds.count < 1_000_000);
+    }
+}

@@ -1,0 +1,5 @@
+//! Benchmark harness substrate (criterion is unavailable offline) and
+//! shared paper-benchmark plumbing.
+
+pub mod harness;
+pub mod paperbench;

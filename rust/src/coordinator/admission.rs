@@ -1,0 +1,164 @@
+//! Admission control: a bounded FIFO with explicit backpressure. The
+//! router rejects (rather than buffers unboundedly) when the queue is
+//! full — the serving-system contract that keeps tail latencies bounded.
+
+use super::request::Request;
+use std::collections::VecDeque;
+use std::sync::{Condvar, Mutex};
+
+/// Rejection reason surfaced to clients.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RejectReason {
+    QueueFull,
+    PromptTooLong { max: usize },
+    ShuttingDown,
+}
+
+struct Inner {
+    queue: VecDeque<Request>,
+    closed: bool,
+}
+
+/// Bounded MPSC admission queue (mutex + condvar; the consumer is the
+/// scheduler loop).
+pub struct AdmissionQueue {
+    capacity: usize,
+    max_prompt: usize,
+    inner: Mutex<Inner>,
+    notify: Condvar,
+}
+
+impl AdmissionQueue {
+    pub fn new(capacity: usize, max_prompt: usize) -> Self {
+        AdmissionQueue {
+            capacity,
+            max_prompt,
+            inner: Mutex::new(Inner { queue: VecDeque::new(), closed: false }),
+            notify: Condvar::new(),
+        }
+    }
+
+    /// Try to admit; `Err(reason)` applies backpressure to the caller.
+    pub fn submit(&self, req: Request) -> Result<(), RejectReason> {
+        if req.tokens.len() > self.max_prompt {
+            return Err(RejectReason::PromptTooLong { max: self.max_prompt });
+        }
+        let mut g = self.inner.lock().unwrap();
+        if g.closed {
+            return Err(RejectReason::ShuttingDown);
+        }
+        if g.queue.len() >= self.capacity {
+            return Err(RejectReason::QueueFull);
+        }
+        g.queue.push_back(req);
+        self.notify.notify_one();
+        Ok(())
+    }
+
+    /// Pop up to `max` requests; blocks up to `timeout` when empty.
+    /// Returns an empty vec on timeout, `None` once closed and drained.
+    pub fn pop_batch(&self, max: usize, timeout: std::time::Duration) -> Option<Vec<Request>> {
+        let mut g = self.inner.lock().unwrap();
+        if g.queue.is_empty() && !g.closed {
+            let (guard, _res) = self.notify.wait_timeout(g, timeout).unwrap();
+            g = guard;
+        }
+        if g.queue.is_empty() {
+            return if g.closed { None } else { Some(Vec::new()) };
+        }
+        let take = max.min(g.queue.len());
+        Some(g.queue.drain(..take).collect())
+    }
+
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().queue.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn close(&self) {
+        self.inner.lock().unwrap().closed = true;
+        self.notify.notify_all();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::Duration;
+
+    fn req(id: u64) -> Request {
+        Request::new(id, vec![1, 2, 3], 1)
+    }
+
+    #[test]
+    fn fifo_order() {
+        let q = AdmissionQueue::new(10, 100);
+        for i in 0..5 {
+            q.submit(req(i)).unwrap();
+        }
+        let batch = q.pop_batch(3, Duration::from_millis(1)).unwrap();
+        assert_eq!(batch.iter().map(|r| r.id).collect::<Vec<_>>(), vec![0, 1, 2]);
+        let batch2 = q.pop_batch(10, Duration::from_millis(1)).unwrap();
+        assert_eq!(batch2.iter().map(|r| r.id).collect::<Vec<_>>(), vec![3, 4]);
+    }
+
+    #[test]
+    fn backpressure_on_full() {
+        let q = AdmissionQueue::new(2, 100);
+        q.submit(req(0)).unwrap();
+        q.submit(req(1)).unwrap();
+        assert_eq!(q.submit(req(2)), Err(RejectReason::QueueFull));
+        assert_eq!(q.len(), 2);
+    }
+
+    #[test]
+    fn rejects_long_prompts() {
+        let q = AdmissionQueue::new(10, 2);
+        assert_eq!(
+            q.submit(req(0)),
+            Err(RejectReason::PromptTooLong { max: 2 })
+        );
+    }
+
+    #[test]
+    fn close_drains_then_none() {
+        let q = AdmissionQueue::new(10, 100);
+        q.submit(req(0)).unwrap();
+        q.close();
+        assert_eq!(q.submit(req(1)), Err(RejectReason::ShuttingDown));
+        let batch = q.pop_batch(10, Duration::from_millis(1)).unwrap();
+        assert_eq!(batch.len(), 1);
+        assert!(q.pop_batch(10, Duration::from_millis(1)).is_none());
+    }
+
+    #[test]
+    fn pop_timeout_empty() {
+        let q = AdmissionQueue::new(10, 100);
+        let batch = q.pop_batch(4, Duration::from_millis(5)).unwrap();
+        assert!(batch.is_empty());
+    }
+
+    #[test]
+    fn cross_thread_handoff() {
+        let q = std::sync::Arc::new(AdmissionQueue::new(100, 100));
+        let q2 = q.clone();
+        let producer = std::thread::spawn(move || {
+            for i in 0..50 {
+                while q2.submit(req(i)).is_err() {
+                    std::thread::yield_now();
+                }
+            }
+            q2.close();
+        });
+        let mut seen = Vec::new();
+        while let Some(batch) = q.pop_batch(8, Duration::from_millis(20)) {
+            assert!(batch.len() <= 8);
+            seen.extend(batch.iter().map(|r| r.id));
+        }
+        producer.join().unwrap();
+        assert_eq!(seen, (0..50).collect::<Vec<_>>());
+    }
+}

@@ -1,0 +1,133 @@
+//! Dynamic batching policy for continuous batching.
+//!
+//! Two roles:
+//! * [`Batcher::admit_count`] — iteration-level admission policy: how
+//!   many queued requests to prefill this engine step, given the active
+//!   set and how long the oldest request has waited (Orca-style
+//!   continuous batching).
+//! * [`Batcher::form_static_batches`] — offline/batch mode grouping used
+//!   by the benches.
+
+use super::request::Request;
+use std::time::Duration;
+
+#[derive(Clone, Copy, Debug)]
+pub struct BatcherConfig {
+    /// Maximum concurrently active (decoding) sequences.
+    pub max_active: usize,
+    /// Maximum prefills per engine step (prefill is the expensive phase;
+    /// bounding it caps decode-latency jitter for active sequences).
+    pub max_admit_per_step: usize,
+    /// If the oldest queued request has waited longer than this, admit
+    /// even when the active set is "comfortably" full (up to max_active).
+    pub max_wait: Duration,
+    /// Soft target for the active set; below it we admit greedily, above
+    /// it only when max_wait is exceeded.
+    pub soft_active: usize,
+}
+
+impl Default for BatcherConfig {
+    fn default() -> Self {
+        BatcherConfig {
+            max_active: 16,
+            max_admit_per_step: 4,
+            max_wait: Duration::from_millis(50),
+            soft_active: 8,
+        }
+    }
+}
+
+pub struct Batcher {
+    pub cfg: BatcherConfig,
+}
+
+impl Batcher {
+    pub fn new(cfg: BatcherConfig) -> Self {
+        assert!(cfg.max_active >= 1);
+        assert!(cfg.soft_active <= cfg.max_active);
+        Batcher { cfg }
+    }
+
+    /// How many new sequences to admit this step.
+    pub fn admit_count(&self, active: usize, queued: usize, oldest_wait: Duration) -> usize {
+        if queued == 0 || active >= self.cfg.max_active {
+            return 0;
+        }
+        let headroom = self.cfg.max_active - active;
+        let greedy_room = self.cfg.soft_active.saturating_sub(active);
+        let room = if oldest_wait >= self.cfg.max_wait {
+            headroom // deadline pressure: fill to the hard cap
+        } else {
+            greedy_room
+        };
+        room.min(self.cfg.max_admit_per_step).min(queued)
+    }
+
+    /// Group requests into fixed-size batches (offline mode).
+    pub fn form_static_batches(&self, reqs: Vec<Request>, batch_size: usize) -> Vec<Vec<Request>> {
+        assert!(batch_size >= 1);
+        let mut out = Vec::new();
+        let mut cur = Vec::with_capacity(batch_size);
+        for r in reqs {
+            cur.push(r);
+            if cur.len() == batch_size {
+                out.push(std::mem::take(&mut cur));
+            }
+        }
+        if !cur.is_empty() {
+            out.push(cur);
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn b() -> Batcher {
+        Batcher::new(BatcherConfig {
+            max_active: 8,
+            max_admit_per_step: 3,
+            max_wait: Duration::from_millis(10),
+            soft_active: 4,
+        })
+    }
+
+    #[test]
+    fn greedy_below_soft_cap() {
+        let batcher = b();
+        assert_eq!(batcher.admit_count(0, 10, Duration::ZERO), 3); // capped per step
+        assert_eq!(batcher.admit_count(3, 10, Duration::ZERO), 1); // up to soft
+        assert_eq!(batcher.admit_count(4, 10, Duration::ZERO), 0); // at soft cap
+    }
+
+    #[test]
+    fn deadline_pressure_fills_to_hard_cap() {
+        let batcher = b();
+        let waited = Duration::from_millis(50);
+        assert_eq!(batcher.admit_count(4, 10, waited), 3);
+        assert_eq!(batcher.admit_count(7, 10, waited), 1);
+        assert_eq!(batcher.admit_count(8, 10, waited), 0); // hard cap
+    }
+
+    #[test]
+    fn bounded_by_queue() {
+        let batcher = b();
+        assert_eq!(batcher.admit_count(0, 2, Duration::ZERO), 2);
+        assert_eq!(batcher.admit_count(0, 0, Duration::from_secs(1)), 0);
+    }
+
+    #[test]
+    fn static_batches_cover_all() {
+        let batcher = b();
+        let reqs: Vec<Request> =
+            (0..10).map(|i| Request::new(i, vec![1], 1)).collect();
+        let batches = batcher.form_static_batches(reqs, 4);
+        assert_eq!(batches.len(), 3);
+        assert_eq!(batches[0].len(), 4);
+        assert_eq!(batches[2].len(), 2);
+        let ids: Vec<u64> = batches.iter().flatten().map(|r| r.id).collect();
+        assert_eq!(ids, (0..10).collect::<Vec<_>>());
+    }
+}

@@ -1,0 +1,182 @@
+//! Serving metrics: counters + streaming latency statistics, shared
+//! across threads behind a mutex (recording is a few dozen ns; the model
+//! step is milliseconds, so contention is negligible — re-examined in
+//! EXPERIMENTS.md §Perf).
+
+use crate::util::stats::{LogHistogram, Welford};
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+#[derive(Debug, Default, Clone, Copy)]
+pub struct Counters {
+    pub submitted: u64,
+    pub rejected: u64,
+    pub completed: u64,
+    pub tokens_generated: u64,
+    pub prefill_tokens: u64,
+    pub compressions: u64,
+}
+
+struct Inner {
+    counters: Counters,
+    queue_us: Welford,
+    prefill_us: Welford,
+    decode_per_token_us: Welford,
+    e2e_us: LogHistogram,
+    started: Instant,
+}
+
+/// Thread-safe serving metrics sink.
+pub struct ServingMetrics {
+    inner: Mutex<Inner>,
+}
+
+impl Default for ServingMetrics {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl ServingMetrics {
+    pub fn new() -> Self {
+        ServingMetrics {
+            inner: Mutex::new(Inner {
+                counters: Counters::default(),
+                queue_us: Welford::new(),
+                prefill_us: Welford::new(),
+                decode_per_token_us: Welford::new(),
+                e2e_us: LogHistogram::latency_us(),
+                started: Instant::now(),
+            }),
+        }
+    }
+
+    pub fn on_submit(&self) {
+        self.inner.lock().unwrap().counters.submitted += 1;
+    }
+
+    pub fn on_reject(&self) {
+        self.inner.lock().unwrap().counters.rejected += 1;
+    }
+
+    pub fn on_complete(
+        &self,
+        queue: Duration,
+        prefill: Duration,
+        decode: Duration,
+        n_prompt: usize,
+        n_generated: usize,
+    ) {
+        let mut g = self.inner.lock().unwrap();
+        g.counters.completed += 1;
+        g.counters.tokens_generated += n_generated as u64;
+        g.counters.prefill_tokens += n_prompt as u64;
+        g.queue_us.push(queue.as_secs_f64() * 1e6);
+        g.prefill_us.push(prefill.as_secs_f64() * 1e6);
+        if n_generated > 0 {
+            g.decode_per_token_us
+                .push(decode.as_secs_f64() * 1e6 / n_generated as f64);
+        }
+        g.e2e_us.record((queue + prefill + decode).as_secs_f64() * 1e6);
+    }
+
+    pub fn on_compression(&self, n: u64) {
+        self.inner.lock().unwrap().counters.compressions += n;
+    }
+
+    pub fn counters(&self) -> Counters {
+        self.inner.lock().unwrap().counters
+    }
+
+    /// Generated-token throughput since start (tokens/s).
+    pub fn decode_throughput(&self) -> f64 {
+        let g = self.inner.lock().unwrap();
+        let dt = g.started.elapsed().as_secs_f64().max(1e-9);
+        g.counters.tokens_generated as f64 / dt
+    }
+
+    /// Render a human-readable report block.
+    pub fn report(&self) -> String {
+        let g = self.inner.lock().unwrap();
+        let c = g.counters;
+        let dt = g.started.elapsed().as_secs_f64().max(1e-9);
+        format!(
+            "requests: submitted={} rejected={} completed={}\n\
+             tokens:   prefill={} generated={} ({:.1} tok/s decode)\n\
+             queue:    mean {:.1} us (max {:.1})\n\
+             prefill:  mean {:.2} ms (max {:.2})\n\
+             decode:   mean {:.2} ms/token\n\
+             e2e:      p50 {:.2} ms  p99 {:.2} ms\n\
+             compressions: {}",
+            c.submitted,
+            c.rejected,
+            c.completed,
+            c.prefill_tokens,
+            c.tokens_generated,
+            c.tokens_generated as f64 / dt,
+            g.queue_us.mean(),
+            if g.queue_us.count() > 0 { g.queue_us.max() } else { 0.0 },
+            g.prefill_us.mean() / 1e3,
+            if g.prefill_us.count() > 0 { g.prefill_us.max() / 1e3 } else { 0.0 },
+            g.decode_per_token_us.mean() / 1e3,
+            g.e2e_us.quantile(0.5) / 1e3,
+            g.e2e_us.quantile(0.99) / 1e3,
+            c.compressions,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_flow() {
+        let m = ServingMetrics::new();
+        m.on_submit();
+        m.on_submit();
+        m.on_reject();
+        m.on_complete(
+            Duration::from_micros(100),
+            Duration::from_millis(5),
+            Duration::from_millis(10),
+            64,
+            8,
+        );
+        let c = m.counters();
+        assert_eq!(c.submitted, 2);
+        assert_eq!(c.rejected, 1);
+        assert_eq!(c.completed, 1);
+        assert_eq!(c.tokens_generated, 8);
+        assert_eq!(c.prefill_tokens, 64);
+        assert!(m.decode_throughput() > 0.0);
+        let rep = m.report();
+        assert!(rep.contains("completed=1"));
+    }
+
+    #[test]
+    fn concurrent_recording() {
+        let m = std::sync::Arc::new(ServingMetrics::new());
+        std::thread::scope(|s| {
+            for _ in 0..4 {
+                let m = m.clone();
+                s.spawn(move || {
+                    for _ in 0..100 {
+                        m.on_submit();
+                        m.on_complete(
+                            Duration::from_micros(10),
+                            Duration::from_micros(50),
+                            Duration::from_micros(100),
+                            10,
+                            2,
+                        );
+                    }
+                });
+            }
+        });
+        let c = m.counters();
+        assert_eq!(c.submitted, 400);
+        assert_eq!(c.completed, 400);
+        assert_eq!(c.tokens_generated, 800);
+    }
+}

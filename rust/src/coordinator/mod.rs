@@ -1,0 +1,34 @@
+//! The serving coordinator — Layer 3's system contribution.
+//!
+//! A vLLM-router-style stack in miniature, thread-based (tokio is not in
+//! the offline image; `exec/` + std channels are the substrate):
+//!
+//! * [`request`] — request/response types and per-request metrics
+//! * [`admission`] — bounded admission queue with backpressure
+//! * [`batcher`] — dynamic batch formation (size/deadline policy)
+//! * [`scheduler`] — continuous-batching engine loop: prefill on admit,
+//!   per-iteration decode across active sequences, KV compression via
+//!   [`crate::kvcache::CacheManager`]
+//! * [`server`] — the worker thread owning the model backend; clients
+//!   submit over channels and receive a response handle
+//! * [`metrics`] — latency histograms and throughput counters
+//!
+//! Invariants (property-tested in `rust/tests/coordinator_props.rs`):
+//! every admitted request is answered exactly once; batch sizes never
+//! exceed the configured maximum; per-sequence KV caches never exceed
+//! budget + 1 entries between compressions; rejected requests are
+//! reported as rejected, never dropped silently.
+
+pub mod admission;
+pub mod batcher;
+pub mod metrics;
+pub mod request;
+pub mod scheduler;
+pub mod server;
+
+pub use admission::AdmissionQueue;
+pub use batcher::{Batcher, BatcherConfig};
+pub use metrics::ServingMetrics;
+pub use request::{Request, RequestId, Response};
+pub use scheduler::{Scheduler, SchedulerConfig};
+pub use server::{Server, ServerConfig, ServerHandle};

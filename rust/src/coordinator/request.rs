@@ -1,0 +1,76 @@
+//! Request/response types for the serving coordinator.
+
+use std::time::{Duration, Instant};
+
+pub type RequestId = u64;
+
+/// A generation request.
+#[derive(Clone, Debug)]
+pub struct Request {
+    pub id: RequestId,
+    /// Prompt tokens.
+    pub tokens: Vec<u32>,
+    /// Number of tokens to generate.
+    pub max_new: usize,
+    /// Arrival timestamp (set by the admission queue).
+    pub arrived: Instant,
+}
+
+impl Request {
+    pub fn new(id: RequestId, tokens: Vec<u32>, max_new: usize) -> Self {
+        Request { id, tokens, max_new, arrived: Instant::now() }
+    }
+}
+
+/// Per-request latency breakdown.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct RequestTiming {
+    /// Admission → prefill start.
+    pub queue: Duration,
+    /// Prefill (incl. cache compression).
+    pub prefill: Duration,
+    /// First decode step completion after prefill (TTFT − queue − prefill).
+    pub decode: Duration,
+}
+
+impl RequestTiming {
+    pub fn total(&self) -> Duration {
+        self.queue + self.prefill + self.decode
+    }
+}
+
+/// A completed generation.
+#[derive(Clone, Debug)]
+pub struct Response {
+    pub id: RequestId,
+    pub tokens: Vec<u32>,
+    pub timing: RequestTiming,
+    /// Physical KV entries held for this sequence after prefill
+    /// compression (max over layer-heads).
+    pub cache_entries: usize,
+    /// Prompt length (logical tokens the cache summarises).
+    pub context_len: usize,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn timing_total() {
+        let t = RequestTiming {
+            queue: Duration::from_millis(2),
+            prefill: Duration::from_millis(30),
+            decode: Duration::from_millis(10),
+        };
+        assert_eq!(t.total(), Duration::from_millis(42));
+    }
+
+    #[test]
+    fn request_construction() {
+        let r = Request::new(7, vec![1, 2, 3], 4);
+        assert_eq!(r.id, 7);
+        assert_eq!(r.tokens.len(), 3);
+        assert_eq!(r.max_new, 4);
+    }
+}

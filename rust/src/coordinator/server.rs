@@ -1,0 +1,256 @@
+//! The serving front end: a worker thread that owns the model backend
+//! (constructed *inside* the thread — the PJRT client is `!Send`) and
+//! runs the continuous-batching loop; clients hold a [`ServerHandle`] and
+//! submit requests over the admission queue, receiving responses on a
+//! channel.
+
+use super::admission::{AdmissionQueue, RejectReason};
+use super::batcher::{Batcher, BatcherConfig};
+use super::metrics::ServingMetrics;
+use super::request::{Request, RequestId, Response};
+use super::scheduler::{Scheduler, SchedulerConfig};
+use crate::kvcache::KvCompressor;
+use crate::model::ModelBackend;
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+#[derive(Clone)]
+pub struct ServerConfig {
+    pub queue_capacity: usize,
+    pub max_prompt: usize,
+    pub batcher: BatcherConfig,
+    pub scheduler: SchedulerConfig,
+    pub seed: u64,
+}
+
+impl Default for ServerConfig {
+    fn default() -> Self {
+        ServerConfig {
+            queue_capacity: 256,
+            max_prompt: 1024,
+            batcher: BatcherConfig::default(),
+            scheduler: SchedulerConfig::default(),
+            seed: 0,
+        }
+    }
+}
+
+type Waiters = Arc<Mutex<HashMap<RequestId, Sender<Response>>>>;
+
+/// Client handle: submit requests, read metrics, shut down.
+pub struct ServerHandle {
+    queue: Arc<AdmissionQueue>,
+    waiters: Waiters,
+    metrics: Arc<ServingMetrics>,
+    next_id: AtomicU64,
+    stopping: Arc<AtomicBool>,
+    worker: Option<std::thread::JoinHandle<()>>,
+}
+
+/// The server: spawn with a backend factory (the factory runs on the
+/// worker thread so `!Send` backends like PJRT work).
+pub struct Server;
+
+impl Server {
+    pub fn spawn<B, F>(cfg: ServerConfig, compressor: Arc<dyn KvCompressor>, make_backend: F) -> ServerHandle
+    where
+        B: ModelBackend,
+        F: FnOnce() -> B + Send + 'static,
+    {
+        let queue = Arc::new(AdmissionQueue::new(cfg.queue_capacity, cfg.max_prompt));
+        let waiters: Waiters = Arc::new(Mutex::new(HashMap::new()));
+        let metrics = Arc::new(ServingMetrics::new());
+        let stopping = Arc::new(AtomicBool::new(false));
+
+        let worker = {
+            let queue = queue.clone();
+            let waiters = waiters.clone();
+            let metrics = metrics.clone();
+            let stopping = stopping.clone();
+            std::thread::spawn(move || {
+                let backend = make_backend();
+                let mut sched = Scheduler::new(
+                    backend,
+                    cfg.scheduler.clone(),
+                    compressor,
+                    metrics.clone(),
+                    cfg.seed,
+                );
+                let batcher = Batcher::new(cfg.batcher);
+                loop {
+                    // Admission: poll the queue; block briefly only when idle.
+                    let wait = if sched.active_count() == 0 {
+                        Duration::from_millis(5)
+                    } else {
+                        Duration::ZERO
+                    };
+                    let admit_max =
+                        batcher.admit_count(sched.active_count(), queue.len().max(1), Duration::MAX);
+                    match queue.pop_batch(admit_max.max(1), wait) {
+                        None => {
+                            // closed + drained: finish active work then exit
+                            if sched.active_count() == 0 {
+                                break;
+                            }
+                        }
+                        Some(batch) => {
+                            for req in batch {
+                                sched.admit(req);
+                            }
+                        }
+                    }
+                    if stopping.load(Ordering::Relaxed) && sched.active_count() == 0 {
+                        break;
+                    }
+                    if sched.active_count() == 0 {
+                        continue;
+                    }
+                    for resp in sched.step() {
+                        let tx = waiters.lock().unwrap().remove(&resp.id);
+                        if let Some(tx) = tx {
+                            let _ = tx.send(resp);
+                        }
+                    }
+                }
+            })
+        };
+
+        ServerHandle {
+            queue,
+            waiters,
+            metrics,
+            next_id: AtomicU64::new(1),
+            stopping,
+            worker: Some(worker),
+        }
+    }
+}
+
+impl ServerHandle {
+    /// Submit a generation request. Returns a receiver for the response,
+    /// or the rejection reason (backpressure).
+    pub fn submit(
+        &self,
+        tokens: Vec<u32>,
+        max_new: usize,
+    ) -> Result<(RequestId, Receiver<Response>), RejectReason> {
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        let (tx, rx) = channel();
+        self.waiters.lock().unwrap().insert(id, tx);
+        self.metrics.on_submit();
+        match self.queue.submit(Request::new(id, tokens, max_new)) {
+            Ok(()) => Ok((id, rx)),
+            Err(reason) => {
+                self.waiters.lock().unwrap().remove(&id);
+                self.metrics.on_reject();
+                Err(reason)
+            }
+        }
+    }
+
+    pub fn metrics(&self) -> &ServingMetrics {
+        &self.metrics
+    }
+
+    pub fn queue_len(&self) -> usize {
+        self.queue.len()
+    }
+
+    /// Graceful shutdown: stop admissions, finish in-flight work, join.
+    pub fn shutdown(mut self) {
+        self.stopping.store(true, Ordering::Relaxed);
+        self.queue.close();
+        if let Some(w) = self.worker.take() {
+            let _ = w.join();
+        }
+    }
+}
+
+impl Drop for ServerHandle {
+    fn drop(&mut self) {
+        self.stopping.store(true, Ordering::Relaxed);
+        self.queue.close();
+        if let Some(w) = self.worker.take() {
+            let _ = w.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kvcache::StreamingLlm;
+    use crate::model::{ModelConfig, Transformer};
+    use crate::rng::Rng;
+
+    fn spawn_test_server(budget: usize) -> ServerHandle {
+        let cfg = ServerConfig {
+            scheduler: SchedulerConfig { cache_budget: budget, slack: 8 },
+            ..Default::default()
+        };
+        Server::spawn(cfg, Arc::new(StreamingLlm), move || {
+            let mcfg = ModelConfig {
+                vocab: 16,
+                d_model: 16,
+                n_layers: 2,
+                n_heads: 2,
+                d_ff: 32,
+                max_len: 512,
+            };
+            Transformer::random(mcfg, &mut Rng::seed_from(42))
+        })
+    }
+
+    #[test]
+    fn serves_single_request() {
+        let server = spawn_test_server(1000);
+        let (id, rx) = server.submit(vec![1, 2, 3, 4], 3).unwrap();
+        let resp = rx.recv_timeout(Duration::from_secs(30)).unwrap();
+        assert_eq!(resp.id, id);
+        assert_eq!(resp.tokens.len(), 3);
+        assert!(resp.tokens.iter().all(|&t| t < 16));
+        server.shutdown();
+    }
+
+    #[test]
+    fn serves_concurrent_requests() {
+        let server = spawn_test_server(1000);
+        let mut rxs = Vec::new();
+        for i in 0..12 {
+            let prompt: Vec<u32> = (0..5 + i % 4).map(|j| (j % 16) as u32).collect();
+            let (id, rx) = server.submit(prompt, 2 + i % 3).unwrap();
+            rxs.push((id, rx, 2 + i % 3));
+        }
+        for (id, rx, want) in rxs {
+            let resp = rx.recv_timeout(Duration::from_secs(60)).unwrap();
+            assert_eq!(resp.id, id);
+            assert_eq!(resp.tokens.len(), want);
+        }
+        let c = server.metrics().counters();
+        assert_eq!(c.completed, 12);
+        assert_eq!(c.rejected, 0);
+        server.shutdown();
+    }
+
+    #[test]
+    fn rejects_overlong_prompt() {
+        let server = spawn_test_server(1000);
+        let err = server.submit(vec![0; 5000], 1).unwrap_err();
+        assert!(matches!(err, RejectReason::PromptTooLong { .. }));
+        assert_eq!(server.metrics().counters().rejected, 1);
+        server.shutdown();
+    }
+
+    #[test]
+    fn shutdown_completes_in_flight() {
+        let server = spawn_test_server(1000);
+        let (_, rx) = server.submit(vec![1, 2, 3], 2).unwrap();
+        server.shutdown();
+        // response arrived before or during shutdown
+        let resp = rx.recv_timeout(Duration::from_secs(1)).unwrap();
+        assert_eq!(resp.tokens.len(), 2);
+    }
+}

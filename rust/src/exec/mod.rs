@@ -1,0 +1,188 @@
+//! Thread-pool / parallel-for substrate.
+//!
+//! Neither `rayon` nor `tokio` is available in the offline build, so the
+//! stack parallelises through this module: a global lazily-initialised pool
+//! of worker threads plus scoped `parallel_for` helpers. The RPNYS binning
+//! (Sec. 2.5), the blocked GEMM, the flash-attention baseline and the
+//! coordinator's compression workers all run on top of it.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::OnceLock;
+
+/// Number of worker threads used for data-parallel sections.
+pub fn num_threads() -> usize {
+    static N: OnceLock<usize> = OnceLock::new();
+    *N.get_or_init(|| {
+        std::env::var("WILDCAT_THREADS")
+            .ok()
+            .and_then(|s| s.parse::<usize>().ok())
+            .filter(|&n| n > 0)
+            .unwrap_or_else(|| {
+                std::thread::available_parallelism()
+                    .map(|n| n.get())
+                    .unwrap_or(4)
+            })
+    })
+}
+
+/// Run `f(chunk_index)` for every index in `0..n_chunks`, spread over the
+/// pool. Work is distributed by an atomic cursor so uneven chunks balance.
+///
+/// `f` must be `Sync`: it may be called concurrently from several threads.
+pub fn parallel_for<F>(n_chunks: usize, f: F)
+where
+    F: Fn(usize) + Sync,
+{
+    if n_chunks == 0 {
+        return;
+    }
+    let workers = num_threads().min(n_chunks);
+    if workers <= 1 {
+        for i in 0..n_chunks {
+            f(i);
+        }
+        return;
+    }
+    let cursor = AtomicUsize::new(0);
+    std::thread::scope(|scope| {
+        for _ in 0..workers {
+            scope.spawn(|| loop {
+                let i = cursor.fetch_add(1, Ordering::Relaxed);
+                if i >= n_chunks {
+                    break;
+                }
+                f(i);
+            });
+        }
+    });
+}
+
+/// Partition `0..len` into roughly equal contiguous ranges, one per task,
+/// and run `f(task_index, range)` in parallel. `n_tasks` is clamped to
+/// `[1, len]`.
+pub fn parallel_ranges<F>(len: usize, n_tasks: usize, f: F)
+where
+    F: Fn(usize, std::ops::Range<usize>) + Sync,
+{
+    if len == 0 {
+        return;
+    }
+    let n_tasks = n_tasks.clamp(1, len);
+    let base = len / n_tasks;
+    let rem = len % n_tasks;
+    parallel_for(n_tasks, |t| {
+        let start = t * base + t.min(rem);
+        let end = start + base + usize::from(t < rem);
+        f(t, start..end);
+    });
+}
+
+/// Map `f` over `0..n` in parallel, collecting results in order.
+pub fn parallel_map<T, F>(n: usize, f: F) -> Vec<T>
+where
+    T: Send + Default + Clone,
+    F: Fn(usize) -> T + Sync,
+{
+    let mut out = vec![T::default(); n];
+    {
+        let slots: Vec<std::sync::Mutex<&mut T>> =
+            out.iter_mut().map(std::sync::Mutex::new).collect();
+        parallel_for(n, |i| {
+            let mut slot = slots[i].lock().unwrap();
+            **slot = f(i);
+        });
+    }
+    out
+}
+
+/// Split a mutable slice into disjoint row-chunks and process each chunk on
+/// the pool. Used by GEMM and attention kernels to write output rows
+/// without locking.
+pub fn parallel_chunks_mut<T, F>(data: &mut [T], chunk: usize, f: F)
+where
+    T: Send,
+    F: Fn(usize, &mut [T]) + Sync,
+{
+    if data.is_empty() {
+        return;
+    }
+    let chunk = chunk.max(1);
+    let chunks: Vec<&mut [T]> = data.chunks_mut(chunk).collect();
+    let n = chunks.len();
+    let slots: Vec<std::sync::Mutex<&mut [T]>> =
+        chunks.into_iter().map(std::sync::Mutex::new).collect();
+    parallel_for(n, |i| {
+        let mut slot = slots[i].lock().unwrap();
+        f(i, &mut slot);
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn parallel_for_visits_all_once() {
+        let n = 1000;
+        let hits: Vec<AtomicUsize> = (0..n).map(|_| AtomicUsize::new(0)).collect();
+        parallel_for(n, |i| {
+            hits[i].fetch_add(1, Ordering::Relaxed);
+        });
+        assert!(hits.iter().all(|h| h.load(Ordering::Relaxed) == 1));
+    }
+
+    #[test]
+    fn parallel_for_zero_is_noop() {
+        parallel_for(0, |_| panic!("should not run"));
+    }
+
+    #[test]
+    fn parallel_ranges_cover_exactly() {
+        for len in [1usize, 7, 64, 1000] {
+            for tasks in [1usize, 3, 8, 2000] {
+                let covered: Vec<AtomicUsize> = (0..len).map(|_| AtomicUsize::new(0)).collect();
+                parallel_ranges(len, tasks, |_, r| {
+                    for i in r {
+                        covered[i].fetch_add(1, Ordering::Relaxed);
+                    }
+                });
+                assert!(
+                    covered.iter().all(|c| c.load(Ordering::Relaxed) == 1),
+                    "len={len} tasks={tasks}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn parallel_map_preserves_order() {
+        let out = parallel_map(256, |i| i * i);
+        for (i, v) in out.iter().enumerate() {
+            assert_eq!(*v, i * i);
+        }
+    }
+
+    #[test]
+    fn parallel_chunks_mut_disjoint_writes() {
+        let mut data = vec![0u64; 1003];
+        parallel_chunks_mut(&mut data, 100, |ci, chunk| {
+            for x in chunk.iter_mut() {
+                *x = ci as u64 + 1;
+            }
+        });
+        assert!(data.iter().all(|&x| x > 0));
+        assert_eq!(data[0], 1);
+        assert_eq!(data[1002], 11);
+    }
+
+    #[test]
+    fn parallel_sum_matches_serial() {
+        let n = 4096usize;
+        let total = AtomicU64::new(0);
+        parallel_for(n, |i| {
+            total.fetch_add(i as u64, Ordering::Relaxed);
+        });
+        assert_eq!(total.load(Ordering::Relaxed), (n as u64 - 1) * n as u64 / 2);
+    }
+}

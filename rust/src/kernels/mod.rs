@@ -1,0 +1,218 @@
+//! The exponential attention kernel `h(x, y) = exp(β⟨x, y⟩)` and the
+//! paper's pre-conditioning steps: key recentring (Sec. 2.4) and the
+//! closed-form temperature rule (Eq. 4).
+//!
+//! Kernel matrices are evaluated in f64 (the Cholesky recursions of RPNYS
+//! amplify round-off in f32) with exponents clamped to the f64-safe range.
+
+use crate::lambertw::{lambert_w0, rho0};
+use crate::linalg::Matrix;
+
+/// Clamp for exponents so `exp` stays finite in f64.
+const EXP_CLAMP: f64 = 700.0;
+
+/// `exp(c)` with overflow clamping.
+#[inline]
+pub fn safe_exp(c: f64) -> f64 {
+    c.clamp(-EXP_CLAMP, EXP_CLAMP).exp()
+}
+
+/// Effective kernel scale used by RPNYS: `β / τ²`.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct KernelScale {
+    pub beta: f64,
+    pub tau: f64,
+}
+
+impl KernelScale {
+    #[inline]
+    pub fn effective(&self) -> f64 {
+        self.beta / (self.tau * self.tau)
+    }
+}
+
+/// `h_τ(x, y) = exp(β⟨x, y⟩ / τ²)` for f32 rows.
+///
+/// The inner product runs through the SIMD f32 kernel (§Perf iteration 3:
+/// the scalar f64 loop dominated RPNYS); only the exponent is f64. For
+/// the d ≤ 256 head dims of this stack the f32 dot's relative error
+/// (~1e-6) is far below the Nyström jitter floor.
+#[inline]
+pub fn exp_kernel(scale_eff: f64, x: &[f32], y: &[f32]) -> f64 {
+    debug_assert_eq!(x.len(), y.len());
+    safe_exp(scale_eff * crate::linalg::gemm::dot(x, y) as f64)
+}
+
+/// Kernel diagonal `h_τ(k_l, k_l)` for all rows of `K` (same SIMD path as
+/// [`exp_kernel`] so diagonal and cross entries agree bit-for-bit).
+pub fn kernel_diag(k: &Matrix, scale_eff: f64) -> Vec<f64> {
+    (0..k.rows())
+        .map(|i| exp_kernel(scale_eff, k.row(i), k.row(i)))
+        .collect()
+}
+
+/// Dense Gram matrix `h_τ(A, B)` as row-major f64 (`A.rows × B.rows`).
+/// Only used on small blocks (coresets, bins); O(|A||B|d).
+pub fn kernel_cross(a: &Matrix, b: &Matrix, scale_eff: f64) -> Vec<f64> {
+    assert_eq!(a.cols(), b.cols());
+    let (m, n) = (a.rows(), b.rows());
+    let mut out = vec![0.0f64; m * n];
+    for i in 0..m {
+        let ra = a.row(i);
+        for j in 0..n {
+            out[i * n + j] = exp_kernel(scale_eff, ra, b.row(j));
+        }
+    }
+    out
+}
+
+/// Kernel column `h_τ(K, k_s)` for a single pivot row `s` of `K`.
+pub fn kernel_column(k: &Matrix, s: usize, scale_eff: f64) -> Vec<f64> {
+    let rs = k.row(s);
+    (0..k.rows()).map(|i| exp_kernel(scale_eff, k.row(i), rs)).collect()
+}
+
+/// The paper's temperature rule (Eq. 4):
+///
+/// `τ = sqrt( (R_K / R_Q) · b₀ / (2 W₀(b₀ / (2ρ₀))) )` with
+/// `b₀ = log(n) / (β R_Q R_K) + 2`.
+///
+/// Degenerate inputs (zero radii, n ≤ 1) fall back to `τ = 1` (identity
+/// rescaling), which keeps WTDATTN exact in those trivial cases.
+pub fn temperature(beta: f64, r_q: f64, r_k: f64, n: usize) -> f64 {
+    if !(beta > 0.0) || !(r_q > 0.0) || !(r_k > 0.0) || n <= 1 {
+        return 1.0;
+    }
+    let b0 = (n as f64).ln() / (beta * r_q * r_k) + 2.0;
+    let w = lambert_w0(b0 / (2.0 * rho0()));
+    if !(w > 0.0) {
+        return 1.0;
+    }
+    let tau2 = (r_k / r_q) * b0 / (2.0 * w);
+    tau2.max(1e-12).sqrt()
+}
+
+/// Entry growth factor `γ(n) = β R_Q R_K / log(n)` (Cor. 2, Tab. 5).
+pub fn gamma_growth(beta: f64, r_q: f64, r_k: f64, n: usize) -> f64 {
+    if n <= 1 {
+        return f64::INFINITY;
+    }
+    beta * r_q * r_k / (n as f64).ln()
+}
+
+/// Recentred keys plus the mean that was removed (Sec. 2.4).
+pub struct Recentred {
+    pub keys: Matrix,
+    pub mean: Vec<f32>,
+}
+
+/// Subtract the column mean from the keys; attention output is invariant
+/// to this shift (Sec. 2.4), while low-rank approximability improves.
+pub fn recenter_keys(k: &Matrix) -> Recentred {
+    let mean = k.col_mean();
+    Recentred { keys: k.sub_row_vector(&mean), mean }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+    use crate::util::prop::Cases;
+
+    #[test]
+    fn kernel_symmetry_and_positivity() {
+        Cases::new(16).run(|rng| {
+            let n = 2 + rng.below(10);
+            let d = 1 + rng.below(8);
+            let k = Matrix::randn(rng, n, d);
+            let h = kernel_cross(&k, &k, 0.3);
+            for i in 0..n {
+                for j in 0..n {
+                    assert!(h[i * n + j] > 0.0);
+                    assert!((h[i * n + j] - h[j * n + i]).abs() < 1e-12);
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn kernel_diag_matches_cross() {
+        let mut rng = Rng::seed_from(2);
+        let k = Matrix::randn(&mut rng, 6, 4);
+        let h = kernel_cross(&k, &k, 0.5);
+        let d = kernel_diag(&k, 0.5);
+        for i in 0..6 {
+            assert!((h[i * 6 + i] - d[i]).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn kernel_cauchy_schwarz() {
+        // h(x,y) <= sqrt(h(x,x) h(y,y)) — h is a PSD kernel.
+        Cases::new(32).run(|rng| {
+            let d = 1 + rng.below(6);
+            let x = Matrix::randn(rng, 1, d);
+            let y = Matrix::randn(rng, 1, d);
+            let hxy = exp_kernel(0.7, x.row(0), y.row(0));
+            let hxx = exp_kernel(0.7, x.row(0), x.row(0));
+            let hyy = exp_kernel(0.7, y.row(0), y.row(0));
+            assert!(hxy <= (hxx * hyy).sqrt() * (1.0 + 1e-12));
+        });
+    }
+
+    #[test]
+    fn safe_exp_clamps() {
+        assert!(safe_exp(1e6).is_finite());
+        assert!(safe_exp(-1e6) >= 0.0);
+        assert!((safe_exp(1.0) - 1.0f64.exp()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn temperature_positive_and_scales() {
+        // τ grows as entries shrink relative to log n (more aggressive
+        // rescaling is safe when the kernel matrix is already flat).
+        let t1 = temperature(0.125, 8.0, 8.0, 1024);
+        let t2 = temperature(0.125, 2.0, 2.0, 1024);
+        assert!(t1 > 0.0 && t2 > 0.0);
+        assert!(t2 > t1, "t1={t1} t2={t2}");
+    }
+
+    #[test]
+    fn temperature_degenerate_inputs() {
+        assert_eq!(temperature(0.0, 1.0, 1.0, 100), 1.0);
+        assert_eq!(temperature(0.5, 0.0, 1.0, 100), 1.0);
+        assert_eq!(temperature(0.5, 1.0, 1.0, 1), 1.0);
+    }
+
+    #[test]
+    fn temperature_matches_formula() {
+        // hand-evaluate Eq. 4 once
+        let (beta, rq, rk, n) = (0.125f64, 4.0f64, 3.0f64, 4096usize);
+        let b0 = (n as f64).ln() / (beta * rq * rk) + 2.0;
+        let want = ((rk / rq) * b0 / (2.0 * lambert_w0(b0 / (2.0 * rho0())))).sqrt();
+        assert!((temperature(beta, rq, rk, n) - want).abs() < 1e-12);
+    }
+
+    #[test]
+    fn gamma_decreasing_in_n_for_fixed_radii() {
+        let g1 = gamma_growth(0.125, 5.0, 5.0, 64);
+        let g2 = gamma_growth(0.125, 5.0, 5.0, 4096);
+        assert!(g2 < g1);
+    }
+
+    #[test]
+    fn recenter_zero_mean() {
+        let mut rng = Rng::seed_from(7);
+        let k = Matrix::randn(&mut rng, 50, 3);
+        let rc = recenter_keys(&k);
+        for m in rc.keys.col_mean() {
+            assert!(m.abs() < 1e-5);
+        }
+        // restoring the mean recovers the input
+        let mut restored = rc.keys.clone();
+        restored.add_row_vector_mut(&rc.mean);
+        for (a, b) in restored.as_slice().iter().zip(k.as_slice()) {
+            assert!((a - b).abs() < 1e-5);
+        }
+    }
+}

@@ -1,0 +1,188 @@
+//! BalanceKV (Han et al. 2025): KV-cache compression via discrepancy
+//! theory. The middle tokens are repeatedly *halved* by a self-balancing
+//! signed vector walk over concatenated key/value features, which keeps
+//! the retained half's attention contribution balanced against the
+//! discarded half's (the streaming-attention discrepancy guarantee).
+//!
+//! Simplification: Han et al. run the Banaszczyk-style walk per batch with
+//! randomised thresholds; we use the deterministic greedy sign rule on a
+//! shuffled pairing (same discrepancy order, seed-stable), and trim any
+//! overshoot uniformly.
+
+use super::{assemble_selection, split_protected, CompressionCtx, KvCompressor, KvEntry};
+use crate::linalg::Matrix;
+use crate::rng::Rng;
+
+pub struct BalanceKv;
+
+impl BalanceKv {
+    /// One self-balancing halving round over `idx` (absolute indices into
+    /// `feat`), returning the survivors.
+    fn halve(feat: &Matrix, idx: &[usize], rng: &mut Rng) -> Vec<usize> {
+        let f = feat.cols();
+        let mut order = idx.to_vec();
+        rng.shuffle(&mut order);
+        let mut sigma = vec![0.0f64; f];
+        let mut keep = Vec::with_capacity(order.len().div_ceil(2));
+        let mut t = 0;
+        while t + 1 < order.len() {
+            let (a, b) = (order[t], order[t + 1]);
+            let fa = feat.row(a);
+            let fb = feat.row(b);
+            let mut ip = 0.0f64;
+            for ((&x, &y), &s) in fa.iter().zip(fb).zip(sigma.iter()) {
+                ip += s * (x as f64 - y as f64);
+            }
+            let keep_a = ip <= 0.0;
+            let sign = if keep_a { 1.0 } else { -1.0 };
+            for ((s, &x), &y) in sigma.iter_mut().zip(fa).zip(fb) {
+                *s += sign * (x as f64 - y as f64);
+            }
+            keep.push(if keep_a { a } else { b });
+            t += 2;
+        }
+        if t < order.len() {
+            keep.push(order[t]);
+        }
+        keep
+    }
+
+    /// Balance features: unit-normalised `[k_j ; v_j]` per token (the walk
+    /// balances both the attention logits and the value payload).
+    fn features(keys: &Matrix, values: &Matrix) -> Matrix {
+        let n = keys.rows();
+        let d = keys.cols() + values.cols();
+        Matrix::from_fn(n, d, |i, j| {
+            let raw = if j < keys.cols() {
+                keys.get(i, j)
+            } else {
+                values.get(i, j - keys.cols())
+            };
+            raw
+        })
+        .normalised_rows()
+    }
+}
+
+impl KvCompressor for BalanceKv {
+    fn name(&self) -> &'static str {
+        "BalanceKV"
+    }
+
+    fn compress(&self, ctx: &CompressionCtx, rng: &mut Rng) -> KvEntry {
+        let n = ctx.keys.rows();
+        let Some((head, mid, tail)) = split_protected(n, ctx.budget) else {
+            return KvEntry::exact(ctx.keys.clone(), ctx.values.clone());
+        };
+        let take = ctx.budget.saturating_sub(head + tail).min(mid.len());
+        let feat = Self::features(ctx.keys, ctx.values);
+        let mut survivors: Vec<usize> = mid.clone().collect();
+        while survivors.len() > take.max(1) * 2 {
+            survivors = Self::halve(&feat, &survivors, rng);
+        }
+        // final partial round / uniform trim to the exact budget
+        while survivors.len() > take {
+            if survivors.len() >= 2 * take.max(1) {
+                survivors = Self::halve(&feat, &survivors, rng);
+            } else {
+                let keep_idx = rng.sample_without_replacement(survivors.len(), take);
+                survivors = keep_idx.into_iter().map(|i| survivors[i]).collect();
+            }
+        }
+        survivors.sort_unstable();
+        assemble_selection(ctx.keys, ctx.values, &survivors, head)
+    }
+}
+
+/// Row-normalisation helper used by the balance walk.
+trait NormalisedRows {
+    fn normalised_rows(self) -> Matrix;
+}
+
+impl NormalisedRows for Matrix {
+    fn normalised_rows(mut self) -> Matrix {
+        for i in 0..self.rows() {
+            let norm: f64 = self
+                .row(i)
+                .iter()
+                .map(|&x| (x as f64) * (x as f64))
+                .sum::<f64>()
+                .sqrt();
+            if norm > 0.0 {
+                for x in self.row_mut(i) {
+                    *x = (*x as f64 / norm) as f32;
+                }
+            }
+        }
+        self
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn meets_budget_exactly() {
+        let mut rng = Rng::seed_from(1);
+        let k = Matrix::randn(&mut rng, 512, 8);
+        let v = Matrix::randn(&mut rng, 512, 8);
+        for budget in [96usize, 128, 200] {
+            let ctx = CompressionCtx {
+                keys: &k,
+                values: &v,
+                budget,
+                beta: 0.35,
+                layer: 0,
+                n_layers: 1,
+                obs_queries: None,
+            };
+            let e = BalanceKv.compress(&ctx, &mut rng);
+            assert_eq!(e.len(), budget, "budget={budget}");
+        }
+    }
+
+    #[test]
+    fn balanced_half_tracks_attention_better_than_worst_case() {
+        // discrepancy selection should track full attention at least as
+        // well as an adversarial contiguous half (which drops a whole
+        // region of the context).
+        let mut rng = Rng::seed_from(2);
+        let n = 512;
+        let k = Matrix::randn(&mut rng, n, 8);
+        let v = Matrix::randn(&mut rng, n, 4);
+        let q = Matrix::randn(&mut rng, 32, 8);
+        let beta = 0.35f32;
+        let exact = crate::attention::exact_attention(&q, &k, &v, beta);
+        let ctx = CompressionCtx {
+            keys: &k,
+            values: &v,
+            budget: 256 + 64,
+            beta: beta as f64,
+            layer: 0,
+            n_layers: 1,
+            obs_queries: None,
+        };
+        let e = BalanceKv.compress(&ctx, &mut rng);
+        let o = crate::attention::exact_attention(&q, &e.keys, &e.values, beta);
+        let bal_err = crate::linalg::norms::max_abs_diff(&o, &exact);
+        // contiguous half baseline
+        let half_k = k.slice_rows(0, 256 + 64);
+        let half_v = v.slice_rows(0, 256 + 64);
+        let o2 = crate::attention::exact_attention(&q, &half_k, &half_v, beta);
+        let contig_err = crate::linalg::norms::max_abs_diff(&o2, &exact);
+        assert!(
+            bal_err <= contig_err * 1.5,
+            "balanced={bal_err} contiguous={contig_err}"
+        );
+    }
+
+    #[test]
+    fn halve_keeps_one_per_pair() {
+        let mut rng = Rng::seed_from(3);
+        let feat = Matrix::randn(&mut rng, 64, 6);
+        let idx: Vec<usize> = (0..64).collect();
+        let kept = BalanceKv::halve(&feat, &idx, &mut rng);
+        assert_eq!(kept.len(), 32);
+    }
+}

@@ -1,0 +1,311 @@
+//! The serving-side KV-cache manager.
+//!
+//! Owns per-sequence, per-layer caches; enforces a per-layer entry budget
+//! by invoking the configured [`KvCompressor`] when a cache grows past its
+//! high-water mark (prefill compression and mid-stream re-compression);
+//! tracks memory/compression statistics for the coordinator's metrics.
+
+use super::{CompressionCtx, KvCompressor, KvEntry};
+use crate::linalg::Matrix;
+use crate::rng::Rng;
+use std::collections::HashMap;
+
+/// One layer's cache for one sequence: weighted key/value rows.
+#[derive(Clone, Debug)]
+pub struct LayerCache {
+    pub keys: Matrix,
+    pub values: Matrix,
+    pub weights: Vec<f64>,
+    /// Logical context length represented (≥ physical entries after
+    /// compression).
+    pub logical_len: usize,
+}
+
+impl LayerCache {
+    pub fn new(d_k: usize, d_v: usize) -> Self {
+        LayerCache {
+            keys: Matrix::zeros(0, d_k),
+            values: Matrix::zeros(0, d_v),
+            weights: Vec::new(),
+            logical_len: 0,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.keys.rows()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Append one decoded token's key/value (unit weight).
+    pub fn append(&mut self, k_row: &[f32], v_row: &[f32]) {
+        self.keys.push_row(k_row);
+        self.values.push_row(v_row);
+        self.weights.push(1.0);
+        self.logical_len += 1;
+    }
+
+    /// Replace contents with a compressed entry.
+    pub fn install(&mut self, entry: KvEntry, logical_len: usize) {
+        self.keys = entry.keys;
+        self.values = entry.values;
+        self.weights = entry.weights;
+        self.logical_len = logical_len;
+    }
+
+    /// f32-equivalent memory footprint.
+    pub fn footprint_floats(&self) -> usize {
+        self.keys.rows() * self.keys.cols()
+            + self.values.rows() * self.values.cols()
+            + self.weights.len()
+    }
+}
+
+/// Aggregate cache statistics (reported by the coordinator).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct CacheStats {
+    pub sequences: usize,
+    pub physical_entries: usize,
+    pub logical_tokens: usize,
+    pub footprint_floats: usize,
+    pub compressions: u64,
+}
+
+/// Per-sequence KV caches with budget-triggered compression.
+pub struct CacheManager {
+    /// Physical entries allowed per layer per sequence.
+    pub budget: usize,
+    /// Entries past which compression triggers (hysteresis avoids
+    /// re-compressing every decode step). Defaults to `budget`.
+    pub high_water: usize,
+    pub beta: f64,
+    pub n_layers: usize,
+    compressor: Box<dyn KvCompressor>,
+    seqs: HashMap<u64, Vec<LayerCache>>,
+    compressions: u64,
+}
+
+impl CacheManager {
+    pub fn new(
+        budget: usize,
+        n_layers: usize,
+        beta: f64,
+        compressor: Box<dyn KvCompressor>,
+    ) -> Self {
+        CacheManager {
+            budget,
+            high_water: budget,
+            beta,
+            n_layers,
+            compressor,
+            seqs: HashMap::new(),
+            compressions: 0,
+        }
+    }
+
+    pub fn compressor_name(&self) -> &'static str {
+        self.compressor.name()
+    }
+
+    /// Create (or reset) the caches for a sequence.
+    pub fn create_sequence(&mut self, seq: u64, d_k: usize, d_v: usize) {
+        let layers = (0..self.n_layers).map(|_| LayerCache::new(d_k, d_v)).collect();
+        self.seqs.insert(seq, layers);
+    }
+
+    pub fn drop_sequence(&mut self, seq: u64) {
+        self.seqs.remove(&seq);
+    }
+
+    pub fn has_sequence(&self, seq: u64) -> bool {
+        self.seqs.contains_key(&seq)
+    }
+
+    pub fn layer(&self, seq: u64, layer: usize) -> Option<&LayerCache> {
+        self.seqs.get(&seq).and_then(|l| l.get(layer))
+    }
+
+    pub fn layer_mut(&mut self, seq: u64, layer: usize) -> Option<&mut LayerCache> {
+        self.seqs.get_mut(&seq).and_then(|l| l.get_mut(layer))
+    }
+
+    /// Append a token's K/V to a layer cache; compress if past the
+    /// high-water mark. Returns whether a compression ran.
+    pub fn append_and_maybe_compress(
+        &mut self,
+        seq: u64,
+        layer: usize,
+        k_row: &[f32],
+        v_row: &[f32],
+        obs_queries: Option<&Matrix>,
+        rng: &mut Rng,
+    ) -> bool {
+        let beta = self.beta;
+        let n_layers = self.n_layers;
+        let budget = self.budget;
+        let high_water = self.high_water.max(budget);
+        let cache = self
+            .seqs
+            .get_mut(&seq)
+            .and_then(|l| l.get_mut(layer))
+            .expect("unknown sequence/layer");
+        cache.append(k_row, v_row);
+        if cache.len() <= high_water {
+            return false;
+        }
+        // Note: after a compression the weights of the *current* cache are
+        // not all 1.0; the compressor treats stored entries as surrogate
+        // tokens. This is the paper's streaming re-compression caveat
+        // (Sec. 5 limitations) — acceptable because entries were built to
+        // reproduce attention behaviour of the originals.
+        let ctx = CompressionCtx {
+            keys: &cache.keys,
+            values: &cache.values,
+            budget,
+            beta,
+            layer,
+            n_layers,
+            obs_queries,
+        };
+        let entry = self.compressor.compress(&ctx, rng);
+        let logical = cache.logical_len;
+        cache.install(entry, logical);
+        self.compressions += 1;
+        true
+    }
+
+    /// Compress every layer of a sequence now (prefill compression).
+    pub fn compress_sequence(
+        &mut self,
+        seq: u64,
+        obs_queries: Option<&Matrix>,
+        rng: &mut Rng,
+    ) {
+        let beta = self.beta;
+        let n_layers = self.n_layers;
+        let budget = self.budget;
+        let Some(layers) = self.seqs.get_mut(&seq) else { return };
+        for (li, cache) in layers.iter_mut().enumerate() {
+            if cache.len() <= budget {
+                continue;
+            }
+            let ctx = CompressionCtx {
+                keys: &cache.keys,
+                values: &cache.values,
+                budget,
+                beta,
+                layer: li,
+                n_layers,
+                obs_queries,
+            };
+            let entry = self.compressor.compress(&ctx, rng);
+            let logical = cache.logical_len;
+            cache.install(entry, logical);
+            self.compressions += 1;
+        }
+    }
+
+    pub fn stats(&self) -> CacheStats {
+        let mut s = CacheStats { sequences: self.seqs.len(), ..Default::default() };
+        for layers in self.seqs.values() {
+            for l in layers {
+                s.physical_entries += l.len();
+                s.logical_tokens += l.logical_len;
+                s.footprint_floats += l.footprint_floats();
+            }
+        }
+        s.compressions = self.compressions;
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kvcache::{StreamingLlm, UniformKv};
+
+    fn mk(budget: usize) -> CacheManager {
+        CacheManager::new(budget, 2, 0.35, Box::new(StreamingLlm))
+    }
+
+    #[test]
+    fn append_grows_and_tracks_logical() {
+        let mut m = mk(1000);
+        m.create_sequence(7, 4, 4);
+        let mut rng = Rng::seed_from(1);
+        for i in 0..10 {
+            let k = vec![i as f32; 4];
+            let v = vec![-(i as f32); 4];
+            let compressed = m.append_and_maybe_compress(7, 0, &k, &v, None, &mut rng);
+            assert!(!compressed);
+        }
+        let l = m.layer(7, 0).unwrap();
+        assert_eq!(l.len(), 10);
+        assert_eq!(l.logical_len, 10);
+        assert_eq!(l.keys.get(3, 0), 3.0);
+    }
+
+    #[test]
+    fn budget_enforced_with_compression() {
+        let mut m = mk(128);
+        m.create_sequence(1, 4, 4);
+        let mut rng = Rng::seed_from(2);
+        let mut any_compressed = false;
+        for i in 0..300 {
+            let k = vec![(i as f32).sin(); 4];
+            let v = vec![(i as f32).cos(); 4];
+            any_compressed |= m.append_and_maybe_compress(1, 0, &k, &v, None, &mut rng);
+            let l = m.layer(1, 0).unwrap();
+            assert!(l.len() <= 129, "cache overflow: {}", l.len());
+        }
+        assert!(any_compressed);
+        let l = m.layer(1, 0).unwrap();
+        assert_eq!(l.logical_len, 300);
+        assert!(m.stats().compressions > 0);
+    }
+
+    #[test]
+    fn prefill_compression_all_layers() {
+        let mut m = CacheManager::new(100, 2, 0.35, Box::new(UniformKv));
+        m.create_sequence(5, 4, 4);
+        let mut rng = Rng::seed_from(3);
+        for layer in 0..2 {
+            for i in 0..400 {
+                // append directly without triggering (budget honoured later)
+                let cache = m.layer_mut(5, layer).unwrap();
+                cache.append(&[i as f32; 4], &[i as f32; 4]);
+            }
+        }
+        m.compress_sequence(5, None, &mut rng);
+        for layer in 0..2 {
+            assert_eq!(m.layer(5, layer).unwrap().len(), 100);
+            assert_eq!(m.layer(5, layer).unwrap().logical_len, 400);
+        }
+    }
+
+    #[test]
+    fn sequence_lifecycle() {
+        let mut m = mk(64);
+        m.create_sequence(9, 2, 2);
+        assert!(m.has_sequence(9));
+        assert_eq!(m.stats().sequences, 1);
+        m.drop_sequence(9);
+        assert!(!m.has_sequence(9));
+        assert_eq!(m.stats().sequences, 0);
+    }
+
+    #[test]
+    fn footprint_accounting() {
+        let mut m = mk(1000);
+        m.create_sequence(1, 3, 5);
+        let mut rng = Rng::seed_from(4);
+        for _ in 0..7 {
+            m.append_and_maybe_compress(1, 1, &[0.0; 3], &[0.0; 5], None, &mut rng);
+        }
+        let s = m.stats();
+        assert_eq!(s.physical_entries, 7);
+        assert_eq!(s.footprint_floats, 7 * 3 + 7 * 5 + 7);
+    }
+}

@@ -1,0 +1,202 @@
+//! KV-cache compression (Sec. 4.3): the cache manager plus the six
+//! compression policies benchmarked in Tab. 4.
+//!
+//! * [`compress_kv_policy`] — COMPRESSKV (ours, Alg. 2 wrapped for caches)
+//! * [`streaming_llm`] — StreamingLLM (Xiao et al. 2024): sinks + recency
+//! * [`snapkv`] — SnapKV (Li et al. 2024b): observation-window scoring
+//! * [`pyramidkv`] — PyramidKV (Cai et al. 2025): pyramidal layer budgets
+//! * [`balancekv`] — BalanceKV (Han et al. 2025): discrepancy halving
+//! * [`uniform`] — Uniform (Han et al. 2025): random subset
+//!
+//! Protocol (matching Han et al. 2025 / the paper's Sec. 4.3): every
+//! policy retains the first and last [`PROTECTED`] tokens verbatim and
+//! compresses only the middle of the context to meet the overall budget.
+
+pub mod balancekv;
+pub mod cache;
+pub mod compress_kv_policy;
+pub mod pyramidkv;
+pub mod snapkv;
+pub mod streaming_llm;
+pub mod uniform;
+
+pub use balancekv::BalanceKv;
+pub use cache::{CacheManager, CacheStats, LayerCache};
+pub use compress_kv_policy::CompressKvPolicy;
+pub use pyramidkv::PyramidKv;
+pub use snapkv::SnapKv;
+pub use streaming_llm::StreamingLlm;
+pub use uniform::UniformKv;
+
+use crate::linalg::Matrix;
+use crate::rng::Rng;
+
+/// Tokens protected verbatim at each end of the context (paper Sec. 4.3:
+/// "retain the first and last 32 context tokens").
+pub const PROTECTED: usize = 32;
+
+/// A compressed per-layer cache entry: weighted coreset keys/values.
+/// Selection-only policies use unit weights; COMPRESSKV uses Nyström
+/// weights for its compressed middle.
+#[derive(Clone, Debug)]
+pub struct KvEntry {
+    pub keys: Matrix,
+    pub values: Matrix,
+    pub weights: Vec<f64>,
+    /// Original context length this entry summarises.
+    pub source_len: usize,
+}
+
+impl KvEntry {
+    pub fn len(&self) -> usize {
+        self.keys.rows()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Uncompressed passthrough entry.
+    pub fn exact(keys: Matrix, values: Matrix) -> Self {
+        let n = keys.rows();
+        KvEntry { keys, values, weights: vec![1.0; n], source_len: n }
+    }
+}
+
+/// Everything a compression policy may consult.
+pub struct CompressionCtx<'a> {
+    /// Full per-layer keys (n×d) and values (n×d_v).
+    pub keys: &'a Matrix,
+    pub values: &'a Matrix,
+    /// Total retained-entry budget (including protected tokens).
+    pub budget: usize,
+    /// Attention scale β of the layer.
+    pub beta: f64,
+    /// Layer index and total layer count (for pyramidal policies).
+    pub layer: usize,
+    pub n_layers: usize,
+    /// Recent-window queries (w×d) for attention-score-based policies.
+    pub obs_queries: Option<&'a Matrix>,
+}
+
+/// A KV-cache compression policy.
+pub trait KvCompressor: Send + Sync {
+    fn name(&self) -> &'static str;
+
+    /// Compress one layer's `(K, V)` to roughly `ctx.budget` entries.
+    fn compress(&self, ctx: &CompressionCtx, rng: &mut Rng) -> KvEntry;
+}
+
+/// Number of protected tokens per end for a given budget: the paper's 32
+/// when the budget affords it, scaled down (≥ 1) for aggressive budgets
+/// so the 93.75%-compression level of Tab. 4 stays meaningful on short
+/// contexts (DESIGN.md §3).
+pub fn protected_for(budget: usize) -> usize {
+    PROTECTED.min((budget / 4).max(1))
+}
+
+/// Split `0..n` into (protected head, middle range, protected tail) under
+/// the first/last-protected protocol. Returns `None` when the budget or
+/// context is too small to compress (callers keep everything).
+pub fn split_protected(n: usize, budget: usize) -> Option<(usize, std::ops::Range<usize>, usize)> {
+    let p = protected_for(budget);
+    if budget >= n || n <= 2 * p || budget <= 2 * p {
+        return None;
+    }
+    Some((p, p..n - p, p))
+}
+
+/// Assemble a [`KvEntry`] from protected head/tail plus selected middle
+/// indices with per-index weights. `middle` indices are absolute.
+pub fn assemble_entry(
+    keys: &Matrix,
+    values: &Matrix,
+    middle_keys: Matrix,
+    middle_values: Matrix,
+    middle_weights: Vec<f64>,
+    protected: usize,
+) -> KvEntry {
+    let n = keys.rows();
+    let head_k = keys.slice_rows(0, protected);
+    let head_v = values.slice_rows(0, protected);
+    let tail_k = keys.slice_rows(n - protected, n);
+    let tail_v = values.slice_rows(n - protected, n);
+    let mut weights = vec![1.0f64; protected];
+    weights.extend_from_slice(&middle_weights);
+    weights.extend(std::iter::repeat(1.0).take(protected));
+    let keys = Matrix::vcat(&[&head_k, &middle_keys, &tail_k]);
+    let values = Matrix::vcat(&[&head_v, &middle_values, &tail_v]);
+    KvEntry { keys, values, weights, source_len: n }
+}
+
+/// Selection-based assembly: keep `selected` absolute middle indices with
+/// unit weights.
+pub fn assemble_selection(
+    keys: &Matrix,
+    values: &Matrix,
+    selected: &[usize],
+    protected: usize,
+) -> KvEntry {
+    let mk = keys.select_rows(selected);
+    let mv = values.select_rows(selected);
+    let w = vec![1.0f64; selected.len()];
+    assemble_entry(keys, values, mk, mv, w, protected)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn split_protocol() {
+        assert!(split_protected(100, 100).is_none()); // budget >= n
+        // short context with a moderate budget still compresses with a
+        // scaled-down protected count (p = 12 here)
+        let (h3, mid3, t3) = split_protected(60, 50).unwrap();
+        assert_eq!((h3, t3), (12, 12));
+        assert_eq!(mid3, 12..48);
+        assert!(split_protected(12, 24).is_none()); // n <= 2p
+        // aggressive budgets scale the protected count down
+        let (h2, mid2, t2) = split_protected(1000, 64).unwrap();
+        assert_eq!((h2, t2), (16, 16));
+        assert_eq!(mid2, 16..984);
+        assert_eq!(protected_for(256), 32);
+        assert_eq!(protected_for(64), 16);
+        assert_eq!(protected_for(2), 1);
+        let (h, mid, t) = split_protected(1000, 128).unwrap();
+        assert_eq!(h, 32);
+        assert_eq!(t, 32);
+        assert_eq!(mid, 32..968);
+    }
+
+    #[test]
+    fn assemble_selection_layout() {
+        let mut rng = Rng::seed_from(1);
+        let k = Matrix::randn(&mut rng, 100, 4);
+        let v = Matrix::randn(&mut rng, 100, 3);
+        let e = assemble_selection(&k, &v, &[40, 50, 60], 32);
+        assert_eq!(e.len(), 32 + 3 + 32);
+        assert_eq!(e.weights.len(), 67);
+        assert!(e.weights.iter().all(|&w| w == 1.0));
+        // head is rows 0..32, middle at 32..35, tail 35..67
+        for j in 0..4 {
+            assert_eq!(e.keys.get(0, j), k.get(0, j));
+            assert_eq!(e.keys.get(32, j), k.get(40, j));
+            assert_eq!(e.keys.get(34, j), k.get(60, j));
+            assert_eq!(e.keys.get(35, j), k.get(68, j));
+            assert_eq!(e.keys.get(66, j), k.get(99, j));
+        }
+        assert_eq!(e.source_len, 100);
+    }
+
+    #[test]
+    fn exact_entry_passthrough() {
+        let mut rng = Rng::seed_from(2);
+        let k = Matrix::randn(&mut rng, 10, 4);
+        let v = Matrix::randn(&mut rng, 10, 3);
+        let e = KvEntry::exact(k.clone(), v.clone());
+        assert_eq!(e.len(), 10);
+        assert_eq!(e.keys, k);
+        assert!(e.weights.iter().all(|&w| w == 1.0));
+    }
+}

@@ -1,0 +1,116 @@
+//! PyramidKV (Cai et al. 2025): SnapKV-style observation-window scoring
+//! with *pyramidal* per-layer budgets — early layers (which funnel broad
+//! information) keep more tokens, late layers fewer, while the average
+//! budget across layers matches the requested one.
+
+use super::snapkv::SnapKv;
+use super::{assemble_selection, split_protected, CompressionCtx, KvCompressor, KvEntry};
+use crate::linalg::Matrix;
+use crate::rng::Rng;
+
+pub struct PyramidKv {
+    /// Ratio between the first layer's budget and the mean budget
+    /// (the last layer gets `2 − shape` of the mean); 1.0 = flat = SnapKV.
+    pub shape: f64,
+    pub pool: usize,
+}
+
+impl Default for PyramidKv {
+    fn default() -> Self {
+        PyramidKv { shape: 1.5, pool: 7 }
+    }
+}
+
+impl PyramidKv {
+    /// Per-layer budget: linear pyramid through the mean.
+    pub fn layer_budget(&self, mean_budget: usize, layer: usize, n_layers: usize) -> usize {
+        if n_layers <= 1 {
+            return mean_budget;
+        }
+        let top = self.shape;
+        let bottom = 2.0 - self.shape;
+        let t = layer as f64 / (n_layers - 1) as f64;
+        let factor = top * (1.0 - t) + bottom * t;
+        // floor keeps the protected ends + at least one middle token while
+        // never exceeding the caller's budget intent (the earlier clamp of
+        // 2*PROTECTED+1 silently inflated aggressive budgets)
+        let floor = 2 * super::protected_for(mean_budget) + 1;
+        ((mean_budget as f64 * factor).round() as usize).max(floor)
+    }
+}
+
+impl KvCompressor for PyramidKv {
+    fn name(&self) -> &'static str {
+        "PyramidKV"
+    }
+
+    fn compress(&self, ctx: &CompressionCtx, _rng: &mut Rng) -> KvEntry {
+        let n = ctx.keys.rows();
+        let budget = self.layer_budget(ctx.budget, ctx.layer, ctx.n_layers);
+        let Some((head, mid, tail)) = split_protected(n, budget) else {
+            return KvEntry::exact(ctx.keys.clone(), ctx.values.clone());
+        };
+        let take = budget.saturating_sub(head + tail).min(mid.len());
+        let owned_obs;
+        let obs: &Matrix = match ctx.obs_queries {
+            Some(o) => o,
+            None => {
+                owned_obs = ctx.keys.slice_rows(n - tail, n);
+                &owned_obs
+            }
+        };
+        let mid_keys = ctx.keys.slice_rows(mid.start, mid.end);
+        let raw = SnapKv::scores(&mid_keys, obs, ctx.beta);
+        let pooled = SnapKv::max_pool(&raw, self.pool);
+        let chosen: Vec<usize> = SnapKv::top_k(&pooled, take)
+            .into_iter()
+            .map(|i| i + mid.start)
+            .collect();
+        assemble_selection(ctx.keys, ctx.values, &chosen, head)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pyramid_budgets_average_to_mean() {
+        let p = PyramidKv::default();
+        let n_layers = 8;
+        let mean = 256;
+        let total: usize = (0..n_layers).map(|l| p.layer_budget(mean, l, n_layers)).sum();
+        let avg = total as f64 / n_layers as f64;
+        assert!((avg - mean as f64).abs() < mean as f64 * 0.02, "avg={avg}");
+        // monotone decreasing over depth
+        for l in 1..n_layers {
+            assert!(p.layer_budget(mean, l, n_layers) <= p.layer_budget(mean, l - 1, n_layers));
+        }
+    }
+
+    #[test]
+    fn early_layers_keep_more() {
+        let mut rng = Rng::seed_from(1);
+        let k = Matrix::randn(&mut rng, 600, 4);
+        let v = Matrix::randn(&mut rng, 600, 4);
+        let entry_at = |layer: usize| {
+            let ctx = CompressionCtx {
+                keys: &k,
+                values: &v,
+                budget: 128,
+                beta: 0.5,
+                layer,
+                n_layers: 4,
+                obs_queries: None,
+            };
+            PyramidKv::default().compress(&ctx, &mut Rng::seed_from(2)).len()
+        };
+        assert!(entry_at(0) > entry_at(3), "layer0={} layer3={}", entry_at(0), entry_at(3));
+    }
+
+    #[test]
+    fn single_layer_is_flat() {
+        let p = PyramidKv::default();
+        assert_eq!(p.layer_budget(100, 0, 1), 100);
+    }
+}

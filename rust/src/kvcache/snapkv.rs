@@ -1,0 +1,166 @@
+//! SnapKV (Li et al. 2024b): score each context key by the attention mass
+//! it receives from an observation window of the most recent queries,
+//! smooth the scores with 1-D max pooling (to keep local context blocks
+//! together), and retain the top-k middle tokens.
+
+use super::{assemble_selection, split_protected, CompressionCtx, KvCompressor, KvEntry};
+use crate::kernels::safe_exp;
+use crate::linalg::gemm::dot;
+use crate::linalg::Matrix;
+use crate::rng::Rng;
+
+pub struct SnapKv {
+    /// 1-D max-pool kernel width over key positions (paper default 7).
+    pub pool: usize,
+}
+
+impl Default for SnapKv {
+    fn default() -> Self {
+        SnapKv { pool: 7 }
+    }
+}
+
+impl SnapKv {
+    /// Attention-mass score of every key from the observation queries,
+    /// softmax-normalised per query then summed (the SnapKV voting rule).
+    pub fn scores(keys: &Matrix, obs: &Matrix, beta: f64) -> Vec<f64> {
+        let n = keys.rows();
+        let mut score = vec![0.0f64; n];
+        for i in 0..obs.rows() {
+            let qi = obs.row(i);
+            let logits: Vec<f64> =
+                (0..n).map(|j| beta * dot(qi, keys.row(j)) as f64).collect();
+            let mx = logits.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+            let ps: Vec<f64> = logits.iter().map(|&l| safe_exp(l - mx)).collect();
+            let total: f64 = ps.iter().sum();
+            if total > 0.0 {
+                for (s, p) in score.iter_mut().zip(&ps) {
+                    *s += p / total;
+                }
+            }
+        }
+        score
+    }
+
+    /// 1-D max pooling with window `pool` (same-length output).
+    pub fn max_pool(scores: &[f64], pool: usize) -> Vec<f64> {
+        if pool <= 1 || scores.is_empty() {
+            return scores.to_vec();
+        }
+        let half = pool / 2;
+        let n = scores.len();
+        (0..n)
+            .map(|i| {
+                let lo = i.saturating_sub(half);
+                let hi = (i + half + 1).min(n);
+                scores[lo..hi].iter().cloned().fold(f64::NEG_INFINITY, f64::max)
+            })
+            .collect()
+    }
+
+    /// Indices of the `k` largest scores (ties by position), sorted.
+    pub fn top_k(scores: &[f64], k: usize) -> Vec<usize> {
+        let mut idx: Vec<usize> = (0..scores.len()).collect();
+        idx.sort_by(|&a, &b| {
+            scores[b].partial_cmp(&scores[a]).unwrap_or(std::cmp::Ordering::Equal).then(a.cmp(&b))
+        });
+        idx.truncate(k);
+        idx.sort_unstable();
+        idx
+    }
+}
+
+impl KvCompressor for SnapKv {
+    fn name(&self) -> &'static str {
+        "SnapKV"
+    }
+
+    fn compress(&self, ctx: &CompressionCtx, _rng: &mut Rng) -> KvEntry {
+        let n = ctx.keys.rows();
+        let Some((head, mid, tail)) = split_protected(n, ctx.budget) else {
+            return KvEntry::exact(ctx.keys.clone(), ctx.values.clone());
+        };
+        let take = ctx.budget.saturating_sub(head + tail).min(mid.len());
+        // Observation window: supplied recent queries, else the last
+        // PROTECTED keys double as query proxies (K/Q share geometry in
+        // trained models).
+        let owned_obs;
+        let obs: &Matrix = match ctx.obs_queries {
+            Some(o) => o,
+            None => {
+                owned_obs = ctx.keys.slice_rows(n - tail, n);
+                &owned_obs
+            }
+        };
+        let mid_keys = ctx.keys.slice_rows(mid.start, mid.end);
+        let raw = Self::scores(&mid_keys, obs, ctx.beta);
+        let pooled = Self::max_pool(&raw, self.pool);
+        let chosen: Vec<usize> = Self::top_k(&pooled, take)
+            .into_iter()
+            .map(|i| i + mid.start)
+            .collect();
+        assemble_selection(ctx.keys, ctx.values, &chosen, head)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn top_k_basic() {
+        let s = [0.1, 5.0, 0.2, 4.0, 0.3];
+        assert_eq!(SnapKv::top_k(&s, 2), vec![1, 3]);
+        assert_eq!(SnapKv::top_k(&s, 0), Vec::<usize>::new());
+        assert_eq!(SnapKv::top_k(&s, 10).len(), 5);
+    }
+
+    #[test]
+    fn max_pool_window() {
+        let s = [0.0, 1.0, 0.0, 0.0, 3.0];
+        let p = SnapKv::max_pool(&s, 3);
+        assert_eq!(p, vec![1.0, 1.0, 1.0, 3.0, 3.0]);
+        assert_eq!(SnapKv::max_pool(&s, 1), s.to_vec());
+    }
+
+    #[test]
+    fn retains_keys_the_observation_window_attends_to() {
+        // Construct keys where middle position P strongly matches the
+        // observation queries: SnapKV must keep it.
+        let n = 300;
+        let d = 8;
+        let mut rng = Rng::seed_from(1);
+        let mut k = Matrix::randn(&mut rng, n, d).scale(0.1);
+        let hot = 150usize;
+        for j in 0..d {
+            k.set(hot, j, 2.0);
+        }
+        let v = Matrix::randn(&mut rng, n, 4);
+        let obs = Matrix::from_fn(8, d, |_, _| 1.0); // aligned with hot key
+        let ctx = CompressionCtx {
+            keys: &k,
+            values: &v,
+            budget: 96,
+            beta: 1.0,
+            layer: 0,
+            n_layers: 1,
+            obs_queries: Some(&obs),
+        };
+        let e = SnapKv::default().compress(&ctx, &mut rng);
+        assert_eq!(e.len(), 96);
+        // the hot key must appear among the retained keys
+        let found = (0..e.len()).any(|i| (e.keys.get(i, 0) - 2.0).abs() < 1e-6);
+        assert!(found, "hot key was evicted");
+    }
+
+    #[test]
+    fn scores_sum_to_query_count() {
+        // per-query softmax scores sum to 1 ⇒ total mass = #queries
+        let mut rng = Rng::seed_from(2);
+        let k = Matrix::randn(&mut rng, 40, 4);
+        let obs = Matrix::randn(&mut rng, 6, 4);
+        let s = SnapKv::scores(&k, &obs, 0.5);
+        let total: f64 = s.iter().sum();
+        assert!((total - 6.0).abs() < 1e-9, "total={total}");
+    }
+}

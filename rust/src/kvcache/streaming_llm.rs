@@ -1,0 +1,78 @@
+//! StreamingLLM (Xiao et al. 2024): keep the attention-sink tokens at the
+//! start of the context plus a sliding window of the most recent tokens.
+//! No middle tokens survive — the cheapest and lossiest policy in Tab. 4.
+
+use super::{protected_for, CompressionCtx, KvCompressor, KvEntry};
+use crate::linalg::Matrix;
+use crate::rng::Rng;
+
+pub struct StreamingLlm;
+
+impl KvCompressor for StreamingLlm {
+    fn name(&self) -> &'static str {
+        "StreamingLLM"
+    }
+
+    fn compress(&self, ctx: &CompressionCtx, _rng: &mut Rng) -> KvEntry {
+        let n = ctx.keys.rows();
+        if ctx.budget >= n || ctx.budget < 2 {
+            return KvEntry::exact(ctx.keys.clone(), ctx.values.clone());
+        }
+        // sinks = protected head, recency = the rest of the budget
+        let sink = protected_for(ctx.budget).min(ctx.budget / 2);
+        let recent = ctx.budget - sink;
+        let head_k = ctx.keys.slice_rows(0, sink);
+        let head_v = ctx.values.slice_rows(0, sink);
+        let tail_k = ctx.keys.slice_rows(n - recent, n);
+        let tail_v = ctx.values.slice_rows(n - recent, n);
+        let keys = Matrix::vcat(&[&head_k, &tail_k]);
+        let values = Matrix::vcat(&[&head_v, &tail_v]);
+        let total = keys.rows();
+        KvEntry { keys, values, weights: vec![1.0; total], source_len: n }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn keeps_sinks_and_recency() {
+        let mut rng = Rng::seed_from(1);
+        let k = Matrix::from_fn(500, 2, |i, _| i as f32);
+        let v = Matrix::randn(&mut rng, 500, 2);
+        let ctx = CompressionCtx {
+            keys: &k,
+            values: &v,
+            budget: 128,
+            beta: 0.5,
+            layer: 0,
+            n_layers: 2,
+            obs_queries: None,
+        };
+        let e = StreamingLlm.compress(&ctx, &mut rng);
+        assert_eq!(e.len(), 128);
+        assert_eq!(e.keys.get(0, 0), 0.0); // first sink token
+        assert_eq!(e.keys.get(31, 0), 31.0); // last sink token
+        assert_eq!(e.keys.get(32, 0), 404.0); // recency window start
+        assert_eq!(e.keys.get(127, 0), 499.0); // newest token
+    }
+
+    #[test]
+    fn passthrough_when_budget_sufficient() {
+        let mut rng = Rng::seed_from(2);
+        let k = Matrix::randn(&mut rng, 50, 2);
+        let v = Matrix::randn(&mut rng, 50, 2);
+        let ctx = CompressionCtx {
+            keys: &k,
+            values: &v,
+            budget: 100,
+            beta: 0.5,
+            layer: 0,
+            n_layers: 1,
+            obs_queries: None,
+        };
+        let e = StreamingLlm.compress(&ctx, &mut rng);
+        assert_eq!(e.len(), 50);
+    }
+}

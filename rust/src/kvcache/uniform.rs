@@ -1,0 +1,72 @@
+//! Uniform baseline (Han et al. 2025): keep the protected ends and a
+//! uniformly random subset of the middle. The control arm of Tab. 4.
+
+use super::{assemble_selection, split_protected, CompressionCtx, KvCompressor, KvEntry};
+use crate::rng::Rng;
+
+pub struct UniformKv;
+
+impl KvCompressor for UniformKv {
+    fn name(&self) -> &'static str {
+        "Uniform"
+    }
+
+    fn compress(&self, ctx: &CompressionCtx, rng: &mut Rng) -> KvEntry {
+        let n = ctx.keys.rows();
+        let Some((head, mid, tail)) = split_protected(n, ctx.budget) else {
+            return KvEntry::exact(ctx.keys.clone(), ctx.values.clone());
+        };
+        let take = ctx.budget.saturating_sub(head + tail);
+        let mid_len = mid.len();
+        let chosen: Vec<usize> = rng
+            .sample_without_replacement(mid_len, take.min(mid_len))
+            .into_iter()
+            .map(|i| i + mid.start)
+            .collect();
+        assemble_selection(ctx.keys, ctx.values, &chosen, head)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::Matrix;
+
+    #[test]
+    fn meets_budget_and_sorted_middle() {
+        let mut rng = Rng::seed_from(1);
+        let k = Matrix::randn(&mut rng, 400, 4);
+        let v = Matrix::randn(&mut rng, 400, 4);
+        let ctx = CompressionCtx {
+            keys: &k,
+            values: &v,
+            budget: 100,
+            beta: 0.5,
+            layer: 0,
+            n_layers: 1,
+            obs_queries: None,
+        };
+        let e = UniformKv.compress(&ctx, &mut rng);
+        assert_eq!(e.len(), 100);
+        assert_eq!(e.source_len, 400);
+        assert!(e.weights.iter().all(|&w| w == 1.0));
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let k = Matrix::randn(&mut Rng::seed_from(2), 300, 4);
+        let v = Matrix::randn(&mut Rng::seed_from(3), 300, 4);
+        let ctx = CompressionCtx {
+            keys: &k,
+            values: &v,
+            budget: 96,
+            beta: 0.5,
+            layer: 0,
+            n_layers: 1,
+            obs_queries: None,
+        };
+        let e1 = UniformKv.compress(&ctx, &mut Rng::seed_from(9));
+        let e2 = UniformKv.compress(&ctx, &mut Rng::seed_from(9));
+        assert_eq!(e1.keys, e2.keys);
+    }
+}

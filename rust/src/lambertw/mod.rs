@@ -1,0 +1,182 @@
+//! Lambert-W function substrate (principal branch `W0`).
+//!
+//! The WildCat temperature rule (Eq. 4) and the theoretical rank bounds
+//! (Thm. 2, Lem. 3) evaluate `W0`. SciPy is not on the request path, so we
+//! implement the guaranteed-precision iteration of Lóczi (2022), quoted in
+//! the paper as Thm. L.1:
+//!
+//! * start `β0 = ln z − ln ln z` for `z > e`, `β0 = exp(ln z − 1) = z/e`
+//!   for `0 < z < e`;
+//! * iterate `β_{n+1} = β_n/(1+β_n) · (1 + ln z − ln β_n)`;
+//! * after `n` steps the error is `< max(0.32^(2^n), 0.633^(2^n)/3)` —
+//!   quadratic convergence, so 6 iterations give far below f64 ulp for the
+//!   argument ranges the temperature rule produces.
+//!
+//! Negative arguments in `(−1/e, 0)` (not needed by Eq. 4 but exercised in
+//! tests and by the Tab. 1 machinery) use a Halley fallback.
+
+/// `ρ0 = sqrt(1 + e^{W0(2/e²)+2})` — the paper's Eq. (16) constant (≈ 3.19).
+pub fn rho0() -> f64 {
+    (1.0 + (lambert_w0(2.0 / (std::f64::consts::E * std::f64::consts::E)) + 2.0).exp()).sqrt()
+}
+
+/// Principal branch `W0(z)` for `z ≥ −1/e`.
+///
+/// Uses the Lóczi (2022) iteration for `z > 0` and a Halley iteration from
+/// a series seed for `z ∈ [−1/e, 0]`.
+pub fn lambert_w0(z: f64) -> f64 {
+    assert!(z.is_finite(), "lambert_w0: non-finite argument {z}");
+    let inv_e = (-1.0f64).exp();
+    assert!(
+        z >= -inv_e - 1e-12,
+        "lambert_w0: argument {z} below -1/e (outside domain)"
+    );
+    if z == 0.0 {
+        return 0.0;
+    }
+    if z > 0.0 {
+        let e = std::f64::consts::E;
+        let mut b = if z > e {
+            let lz = z.ln();
+            lz - lz.ln()
+        } else {
+            // exp(ln z − 1) = z / e; always a valid positive seed for z<e.
+            z / e
+        };
+        // Guard: the iteration needs b > 0.
+        if !(b > 0.0) {
+            b = z / e;
+        }
+        let lnz = z.ln();
+        for _ in 0..8 {
+            let next = b / (1.0 + b) * (1.0 + lnz - b.ln());
+            if !next.is_finite() {
+                break;
+            }
+            if (next - b).abs() <= 1e-16 * b.abs().max(1e-300) {
+                b = next;
+                break;
+            }
+            b = next;
+        }
+        return b;
+    }
+    // z in [−1/e, 0): Halley from the branch-point series seed.
+    let p = (2.0 * (1.0 + std::f64::consts::E * z)).max(0.0).sqrt();
+    let mut w = -1.0 + p - p * p / 3.0 + 11.0 * p * p * p / 72.0;
+    for _ in 0..40 {
+        let ew = w.exp();
+        let f = w * ew - z;
+        if f == 0.0 {
+            break;
+        }
+        let denom = ew * (w + 1.0) - (w + 2.0) * f / (2.0 * w + 2.0);
+        if denom == 0.0 || !denom.is_finite() {
+            break;
+        }
+        let step = f / denom;
+        w -= step;
+        if step.abs() < 1e-15 * w.abs().max(1e-10) {
+            break;
+        }
+    }
+    w
+}
+
+/// Convenience: `exp(W0(z)) = z / W0(z)` for `z ≠ 0` (Lem. L.1).
+pub fn exp_w0(z: f64) -> f64 {
+    if z == 0.0 {
+        return 1.0;
+    }
+    let w = lambert_w0(z);
+    if w == 0.0 {
+        1.0
+    } else {
+        z / w
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn check_inverse(z: f64, tol: f64) {
+        let w = lambert_w0(z);
+        let back = w * w.exp();
+        assert!(
+            (back - z).abs() <= tol * z.abs().max(1.0),
+            "z={z} w={w} back={back}"
+        );
+    }
+
+    #[test]
+    fn known_values() {
+        assert!((lambert_w0(0.0)).abs() < 1e-15);
+        // W0(e) = 1
+        assert!((lambert_w0(std::f64::consts::E) - 1.0).abs() < 1e-12);
+        // W0(1) = Ω ≈ 0.5671432904097838
+        assert!((lambert_w0(1.0) - 0.567_143_290_409_783_8).abs() < 1e-12);
+        // W0(-1/e) = -1
+        assert!((lambert_w0(-(-1.0f64).exp()) + 1.0).abs() < 1e-5);
+    }
+
+    #[test]
+    fn inverse_identity_positive_range() {
+        for &z in &[1e-8, 1e-3, 0.1, 0.5, 1.0, 2.0, 2.6, 3.0, 10.0, 1e3, 1e6, 1e12] {
+            check_inverse(z, 1e-10);
+        }
+    }
+
+    #[test]
+    fn inverse_identity_negative_range() {
+        for &z in &[-0.05, -0.1, -0.2, -0.3, -0.35] {
+            check_inverse(z, 1e-9);
+        }
+    }
+
+    #[test]
+    fn monotone_increasing() {
+        let mut prev = lambert_w0(-0.3);
+        for i in 1..2000 {
+            let z = -0.3 + i as f64 * 0.01;
+            let w = lambert_w0(z);
+            assert!(w >= prev - 1e-12, "not monotone at z={z}");
+            prev = w;
+        }
+    }
+
+    #[test]
+    fn orabona_lower_bound() {
+        // Lem. L.4 (Orabona 2019, Thm C.3): W0(z) >= 0.6321 log(1+z), z >= 0.
+        for i in 0..500 {
+            let z = i as f64 * 0.37;
+            assert!(
+                lambert_w0(z) >= 0.6321 * (1.0 + z).ln() - 1e-9,
+                "bound fails at z={z}"
+            );
+        }
+    }
+
+    #[test]
+    fn rho0_matches_paper() {
+        // Paper: ρ0 ≈ 3.19 and 2/(ρ0² + 1) ≤ 1/5 (Cor. G.1 proof).
+        let r = rho0();
+        assert!((r - 3.19).abs() < 0.02, "rho0={r}");
+        assert!(2.0 / (r * r + 1.0) <= 0.2 + 1e-9);
+    }
+
+    #[test]
+    fn exp_w0_identity() {
+        for &z in &[0.5, 1.0, 7.0, 100.0] {
+            let w = lambert_w0(z);
+            assert!((exp_w0(z) - w.exp()).abs() < 1e-9 * w.exp());
+        }
+        assert_eq!(exp_w0(0.0), 1.0);
+    }
+
+    #[test]
+    #[should_panic]
+    fn below_domain_panics() {
+        lambert_w0(-1.0);
+    }
+}

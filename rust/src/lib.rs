@@ -1,0 +1,55 @@
+//! # WildCat — near-linear attention in theory and practice
+//!
+//! A full-stack reproduction of *"WildCat: Near-Linear Attention in Theory
+//! and Practice"* (Schröder & Mackey, ICML 2026) as a three-layer
+//! Rust + JAX + Pallas system:
+//!
+//! * **Layer 3 (this crate)** — the serving coordinator: request routing,
+//!   dynamic batching, prefill/decode scheduling and KV-cache management
+//!   with six compression policies, plus the complete numeric substrate
+//!   (linear algebra, RPNYS, attention algorithms, baselines).
+//! * **Layer 2 (`python/compile/model.py`)** — the JAX compute graph of the
+//!   WildCat pipeline and a small transformer LM, AOT-lowered once to HLO
+//!   text artifacts.
+//! * **Layer 1 (`python/compile/kernels/`)** — Pallas kernels for the
+//!   weighted-attention hot spot, validated against a pure-jnp oracle.
+//!
+//! Python never runs on the request path: the [`runtime`] module loads the
+//! pre-compiled HLO artifacts through PJRT and executes them natively.
+//!
+//! ## Quick tour
+//!
+//! ```no_run
+//! use wildcat::attention::{wildcat_attention, WildcatParams};
+//! use wildcat::linalg::Matrix;
+//! use wildcat::rng::Rng;
+//!
+//! let mut rng = Rng::seed_from(7);
+//! let n = 1024;
+//! let d = 64;
+//! let q = Matrix::randn(&mut rng, n, d);
+//! let k = Matrix::randn(&mut rng, n, d);
+//! let v = Matrix::randn(&mut rng, n, d);
+//! let params = WildcatParams { rank: 64, bins: 8, ..Default::default() };
+//! let o_hat = wildcat_attention(&q, &k, &v, &params, &mut rng);
+//! assert_eq!(o_hat.rows(), n);
+//! ```
+
+pub mod bench;
+pub mod util;
+pub mod rng;
+pub mod exec;
+pub mod lambertw;
+pub mod linalg;
+pub mod kernels;
+pub mod rpnys;
+pub mod attention;
+pub mod baselines;
+pub mod kvcache;
+pub mod model;
+pub mod runtime;
+pub mod coordinator;
+pub mod workload;
+
+/// Crate-wide result alias.
+pub type Result<T> = anyhow::Result<T>;

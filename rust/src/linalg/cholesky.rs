@@ -1,0 +1,226 @@
+//! f64 Cholesky factorisation and triangular solves.
+//!
+//! These back the Nyström weight solve `h(K_S,K_S) W = h(K_S,K)` (Alg. 1's
+//! `W = M R` step in pseudo-inverse form) and the BalanceKV / baseline
+//! machinery. Matrices here are small (r×r with r ≤ a few hundred), stored
+//! as flat row-major `Vec<f64>`.
+
+/// In-place lower-Cholesky of a row-major symmetric positive-definite
+/// `n×n` matrix. Returns `Err(pivot)` at the first non-positive pivot.
+/// Only the lower triangle of the output is meaningful.
+pub fn cholesky_in_place(a: &mut [f64], n: usize) -> Result<(), usize> {
+    assert_eq!(a.len(), n * n);
+    for j in 0..n {
+        let mut diag = a[j * n + j];
+        for k in 0..j {
+            diag -= a[j * n + k] * a[j * n + k];
+        }
+        if !(diag > 0.0) || !diag.is_finite() {
+            return Err(j);
+        }
+        let ljj = diag.sqrt();
+        a[j * n + j] = ljj;
+        for i in j + 1..n {
+            let mut v = a[i * n + j];
+            for k in 0..j {
+                v -= a[i * n + k] * a[j * n + k];
+            }
+            a[i * n + j] = v / ljj;
+        }
+    }
+    Ok(())
+}
+
+/// Solve `L x = b` (forward substitution) for lower-triangular `L`,
+/// overwriting `b` with `x`. `b` holds `nrhs` interleaved columns in
+/// row-major layout (`n × nrhs`).
+pub fn solve_lower(l: &[f64], n: usize, b: &mut [f64], nrhs: usize) {
+    assert_eq!(l.len(), n * n);
+    assert_eq!(b.len(), n * nrhs);
+    for i in 0..n {
+        let lii = l[i * n + i];
+        for k in 0..i {
+            let lik = l[i * n + k];
+            if lik == 0.0 {
+                continue;
+            }
+            // b[i,:] -= l[i,k] * b[k,:]  (split_at_mut keeps aliasing legal)
+            let (head, tail) = b.split_at_mut(i * nrhs);
+            let bi = &mut tail[..nrhs];
+            let bk = &head[k * nrhs..(k + 1) * nrhs];
+            for (x, &y) in bi.iter_mut().zip(bk) {
+                *x -= lik * y;
+            }
+        }
+        for x in b[i * nrhs..(i + 1) * nrhs].iter_mut() {
+            *x /= lii;
+        }
+    }
+}
+
+/// Solve `Lᵀ x = b` (back substitution), overwriting `b` with `x`.
+pub fn solve_lower_transpose(l: &[f64], n: usize, b: &mut [f64], nrhs: usize) {
+    assert_eq!(l.len(), n * n);
+    assert_eq!(b.len(), n * nrhs);
+    for i in (0..n).rev() {
+        let lii = l[i * n + i];
+        for k in i + 1..n {
+            let lki = l[k * n + i];
+            if lki == 0.0 {
+                continue;
+            }
+            let (head, tail) = b.split_at_mut(k * nrhs);
+            let bi = &mut head[i * nrhs..(i + 1) * nrhs];
+            let bk = &tail[..nrhs];
+            for (x, &y) in bi.iter_mut().zip(bk) {
+                *x -= lki * y;
+            }
+        }
+        for x in b[i * nrhs..(i + 1) * nrhs].iter_mut() {
+            *x /= lii;
+        }
+    }
+}
+
+/// Solve the SPD system `A X = B` with escalating jitter (pseudo-inverse
+/// semantics for nearly-singular kernel matrices, per Alg. 1's `H⁺`).
+///
+/// `a` is `n×n` row-major (consumed), `b` is `n×nrhs` row-major
+/// (overwritten with the solution). Returns the jitter that was needed.
+pub fn spd_solve(mut a: Vec<f64>, n: usize, b: &mut [f64], nrhs: usize) -> f64 {
+    let trace: f64 = (0..n).map(|i| a[i * n + i]).sum();
+    let base = (trace / n.max(1) as f64).max(1e-300);
+    let mut jitter = 0.0f64;
+    let mut factor = a.clone();
+    loop {
+        if cholesky_in_place(&mut factor, n).is_ok() {
+            solve_lower(&factor, n, b, nrhs);
+            solve_lower_transpose(&factor, n, b, nrhs);
+            return jitter;
+        }
+        // escalate jitter: 1e-10, 1e-8, ... of the mean diagonal
+        jitter = if jitter == 0.0 { base * 1e-10 } else { jitter * 100.0 };
+        assert!(
+            jitter <= base * 10.0,
+            "spd_solve: matrix is numerically indefinite even with jitter"
+        );
+        for i in 0..n {
+            a[i * n + i] += jitter;
+        }
+        factor.copy_from_slice(&a);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+    use crate::util::prop::Cases;
+
+    fn random_spd(rng: &mut Rng, n: usize) -> Vec<f64> {
+        // A = G Gᵀ + n * I
+        let g: Vec<f64> = (0..n * n).map(|_| rng.gaussian()).collect();
+        let mut a = vec![0.0; n * n];
+        for i in 0..n {
+            for j in 0..n {
+                let mut s = 0.0;
+                for k in 0..n {
+                    s += g[i * n + k] * g[j * n + k];
+                }
+                a[i * n + j] = s + if i == j { n as f64 } else { 0.0 };
+            }
+        }
+        a
+    }
+
+    fn matvec(a: &[f64], n: usize, x: &[f64]) -> Vec<f64> {
+        (0..n)
+            .map(|i| (0..n).map(|j| a[i * n + j] * x[j]).sum())
+            .collect()
+    }
+
+    #[test]
+    fn cholesky_reconstructs() {
+        Cases::new(16).run(|rng| {
+            let n = 1 + rng.below(20);
+            let a = random_spd(rng, n);
+            let mut l = a.clone();
+            cholesky_in_place(&mut l, n).unwrap();
+            for i in 0..n {
+                for j in 0..=i {
+                    let mut s = 0.0;
+                    for k in 0..=j {
+                        s += l[i * n + k] * l[j * n + k];
+                    }
+                    assert!(
+                        (s - a[i * n + j]).abs() < 1e-8 * (1.0 + a[i * n + j].abs()),
+                        "n={n} i={i} j={j}"
+                    );
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn cholesky_rejects_indefinite() {
+        let mut a = vec![1.0, 2.0, 2.0, 1.0]; // eigenvalues 3, -1
+        assert!(cholesky_in_place(&mut a, 2).is_err());
+    }
+
+    #[test]
+    fn spd_solve_solves() {
+        Cases::new(16).run(|rng| {
+            let n = 1 + rng.below(16);
+            let nrhs = 1 + rng.below(5);
+            let a = random_spd(rng, n);
+            let x_true: Vec<f64> = (0..n * nrhs).map(|_| rng.gaussian()).collect();
+            // b = A @ X (column-interleaved layout)
+            let mut b = vec![0.0; n * nrhs];
+            for c in 0..nrhs {
+                let xc: Vec<f64> = (0..n).map(|i| x_true[i * nrhs + c]).collect();
+                let bc = matvec(&a, n, &xc);
+                for i in 0..n {
+                    b[i * nrhs + c] = bc[i];
+                }
+            }
+            let jit = spd_solve(a, n, &mut b, nrhs);
+            assert!(jit < 1e-3);
+            for (got, want) in b.iter().zip(&x_true) {
+                assert!((got - want).abs() < 1e-6 * (1.0 + want.abs()), "{got} vs {want}");
+            }
+        });
+    }
+
+    #[test]
+    fn spd_solve_handles_singular_with_jitter() {
+        // rank-1 matrix: [[1,1],[1,1]] — needs jitter, must not panic
+        let a = vec![1.0, 1.0, 1.0, 1.0];
+        let mut b = vec![1.0, 1.0];
+        let jit = spd_solve(a, 2, &mut b, 1);
+        assert!(jit > 0.0);
+        // solution of the jittered system is near [0.5, 0.5]
+        assert!((b[0] - 0.5).abs() < 1e-3 && (b[1] - 0.5).abs() < 1e-3);
+    }
+
+    #[test]
+    fn triangular_solves_roundtrip() {
+        Cases::new(8).run(|rng| {
+            let n = 1 + rng.below(12);
+            let a = random_spd(rng, n);
+            let mut l = a.clone();
+            cholesky_in_place(&mut l, n).unwrap();
+            let x: Vec<f64> = (0..n).map(|_| rng.gaussian()).collect();
+            // b = L x
+            let mut b = vec![0.0; n];
+            for i in 0..n {
+                for j in 0..=i {
+                    b[i] += l[i * n + j] * x[j];
+                }
+            }
+            solve_lower(&l, n, &mut b, 1);
+            for (got, want) in b.iter().zip(&x) {
+                assert!((got - want).abs() < 1e-9 * (1.0 + want.abs()));
+            }
+        });
+    }
+}

@@ -1,0 +1,192 @@
+//! Blocked, multi-threaded GEMM kernels.
+//!
+//! Two primitives cover the stack:
+//! * [`matmul`]       — `C = A · B`
+//! * [`matmul_transb`] — `C = A · Bᵀ` (the attention-logits shape
+//!   `Q · K_Sᵀ`; B is accessed row-wise so both primitives stream
+//!   cache-friendly contiguous rows).
+//!
+//! Parallelism: output rows are split into contiguous chunks processed by
+//! the [`crate::exec`] pool. The inner kernel accumulates in f32 with a
+//! 4-way unrolled j-loop (auto-vectorises well on x86-64); reductions that
+//! need f64 (softmax normalisers) live in the attention code, not here.
+
+use super::matrix::Matrix;
+use crate::exec;
+
+/// Row-chunk size for parallel GEMM. Chosen so a chunk's A-panel plus the
+/// B-panel stay inside L2 for typical d ≤ 256.
+const ROW_CHUNK: usize = 64;
+
+/// `C = A · B`.
+pub fn matmul(a: &Matrix, b: &Matrix) -> Matrix {
+    assert_eq!(a.cols(), b.rows(), "matmul: inner dim mismatch");
+    let (m, k, n) = (a.rows(), a.cols(), b.cols());
+    let mut c = Matrix::zeros(m, n);
+    let a_data = a.as_slice();
+    let b_data = b.as_slice();
+    exec::parallel_chunks_mut(c.as_mut_slice(), ROW_CHUNK * n.max(1), |chunk_idx, out| {
+        let row0 = chunk_idx * ROW_CHUNK;
+        let rows_here = out.len() / n.max(1);
+        for r in 0..rows_here {
+            let i = row0 + r;
+            let a_row = &a_data[i * k..(i + 1) * k];
+            let out_row = &mut out[r * n..(r + 1) * n];
+            out_row.fill(0.0);
+            for (p, &av) in a_row.iter().enumerate() {
+                if av == 0.0 {
+                    continue;
+                }
+                let b_row = &b_data[p * n..(p + 1) * n];
+                axpy(av, b_row, out_row);
+            }
+        }
+    });
+    c
+}
+
+/// `C = A · Bᵀ` where A is m×k and B is n×k; result m×n.
+pub fn matmul_transb(a: &Matrix, b: &Matrix) -> Matrix {
+    assert_eq!(a.cols(), b.cols(), "matmul_transb: inner dim mismatch");
+    let (m, k, n) = (a.rows(), a.cols(), b.rows());
+    let mut c = Matrix::zeros(m, n);
+    let a_data = a.as_slice();
+    let b_data = b.as_slice();
+    exec::parallel_chunks_mut(c.as_mut_slice(), ROW_CHUNK * n.max(1), |chunk_idx, out| {
+        let row0 = chunk_idx * ROW_CHUNK;
+        let rows_here = out.len() / n.max(1);
+        for r in 0..rows_here {
+            let i = row0 + r;
+            let a_row = &a_data[i * k..(i + 1) * k];
+            let out_row = &mut out[r * n..(r + 1) * n];
+            for (j, o) in out_row.iter_mut().enumerate() {
+                *o = dot(a_row, &b_data[j * k..(j + 1) * k]);
+            }
+        }
+    });
+    c
+}
+
+/// `y += alpha * x` with 4-way unrolling.
+#[inline]
+fn axpy(alpha: f32, x: &[f32], y: &mut [f32]) {
+    let n = x.len();
+    let chunks = n / 4;
+    for c in 0..chunks {
+        let o = c * 4;
+        y[o] += alpha * x[o];
+        y[o + 1] += alpha * x[o + 1];
+        y[o + 2] += alpha * x[o + 2];
+        y[o + 3] += alpha * x[o + 3];
+    }
+    for o in chunks * 4..n {
+        y[o] += alpha * x[o];
+    }
+}
+
+/// f32 dot product with a 16-lane accumulator array: with
+/// `-C target-cpu=native` LLVM maps this to one AVX-512 (or two AVX2)
+/// FMA lanes — ~4× over the previous 4-lane version (EXPERIMENTS.md
+/// §Perf, iteration 2).
+#[inline]
+pub fn dot(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let mut acc = [0.0f32; 16];
+    let mut ca = a.chunks_exact(16);
+    let mut cb = b.chunks_exact(16);
+    for (xa, xb) in (&mut ca).zip(&mut cb) {
+        for i in 0..16 {
+            acc[i] += xa[i] * xb[i];
+        }
+    }
+    let mut tail = 0.0f32;
+    for (x, y) in ca.remainder().iter().zip(cb.remainder()) {
+        tail += x * y;
+    }
+    let mut total = tail;
+    for v in acc {
+        total += v;
+    }
+    total
+}
+
+/// `C = A · B` computed serially (reference for testing the parallel path).
+pub fn matmul_naive(a: &Matrix, b: &Matrix) -> Matrix {
+    assert_eq!(a.cols(), b.rows());
+    let (m, k, n) = (a.rows(), a.cols(), b.cols());
+    let mut c = Matrix::zeros(m, n);
+    for i in 0..m {
+        for p in 0..k {
+            let av = a.get(i, p);
+            for j in 0..n {
+                let cur = c.get(i, j);
+                c.set(i, j, cur + av * b.get(p, j));
+            }
+        }
+    }
+    c
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+    use crate::util::prop::Cases;
+
+    fn assert_close(a: &Matrix, b: &Matrix, tol: f32) {
+        assert_eq!(a.rows(), b.rows());
+        assert_eq!(a.cols(), b.cols());
+        for (x, y) in a.as_slice().iter().zip(b.as_slice()) {
+            assert!((x - y).abs() <= tol * (1.0 + x.abs().max(y.abs())), "{x} vs {y}");
+        }
+    }
+
+    #[test]
+    fn matmul_matches_naive() {
+        Cases::new(20).run(|rng| {
+            let m = 1 + rng.below(50);
+            let k = 1 + rng.below(40);
+            let n = 1 + rng.below(70);
+            let a = Matrix::randn(rng, m, k);
+            let b = Matrix::randn(rng, k, n);
+            assert_close(&matmul(&a, &b), &matmul_naive(&a, &b), 1e-4);
+        });
+    }
+
+    #[test]
+    fn transb_matches_explicit_transpose() {
+        Cases::new(20).run(|rng| {
+            let m = 1 + rng.below(60);
+            let k = 1 + rng.below(33);
+            let n = 1 + rng.below(60);
+            let a = Matrix::randn(rng, m, k);
+            let b = Matrix::randn(rng, n, k);
+            assert_close(&matmul_transb(&a, &b), &matmul(&a, &b.transpose()), 1e-4);
+        });
+    }
+
+    #[test]
+    fn identity_is_neutral() {
+        let mut rng = Rng::seed_from(4);
+        let a = Matrix::randn(&mut rng, 9, 9);
+        let eye = Matrix::from_fn(9, 9, |i, j| if i == j { 1.0 } else { 0.0 });
+        assert_close(&matmul(&a, &eye), &a, 1e-6);
+        assert_close(&matmul(&eye, &a), &a, 1e-6);
+    }
+
+    #[test]
+    fn large_parallel_consistent() {
+        let mut rng = Rng::seed_from(5);
+        let a = Matrix::randn(&mut rng, 300, 64);
+        let b = Matrix::randn(&mut rng, 64, 200);
+        assert_close(&matmul(&a, &b), &matmul_naive(&a, &b), 1e-3);
+    }
+
+    #[test]
+    fn dot_accuracy() {
+        let a: Vec<f32> = (0..103).map(|i| (i as f32) * 0.01).collect();
+        let b: Vec<f32> = (0..103).map(|i| 1.0 - (i as f32) * 0.005).collect();
+        let want: f64 = a.iter().zip(&b).map(|(&x, &y)| x as f64 * y as f64).sum();
+        assert!((dot(&a, &b) as f64 - want).abs() < 1e-3);
+    }
+}

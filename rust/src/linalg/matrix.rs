@@ -1,0 +1,286 @@
+//! Row-major `f32` matrix.
+
+use crate::rng::Rng;
+
+/// Dense row-major `f32` matrix.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Matrix {
+    data: Vec<f32>,
+    rows: usize,
+    cols: usize,
+}
+
+impl Matrix {
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Matrix { data: vec![0.0; rows * cols], rows, cols }
+    }
+
+    pub fn from_vec(data: Vec<f32>, rows: usize, cols: usize) -> Self {
+        assert_eq!(data.len(), rows * cols, "data length mismatch");
+        Matrix { data, rows, cols }
+    }
+
+    pub fn from_fn<F: FnMut(usize, usize) -> f32>(rows: usize, cols: usize, mut f: F) -> Self {
+        let mut data = Vec::with_capacity(rows * cols);
+        for i in 0..rows {
+            for j in 0..cols {
+                data.push(f(i, j));
+            }
+        }
+        Matrix { data, rows, cols }
+    }
+
+    /// i.i.d. standard normal entries.
+    pub fn randn(rng: &mut Rng, rows: usize, cols: usize) -> Self {
+        let mut m = Matrix::zeros(rows, cols);
+        rng.fill_gaussian_f32(&mut m.data);
+        m
+    }
+
+    #[inline]
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    #[inline]
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    #[inline]
+    pub fn get(&self, i: usize, j: usize) -> f32 {
+        debug_assert!(i < self.rows && j < self.cols);
+        self.data[i * self.cols + j]
+    }
+
+    #[inline]
+    pub fn set(&mut self, i: usize, j: usize, v: f32) {
+        debug_assert!(i < self.rows && j < self.cols);
+        self.data[i * self.cols + j] = v;
+    }
+
+    #[inline]
+    pub fn row(&self, i: usize) -> &[f32] {
+        debug_assert!(i < self.rows);
+        &self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    #[inline]
+    pub fn row_mut(&mut self, i: usize) -> &mut [f32] {
+        debug_assert!(i < self.rows);
+        &mut self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    #[inline]
+    pub fn as_slice(&self) -> &[f32] {
+        &self.data
+    }
+
+    #[inline]
+    pub fn as_mut_slice(&mut self) -> &mut [f32] {
+        &mut self.data
+    }
+
+    /// Append a row (grows the matrix; used by the KV caches).
+    pub fn push_row(&mut self, row: &[f32]) {
+        assert_eq!(row.len(), self.cols, "push_row: width mismatch");
+        self.data.extend_from_slice(row);
+        self.rows += 1;
+    }
+
+    /// Select rows by index (gather).
+    pub fn select_rows(&self, idx: &[usize]) -> Matrix {
+        let mut out = Matrix::zeros(idx.len(), self.cols);
+        for (oi, &i) in idx.iter().enumerate() {
+            out.row_mut(oi).copy_from_slice(self.row(i));
+        }
+        out
+    }
+
+    /// Contiguous row slice `[start, end)` as a new matrix.
+    pub fn slice_rows(&self, start: usize, end: usize) -> Matrix {
+        assert!(start <= end && end <= self.rows);
+        Matrix::from_vec(
+            self.data[start * self.cols..end * self.cols].to_vec(),
+            end - start,
+            self.cols,
+        )
+    }
+
+    /// Vertical concatenation.
+    pub fn vcat(mats: &[&Matrix]) -> Matrix {
+        assert!(!mats.is_empty());
+        let cols = mats[0].cols;
+        assert!(mats.iter().all(|m| m.cols == cols), "vcat: column mismatch");
+        let rows = mats.iter().map(|m| m.rows).sum();
+        let mut data = Vec::with_capacity(rows * cols);
+        for m in mats {
+            data.extend_from_slice(&m.data);
+        }
+        Matrix { data, rows, cols }
+    }
+
+    pub fn transpose(&self) -> Matrix {
+        let mut out = Matrix::zeros(self.cols, self.rows);
+        for i in 0..self.rows {
+            for j in 0..self.cols {
+                out.data[j * self.rows + i] = self.data[i * self.cols + j];
+            }
+        }
+        out
+    }
+
+    /// Column-wise mean as a row vector.
+    pub fn col_mean(&self) -> Vec<f32> {
+        let mut acc = vec![0.0f64; self.cols];
+        for i in 0..self.rows {
+            for (a, &x) in acc.iter_mut().zip(self.row(i)) {
+                *a += x as f64;
+            }
+        }
+        acc.iter().map(|&a| (a / self.rows.max(1) as f64) as f32).collect()
+    }
+
+    /// Subtract a row vector from every row (returns a new matrix).
+    pub fn sub_row_vector(&self, v: &[f32]) -> Matrix {
+        assert_eq!(v.len(), self.cols);
+        let mut out = self.clone();
+        for i in 0..out.rows {
+            for (x, &s) in out.row_mut(i).iter_mut().zip(v) {
+                *x -= s;
+            }
+        }
+        out
+    }
+
+    /// Add a row vector to every row in place.
+    pub fn add_row_vector_mut(&mut self, v: &[f32]) {
+        assert_eq!(v.len(), self.cols);
+        for i in 0..self.rows {
+            for (x, &s) in self.row_mut(i).iter_mut().zip(v) {
+                *x += s;
+            }
+        }
+    }
+
+    /// Scale all entries.
+    pub fn scale(&self, s: f32) -> Matrix {
+        let mut out = self.clone();
+        for x in &mut out.data {
+            *x *= s;
+        }
+        out
+    }
+
+    /// Max row L2 norm, i.e. `‖A‖_{2,∞}`.
+    pub fn max_row_norm(&self) -> f64 {
+        (0..self.rows)
+            .map(|i| self.row(i).iter().map(|&x| (x as f64) * (x as f64)).sum::<f64>())
+            .fold(0.0f64, f64::max)
+            .sqrt()
+    }
+
+    /// Per-column min and max (the clip range of Lem. 1 / Alg. 4).
+    pub fn col_min_max(&self) -> (Vec<f32>, Vec<f32>) {
+        let mut mn = vec![f32::INFINITY; self.cols];
+        let mut mx = vec![f32::NEG_INFINITY; self.cols];
+        for i in 0..self.rows {
+            for (j, &x) in self.row(i).iter().enumerate() {
+                if x < mn[j] {
+                    mn[j] = x;
+                }
+                if x > mx[j] {
+                    mx[j] = x;
+                }
+            }
+        }
+        (mn, mx)
+    }
+
+    /// Dot product of two rows of (possibly different) matrices.
+    #[inline]
+    pub fn row_dot(a: &Matrix, i: usize, b: &Matrix, j: usize) -> f64 {
+        debug_assert_eq!(a.cols, b.cols);
+        let ra = a.row(i);
+        let rb = b.row(j);
+        let mut acc = 0.0f64;
+        for (x, y) in ra.iter().zip(rb) {
+            acc += (*x as f64) * (*y as f64);
+        }
+        acc
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn construction_and_access() {
+        let m = Matrix::from_fn(3, 2, |i, j| (i * 10 + j) as f32);
+        assert_eq!(m.get(2, 1), 21.0);
+        assert_eq!(m.row(1), &[10.0, 11.0]);
+        assert_eq!(m.rows(), 3);
+        assert_eq!(m.cols(), 2);
+    }
+
+    #[test]
+    fn transpose_involution() {
+        let mut rng = Rng::seed_from(1);
+        let m = Matrix::randn(&mut rng, 7, 5);
+        assert_eq!(m.transpose().transpose(), m);
+    }
+
+    #[test]
+    fn select_and_slice() {
+        let m = Matrix::from_fn(5, 3, |i, _| i as f32);
+        let s = m.select_rows(&[4, 0, 2]);
+        assert_eq!(s.row(0)[0], 4.0);
+        assert_eq!(s.row(1)[0], 0.0);
+        assert_eq!(s.row(2)[0], 2.0);
+        let sl = m.slice_rows(1, 3);
+        assert_eq!(sl.rows(), 2);
+        assert_eq!(sl.row(0)[0], 1.0);
+    }
+
+    #[test]
+    fn vcat_roundtrip() {
+        let m = Matrix::from_fn(6, 2, |i, j| (i + j) as f32);
+        let a = m.slice_rows(0, 2);
+        let b = m.slice_rows(2, 6);
+        assert_eq!(Matrix::vcat(&[&a, &b]), m);
+    }
+
+    #[test]
+    fn recentring_zeroes_mean() {
+        let mut rng = Rng::seed_from(3);
+        let m = Matrix::randn(&mut rng, 100, 4);
+        let mean = m.col_mean();
+        let c = m.sub_row_vector(&mean);
+        for v in c.col_mean() {
+            assert!(v.abs() < 1e-5);
+        }
+        // add back restores
+        let mut c2 = c.clone();
+        c2.add_row_vector_mut(&mean);
+        for (a, b) in c2.as_slice().iter().zip(m.as_slice()) {
+            assert!((a - b).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn col_min_max_and_row_norm() {
+        let m = Matrix::from_vec(vec![1.0, -2.0, 3.0, 4.0], 2, 2);
+        let (mn, mx) = m.col_min_max();
+        assert_eq!(mn, vec![1.0, -2.0]);
+        assert_eq!(mx, vec![3.0, 4.0]);
+        assert!((m.max_row_norm() - 5.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn row_dot_matches_manual() {
+        let a = Matrix::from_vec(vec![1.0, 2.0, 3.0], 1, 3);
+        let b = Matrix::from_vec(vec![4.0, 5.0, 6.0], 1, 3);
+        assert!((Matrix::row_dot(&a, 0, &b, 0) - 32.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,18 @@
+//! Dense linear-algebra substrate (no BLAS/LAPACK in the offline image).
+//!
+//! * [`Matrix`] — row-major `f32` matrix, the working type of the whole
+//!   attention stack (activations, Q/K/V, caches).
+//! * [`gemm`] — blocked, multi-threaded matrix multiplication kernels.
+//! * [`cholesky`] — `f64` Cholesky factorisation + triangular solves used
+//!   by the Nyström weight solve (`H_SS W = H_{S,:}`).
+//! * [`norms`] — Frobenius / max / (2,∞) norms and a power-iteration
+//!   operator-norm estimate (used to verify Thm. 1 empirically).
+
+pub mod cholesky;
+pub mod gemm;
+pub mod matrix;
+pub mod norms;
+
+pub use cholesky::{cholesky_in_place, solve_lower, solve_lower_transpose, spd_solve};
+pub use matrix::Matrix;
+pub use norms::{frobenius, max_abs, max_abs_diff, norm_2inf, op_norm_sym_f64};

@@ -1,0 +1,136 @@
+//! Matrix norms used throughout the paper's analysis:
+//! `‖·‖_max` (entrywise), `‖·‖_F`, `‖·‖_{2,∞}` (max row L2), and a
+//! power-iteration estimate of `‖·‖_op` for symmetric f64 matrices
+//! (used by tests that verify the Thm. 1 / Lem. 2 error chains).
+
+use super::matrix::Matrix;
+
+/// Entrywise max norm `‖A‖_max`.
+pub fn max_abs(a: &Matrix) -> f64 {
+    a.as_slice().iter().fold(0.0f64, |m, &x| m.max((x as f64).abs()))
+}
+
+/// `‖A − B‖_max` — the paper's headline error metric.
+pub fn max_abs_diff(a: &Matrix, b: &Matrix) -> f64 {
+    assert_eq!(a.rows(), b.rows());
+    assert_eq!(a.cols(), b.cols());
+    a.as_slice()
+        .iter()
+        .zip(b.as_slice())
+        .fold(0.0f64, |m, (&x, &y)| m.max(((x as f64) - (y as f64)).abs()))
+}
+
+/// Frobenius norm.
+pub fn frobenius(a: &Matrix) -> f64 {
+    a.as_slice()
+        .iter()
+        .map(|&x| (x as f64) * (x as f64))
+        .sum::<f64>()
+        .sqrt()
+}
+
+/// Relative Frobenius error `‖A − B‖_F / ‖B‖_F`.
+pub fn rel_frobenius_err(approx: &Matrix, exact: &Matrix) -> f64 {
+    assert_eq!(approx.rows(), exact.rows());
+    assert_eq!(approx.cols(), exact.cols());
+    let mut num = 0.0f64;
+    let mut den = 0.0f64;
+    for (&x, &y) in approx.as_slice().iter().zip(exact.as_slice()) {
+        let d = x as f64 - y as f64;
+        num += d * d;
+        den += (y as f64) * (y as f64);
+    }
+    (num / den.max(1e-300)).sqrt()
+}
+
+/// `‖A‖_{2,∞}` — max row L2 norm.
+pub fn norm_2inf(a: &Matrix) -> f64 {
+    a.max_row_norm()
+}
+
+/// Operator norm of a symmetric `n×n` f64 matrix by power iteration.
+/// Deterministic start vector; `iters` ≈ 100 is ample for test tolerances.
+pub fn op_norm_sym_f64(a: &[f64], n: usize, iters: usize) -> f64 {
+    assert_eq!(a.len(), n * n);
+    if n == 0 {
+        return 0.0;
+    }
+    let mut v: Vec<f64> = (0..n).map(|i| 1.0 + (i as f64 * 0.7).sin()).collect();
+    let mut lambda = 0.0f64;
+    for _ in 0..iters {
+        let mut w = vec![0.0f64; n];
+        for i in 0..n {
+            let row = &a[i * n..(i + 1) * n];
+            w[i] = row.iter().zip(&v).map(|(&x, &y)| x * y).sum();
+        }
+        let norm = w.iter().map(|x| x * x).sum::<f64>().sqrt();
+        if norm == 0.0 {
+            return 0.0;
+        }
+        lambda = norm;
+        for (x, y) in v.iter_mut().zip(&w) {
+            *x = y / norm;
+        }
+    }
+    lambda
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    #[test]
+    fn norms_basic() {
+        let a = Matrix::from_vec(vec![3.0, -4.0, 0.0, 0.0], 2, 2);
+        assert_eq!(max_abs(&a), 4.0);
+        assert!((frobenius(&a) - 5.0).abs() < 1e-9);
+        assert!((norm_2inf(&a) - 5.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn max_abs_diff_zero_on_equal() {
+        let mut rng = Rng::seed_from(1);
+        let a = Matrix::randn(&mut rng, 5, 7);
+        assert_eq!(max_abs_diff(&a, &a), 0.0);
+    }
+
+    #[test]
+    fn rel_frobenius_scaling() {
+        let a = Matrix::from_vec(vec![1.0; 16], 4, 4);
+        let b = a.scale(1.1);
+        assert!((rel_frobenius_err(&b, &a) - 0.1).abs() < 1e-6);
+    }
+
+    #[test]
+    fn op_norm_diagonal() {
+        let n = 6;
+        let mut a = vec![0.0; n * n];
+        for i in 0..n {
+            a[i * n + i] = (i + 1) as f64;
+        }
+        let l = op_norm_sym_f64(&a, n, 200);
+        assert!((l - 6.0).abs() < 1e-6, "l={l}");
+    }
+
+    #[test]
+    fn op_norm_rank_one() {
+        // vvᵀ has operator norm ‖v‖².
+        let v = [1.0, 2.0, 3.0];
+        let n = 3;
+        let mut a = vec![0.0; 9];
+        for i in 0..n {
+            for j in 0..n {
+                a[i * n + j] = v[i] * v[j];
+            }
+        }
+        let l = op_norm_sym_f64(&a, n, 100);
+        assert!((l - 14.0).abs() < 1e-8, "l={l}");
+    }
+
+    #[test]
+    fn op_norm_zero() {
+        assert_eq!(op_norm_sym_f64(&[0.0; 9], 3, 10), 0.0);
+        assert_eq!(op_norm_sym_f64(&[], 0, 10), 0.0);
+    }
+}

@@ -1,0 +1,176 @@
+//! `wildcat` — the coordinator CLI (leader entrypoint).
+//!
+//! Subcommands:
+//! * `info`    — print the artifact manifest + platform
+//! * `serve`   — run the serving coordinator on a synthetic Poisson trace
+//!               (native or PJRT backend) and report serving metrics
+//! * `attn`    — one-shot WildCat-vs-exact attention comparison
+//! * `tasks`   — evaluate a KV compression policy on the 13-task suite
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+use wildcat::attention::{exact_attention, wildcat_attention, WildcatParams};
+use wildcat::coordinator::{Server, ServerConfig};
+use wildcat::kvcache::{
+    BalanceKv, CompressKvPolicy, KvCompressor, PyramidKv, SnapKv, StreamingLlm, UniformKv,
+};
+use wildcat::linalg::norms::max_abs_diff;
+use wildcat::model::{ModelConfig, Transformer};
+use wildcat::rng::Rng;
+use wildcat::util::cli::Args;
+use wildcat::workload::{gaussian_qkv, poisson_trace, task_suite};
+
+/// Resolve a compressor by CLI name.
+pub fn compressor_by_name(name: &str) -> Arc<dyn KvCompressor> {
+    match name {
+        "compresskv" => Arc::new(CompressKvPolicy::default()),
+        "streaming" => Arc::new(StreamingLlm),
+        "snapkv" => Arc::new(SnapKv::default()),
+        "pyramidkv" => Arc::new(PyramidKv::default()),
+        "balancekv" => Arc::new(BalanceKv),
+        "uniform" => Arc::new(UniformKv),
+        other => panic!(
+            "unknown compressor {other:?} (try compresskv/streaming/snapkv/pyramidkv/balancekv/uniform)"
+        ),
+    }
+}
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env();
+    let cmd = args.positional().first().map(|s| s.as_str()).unwrap_or("help");
+    match cmd {
+        "info" => cmd_info(&args),
+        "serve" => cmd_serve(&args),
+        "attn" => cmd_attn(&args),
+        "tasks" => cmd_tasks(&args),
+        _ => {
+            println!(
+                "wildcat — near-linear attention serving coordinator\n\
+                 usage: wildcat <info|serve|attn|tasks> [--options]\n\
+                 see README.md for per-command options"
+            );
+            Ok(())
+        }
+    }
+}
+
+fn cmd_info(args: &Args) -> anyhow::Result<()> {
+    let dir = args.get_or("artifacts", "artifacts");
+    let rt = wildcat::runtime::PjrtRuntime::open(&dir)?;
+    println!("platform: {}", rt.platform());
+    println!("model: {:?}", rt.manifest.model);
+    println!("artifacts ({}):", rt.manifest.artifacts.len());
+    for a in &rt.manifest.artifacts {
+        println!("  {:<28} {} inputs, {} outputs", a.name, a.inputs.len(), a.outputs.len());
+    }
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> anyhow::Result<()> {
+    let seed = args.get_parse::<u64>("seed", 0);
+    let rate = args.get_parse::<f64>("rate", 4.0);
+    let secs = args.get_parse::<u64>("secs", 5);
+    let budget = args.get_parse::<usize>("budget", 96);
+    let use_pjrt = args.flag("pjrt");
+    let compressor = compressor_by_name(&args.get_or("compressor", "compresskv"));
+    let artifacts = args.get_or("artifacts", "artifacts");
+
+    let mut cfg = ServerConfig::default();
+    cfg.scheduler.cache_budget = budget;
+    cfg.seed = seed;
+
+    let handle = if use_pjrt {
+        let dir = artifacts.clone();
+        Server::spawn(cfg, compressor, move || {
+            wildcat::runtime::PjrtBackend::open(&dir).expect("open artifacts")
+        })
+    } else {
+        let dir = artifacts.clone();
+        Server::spawn(cfg, compressor, move || {
+            let w = wildcat::model::WeightFile::load(format!("{dir}/weights.bin"))
+                .expect("weights.bin (run `make artifacts`)");
+            Transformer::from_weights(&w, ModelConfig::default()).expect("model")
+        })
+    };
+
+    let mut rng = Rng::seed_from(seed);
+    let trace = poisson_trace(&mut rng, rate, Duration::from_secs(secs), 32, 200, 8);
+    println!("replaying {} arrivals over {secs}s (rate {rate}/s)...", trace.len());
+    let start = Instant::now();
+    let mut rxs = Vec::new();
+    for a in &trace {
+        let now = start.elapsed();
+        if a.at > now {
+            std::thread::sleep(a.at - now);
+        }
+        let prompt: Vec<u32> = (0..a.prompt_len).map(|_| 6 + rng.below(58) as u32).collect();
+        match handle.submit(prompt, a.max_new) {
+            Ok((_, rx)) => rxs.push(rx),
+            Err(e) => println!("rejected: {e:?}"),
+        }
+    }
+    for rx in rxs {
+        let _ = rx.recv_timeout(Duration::from_secs(300));
+    }
+    println!("{}", handle.metrics().report());
+    handle.shutdown();
+    Ok(())
+}
+
+fn cmd_attn(args: &Args) -> anyhow::Result<()> {
+    let n = args.get_parse::<usize>("n", 4096);
+    let d = args.get_parse::<usize>("d", 64);
+    let rank = args.get_parse::<usize>("rank", 64);
+    let bins = args.get_parse::<usize>("bins", 16);
+    let mut rng = Rng::seed_from(args.get_parse::<u64>("seed", 0));
+    let w = gaussian_qkv(&mut rng, n, n, d, d);
+    let t0 = Instant::now();
+    let exact = exact_attention(&w.q, &w.k, &w.v, w.beta);
+    let t_exact = t0.elapsed();
+    let params = WildcatParams { rank, bins, beta: Some(w.beta as f64) };
+    let t1 = Instant::now();
+    let approx = wildcat_attention(&w.q, &w.k, &w.v, &params, &mut rng);
+    let t_wc = t1.elapsed();
+    println!(
+        "n={n} d={d} r={rank} B={bins}: exact {:.1} ms, wildcat {:.1} ms ({:.2}x), err_max = {:.3e}",
+        t_exact.as_secs_f64() * 1e3,
+        t_wc.as_secs_f64() * 1e3,
+        t_exact.as_secs_f64() / t_wc.as_secs_f64(),
+        max_abs_diff(&approx, &exact)
+    );
+    Ok(())
+}
+
+fn cmd_tasks(args: &Args) -> anyhow::Result<()> {
+    let dir = args.get_or("artifacts", "artifacts");
+    let budget = args.get_parse::<usize>("budget", 96);
+    let n_ctx = args.get_parse::<usize>("context", 256);
+    let trials = args.get_parse::<usize>("trials", 10);
+    let compressor = compressor_by_name(&args.get_or("compressor", "compresskv"));
+    let w = wildcat::model::WeightFile::load(format!("{dir}/weights.bin"))?;
+    let model = Transformer::from_weights(&w, ModelConfig::default())?;
+    let mut rng = Rng::seed_from(args.get_parse::<u64>("seed", 0));
+    println!("task scores (budget {budget}, context {n_ctx}):");
+    let mut total = 0.0;
+    for task in task_suite() {
+        let mut s = 0.0;
+        for _ in 0..trials {
+            let inst = task.kind.generate(&mut rng, n_ctx, model.cfg.vocab as u32);
+            let out = wildcat::model::generate::greedy_decode_with_query(
+                &model,
+                &inst.context,
+                &inst.query,
+                inst.expected.len(),
+                budget,
+                compressor.as_ref(),
+                &mut rng,
+            );
+            s += wildcat::workload::tasks::score(&inst.expected, &out.tokens);
+        }
+        let s = 100.0 * s / trials as f64;
+        total += s;
+        println!("  {:<12} {:>6.2}", task.name, s);
+    }
+    println!("  {:<12} {:>6.2}", "average", total / 13.0);
+    Ok(())
+}

@@ -1,0 +1,62 @@
+//! The native Rust serving model — a bit-faithful mirror of the JAX LM in
+//! `python/compile/model.py` (pre-norm RMSNorm, sinusoidal positions,
+//! GELU MLP, untied unembedding).
+//!
+//! Two execution paths serve the same weights:
+//! * this module (native) — flexible shapes, used by benches and as a
+//!   cross-check;
+//! * [`crate::runtime`] (PJRT) — the AOT HLO artifacts, the paper's
+//!   "python never on the request path" architecture.
+//! `rust/tests/pjrt_roundtrip.rs` pins the two paths against each other.
+
+pub mod generate;
+pub mod transformer;
+pub mod weights;
+
+pub use generate::{greedy_decode, GenerateOutcome};
+pub use transformer::{ModelConfig, PrefillOutput, Transformer};
+pub use weights::WeightFile;
+
+use crate::linalg::Matrix;
+
+/// Abstraction over the two model execution paths (native / PJRT).
+///
+/// The coordinator's scheduler is generic over this trait; the PJRT
+/// implementation lives in [`crate::runtime::backend`] (it is `!Send`, so
+/// the server constructs it inside its worker thread).
+pub trait ModelBackend {
+    fn config(&self) -> ModelConfig;
+
+    /// Causal prefill producing last-position logits and per-(layer, head)
+    /// caches.
+    fn prefill(&mut self, tokens: &[u32]) -> PrefillOutput;
+
+    /// One decode step over weighted caches (`caches[layer*H + head]`).
+    /// Returns (logits, new_k rows, new_v rows) per (layer, head).
+    #[allow(clippy::type_complexity)]
+    fn decode(
+        &mut self,
+        token: u32,
+        pos: usize,
+        caches: &[(&Matrix, &Matrix, &[f64])],
+    ) -> (Vec<f32>, Vec<Vec<f32>>, Vec<Vec<f32>>);
+}
+
+impl ModelBackend for Transformer {
+    fn config(&self) -> ModelConfig {
+        self.cfg
+    }
+
+    fn prefill(&mut self, tokens: &[u32]) -> PrefillOutput {
+        Transformer::prefill(self, tokens)
+    }
+
+    fn decode(
+        &mut self,
+        token: u32,
+        pos: usize,
+        caches: &[(&Matrix, &Matrix, &[f64])],
+    ) -> (Vec<f32>, Vec<Vec<f32>>, Vec<Vec<f32>>) {
+        Transformer::decode(self, token, pos, caches)
+    }
+}

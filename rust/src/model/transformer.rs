@@ -1,0 +1,495 @@
+//! Native transformer forward passes (prefill + decode) mirroring
+//! `python/compile/model.py` operation-for-operation. See module docs in
+//! [`super`] for how this relates to the PJRT path.
+
+use crate::attention::{wtd_attention, ClipRange};
+use crate::linalg::{gemm, Matrix};
+use crate::model::weights::WeightFile;
+use anyhow::Result;
+
+/// Model hyper-parameters (mirror of python `Config` / manifest `model`).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct ModelConfig {
+    pub vocab: usize,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub d_ff: usize,
+    pub max_len: usize,
+}
+
+impl Default for ModelConfig {
+    fn default() -> Self {
+        ModelConfig { vocab: 64, d_model: 64, n_layers: 2, n_heads: 2, d_ff: 128, max_len: 1024 }
+    }
+}
+
+impl ModelConfig {
+    pub fn d_head(&self) -> usize {
+        self.d_model / self.n_heads
+    }
+
+    pub fn beta(&self) -> f32 {
+        1.0 / (self.d_head() as f32).sqrt()
+    }
+
+    pub fn from_spec(s: &crate::runtime::ModelSpec) -> Self {
+        ModelConfig {
+            vocab: s.vocab,
+            d_model: s.d_model,
+            n_layers: s.n_layers,
+            n_heads: s.n_heads,
+            d_ff: s.d_ff,
+            max_len: s.max_len,
+        }
+    }
+}
+
+/// Per-layer weights.
+struct LayerWeights {
+    wq: Matrix,
+    wk: Matrix,
+    wv: Matrix,
+    wo: Matrix,
+    w1: Matrix,
+    w2: Matrix,
+    ln1: Vec<f32>,
+    ln2: Vec<f32>,
+}
+
+/// The native model.
+pub struct Transformer {
+    pub cfg: ModelConfig,
+    embed: Matrix,
+    unembed: Matrix,
+    ln_f: Vec<f32>,
+    layers: Vec<LayerWeights>,
+    pos_enc: Matrix,
+}
+
+/// Output of a prefill pass.
+pub struct PrefillOutput {
+    /// Next-token logits at the last position.
+    pub logits: Vec<f32>,
+    /// Per (layer, head) key caches, each `n × d_head`, indexed
+    /// `layer * n_heads + head`.
+    pub k_cache: Vec<Matrix>,
+    pub v_cache: Vec<Matrix>,
+}
+
+impl Transformer {
+    /// Load from a weights file exported by `make artifacts`.
+    pub fn from_weights(w: &WeightFile, cfg: ModelConfig) -> Result<Self> {
+        let mut layers = Vec::with_capacity(cfg.n_layers);
+        for l in 0..cfg.n_layers {
+            layers.push(LayerWeights {
+                wq: w.matrix(&format!("l{l}.wq"))?,
+                wk: w.matrix(&format!("l{l}.wk"))?,
+                wv: w.matrix(&format!("l{l}.wv"))?,
+                wo: w.matrix(&format!("l{l}.wo"))?,
+                w1: w.matrix(&format!("l{l}.w1"))?,
+                w2: w.matrix(&format!("l{l}.w2"))?,
+                ln1: w.vector(&format!("l{l}.ln1"))?,
+                ln2: w.vector(&format!("l{l}.ln2"))?,
+            });
+        }
+        Ok(Transformer {
+            embed: w.matrix("embed")?,
+            unembed: w.matrix("unembed")?,
+            ln_f: w.vector("ln_f")?,
+            layers,
+            pos_enc: positional_encoding(&cfg),
+            cfg,
+        })
+    }
+
+    /// Load the artifact-directory model (weights.bin + default config).
+    pub fn load_artifacts(dir: impl AsRef<std::path::Path>, cfg: ModelConfig) -> Result<Self> {
+        let w = WeightFile::load(dir.as_ref().join("weights.bin"))?;
+        Self::from_weights(&w, cfg)
+    }
+
+    /// Random-weight model (tests and micro-benches).
+    pub fn random(cfg: ModelConfig, rng: &mut crate::rng::Rng) -> Self {
+        let scale = 1.0 / (cfg.d_model as f32).sqrt();
+        let mut layers = Vec::with_capacity(cfg.n_layers);
+        for _ in 0..cfg.n_layers {
+            layers.push(LayerWeights {
+                wq: Matrix::randn(rng, cfg.d_model, cfg.d_model).scale(scale),
+                wk: Matrix::randn(rng, cfg.d_model, cfg.d_model).scale(scale),
+                wv: Matrix::randn(rng, cfg.d_model, cfg.d_model).scale(scale),
+                wo: Matrix::randn(rng, cfg.d_model, cfg.d_model).scale(scale),
+                w1: Matrix::randn(rng, cfg.d_model, cfg.d_ff).scale(scale),
+                w2: Matrix::randn(rng, cfg.d_ff, cfg.d_model).scale(scale),
+                ln1: vec![1.0; cfg.d_model],
+                ln2: vec![1.0; cfg.d_model],
+            });
+        }
+        Transformer {
+            embed: Matrix::randn(rng, cfg.vocab, cfg.d_model).scale(0.05),
+            unembed: Matrix::randn(rng, cfg.d_model, cfg.vocab).scale(0.05),
+            ln_f: vec![1.0; cfg.d_model],
+            layers,
+            pos_enc: positional_encoding(&cfg),
+            cfg,
+        }
+    }
+
+    /// Causal prefill over `tokens`, producing logits at the last position
+    /// and per-(layer, head) KV caches.
+    pub fn prefill(&self, tokens: &[u32]) -> PrefillOutput {
+        let n = tokens.len();
+        let cfg = &self.cfg;
+        assert!(n >= 1 && n <= cfg.max_len, "prefill length {n}");
+        let mut x = Matrix::zeros(n, cfg.d_model);
+        for (i, &t) in tokens.iter().enumerate() {
+            let e = self.embed.row(t as usize);
+            let p = self.pos_enc.row(i);
+            for (o, (a, b)) in x.row_mut(i).iter_mut().zip(e.iter().zip(p)) {
+                *o = a + b;
+            }
+        }
+        let mut k_cache = Vec::with_capacity(cfg.n_layers * cfg.n_heads);
+        let mut v_cache = Vec::with_capacity(cfg.n_layers * cfg.n_heads);
+        let beta = cfg.beta();
+        for lw in &self.layers {
+            let h = rmsnorm_mat(&x, &lw.ln1);
+            let q = gemm::matmul(&h, &lw.wq);
+            let k = gemm::matmul(&h, &lw.wk);
+            let v = gemm::matmul(&h, &lw.wv);
+            let mut att = Matrix::zeros(n, cfg.d_model);
+            for head in 0..cfg.n_heads {
+                let qh = take_head(&q, head, cfg);
+                let kh = take_head(&k, head, cfg);
+                let vh = take_head(&v, head, cfg);
+                let oh = causal_attention(&qh, &kh, &vh, beta);
+                put_head(&mut att, &oh, head, cfg);
+                k_cache.push(kh);
+                v_cache.push(vh);
+            }
+            let proj = gemm::matmul(&att, &lw.wo);
+            add_assign(&mut x, &proj);
+            let h2 = rmsnorm_mat(&x, &lw.ln2);
+            let ff = gemm::matmul(&gelu_mat(&gemm::matmul(&h2, &lw.w1)), &lw.w2);
+            add_assign(&mut x, &ff);
+        }
+        let final_h = rmsnorm_row(x.row(n - 1), &self.ln_f);
+        let logits = matvec_t(&self.unembed, &final_h);
+        PrefillOutput { logits, k_cache, v_cache }
+    }
+
+    /// One decode step over weighted per-(layer, head) caches.
+    ///
+    /// `caches[layer * n_heads + head]` supplies `(keys, values, weights)`;
+    /// the current token attends over `cache ∪ {self}` exactly like the
+    /// JAX `decode_step`. Returns (logits, new_k, new_v) where the new
+    /// entries are per (layer, head) rows for the caller to append.
+    pub fn decode(
+        &self,
+        token: u32,
+        pos: usize,
+        caches: &[(&Matrix, &Matrix, &[f64])],
+    ) -> (Vec<f32>, Vec<Vec<f32>>, Vec<Vec<f32>>) {
+        let cfg = &self.cfg;
+        assert_eq!(caches.len(), cfg.n_layers * cfg.n_heads);
+        assert!(pos < cfg.max_len);
+        let beta = cfg.beta();
+        let dh = cfg.d_head();
+        let mut x: Vec<f32> = self
+            .embed
+            .row(token as usize)
+            .iter()
+            .zip(self.pos_enc.row(pos))
+            .map(|(a, b)| a + b)
+            .collect();
+        let mut new_ks = Vec::with_capacity(caches.len());
+        let mut new_vs = Vec::with_capacity(caches.len());
+        for (l, lw) in self.layers.iter().enumerate() {
+            let h = rmsnorm_row(&x, &lw.ln1);
+            let q = matvec_t(&lw.wq, &h);
+            let k_new = matvec_t(&lw.wk, &h);
+            let v_new = matvec_t(&lw.wv, &h);
+            let mut att = vec![0.0f32; cfg.d_model];
+            for head in 0..cfg.n_heads {
+                let (ck, cv, cw) = caches[l * cfg.n_heads + head];
+                let qh = Matrix::from_vec(q[head * dh..(head + 1) * dh].to_vec(), 1, dh);
+                // cache ∪ {self}
+                let mut ks = ck.clone();
+                ks.push_row(&k_new[head * dh..(head + 1) * dh]);
+                let mut vs = cv.clone();
+                vs.push_row(&v_new[head * dh..(head + 1) * dh]);
+                let mut w: Vec<f64> = cw.to_vec();
+                w.push(1.0);
+                let clip = ClipRange::from_values(&vs);
+                let o = wtd_attention(&qh, &ks, &vs, &w, &clip, beta);
+                att[head * dh..(head + 1) * dh].copy_from_slice(o.row(0));
+            }
+            let proj = matvec_t(&lw.wo, &att);
+            for (xi, pi) in x.iter_mut().zip(&proj) {
+                *xi += pi;
+            }
+            let h2 = rmsnorm_row(&x, &lw.ln2);
+            let mut ff_in = matvec_t(&lw.w1, &h2);
+            for v in ff_in.iter_mut() {
+                *v = gelu(*v);
+            }
+            let ff = matvec_t(&lw.w2, &ff_in);
+            for (xi, fi) in x.iter_mut().zip(&ff) {
+                *xi += fi;
+            }
+            new_ks.push(
+                (0..cfg.n_heads)
+                    .map(|hh| k_new[hh * dh..(hh + 1) * dh].to_vec())
+                    .collect::<Vec<_>>(),
+            );
+            new_vs.push(
+                (0..cfg.n_heads)
+                    .map(|hh| v_new[hh * dh..(hh + 1) * dh].to_vec())
+                    .collect::<Vec<_>>(),
+            );
+        }
+        let final_h = rmsnorm_row(&x, &self.ln_f);
+        let logits = matvec_t(&self.unembed, &final_h);
+        (
+            logits,
+            new_ks.into_iter().flatten().collect(),
+            new_vs.into_iter().flatten().collect(),
+        )
+    }
+}
+
+// ---------------------------------------------------------------------
+// primitive ops shared by prefill/decode (exact python mirrors)
+// ---------------------------------------------------------------------
+
+/// Sinusoidal positions, identical formula to `model.positional_encoding`.
+pub fn positional_encoding(cfg: &ModelConfig) -> Matrix {
+    let mut enc = Matrix::zeros(cfg.max_len, cfg.d_model);
+    for pos in 0..cfg.max_len {
+        for dim in 0..cfg.d_model / 2 {
+            let angle =
+                pos as f64 / 10000f64.powf(2.0 * dim as f64 / cfg.d_model as f64);
+            enc.set(pos, 2 * dim, angle.sin() as f32);
+            enc.set(pos, 2 * dim + 1, angle.cos() as f32);
+        }
+    }
+    enc
+}
+
+fn rmsnorm_row(x: &[f32], g: &[f32]) -> Vec<f32> {
+    let ms: f64 =
+        x.iter().map(|&v| (v as f64) * (v as f64)).sum::<f64>() / x.len() as f64;
+    let inv = 1.0 / (ms + 1e-6).sqrt();
+    x.iter().zip(g).map(|(&v, &gi)| (v as f64 * inv) as f32 * gi).collect()
+}
+
+fn rmsnorm_mat(x: &Matrix, g: &[f32]) -> Matrix {
+    let mut out = x.clone();
+    for i in 0..x.rows() {
+        let r = rmsnorm_row(x.row(i), g);
+        out.row_mut(i).copy_from_slice(&r);
+    }
+    out
+}
+
+fn gelu(x: f32) -> f32 {
+    let x = x as f64;
+    (0.5 * x * (1.0 + (0.7978845608028654 * (x + 0.044715 * x * x * x)).tanh())) as f32
+}
+
+fn gelu_mat(x: &Matrix) -> Matrix {
+    let mut out = x.clone();
+    for v in out.as_mut_slice() {
+        *v = gelu(*v);
+    }
+    out
+}
+
+fn add_assign(x: &mut Matrix, y: &Matrix) {
+    for (a, b) in x.as_mut_slice().iter_mut().zip(y.as_slice()) {
+        *a += b;
+    }
+}
+
+/// `Wᵀ · h` for row-vector h (i.e. `h @ W` in numpy convention).
+fn matvec_t(w: &Matrix, h: &[f32]) -> Vec<f32> {
+    assert_eq!(w.rows(), h.len());
+    let mut out = vec![0.0f32; w.cols()];
+    for (i, &hi) in h.iter().enumerate() {
+        if hi == 0.0 {
+            continue;
+        }
+        for (o, &wij) in out.iter_mut().zip(w.row(i)) {
+            *o += hi * wij;
+        }
+    }
+    out
+}
+
+/// Extract one head's columns as a contiguous matrix.
+fn take_head(x: &Matrix, head: usize, cfg: &ModelConfig) -> Matrix {
+    let dh = cfg.d_head();
+    Matrix::from_fn(x.rows(), dh, |i, j| x.get(i, head * dh + j))
+}
+
+fn put_head(out: &mut Matrix, h: &Matrix, head: usize, cfg: &ModelConfig) {
+    let dh = cfg.d_head();
+    for i in 0..h.rows() {
+        for j in 0..dh {
+            out.set(i, head * dh + j, h.get(i, j));
+        }
+    }
+}
+
+/// Causal softmax attention (prefill path).
+fn causal_attention(q: &Matrix, k: &Matrix, v: &Matrix, beta: f32) -> Matrix {
+    let n = q.rows();
+    let dv = v.cols();
+    let mut out = Matrix::zeros(n, dv);
+    for i in 0..n {
+        let qi = q.row(i);
+        let mut mx = f32::NEG_INFINITY;
+        let logits: Vec<f32> = (0..=i)
+            .map(|j| {
+                let l = beta * gemm::dot(qi, k.row(j));
+                if l > mx {
+                    mx = l;
+                }
+                l
+            })
+            .collect();
+        let mut denom = 0.0f64;
+        let mut acc = vec![0.0f64; dv];
+        for (j, &l) in logits.iter().enumerate() {
+            let p = ((l - mx) as f64).exp();
+            denom += p;
+            for (a, &x) in acc.iter_mut().zip(v.row(j)) {
+                *a += p * x as f64;
+            }
+        }
+        for (o, a) in out.row_mut(i).iter_mut().zip(&acc) {
+            *o = (*a / denom) as f32;
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    fn tiny() -> (Transformer, ModelConfig) {
+        let cfg = ModelConfig { vocab: 16, d_model: 16, n_layers: 2, n_heads: 2, d_ff: 32, max_len: 64 };
+        let mut rng = Rng::seed_from(1);
+        (Transformer::random(cfg, &mut rng), cfg)
+    }
+
+    #[test]
+    fn prefill_shapes() {
+        let (t, cfg) = tiny();
+        let toks: Vec<u32> = (0..10).map(|i| (i % 16) as u32).collect();
+        let out = t.prefill(&toks);
+        assert_eq!(out.logits.len(), cfg.vocab);
+        assert_eq!(out.k_cache.len(), cfg.n_layers * cfg.n_heads);
+        assert_eq!(out.k_cache[0].rows(), 10);
+        assert_eq!(out.k_cache[0].cols(), cfg.d_head());
+        assert!(out.logits.iter().all(|x| x.is_finite()));
+    }
+
+    #[test]
+    fn decode_with_full_cache_matches_prefill() {
+        // prefill(n) logits must equal prefill(n-1) caches + decode(token n-1)
+        let (t, _cfg) = tiny();
+        let toks: Vec<u32> = vec![1, 5, 3, 7, 2, 9, 4, 11, 6, 13];
+        let full = t.prefill(&toks);
+        let part = t.prefill(&toks[..toks.len() - 1]);
+        let caches: Vec<(&Matrix, &Matrix, Vec<f64>)> = part
+            .k_cache
+            .iter()
+            .zip(&part.v_cache)
+            .map(|(k, v)| (k, v, vec![1.0f64; k.rows()]))
+            .collect();
+        let cache_refs: Vec<(&Matrix, &Matrix, &[f64])> =
+            caches.iter().map(|(k, v, w)| (*k, *v, w.as_slice())).collect();
+        let (logits, new_k, new_v) =
+            t.decode(toks[toks.len() - 1], toks.len() - 1, &cache_refs);
+        for (a, b) in logits.iter().zip(&full.logits) {
+            assert!((a - b).abs() < 1e-3, "{a} vs {b}");
+        }
+        assert_eq!(new_k.len(), 4); // L*H
+        assert_eq!(new_k[0].len(), 8); // d_head
+        // the decode-produced k/v rows match the full prefill's last row
+        for lh in 0..4 {
+            for (a, b) in new_k[lh].iter().zip(full.k_cache[lh].row(toks.len() - 1)) {
+                assert!((a - b).abs() < 1e-3);
+            }
+            for (a, b) in new_v[lh].iter().zip(full.v_cache[lh].row(toks.len() - 1)) {
+                assert!((a - b).abs() < 1e-3);
+            }
+        }
+    }
+
+    #[test]
+    fn decode_padding_contract() {
+        // arbitrary keys, zero values, zero weights must be inert
+        let (t, _cfg) = tiny();
+        let toks: Vec<u32> = vec![1, 2, 3, 4, 5];
+        let part = t.prefill(&toks[..4]);
+        let caches: Vec<(Matrix, Matrix, Vec<f64>)> = part
+            .k_cache
+            .iter()
+            .zip(&part.v_cache)
+            .map(|(k, v)| (k.clone(), v.clone(), vec![1.0f64; k.rows()]))
+            .collect();
+        let refs: Vec<(&Matrix, &Matrix, &[f64])> =
+            caches.iter().map(|(k, v, w)| (k, v, w.as_slice())).collect();
+        let (base, _, _) = t.decode(4, 4, &refs);
+        // padded versions
+        let mut rng = Rng::seed_from(3);
+        let padded: Vec<(Matrix, Matrix, Vec<f64>)> = caches
+            .iter()
+            .map(|(k, v, w)| {
+                let mut k2 = k.clone();
+                let mut v2 = v.clone();
+                let mut w2 = w.clone();
+                for _ in 0..3 {
+                    let junk: Vec<f32> = (0..k.cols()).map(|_| rng.gaussian() as f32).collect();
+                    k2.push_row(&junk);
+                    v2.push_row(&vec![0.0; v.cols()]);
+                    w2.push(0.0);
+                }
+                (k2, v2, w2)
+            })
+            .collect();
+        let prefs: Vec<(&Matrix, &Matrix, &[f64])> =
+            padded.iter().map(|(k, v, w)| (k, v, w.as_slice())).collect();
+        let (got, _, _) = t.decode(4, 4, &prefs);
+        for (a, b) in got.iter().zip(&base) {
+            assert!((a - b).abs() < 1e-4, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn positional_encoding_matches_formula() {
+        let cfg = ModelConfig::default();
+        let pe = positional_encoding(&cfg);
+        // pos 0: sin(0)=0, cos(0)=1 alternating
+        for d in 0..cfg.d_model / 2 {
+            assert_eq!(pe.get(0, 2 * d), 0.0);
+            assert_eq!(pe.get(0, 2 * d + 1), 1.0);
+        }
+        // pos 1, dim 0: sin(1), cos(1)
+        assert!((pe.get(1, 0) - (1.0f64).sin() as f32).abs() < 1e-6);
+        assert!((pe.get(1, 1) - (1.0f64).cos() as f32).abs() < 1e-6);
+    }
+
+    #[test]
+    fn deterministic_forward() {
+        let (t, _) = tiny();
+        let toks = vec![1u32, 2, 3];
+        let a = t.prefill(&toks);
+        let b = t.prefill(&toks);
+        assert_eq!(a.logits, b.logits);
+    }
+}

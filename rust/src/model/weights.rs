@@ -1,0 +1,163 @@
+//! Loader for `artifacts/weights.bin` (format defined by
+//! python/compile/aot.py `dump_weights_bin`):
+//!
+//! ```text
+//! magic "WCWT" | u32 version | u32 count |
+//!   per tensor: u16 name_len | name | u8 ndim | u32 dims[ndim] | f32 data
+//! ```
+//! All integers and floats little-endian.
+
+use anyhow::{anyhow, bail, Context, Result};
+use std::collections::HashMap;
+use std::path::Path;
+
+/// A parsed weight file: tensor name → (shape, row-major f32 data).
+#[derive(Clone, Debug, Default)]
+pub struct WeightFile {
+    tensors: HashMap<String, (Vec<usize>, Vec<f32>)>,
+}
+
+impl WeightFile {
+    pub fn load(path: impl AsRef<Path>) -> Result<Self> {
+        let data = std::fs::read(path.as_ref())
+            .with_context(|| format!("reading {:?} — run `make artifacts`", path.as_ref()))?;
+        Self::parse(&data)
+    }
+
+    pub fn parse(data: &[u8]) -> Result<Self> {
+        if data.len() < 12 || &data[..4] != b"WCWT" {
+            bail!("bad magic in weights file");
+        }
+        let version = u32::from_le_bytes(data[4..8].try_into().unwrap());
+        if version != 1 {
+            bail!("unsupported weights version {version}");
+        }
+        let count = u32::from_le_bytes(data[8..12].try_into().unwrap()) as usize;
+        let mut off = 12usize;
+        let mut tensors = HashMap::with_capacity(count);
+        let take = |off: &mut usize, n: usize| -> Result<&[u8]> {
+            if *off + n > data.len() {
+                bail!("truncated weights file at offset {off}");
+            }
+            let s = &data[*off..*off + n];
+            *off += n;
+            Ok(s)
+        };
+        for _ in 0..count {
+            let nlen = u16::from_le_bytes(take(&mut off, 2)?.try_into().unwrap()) as usize;
+            let name = String::from_utf8(take(&mut off, nlen)?.to_vec())
+                .map_err(|_| anyhow!("non-utf8 tensor name"))?;
+            let ndim = take(&mut off, 1)?[0] as usize;
+            let mut dims = Vec::with_capacity(ndim);
+            for _ in 0..ndim {
+                dims.push(u32::from_le_bytes(take(&mut off, 4)?.try_into().unwrap()) as usize);
+            }
+            let numel: usize = dims.iter().product::<usize>().max(1);
+            let raw = take(&mut off, numel * 4)?;
+            let mut vals = Vec::with_capacity(numel);
+            for c in raw.chunks_exact(4) {
+                vals.push(f32::from_le_bytes(c.try_into().unwrap()));
+            }
+            tensors.insert(name, (dims, vals));
+        }
+        if off != data.len() {
+            bail!("trailing bytes in weights file");
+        }
+        Ok(WeightFile { tensors })
+    }
+
+    pub fn names(&self) -> impl Iterator<Item = &String> {
+        self.tensors.keys()
+    }
+
+    pub fn len(&self) -> usize {
+        self.tensors.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.tensors.is_empty()
+    }
+
+    pub fn get(&self, name: &str) -> Result<(&[usize], &[f32])> {
+        self.tensors
+            .get(name)
+            .map(|(s, d)| (s.as_slice(), d.as_slice()))
+            .ok_or_else(|| anyhow!("missing tensor {name:?}"))
+    }
+
+    /// Fetch a 2-D tensor as a [`crate::linalg::Matrix`].
+    pub fn matrix(&self, name: &str) -> Result<crate::linalg::Matrix> {
+        let (shape, data) = self.get(name)?;
+        if shape.len() != 2 {
+            bail!("{name}: expected 2-D, got {shape:?}");
+        }
+        Ok(crate::linalg::Matrix::from_vec(data.to_vec(), shape[0], shape[1]))
+    }
+
+    /// Fetch a 1-D tensor.
+    pub fn vector(&self, name: &str) -> Result<Vec<f32>> {
+        let (shape, data) = self.get(name)?;
+        if shape.len() != 1 {
+            bail!("{name}: expected 1-D, got {shape:?}");
+        }
+        Ok(data.to_vec())
+    }
+
+    /// Insert (test/builder use).
+    pub fn insert(&mut self, name: &str, shape: Vec<usize>, data: Vec<f32>) {
+        assert_eq!(shape.iter().product::<usize>().max(1), data.len());
+        self.tensors.insert(name.to_string(), (shape, data));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_bytes() -> Vec<u8> {
+        let mut out = Vec::new();
+        out.extend_from_slice(b"WCWT");
+        out.extend_from_slice(&1u32.to_le_bytes());
+        out.extend_from_slice(&2u32.to_le_bytes());
+        // tensor "ab": shape (2,2), data 1..4
+        out.extend_from_slice(&2u16.to_le_bytes());
+        out.extend_from_slice(b"ab");
+        out.push(2);
+        out.extend_from_slice(&2u32.to_le_bytes());
+        out.extend_from_slice(&2u32.to_le_bytes());
+        for v in [1.0f32, 2.0, 3.0, 4.0] {
+            out.extend_from_slice(&v.to_le_bytes());
+        }
+        // tensor "g": shape (3,)
+        out.extend_from_slice(&1u16.to_le_bytes());
+        out.extend_from_slice(b"g");
+        out.push(1);
+        out.extend_from_slice(&3u32.to_le_bytes());
+        for v in [5.0f32, 6.0, 7.0] {
+            out.extend_from_slice(&v.to_le_bytes());
+        }
+        out
+    }
+
+    #[test]
+    fn parses_valid_file() {
+        let w = WeightFile::parse(&sample_bytes()).unwrap();
+        assert_eq!(w.len(), 2);
+        let m = w.matrix("ab").unwrap();
+        assert_eq!(m.get(1, 0), 3.0);
+        assert_eq!(w.vector("g").unwrap(), vec![5.0, 6.0, 7.0]);
+        assert!(w.get("missing").is_err());
+        assert!(w.vector("ab").is_err()); // wrong rank
+    }
+
+    #[test]
+    fn rejects_corruption() {
+        assert!(WeightFile::parse(b"XXXX").is_err());
+        let mut b = sample_bytes();
+        b.truncate(b.len() - 3);
+        assert!(WeightFile::parse(&b).is_err());
+        let mut b2 = sample_bytes();
+        b2.push(0); // trailing byte
+        assert!(WeightFile::parse(&b2).is_err());
+    }
+}

@@ -1,0 +1,311 @@
+//! Seeded pseudo-random number generation substrate.
+//!
+//! The offline build has no `rand` crate, so this module provides the
+//! generators the stack needs: [`Rng`] is Xoshiro256++ (Blackman & Vigna)
+//! seeded through SplitMix64, with helpers for uniforms, Gaussians
+//! (Box–Muller), categorical sampling (used by the RPNYS pivot rule, Eq. 3),
+//! permutations and subset sampling.
+//!
+//! Determinism is part of the contract: every experiment binary takes a
+//! `--seed` and all results in EXPERIMENTS.md are reproducible bit-for-bit
+//! on the same target.
+
+/// SplitMix64 step — used for seeding and as a cheap standalone generator.
+#[inline]
+pub fn splitmix64(state: &mut u64) -> u64 {
+    *state = state.wrapping_add(0x9E3779B97F4A7C15);
+    let mut z = *state;
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+    z ^ (z >> 31)
+}
+
+/// Xoshiro256++ generator. Not cryptographic; fast, high-quality for
+/// simulation workloads.
+#[derive(Clone, Debug)]
+pub struct Rng {
+    s: [u64; 4],
+    /// Cached second Box–Muller Gaussian.
+    gauss_spare: Option<f64>,
+}
+
+impl Rng {
+    /// Construct from a 64-bit seed (expanded through SplitMix64).
+    pub fn seed_from(seed: u64) -> Self {
+        let mut sm = seed;
+        let s = [
+            splitmix64(&mut sm),
+            splitmix64(&mut sm),
+            splitmix64(&mut sm),
+            splitmix64(&mut sm),
+        ];
+        Rng { s, gauss_spare: None }
+    }
+
+    /// Derive an independent child stream (for per-bin / per-thread use).
+    pub fn fork(&mut self, stream: u64) -> Rng {
+        let mut sm = self.next_u64() ^ stream.wrapping_mul(0x9E3779B97F4A7C15);
+        let s = [
+            splitmix64(&mut sm),
+            splitmix64(&mut sm),
+            splitmix64(&mut sm),
+            splitmix64(&mut sm),
+        ];
+        Rng { s, gauss_spare: None }
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        let s = &mut self.s;
+        let result = s[0]
+            .wrapping_add(s[3])
+            .rotate_left(23)
+            .wrapping_add(s[0]);
+        let t = s[1] << 17;
+        s[2] ^= s[0];
+        s[3] ^= s[1];
+        s[1] ^= s[2];
+        s[0] ^= s[3];
+        s[2] ^= t;
+        s[3] = s[3].rotate_left(45);
+        result
+    }
+
+    /// Uniform in `[0, 1)` with 53 bits of precision.
+    #[inline]
+    pub fn uniform(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform in `[lo, hi)`.
+    #[inline]
+    pub fn uniform_in(&mut self, lo: f64, hi: f64) -> f64 {
+        lo + (hi - lo) * self.uniform()
+    }
+
+    /// Uniform integer in `[0, n)` (Lemire rejection-free bounded draw).
+    #[inline]
+    pub fn below(&mut self, n: usize) -> usize {
+        debug_assert!(n > 0);
+        // 128-bit multiply method; bias negligible for n << 2^64.
+        let x = self.next_u64();
+        (((x as u128) * (n as u128)) >> 64) as usize
+    }
+
+    /// Standard normal via Box–Muller (cached pair).
+    pub fn gaussian(&mut self) -> f64 {
+        if let Some(g) = self.gauss_spare.take() {
+            return g;
+        }
+        loop {
+            let u1 = self.uniform();
+            let u2 = self.uniform();
+            if u1 <= f64::MIN_POSITIVE {
+                continue;
+            }
+            let r = (-2.0 * u1.ln()).sqrt();
+            let theta = 2.0 * std::f64::consts::PI * u2;
+            self.gauss_spare = Some(r * theta.sin());
+            return r * theta.cos();
+        }
+    }
+
+    /// Exponential with given rate (inverse-CDF).
+    pub fn exponential(&mut self, rate: f64) -> f64 {
+        debug_assert!(rate > 0.0);
+        let mut u = self.uniform();
+        if u <= 0.0 {
+            u = f64::MIN_POSITIVE;
+        }
+        -u.ln() / rate
+    }
+
+    /// Sample an index from unnormalised non-negative weights.
+    ///
+    /// This is the RPNYS pivot rule (Eq. 3): `p_l ∝ h_res(k_l, k_l)`.
+    /// Returns `None` if the total mass is not strictly positive.
+    pub fn categorical(&mut self, weights: &[f64]) -> Option<usize> {
+        let total: f64 = weights.iter().filter(|w| w.is_finite() && **w > 0.0).sum();
+        if !(total > 0.0) {
+            return None;
+        }
+        let mut u = self.uniform() * total;
+        let mut last_pos = None;
+        for (i, &w) in weights.iter().enumerate() {
+            if !(w > 0.0) || !w.is_finite() {
+                continue;
+            }
+            last_pos = Some(i);
+            if u < w {
+                return Some(i);
+            }
+            u -= w;
+        }
+        last_pos // float round-off: fall back to the last positive entry
+    }
+
+    /// Fisher–Yates shuffle.
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.below(i + 1);
+            xs.swap(i, j);
+        }
+    }
+
+    /// `k` distinct indices sampled uniformly from `[0, n)`, sorted.
+    pub fn sample_without_replacement(&mut self, n: usize, k: usize) -> Vec<usize> {
+        assert!(k <= n, "cannot sample {k} from {n}");
+        // Partial Fisher–Yates over an index map (sparse for small k).
+        if k * 4 < n {
+            use std::collections::HashMap;
+            let mut swapped: HashMap<usize, usize> = HashMap::new();
+            let mut out = Vec::with_capacity(k);
+            for i in 0..k {
+                let j = i + self.below(n - i);
+                let vi = *swapped.get(&i).unwrap_or(&i);
+                let vj = *swapped.get(&j).unwrap_or(&j);
+                out.push(vj);
+                swapped.insert(j, vi);
+            }
+            out.sort_unstable();
+            out
+        } else {
+            let mut idx: Vec<usize> = (0..n).collect();
+            self.shuffle(&mut idx);
+            idx.truncate(k);
+            idx.sort_unstable();
+            idx
+        }
+    }
+
+    /// Fill a slice with standard normals (f32).
+    pub fn fill_gaussian_f32(&mut self, out: &mut [f32]) {
+        for x in out.iter_mut() {
+            *x = self.gaussian() as f32;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_across_construction() {
+        let mut a = Rng::seed_from(42);
+        let mut b = Rng::seed_from(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn different_seeds_diverge() {
+        let mut a = Rng::seed_from(1);
+        let mut b = Rng::seed_from(2);
+        let same = (0..64).filter(|_| a.next_u64() == b.next_u64()).count();
+        assert!(same < 4);
+    }
+
+    #[test]
+    fn uniform_in_unit_interval() {
+        let mut rng = Rng::seed_from(7);
+        for _ in 0..10_000 {
+            let u = rng.uniform();
+            assert!((0.0..1.0).contains(&u));
+        }
+    }
+
+    #[test]
+    fn uniform_mean_near_half() {
+        let mut rng = Rng::seed_from(3);
+        let n = 100_000;
+        let mean: f64 = (0..n).map(|_| rng.uniform()).sum::<f64>() / n as f64;
+        assert!((mean - 0.5).abs() < 0.01, "mean={mean}");
+    }
+
+    #[test]
+    fn gaussian_moments() {
+        let mut rng = Rng::seed_from(11);
+        let n = 200_000;
+        let xs: Vec<f64> = (0..n).map(|_| rng.gaussian()).collect();
+        let mean = xs.iter().sum::<f64>() / n as f64;
+        let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
+        assert!(mean.abs() < 0.02, "mean={mean}");
+        assert!((var - 1.0).abs() < 0.03, "var={var}");
+    }
+
+    #[test]
+    fn below_bounds_and_coverage() {
+        let mut rng = Rng::seed_from(9);
+        let mut seen = [false; 10];
+        for _ in 0..1000 {
+            let i = rng.below(10);
+            assert!(i < 10);
+            seen[i] = true;
+        }
+        assert!(seen.iter().all(|&s| s));
+    }
+
+    #[test]
+    fn categorical_respects_weights() {
+        let mut rng = Rng::seed_from(5);
+        let w = [0.0, 1.0, 3.0, 0.0];
+        let mut counts = [0usize; 4];
+        for _ in 0..40_000 {
+            counts[rng.categorical(&w).unwrap()] += 1;
+        }
+        assert_eq!(counts[0], 0);
+        assert_eq!(counts[3], 0);
+        let ratio = counts[2] as f64 / counts[1] as f64;
+        assert!((ratio - 3.0).abs() < 0.25, "ratio={ratio}");
+    }
+
+    #[test]
+    fn categorical_empty_and_zero() {
+        let mut rng = Rng::seed_from(6);
+        assert_eq!(rng.categorical(&[]), None);
+        assert_eq!(rng.categorical(&[0.0, 0.0]), None);
+        assert_eq!(rng.categorical(&[f64::NAN, 0.0]), None);
+    }
+
+    #[test]
+    fn sample_without_replacement_distinct_sorted() {
+        let mut rng = Rng::seed_from(8);
+        for &(n, k) in &[(100usize, 5usize), (100, 90), (16, 16), (1, 1), (50, 0)] {
+            let s = rng.sample_without_replacement(n, k);
+            assert_eq!(s.len(), k);
+            for w in s.windows(2) {
+                assert!(w[0] < w[1], "not strictly increasing: {s:?}");
+            }
+            assert!(s.iter().all(|&i| i < n));
+        }
+    }
+
+    #[test]
+    fn exponential_mean() {
+        let mut rng = Rng::seed_from(10);
+        let n = 100_000;
+        let mean = (0..n).map(|_| rng.exponential(2.0)).sum::<f64>() / n as f64;
+        assert!((mean - 0.5).abs() < 0.01, "mean={mean}");
+    }
+
+    #[test]
+    fn fork_streams_are_independent() {
+        let mut root = Rng::seed_from(1234);
+        let mut a = root.fork(0);
+        let mut b = root.fork(1);
+        let same = (0..64).filter(|_| a.next_u64() == b.next_u64()).count();
+        assert!(same < 4);
+    }
+
+    #[test]
+    fn shuffle_is_permutation() {
+        let mut rng = Rng::seed_from(2);
+        let mut xs: Vec<usize> = (0..37).collect();
+        rng.shuffle(&mut xs);
+        let mut sorted = xs.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..37).collect::<Vec<_>>());
+    }
+}

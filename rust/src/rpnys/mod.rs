@@ -1,0 +1,385 @@
+//! Randomly pivoted Nyström (RPNYS, Alg. 1) — the paper's coreset
+//! selection + optimal weighting engine.
+//!
+//! Two implementations are provided and cross-validated:
+//!
+//! * [`rpnys`] — factor form (randomly pivoted Cholesky, Chen et al. 2022):
+//!   maintains `F ∈ R^{n×t}` with `H ≈ F Fᵀ` and the residual diagonal;
+//!   numerically stabler and `O(nr² + nrd)` like the paper's Alg. 1.
+//! * [`rpnys_paper_update`] — the paper's literal `g gᵀ` rank-one inverse
+//!   update (Prop. K.1), kept as a fidelity oracle for tests.
+//!
+//! After pivot selection, the Nyström weights
+//! `W = h(K_S, K_S)⁺ h(K_S, K)` are solved once with jittered Cholesky
+//! (pseudo-inverse semantics), `O(r³ + r²n)`.
+
+use crate::kernels::{kernel_column, kernel_cross, kernel_diag};
+use crate::linalg::{spd_solve, Matrix};
+use crate::rng::Rng;
+
+/// Output of RPNYS: coreset indices and optimal Nyström weights.
+#[derive(Clone, Debug)]
+pub struct NystromApprox {
+    /// Selected pivot indices into the input key matrix, in selection order.
+    pub indices: Vec<usize>,
+    /// `W ∈ R^{r×n}` row-major: optimal weights such that
+    /// `h(·, K) ≈ h(·, K_S) W`.
+    pub weights: Vec<f64>,
+    /// Number of input keys `n`.
+    pub n: usize,
+}
+
+impl NystromApprox {
+    pub fn rank(&self) -> usize {
+        self.indices.len()
+    }
+
+    /// `w = W 1_n` — the softmax re-normalisation vector of COMPRESSKV.
+    pub fn weight_row_sums(&self) -> Vec<f64> {
+        let r = self.rank();
+        let mut out = vec![0.0; r];
+        for (i, o) in out.iter_mut().enumerate() {
+            *o = self.weights[i * self.n..(i + 1) * self.n].iter().sum();
+        }
+        out
+    }
+
+    /// `V_S = W V` — compressed values (f64 accumulation, f32 output).
+    pub fn compress_values(&self, v: &Matrix) -> Matrix {
+        assert_eq!(v.rows(), self.n, "value count must match key count");
+        let r = self.rank();
+        let d = v.cols();
+        let mut out = Matrix::zeros(r, d);
+        for i in 0..r {
+            let wrow = &self.weights[i * self.n..(i + 1) * self.n];
+            let mut acc = vec![0.0f64; d];
+            for (l, &w) in wrow.iter().enumerate() {
+                if w == 0.0 {
+                    continue;
+                }
+                for (a, &x) in acc.iter_mut().zip(v.row(l)) {
+                    *a += w * x as f64;
+                }
+            }
+            for (o, a) in out.row_mut(i).iter_mut().zip(&acc) {
+                *o = *a as f32;
+            }
+        }
+        out
+    }
+}
+
+/// Floor under which a residual diagonal entry is treated as exhausted.
+const RESIDUAL_FLOOR: f64 = 1e-12;
+
+/// Factor-form randomly pivoted Nyström. `scale_eff = β/τ²` is the
+/// effective kernel scale; `rank` the requested coreset size (may stop
+/// early if the kernel matrix is numerically exhausted).
+pub fn rpnys(k: &Matrix, scale_eff: f64, rank: usize, rng: &mut Rng) -> NystromApprox {
+    let n = k.rows();
+    let rank = rank.min(n);
+    let mut res = kernel_diag(k, scale_eff);
+    let total0: f64 = res.iter().sum();
+    let floor = RESIDUAL_FLOOR * total0.max(1e-300) / n.max(1) as f64;
+
+    // F stored column-major as r vectors of length n (each column built once).
+    let mut cols: Vec<Vec<f64>> = Vec::with_capacity(rank);
+    let mut pivots: Vec<usize> = Vec::with_capacity(rank);
+
+    for _t in 0..rank {
+        let s = match rng.categorical(&res) {
+            Some(s) => s,
+            None => break, // fully approximated
+        };
+        let mut c = kernel_column(k, s, scale_eff);
+        // c -= F[:, :t] * F[s, :t]
+        for col in &cols {
+            let fs = col[s];
+            if fs == 0.0 {
+                continue;
+            }
+            for (ci, fi) in c.iter_mut().zip(col) {
+                *ci -= fs * fi;
+            }
+        }
+        let rho = c[s].min(res[s]).max(0.0);
+        if rho <= floor {
+            res[s] = 0.0;
+            continue; // numerically exhausted pivot; try another
+        }
+        let inv_sqrt = 1.0 / rho.sqrt();
+        for ci in c.iter_mut() {
+            *ci *= inv_sqrt;
+        }
+        for (r_i, f_i) in res.iter_mut().zip(&c) {
+            *r_i = (*r_i - f_i * f_i).max(0.0);
+        }
+        res[s] = 0.0;
+        cols.push(c);
+        pivots.push(s);
+    }
+
+    let weights = solve_weights(k, &pivots, scale_eff);
+    NystromApprox { indices: pivots, weights, n }
+}
+
+/// Solve `h(K_S, K_S) W = h(K_S, K)` for the optimal Nyström weights.
+fn solve_weights(k: &Matrix, pivots: &[usize], scale_eff: f64) -> Vec<f64> {
+    let n = k.rows();
+    let r = pivots.len();
+    if r == 0 {
+        return Vec::new();
+    }
+    let ks = k.select_rows(pivots);
+    let h_ss = kernel_cross(&ks, &ks, scale_eff);
+    let mut rhs = kernel_cross(&ks, k, scale_eff); // r×n
+    spd_solve(h_ss, r, &mut rhs, n);
+    rhs
+}
+
+/// The paper's literal Alg. 1 with the `g gᵀ` inverse update (Prop. K.1).
+/// O(nr²) like the factor form but with explicit inverse maintenance.
+/// Kept as a test oracle: with the same RNG stream it must select the same
+/// pivots as [`rpnys`] and produce consistent weights (up to round-off).
+pub fn rpnys_paper_update(k: &Matrix, scale_eff: f64, rank: usize, rng: &mut Rng) -> NystromApprox {
+    let n = k.rows();
+    let rank = rank.min(n);
+    let mut res = kernel_diag(k, scale_eff);
+    let total0: f64 = res.iter().sum();
+    let floor = RESIDUAL_FLOOR * total0.max(1e-300) / n.max(1) as f64;
+
+    let mut pivots: Vec<usize> = Vec::new();
+    // inv = h(K_S, K_S)^{-1}, row-major r×r, grown per pivot.
+    let mut inv: Vec<f64> = Vec::new();
+    // rows = h(K_S, K), r×n row-major.
+    let mut rows: Vec<f64> = Vec::new();
+
+    for _t in 0..rank {
+        let s = match rng.categorical(&res) {
+            Some(s) => s,
+            None => break,
+        };
+        let r = pivots.len();
+        let col_s = kernel_column(k, s, scale_eff); // h(K, k_s), length n
+        // residual at pivot: h(k_s,k_s) − h(k_s,K_S) inv h(K_S,k_s)
+        let hs: Vec<f64> = pivots.iter().map(|&p| col_s[p]).collect();
+        let mut m_hs = vec![0.0f64; r]; // inv * hs
+        for i in 0..r {
+            m_hs[i] = (0..r).map(|j| inv[i * r + j] * hs[j]).sum();
+        }
+        let res_s = col_s[s] - hs.iter().zip(&m_hs).map(|(a, b)| a * b).sum::<f64>();
+        let res_s = res_s.min(res[s]).max(0.0);
+        if res_s <= floor {
+            res[s] = 0.0;
+            continue;
+        }
+        // g = (m_hs, -1)/sqrt(res_s); inv' = [[inv,0],[0,0]] + g gᵀ
+        let inv_sqrt = 1.0 / res_s.sqrt();
+        let g: Vec<f64> = m_hs
+            .iter()
+            .map(|&x| x * inv_sqrt)
+            .chain(std::iter::once(-inv_sqrt))
+            .collect();
+        let r1 = r + 1;
+        let mut new_inv = vec![0.0f64; r1 * r1];
+        for i in 0..r {
+            for j in 0..r {
+                new_inv[i * r1 + j] = inv[i * r + j];
+            }
+        }
+        for i in 0..r1 {
+            for j in 0..r1 {
+                new_inv[i * r1 + j] += g[i] * g[j];
+            }
+        }
+        inv = new_inv;
+        rows.extend_from_slice(&col_s); // h(K_S', K) gains row h(k_s, K)
+        pivots.push(s);
+        // residual diag update: res_l -= (gᵀ h(K_S', k_l))²
+        for l in 0..n {
+            let mut dot = 0.0f64;
+            for (i, gi) in g.iter().enumerate() {
+                dot += gi * rows[i * n + l];
+            }
+            res[l] = (res[l] - dot * dot).max(0.0);
+        }
+        res[s] = 0.0;
+    }
+
+    // W = inv · rows (the paper's `M R` product)
+    let r = pivots.len();
+    let mut weights = vec![0.0f64; r * n];
+    for i in 0..r {
+        for l in 0..n {
+            let mut acc = 0.0f64;
+            for j in 0..r {
+                acc += inv[i * r + j] * rows[j * n + l];
+            }
+            weights[i * n + l] = acc;
+        }
+    }
+    NystromApprox { indices: pivots, weights, n }
+}
+
+/// `‖H − h(K, K_S) W‖_op` for a [`NystromApprox`] — the Thm. 1 error
+/// metric. O(n²) — test/diagnostic use only.
+pub fn residual_op_norm(k: &Matrix, approx: &NystromApprox, scale_eff: f64) -> f64 {
+    let n = k.rows();
+    let r = approx.rank();
+    let h = kernel_cross(k, k, scale_eff);
+    let mut resid = h;
+    if r > 0 {
+        let ks = k.select_rows(&approx.indices);
+        let h_ns = kernel_cross(k, &ks, scale_eff); // n×r
+        for i in 0..n {
+            for l in 0..n {
+                let mut acc = 0.0f64;
+                for j in 0..r {
+                    acc += h_ns[i * r + j] * approx.weights[j * n + l];
+                }
+                resid[i * n + l] -= acc;
+            }
+        }
+    }
+    // symmetrise against round-off before power iteration
+    for i in 0..n {
+        for l in 0..i {
+            let v = 0.5 * (resid[i * n + l] + resid[l * n + i]);
+            resid[i * n + l] = v;
+            resid[l * n + i] = v;
+        }
+    }
+    crate::linalg::op_norm_sym_f64(&resid, n, 200)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::Cases;
+
+    #[test]
+    fn selects_requested_rank_distinct_pivots() {
+        Cases::new(16).run(|rng| {
+            let n = 8 + rng.below(40);
+            let d = 1 + rng.below(6);
+            let k = Matrix::randn(rng, n, d);
+            let r = 1 + rng.below(n.min(12));
+            let a = rpnys(&k, 0.25, r, rng);
+            assert!(a.rank() <= r);
+            let mut seen = a.indices.clone();
+            seen.sort_unstable();
+            seen.dedup();
+            assert_eq!(seen.len(), a.indices.len(), "duplicate pivot");
+            assert_eq!(a.weights.len(), a.rank() * n);
+        });
+    }
+
+    #[test]
+    fn error_decreases_with_rank() {
+        let mut rng = Rng::seed_from(42);
+        let n = 48;
+        let k = Matrix::randn(&mut rng, n, 4);
+        let scale = 0.3;
+        let mut last = f64::INFINITY;
+        for r in [2usize, 8, 24, 48] {
+            let mut r_rng = Rng::seed_from(7);
+            let a = rpnys(&k, scale, r, &mut r_rng);
+            let err = residual_op_norm(&k, &a, scale);
+            assert!(
+                err <= last * 1.5 + 1e-9,
+                "r={r}: err={err} last={last} (should broadly decrease)"
+            );
+            if err < last {
+                last = err;
+            }
+        }
+        // full rank ⇒ (near-)exact reconstruction
+        let mut r_rng = Rng::seed_from(7);
+        let a = rpnys(&k, scale, n, &mut r_rng);
+        let h = kernel_cross(&k, &k, scale);
+        let h_norm = crate::linalg::op_norm_sym_f64(&h, n, 100);
+        let err = residual_op_norm(&k, &a, scale);
+        assert!(err <= 1e-5 * h_norm.max(1.0), "full-rank err={err}");
+    }
+
+    #[test]
+    fn weights_interpolate_at_pivots() {
+        // Nyström is a projection: at coreset points it reproduces the
+        // kernel row exactly, so W restricted to pivot columns is identity.
+        Cases::new(8).run(|rng| {
+            let n = 10 + rng.below(20);
+            let k = Matrix::randn(rng, n, 3);
+            let a = rpnys(&k, 0.4, 6, rng);
+            for (i, _) in a.indices.iter().enumerate() {
+                for (j, &pj) in a.indices.iter().enumerate() {
+                    let w = a.weights[i * n + pj];
+                    let want = if i == j { 1.0 } else { 0.0 };
+                    assert!(
+                        (w - want).abs() < 1e-4,
+                        "W[{i},{pj}]={w}, want {want}"
+                    );
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn paper_update_matches_factor_form() {
+        Cases::new(8).run(|rng| {
+            let n = 12 + rng.below(20);
+            let k = Matrix::randn(rng, n, 3);
+            let r = 5;
+            let mut rng_a = Rng::seed_from(99);
+            let mut rng_b = Rng::seed_from(99);
+            let a = rpnys(&k, 0.35, r, &mut rng_a);
+            let b = rpnys_paper_update(&k, 0.35, r, &mut rng_b);
+            assert_eq!(a.indices, b.indices, "pivot sequences differ");
+            for (x, y) in a.weights.iter().zip(&b.weights) {
+                assert!((x - y).abs() < 1e-5 * (1.0 + x.abs()), "{x} vs {y}");
+            }
+        });
+    }
+
+    #[test]
+    fn compress_values_and_row_sums() {
+        let mut rng = Rng::seed_from(3);
+        let n = 30;
+        let k = Matrix::randn(&mut rng, n, 4);
+        let v = Matrix::randn(&mut rng, n, 5);
+        let a = rpnys(&k, 0.3, 8, &mut rng);
+        let vs = a.compress_values(&v);
+        assert_eq!(vs.rows(), a.rank());
+        assert_eq!(vs.cols(), 5);
+        // check one entry against the definition
+        let want: f64 = (0..n)
+            .map(|l| a.weights[l] * v.get(l, 2) as f64)
+            .sum();
+        assert!((vs.get(0, 2) as f64 - want).abs() < 1e-4 * (1.0 + want.abs()));
+        let ws = a.weight_row_sums();
+        assert_eq!(ws.len(), a.rank());
+    }
+
+    #[test]
+    fn handles_duplicate_keys() {
+        // Rank-deficient kernel matrix (duplicated rows): must not panic
+        // and must stop early or pick distinct pivots.
+        let mut rng = Rng::seed_from(5);
+        let base = Matrix::randn(&mut rng, 4, 3);
+        let k = Matrix::vcat(&[&base, &base, &base]);
+        let a = rpnys(&k, 0.5, 10, &mut rng);
+        assert!(a.rank() >= 1);
+        let err = residual_op_norm(&k, &a, 0.5);
+        let h = kernel_cross(&k, &k, 0.5);
+        let h_norm = crate::linalg::op_norm_sym_f64(&h, 12, 100);
+        assert!(err < 1e-3 * h_norm, "err={err} vs ‖H‖={h_norm}");
+    }
+
+    #[test]
+    fn zero_rank_is_empty() {
+        let mut rng = Rng::seed_from(6);
+        let k = Matrix::randn(&mut rng, 10, 2);
+        let a = rpnys(&k, 0.3, 0, &mut rng);
+        assert_eq!(a.rank(), 0);
+        assert!(a.weights.is_empty());
+    }
+}

@@ -1,0 +1,176 @@
+//! Artifact manifest: the JSON index written by python/compile/aot.py
+//! (`artifacts/manifest.json`), parsed with the in-tree JSON substrate.
+
+use crate::util::json::{parse, Json};
+
+/// Tensor dtype+shape as declared by the exporter.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TensorSpec {
+    pub dtype: String,
+    pub shape: Vec<usize>,
+}
+
+impl TensorSpec {
+    fn from_json(j: &Json) -> Result<Self, String> {
+        let dtype = j
+            .get("dtype")
+            .and_then(|d| d.as_str())
+            .ok_or("tensor missing dtype")?
+            .to_string();
+        let shape = j
+            .get("shape")
+            .and_then(|s| s.as_arr())
+            .ok_or("tensor missing shape")?
+            .iter()
+            .map(|v| v.as_usize().ok_or("bad dim"))
+            .collect::<Result<Vec<_>, _>>()?;
+        Ok(TensorSpec { dtype, shape })
+    }
+
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product::<usize>().max(1)
+    }
+}
+
+/// One exported HLO computation.
+#[derive(Clone, Debug)]
+pub struct ArtifactSpec {
+    pub name: String,
+    pub file: String,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+}
+
+/// Model hyper-parameters baked into the manifest.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ModelSpec {
+    pub vocab: usize,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub d_ff: usize,
+    pub max_len: usize,
+    pub beta: f64,
+}
+
+impl ModelSpec {
+    pub fn d_head(&self) -> usize {
+        self.d_model / self.n_heads
+    }
+}
+
+/// Parsed manifest.json.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub version: usize,
+    pub model: ModelSpec,
+    pub artifacts: Vec<ArtifactSpec>,
+}
+
+impl Manifest {
+    pub fn parse(text: &str) -> Result<Self, String> {
+        let j = parse(text)?;
+        let version = j.get("version").and_then(|v| v.as_usize()).ok_or("missing version")?;
+        let m = j.get("model").ok_or("missing model")?;
+        let get = |k: &str| -> Result<usize, String> {
+            m.get(k).and_then(|v| v.as_usize()).ok_or(format!("model missing {k}"))
+        };
+        let model = ModelSpec {
+            vocab: get("vocab")?,
+            d_model: get("d_model")?,
+            n_layers: get("n_layers")?,
+            n_heads: get("n_heads")?,
+            d_ff: get("d_ff")?,
+            max_len: get("max_len")?,
+            beta: m.get("beta").and_then(|v| v.as_f64()).ok_or("model missing beta")?,
+        };
+        let artifacts = j
+            .get("artifacts")
+            .and_then(|a| a.as_arr())
+            .ok_or("missing artifacts")?
+            .iter()
+            .map(|a| {
+                Ok(ArtifactSpec {
+                    name: a
+                        .get("name")
+                        .and_then(|n| n.as_str())
+                        .ok_or("artifact missing name")?
+                        .to_string(),
+                    file: a
+                        .get("file")
+                        .and_then(|n| n.as_str())
+                        .ok_or("artifact missing file")?
+                        .to_string(),
+                    inputs: a
+                        .get("inputs")
+                        .and_then(|i| i.as_arr())
+                        .ok_or("artifact missing inputs")?
+                        .iter()
+                        .map(TensorSpec::from_json)
+                        .collect::<Result<Vec<_>, _>>()?,
+                    outputs: a
+                        .get("outputs")
+                        .and_then(|i| i.as_arr())
+                        .ok_or("artifact missing outputs")?
+                        .iter()
+                        .map(TensorSpec::from_json)
+                        .collect::<Result<Vec<_>, _>>()?,
+                })
+            })
+            .collect::<Result<Vec<_>, String>>()?;
+        Ok(Manifest { version, model, artifacts })
+    }
+
+    pub fn artifact(&self, name: &str) -> Option<&ArtifactSpec> {
+        self.artifacts.iter().find(|a| a.name == name)
+    }
+
+    /// Artifact names with a given prefix (e.g. all `model_decode_r*`).
+    pub fn artifacts_with_prefix(&self, prefix: &str) -> Vec<&ArtifactSpec> {
+        self.artifacts.iter().filter(|a| a.name.starts_with(prefix)).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "version": 1,
+      "model": {"vocab": 64, "d_model": 64, "n_layers": 2, "n_heads": 2,
+                "d_ff": 128, "max_len": 1024, "beta": 0.17677},
+      "artifacts": [
+        {"name": "model_decode_r64", "file": "model_decode_r64.hlo.txt",
+         "inputs": [{"dtype": "i32", "shape": []},
+                    {"dtype": "i32", "shape": []},
+                    {"dtype": "f32", "shape": [2, 2, 64, 32]},
+                    {"dtype": "f32", "shape": [2, 2, 64, 32]},
+                    {"dtype": "f32", "shape": [2, 2, 64]}],
+         "outputs": [{"dtype": "f32", "shape": [64]},
+                     {"dtype": "f32", "shape": [2, 2, 32]},
+                     {"dtype": "f32", "shape": [2, 2, 32]}]}
+      ]
+    }"#;
+
+    #[test]
+    fn parses_manifest() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        assert_eq!(m.version, 1);
+        assert_eq!(m.model.vocab, 64);
+        assert_eq!(m.model.d_head(), 32);
+        assert!((m.model.beta - 0.17677).abs() < 1e-9);
+        let a = m.artifact("model_decode_r64").unwrap();
+        assert_eq!(a.inputs.len(), 5);
+        assert_eq!(a.inputs[2].shape, vec![2, 2, 64, 32]);
+        assert_eq!(a.inputs[2].numel(), 2 * 2 * 64 * 32);
+        assert_eq!(a.outputs[0].shape, vec![64]);
+        assert_eq!(m.artifacts_with_prefix("model_decode").len(), 1);
+        assert!(m.artifact("nope").is_none());
+    }
+
+    #[test]
+    fn rejects_malformed() {
+        assert!(Manifest::parse("{}").is_err());
+        assert!(Manifest::parse("not json").is_err());
+    }
+}

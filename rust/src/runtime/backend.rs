@@ -1,0 +1,172 @@
+//! [`crate::model::ModelBackend`] implementation over the PJRT runtime —
+//! the production path: the serving model's prefill/decode are the
+//! AOT-compiled HLO artifacts; this adapter handles fixed-shape padding.
+//!
+//! Padding contracts (pinned by python/tests):
+//! * prefill: tokens padded with PAD to the artifact length; `length`
+//!   carries the true token count; caches are sliced to `length`.
+//! * decode: the cache is padded to the artifact capacity `R` with
+//!   arbitrary keys, **zero values** and **zero weights** (inert rows).
+
+use super::{LiteralArg, PjrtRuntime};
+use crate::linalg::Matrix;
+use crate::model::{ModelBackend, ModelConfig, PrefillOutput};
+use anyhow::{anyhow, Result};
+
+/// PJRT-backed serving model.
+pub struct PjrtBackend {
+    rt: PjrtRuntime,
+    cfg: ModelConfig,
+    /// Available prefill artifact lengths, ascending.
+    prefill_lens: Vec<usize>,
+    /// Available decode cache capacities, ascending.
+    decode_caps: Vec<usize>,
+}
+
+impl PjrtBackend {
+    pub fn open(dir: impl AsRef<std::path::Path>) -> Result<Self> {
+        let rt = PjrtRuntime::open(dir)?;
+        let cfg = ModelConfig::from_spec(&rt.manifest.model);
+        let mut prefill_lens: Vec<usize> = rt
+            .manifest
+            .artifacts_with_prefix("model_prefill_n")
+            .iter()
+            .filter_map(|a| a.name.trim_start_matches("model_prefill_n").parse().ok())
+            .collect();
+        prefill_lens.sort_unstable();
+        let mut decode_caps: Vec<usize> = rt
+            .manifest
+            .artifacts_with_prefix("model_decode_r")
+            .iter()
+            .filter_map(|a| a.name.trim_start_matches("model_decode_r").parse().ok())
+            .collect();
+        decode_caps.sort_unstable();
+        if prefill_lens.is_empty() || decode_caps.is_empty() {
+            return Err(anyhow!(
+                "artifacts missing model_prefill_n*/model_decode_r* (run `make artifacts`)"
+            ));
+        }
+        Ok(PjrtBackend { rt, cfg, prefill_lens, decode_caps })
+    }
+
+    pub fn platform(&self) -> String {
+        self.rt.platform()
+    }
+
+    pub fn max_prefill(&self) -> usize {
+        *self.prefill_lens.last().unwrap()
+    }
+
+    pub fn max_decode_cache(&self) -> usize {
+        *self.decode_caps.last().unwrap() - 1 // one slot reserved implicitly
+    }
+
+    fn pick_prefill(&self, n: usize) -> Result<usize> {
+        self.prefill_lens
+            .iter()
+            .copied()
+            .find(|&l| l >= n)
+            .ok_or_else(|| anyhow!("prompt of {n} exceeds largest prefill artifact"))
+    }
+
+    fn pick_decode(&self, cache_len: usize) -> Result<usize> {
+        self.decode_caps
+            .iter()
+            .copied()
+            .find(|&c| c >= cache_len)
+            .ok_or_else(|| anyhow!("cache of {cache_len} exceeds largest decode artifact"))
+    }
+}
+
+impl ModelBackend for PjrtBackend {
+    fn config(&self) -> ModelConfig {
+        self.cfg
+    }
+
+    fn prefill(&mut self, tokens: &[u32]) -> PrefillOutput {
+        let n = tokens.len();
+        let cap = self.pick_prefill(n).expect("prefill capacity");
+        let mut padded: Vec<i32> = tokens.iter().map(|&t| t as i32).collect();
+        padded.resize(cap, super::super::workload::tasks::PAD as i32);
+        let name = format!("model_prefill_n{cap}");
+        let outs = self
+            .rt
+            .execute_f32(
+                &name,
+                &[LiteralArg::I32Vec(&padded), LiteralArg::I32Scalar(n as i32)],
+            )
+            .expect("prefill execution");
+        let (l, h, dh) = (self.cfg.n_layers, self.cfg.n_heads, self.cfg.d_head());
+        let logits = outs[0].clone();
+        // caches come back as (L, H, cap, dh); slice to n rows
+        let mut k_cache = Vec::with_capacity(l * h);
+        let mut v_cache = Vec::with_capacity(l * h);
+        for (out_idx, dst) in [(1usize, &mut k_cache), (2usize, &mut v_cache)] {
+            let flat = &outs[out_idx];
+            assert_eq!(flat.len(), l * h * cap * dh);
+            for li in 0..l {
+                for hi in 0..h {
+                    let base = (li * h + hi) * cap * dh;
+                    let mut m = Matrix::zeros(n, dh);
+                    for row in 0..n {
+                        m.row_mut(row)
+                            .copy_from_slice(&flat[base + row * dh..base + (row + 1) * dh]);
+                    }
+                    dst.push(m);
+                }
+            }
+        }
+        PrefillOutput { logits, k_cache, v_cache }
+    }
+
+    fn decode(
+        &mut self,
+        token: u32,
+        pos: usize,
+        caches: &[(&Matrix, &Matrix, &[f64])],
+    ) -> (Vec<f32>, Vec<Vec<f32>>, Vec<Vec<f32>>) {
+        let (l, h, dh) = (self.cfg.n_layers, self.cfg.n_heads, self.cfg.d_head());
+        assert_eq!(caches.len(), l * h);
+        let longest = caches.iter().map(|(k, _, _)| k.rows()).max().unwrap_or(0);
+        let cap = self.pick_decode(longest).expect("decode capacity");
+        let name = format!("model_decode_r{cap}");
+        // pack padded (L, H, cap, dh) tensors; pad rows: k arbitrary(0),
+        // v = 0, w = 0 (inert per the WTDATTN padding contract)
+        let mut kbuf = vec![0.0f32; l * h * cap * dh];
+        let mut vbuf = vec![0.0f32; l * h * cap * dh];
+        let mut wbuf = vec![0.0f32; l * h * cap];
+        for (lh, (k, v, w)) in caches.iter().enumerate() {
+            let base = lh * cap * dh;
+            for row in 0..k.rows() {
+                kbuf[base + row * dh..base + (row + 1) * dh].copy_from_slice(k.row(row));
+                vbuf[base + row * dh..base + (row + 1) * dh].copy_from_slice(v.row(row));
+            }
+            for (row, &wv) in w.iter().enumerate() {
+                wbuf[lh * cap + row] = wv as f32;
+            }
+        }
+        let dims4 = vec![l as i64, h as i64, cap as i64, dh as i64];
+        let dims3 = vec![l as i64, h as i64, cap as i64];
+        let outs = self
+            .rt
+            .execute_f32(
+                &name,
+                &[
+                    LiteralArg::I32Scalar(token as i32),
+                    LiteralArg::I32Scalar(pos as i32),
+                    LiteralArg::F32(&kbuf, dims4.clone()),
+                    LiteralArg::F32(&vbuf, dims4),
+                    LiteralArg::F32(&wbuf, dims3),
+                ],
+            )
+            .expect("decode execution");
+        let logits = outs[0].clone();
+        let unpack = |flat: &Vec<f32>| -> Vec<Vec<f32>> {
+            assert_eq!(flat.len(), l * h * dh);
+            (0..l * h)
+                .map(|lh| flat[lh * dh..(lh + 1) * dh].to_vec())
+                .collect()
+        };
+        (logits, unpack(&outs[1]), unpack(&outs[2]))
+    }
+}

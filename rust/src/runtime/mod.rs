@@ -1,0 +1,151 @@
+//! PJRT runtime: load the AOT-compiled HLO artifacts and execute them from
+//! the Rust hot path. Python never runs here — `make artifacts` produced
+//! HLO *text* (see python/compile/aot.py for why text, not serialized
+//! protos) which this module parses, compiles once per process through
+//! the PJRT CPU client, and caches.
+//!
+//! `xla::PjRtClient` is `Rc`-backed (not `Send`), so a [`PjrtRuntime`] is
+//! owned by a single thread — the coordinator dedicates a model-worker
+//! thread to it and communicates over channels.
+
+pub mod artifacts;
+pub mod backend;
+
+pub use artifacts::{ArtifactSpec, Manifest, ModelSpec, TensorSpec};
+pub use backend::PjrtBackend;
+
+use crate::linalg::Matrix;
+use anyhow::{anyhow, Context, Result};
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+/// A loaded-and-compiled artifact registry over one PJRT client.
+pub struct PjrtRuntime {
+    client: xla::PjRtClient,
+    dir: PathBuf,
+    pub manifest: Manifest,
+    executables: HashMap<String, xla::PjRtLoadedExecutable>,
+}
+
+impl PjrtRuntime {
+    /// Open the artifact directory (reads `manifest.json`) and create the
+    /// PJRT CPU client. Compilation is lazy per artifact.
+    pub fn open(dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = dir.as_ref().to_path_buf();
+        let manifest_path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&manifest_path)
+            .with_context(|| format!("reading {manifest_path:?} — run `make artifacts`"))?;
+        let manifest = Manifest::parse(&text).map_err(|e| anyhow!("manifest: {e}"))?;
+        let client = xla::PjRtClient::cpu()?;
+        Ok(PjrtRuntime { client, dir, manifest, executables: HashMap::new() })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Compile (once) and return the executable for a named artifact.
+    pub fn load(&mut self, name: &str) -> Result<&xla::PjRtLoadedExecutable> {
+        if !self.executables.contains_key(name) {
+            let spec = self
+                .manifest
+                .artifact(name)
+                .ok_or_else(|| anyhow!("unknown artifact {name:?}"))?;
+            let path = self.dir.join(&spec.file);
+            let proto = xla::HloModuleProto::from_text_file(&path)
+                .with_context(|| format!("parsing HLO text {path:?}"))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self.client.compile(&comp)?;
+            self.executables.insert(name.to_string(), exe);
+        }
+        Ok(&self.executables[name])
+    }
+
+    /// Execute an artifact on literal inputs; returns the flattened tuple
+    /// outputs (aot.py lowers with `return_tuple=True`).
+    pub fn execute(&mut self, name: &str, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        let spec = self
+            .manifest
+            .artifact(name)
+            .ok_or_else(|| anyhow!("unknown artifact {name:?}"))?;
+        if inputs.len() != spec.inputs.len() {
+            return Err(anyhow!(
+                "{name}: expected {} inputs, got {}",
+                spec.inputs.len(),
+                inputs.len()
+            ));
+        }
+        let exe = self.load(name)?;
+        let result = exe.execute::<xla::Literal>(inputs)?;
+        let lit = result
+            .first()
+            .and_then(|d| d.first())
+            .ok_or_else(|| anyhow!("{name}: empty execution result"))?
+            .to_literal_sync()?;
+        Ok(lit.to_tuple()?)
+    }
+
+    /// Convenience: run on f32 matrices / vectors (the common case).
+    pub fn execute_f32(&mut self, name: &str, inputs: &[LiteralArg]) -> Result<Vec<Vec<f32>>> {
+        let lits: Vec<xla::Literal> = inputs
+            .iter()
+            .map(|a| a.to_literal())
+            .collect::<Result<_>>()?;
+        let outs = self.execute(name, &lits)?;
+        outs.iter().map(|l| Ok(l.to_vec::<f32>()?)).collect()
+    }
+}
+
+/// Typed argument helper for [`PjrtRuntime::execute_f32`].
+pub enum LiteralArg<'a> {
+    /// Flat f32 data with an explicit shape.
+    F32(&'a [f32], Vec<i64>),
+    /// A 2-D matrix.
+    MatrixRef(&'a Matrix),
+    /// An i32 scalar (token ids, lengths, positions).
+    I32Scalar(i32),
+    /// An i32 vector (token buffers).
+    I32Vec(&'a [i32]),
+}
+
+impl LiteralArg<'_> {
+    pub fn to_literal(&self) -> Result<xla::Literal> {
+        Ok(match self {
+            LiteralArg::F32(data, dims) => {
+                let flat = xla::Literal::vec1(data);
+                if dims.len() == 1 && dims[0] as usize == data.len() {
+                    flat
+                } else {
+                    flat.reshape(dims)?
+                }
+            }
+            LiteralArg::MatrixRef(m) => xla::Literal::vec1(m.as_slice())
+                .reshape(&[m.rows() as i64, m.cols() as i64])?,
+            LiteralArg::I32Scalar(v) => xla::Literal::scalar(*v),
+            LiteralArg::I32Vec(v) => xla::Literal::vec1(v),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_arg_shapes() {
+        let m = Matrix::from_fn(2, 3, |i, j| (i * 3 + j) as f32);
+        let lit = LiteralArg::MatrixRef(&m).to_literal().unwrap();
+        assert_eq!(lit.element_count(), 6);
+        let lit2 = LiteralArg::I32Scalar(7).to_literal().unwrap();
+        assert_eq!(lit2.element_count(), 1);
+        let v = vec![1.0f32, 2.0, 3.0, 4.0];
+        let lit3 = LiteralArg::F32(&v, vec![2, 2]).to_literal().unwrap();
+        assert_eq!(lit3.element_count(), 4);
+        let toks = vec![1i32, 2, 3];
+        assert_eq!(LiteralArg::I32Vec(&toks).to_literal().unwrap().element_count(), 3);
+    }
+
+    // PJRT client construction + artifact execution are covered by the
+    // integration tests in rust/tests/pjrt_roundtrip.rs (they need the
+    // artifacts directory built by `make artifacts`).
+}

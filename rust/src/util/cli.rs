@@ -1,0 +1,140 @@
+//! Minimal CLI argument parser (clap is unavailable offline).
+//!
+//! Supports `--flag`, `--key value`, and `--key=value` forms plus free
+//! positional arguments. Every experiment binary and the coordinator's
+//! `wildcat` CLI parse through this.
+
+use std::collections::BTreeMap;
+
+/// Parsed command-line arguments.
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    opts: BTreeMap<String, String>,
+    flags: Vec<String>,
+    positional: Vec<String>,
+}
+
+impl Args {
+    /// Parse from `std::env::args()` (skipping argv[0]).
+    pub fn from_env() -> Self {
+        Self::parse(std::env::args().skip(1))
+    }
+
+    /// Parse from an iterator of argument strings.
+    pub fn parse<I, S>(args: I) -> Self
+    where
+        I: IntoIterator<Item = S>,
+        S: Into<String>,
+    {
+        let toks: Vec<String> = args.into_iter().map(Into::into).collect();
+        let mut out = Args::default();
+        let mut i = 0;
+        while i < toks.len() {
+            let t = &toks[i];
+            if let Some(body) = t.strip_prefix("--") {
+                if let Some(eq) = body.find('=') {
+                    out.opts
+                        .insert(body[..eq].to_string(), body[eq + 1..].to_string());
+                } else if i + 1 < toks.len() && !toks[i + 1].starts_with("--") {
+                    out.opts.insert(body.to_string(), toks[i + 1].clone());
+                    i += 1;
+                } else {
+                    out.flags.push(body.to_string());
+                }
+            } else {
+                out.positional.push(t.clone());
+            }
+            i += 1;
+        }
+        out
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.opts.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_or(&self, name: &str, default: &str) -> String {
+        self.get(name).unwrap_or(default).to_string()
+    }
+
+    /// Typed getter with default; panics with a clear message on parse
+    /// failure (these are operator-facing binaries).
+    pub fn get_parse<T: std::str::FromStr>(&self, name: &str, default: T) -> T {
+        match self.get(name) {
+            None => default,
+            Some(s) => s
+                .parse::<T>()
+                .unwrap_or_else(|_| panic!("--{name}: cannot parse {s:?}")),
+        }
+    }
+
+    /// Comma-separated list getter, e.g. `--ranks 64,128,256`.
+    pub fn get_list<T: std::str::FromStr>(&self, name: &str, default: &[T]) -> Vec<T>
+    where
+        T: Clone,
+    {
+        match self.get(name) {
+            None => default.to_vec(),
+            Some(s) => s
+                .split(',')
+                .filter(|p| !p.is_empty())
+                .map(|p| {
+                    p.trim()
+                        .parse::<T>()
+                        .unwrap_or_else(|_| panic!("--{name}: cannot parse element {p:?}"))
+                })
+                .collect(),
+        }
+    }
+
+    pub fn positional(&self) -> &[String] {
+        &self.positional
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_forms() {
+        let a = Args::parse(["--seed", "42", "--fast", "--out=/tmp/x", "pos1", "pos2"]);
+        assert_eq!(a.get("seed"), Some("42"));
+        assert!(a.flag("fast"));
+        assert!(!a.flag("slow"));
+        assert_eq!(a.get("out"), Some("/tmp/x"));
+        assert_eq!(a.positional(), &["pos1".to_string(), "pos2".to_string()]);
+    }
+
+    #[test]
+    fn typed_getters() {
+        let a = Args::parse(["--n", "1024", "--tau", "2.5"]);
+        assert_eq!(a.get_parse::<usize>("n", 0), 1024);
+        assert!((a.get_parse::<f64>("tau", 0.0) - 2.5).abs() < 1e-12);
+        assert_eq!(a.get_parse::<usize>("missing", 7), 7);
+    }
+
+    #[test]
+    fn list_getter() {
+        let a = Args::parse(["--ranks", "64,128,256"]);
+        assert_eq!(a.get_list::<usize>("ranks", &[]), vec![64, 128, 256]);
+        assert_eq!(a.get_list::<usize>("bins", &[2, 4]), vec![2, 4]);
+    }
+
+    #[test]
+    fn trailing_flag() {
+        let a = Args::parse(["--verbose"]);
+        assert!(a.flag("verbose"));
+    }
+
+    #[test]
+    #[should_panic]
+    fn bad_parse_panics() {
+        let a = Args::parse(["--n", "abc"]);
+        a.get_parse::<usize>("n", 0);
+    }
+}

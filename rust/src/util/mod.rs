@@ -1,0 +1,9 @@
+//! General utilities: statistics, table rendering, CLI parsing, JSON,
+//! property-test helpers. These replace criterion/clap/serde, which are
+//! unavailable in the offline build.
+
+pub mod cli;
+pub mod json;
+pub mod prop;
+pub mod stats;
+pub mod table;

@@ -1,0 +1,101 @@
+//! Tiny property-testing helper (proptest is unavailable offline).
+//!
+//! `Cases` drives a closure over many seeded random cases and reports the
+//! first failing seed so a failure reproduces deterministically:
+//!
+//! ```no_run
+//! // (no_run: doctest binaries don't inherit the xla rpath link flags)
+//! use wildcat::util::prop::Cases;
+//! Cases::new(64).run(|rng| {
+//!     let n = 1 + rng.below(100);
+//!     assert!(n >= 1 && n <= 100);
+//! });
+//! ```
+
+use crate::rng::Rng;
+
+/// Runs a property over `n` seeded cases.
+pub struct Cases {
+    n: usize,
+    base_seed: u64,
+}
+
+impl Cases {
+    pub fn new(n: usize) -> Self {
+        // Honour WILDCAT_PROP_SEED for reproducing CI failures.
+        let base_seed = std::env::var("WILDCAT_PROP_SEED")
+            .ok()
+            .and_then(|s| s.parse().ok())
+            .unwrap_or(0xC0FFEE);
+        Cases { n, base_seed }
+    }
+
+    pub fn with_seed(mut self, seed: u64) -> Self {
+        self.base_seed = seed;
+        self
+    }
+
+    /// Run the property; panics (with the case seed) on the first failure.
+    pub fn run<F: Fn(&mut Rng) + std::panic::RefUnwindSafe>(&self, f: F) {
+        for case in 0..self.n {
+            let seed = self.base_seed.wrapping_add(case as u64).wrapping_mul(0x9E3779B97F4A7C15);
+            let result = std::panic::catch_unwind(|| {
+                let mut rng = Rng::seed_from(seed);
+                f(&mut rng);
+            });
+            if let Err(e) = result {
+                let msg = e
+                    .downcast_ref::<String>()
+                    .cloned()
+                    .or_else(|| e.downcast_ref::<&str>().map(|s| s.to_string()))
+                    .unwrap_or_else(|| "<non-string panic>".into());
+                panic!(
+                    "property failed on case {case} (WILDCAT_PROP_SEED={}) : {msg}",
+                    self.base_seed
+                );
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passes_trivial_property() {
+        Cases::new(32).run(|rng| {
+            let x = rng.uniform();
+            assert!((0.0..1.0).contains(&x));
+        });
+    }
+
+    #[test]
+    fn reports_failures() {
+        let res = std::panic::catch_unwind(|| {
+            Cases::new(8).with_seed(1).run(|_| panic!("boom"));
+        });
+        assert!(res.is_err());
+    }
+
+    #[test]
+    fn cases_are_deterministic() {
+        let mut seen1 = Vec::new();
+        Cases::new(4).with_seed(9).run(|rng| {
+            // no assertion; just record
+            let _ = rng;
+        });
+        // determinism by construction: same seed -> same streams; check via values
+        for case in 0..4u64 {
+            let seed = 9u64.wrapping_add(case).wrapping_mul(0x9E3779B97F4A7C15);
+            seen1.push(Rng::seed_from(seed).next_u64());
+        }
+        let seen2: Vec<u64> = (0..4u64)
+            .map(|case| {
+                let seed = 9u64.wrapping_add(case).wrapping_mul(0x9E3779B97F4A7C15);
+                Rng::seed_from(seed).next_u64()
+            })
+            .collect();
+        assert_eq!(seen1, seen2);
+    }
+}

@@ -1,0 +1,234 @@
+//! Summary statistics over samples: mean / stddev / median / percentiles.
+//! Shared by the bench harness and the coordinator's latency metrics.
+
+/// Summary of a sample of f64 observations.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct Summary {
+    pub count: usize,
+    pub mean: f64,
+    pub stddev: f64,
+    pub min: f64,
+    pub max: f64,
+    pub median: f64,
+    pub p90: f64,
+    pub p99: f64,
+}
+
+/// Percentile by linear interpolation on the sorted sample, `q ∈ [0,1]`.
+pub fn percentile(sorted: &[f64], q: f64) -> f64 {
+    assert!(!sorted.is_empty(), "percentile of empty sample");
+    let q = q.clamp(0.0, 1.0);
+    if sorted.len() == 1 {
+        return sorted[0];
+    }
+    let pos = q * (sorted.len() - 1) as f64;
+    let lo = pos.floor() as usize;
+    let hi = pos.ceil() as usize;
+    let frac = pos - lo as f64;
+    sorted[lo] * (1.0 - frac) + sorted[hi] * frac
+}
+
+/// Compute a [`Summary`] of the sample. Panics on an empty sample.
+pub fn summarize(samples: &[f64]) -> Summary {
+    assert!(!samples.is_empty(), "summarize of empty sample");
+    let n = samples.len();
+    let mean = samples.iter().sum::<f64>() / n as f64;
+    let var = if n > 1 {
+        samples.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / (n - 1) as f64
+    } else {
+        0.0
+    };
+    let mut sorted = samples.to_vec();
+    sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    Summary {
+        count: n,
+        mean,
+        stddev: var.sqrt(),
+        min: sorted[0],
+        max: sorted[n - 1],
+        median: percentile(&sorted, 0.5),
+        p90: percentile(&sorted, 0.9),
+        p99: percentile(&sorted, 0.99),
+    }
+}
+
+/// Online (streaming) mean/variance via Welford's algorithm; used by the
+/// coordinator metrics where storing every observation is undesirable.
+#[derive(Clone, Debug, Default)]
+pub struct Welford {
+    n: u64,
+    mean: f64,
+    m2: f64,
+    min: f64,
+    max: f64,
+}
+
+impl Welford {
+    pub fn new() -> Self {
+        Welford { n: 0, mean: 0.0, m2: 0.0, min: f64::INFINITY, max: f64::NEG_INFINITY }
+    }
+
+    pub fn push(&mut self, x: f64) {
+        self.n += 1;
+        let delta = x - self.mean;
+        self.mean += delta / self.n as f64;
+        self.m2 += delta * (x - self.mean);
+        self.min = self.min.min(x);
+        self.max = self.max.max(x);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.n
+    }
+
+    pub fn mean(&self) -> f64 {
+        self.mean
+    }
+
+    pub fn variance(&self) -> f64 {
+        if self.n > 1 {
+            self.m2 / (self.n - 1) as f64
+        } else {
+            0.0
+        }
+    }
+
+    pub fn stddev(&self) -> f64 {
+        self.variance().sqrt()
+    }
+
+    pub fn min(&self) -> f64 {
+        self.min
+    }
+
+    pub fn max(&self) -> f64 {
+        self.max
+    }
+}
+
+/// Fixed-bucket latency histogram (log-spaced), cheap enough for the
+/// serving hot path. Buckets are `[base * growth^i, base * growth^{i+1})`.
+#[derive(Clone, Debug)]
+pub struct LogHistogram {
+    base: f64,
+    growth: f64,
+    counts: Vec<u64>,
+    underflow: u64,
+    total: u64,
+}
+
+impl LogHistogram {
+    /// Typical latency histogram: 1 µs base, ×1.5 growth, 64 buckets spans
+    /// ~1 µs … ~10^11 µs.
+    pub fn latency_us() -> Self {
+        Self::new(1.0, 1.5, 64)
+    }
+
+    pub fn new(base: f64, growth: f64, buckets: usize) -> Self {
+        assert!(base > 0.0 && growth > 1.0 && buckets > 0);
+        LogHistogram { base, growth, counts: vec![0; buckets], underflow: 0, total: 0 }
+    }
+
+    pub fn record(&mut self, x: f64) {
+        self.total += 1;
+        if x < self.base {
+            self.underflow += 1;
+            return;
+        }
+        let idx = ((x / self.base).ln() / self.growth.ln()).floor() as usize;
+        let idx = idx.min(self.counts.len() - 1);
+        self.counts[idx] += 1;
+    }
+
+    pub fn total(&self) -> u64 {
+        self.total
+    }
+
+    /// Approximate quantile from bucket boundaries (upper edge).
+    pub fn quantile(&self, q: f64) -> f64 {
+        if self.total == 0 {
+            return 0.0;
+        }
+        let target = (q.clamp(0.0, 1.0) * self.total as f64).ceil() as u64;
+        let mut acc = self.underflow;
+        if acc >= target {
+            return self.base;
+        }
+        for (i, &c) in self.counts.iter().enumerate() {
+            acc += c;
+            if acc >= target {
+                return self.base * self.growth.powi(i as i32 + 1);
+            }
+        }
+        self.base * self.growth.powi(self.counts.len() as i32)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn summary_basic() {
+        let s = summarize(&[1.0, 2.0, 3.0, 4.0, 5.0]);
+        assert_eq!(s.count, 5);
+        assert!((s.mean - 3.0).abs() < 1e-12);
+        assert!((s.median - 3.0).abs() < 1e-12);
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.max, 5.0);
+        assert!((s.stddev - (2.5f64).sqrt()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn summary_single() {
+        let s = summarize(&[7.0]);
+        assert_eq!(s.median, 7.0);
+        assert_eq!(s.stddev, 0.0);
+        assert_eq!(s.p99, 7.0);
+    }
+
+    #[test]
+    fn percentile_interpolates() {
+        let v = [0.0, 10.0];
+        assert!((percentile(&v, 0.5) - 5.0).abs() < 1e-12);
+        assert_eq!(percentile(&v, 0.0), 0.0);
+        assert_eq!(percentile(&v, 1.0), 10.0);
+    }
+
+    #[test]
+    fn welford_matches_batch() {
+        let xs: Vec<f64> = (0..100).map(|i| (i as f64).sin() * 3.0 + 1.0).collect();
+        let mut w = Welford::new();
+        for &x in &xs {
+            w.push(x);
+        }
+        let s = summarize(&xs);
+        assert!((w.mean() - s.mean).abs() < 1e-10);
+        assert!((w.stddev() - s.stddev).abs() < 1e-10);
+        assert_eq!(w.count(), 100);
+        assert_eq!(w.min(), s.min);
+        assert_eq!(w.max(), s.max);
+    }
+
+    #[test]
+    fn histogram_quantiles_reasonable() {
+        let mut h = LogHistogram::latency_us();
+        for i in 1..=1000 {
+            h.record(i as f64);
+        }
+        let p50 = h.quantile(0.5);
+        // bucket edges are coarse (×1.5) — allow one bucket of slack
+        assert!(p50 >= 300.0 && p50 <= 1200.0, "p50={p50}");
+        assert!(h.quantile(1.0) >= 1000.0);
+        assert_eq!(h.total(), 1000);
+    }
+
+    #[test]
+    fn histogram_underflow() {
+        let mut h = LogHistogram::new(10.0, 2.0, 8);
+        h.record(0.5);
+        h.record(1e9);
+        assert_eq!(h.total(), 2);
+        assert!(h.quantile(0.25) <= 10.0);
+    }
+}

@@ -1,0 +1,133 @@
+//! Synthetic attention workloads at the paper's benchmark shapes.
+//!
+//! The BigGAN / T2T-ViT tensors themselves are not available offline
+//! (DESIGN.md §3); we reproduce the *shapes* exactly and approximate the
+//! activation statistics: vision attention activations are near-Gaussian
+//! with mild anisotropy and a non-zero mean direction, which we model by
+//! a low-rank colouring plus mean offset (the anisotropy is what makes
+//! coreset methods interesting — pure isotropy is their best case, so we
+//! avoid it).
+
+use crate::linalg::{gemm, Matrix};
+use crate::rng::Rng;
+
+/// A (Q, K, V) attention problem plus its softmax scale.
+pub struct AttentionWorkload {
+    pub q: Matrix,
+    pub k: Matrix,
+    pub v: Matrix,
+    pub beta: f32,
+    pub label: String,
+}
+
+/// i.i.d. Gaussian QKV (the Fig. 3 setting: "independent standard
+/// Gaussian entries", β = 1/√d).
+pub fn gaussian_qkv(rng: &mut Rng, m: usize, n: usize, d: usize, dv: usize) -> AttentionWorkload {
+    AttentionWorkload {
+        q: Matrix::randn(rng, m, d),
+        k: Matrix::randn(rng, n, d),
+        v: Matrix::randn(rng, n, dv),
+        beta: 1.0 / (d as f32).sqrt(),
+        label: format!("gaussian m={m} n={n} d={d}"),
+    }
+}
+
+/// Anisotropic "activation-like" QKV: low-rank colouring + mean offset.
+/// `aniso_rank` directions carry `aniso_gain`× the variance.
+pub fn activation_qkv(
+    rng: &mut Rng,
+    m: usize,
+    n: usize,
+    d: usize,
+    dv: usize,
+    aniso_rank: usize,
+    aniso_gain: f32,
+) -> AttentionWorkload {
+    let colour = |x: Matrix, rng: &mut Rng| -> Matrix {
+        let r = aniso_rank.min(d);
+        if r == 0 {
+            return x;
+        }
+        let dirs = Matrix::randn(rng, r, d);
+        // x + gain * (x dirsᵀ) dirs / d  — boost variance along `dirs`
+        let proj = gemm::matmul_transb(&x, &dirs); // m×r
+        let boost = gemm::matmul(&proj, &dirs); // m×d
+        let mut out = x;
+        for (o, b) in out.as_mut_slice().iter_mut().zip(boost.as_slice()) {
+            *o += aniso_gain * b / d as f32;
+        }
+        out
+    };
+    let mean: Vec<f32> = (0..d).map(|i| 0.3 * ((i as f32) * 0.7).sin()).collect();
+    let mut q = colour(Matrix::randn(rng, m, d), rng);
+    let mut k = colour(Matrix::randn(rng, n, d), rng);
+    q.add_row_vector_mut(&mean);
+    k.add_row_vector_mut(&mean);
+    AttentionWorkload {
+        q,
+        k,
+        v: Matrix::randn(rng, n, dv),
+        beta: 1.0 / (d as f32).sqrt(),
+        label: format!("activation m={m} n={n} d={d}"),
+    }
+}
+
+/// The BigGAN-512 attention-layer shapes (Sec. 4.1): Q 4096×64,
+/// K 1024×64, V 1024×256.
+pub fn biggan_shapes() -> (usize, usize, usize, usize) {
+    (4096, 1024, 64, 256)
+}
+
+/// T2T-ViT layer shapes (Sec. 4.2): layer 1 (3136, 64), layer 2 (784, 64)
+/// with self-attention (m = n) and d_v = d.
+pub fn t2t_vit_shapes() -> [(usize, usize, usize, usize); 2] {
+    [(3136, 3136, 64, 64), (784, 784, 64, 64)]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shapes_match_paper() {
+        assert_eq!(biggan_shapes(), (4096, 1024, 64, 256));
+        assert_eq!(t2t_vit_shapes()[0], (3136, 3136, 64, 64));
+        assert_eq!(t2t_vit_shapes()[1], (784, 784, 64, 64));
+    }
+
+    #[test]
+    fn gaussian_workload_statistics() {
+        let mut rng = Rng::seed_from(1);
+        let w = gaussian_qkv(&mut rng, 64, 128, 16, 8);
+        assert_eq!((w.q.rows(), w.q.cols()), (64, 16));
+        assert_eq!((w.k.rows(), w.k.cols()), (128, 16));
+        assert_eq!((w.v.rows(), w.v.cols()), (128, 8));
+        assert!((w.beta - 0.25).abs() < 1e-6);
+        let mean: f64 = w.k.as_slice().iter().map(|&x| x as f64).sum::<f64>()
+            / w.k.as_slice().len() as f64;
+        assert!(mean.abs() < 0.1);
+    }
+
+    #[test]
+    fn activation_workload_is_anisotropic() {
+        let mut rng = Rng::seed_from(2);
+        let iso = gaussian_qkv(&mut rng, 256, 256, 16, 8);
+        let ani = activation_qkv(&mut rng, 256, 256, 16, 8, 2, 4.0);
+        // anisotropic keys have a larger top singular direction than iso:
+        // compare ‖KᵀK‖_op via power iteration on the f64 gram
+        let gram = |k: &Matrix| {
+            let d = k.cols();
+            let mut g = vec![0.0f64; d * d];
+            for i in 0..k.rows() {
+                let r = k.row(i);
+                for a in 0..d {
+                    for b in 0..d {
+                        g[a * d + b] += r[a] as f64 * r[b] as f64;
+                    }
+                }
+            }
+            crate::linalg::op_norm_sym_f64(&g, d, 100)
+        };
+        assert!(gram(&ani.k) > gram(&iso.k) * 1.3);
+    }
+}

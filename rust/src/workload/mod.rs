@@ -1,0 +1,11 @@
+//! Workload generators: synthetic attention inputs (Tab. 2/3, Fig. 3),
+//! the 13-task long-context suite standing in for LongBench-E (Tab. 4),
+//! and Poisson arrival traces for the serving benches.
+
+pub mod gaussian;
+pub mod tasks;
+pub mod trace;
+
+pub use gaussian::{biggan_shapes, gaussian_qkv, t2t_vit_shapes, AttentionWorkload};
+pub use tasks::{task_suite, LongContextTask, TaskInstance, TaskKind};
+pub use trace::{poisson_trace, Arrival};

@@ -1,0 +1,321 @@
+//! The 13-task long-context suite — the Tab. 4 stand-in for LongBench-E
+//! (see DESIGN.md §3 for the substitution argument). Every task is built
+//! from the two skills the build-time LM was trained on (key→value
+//! retrieval and induction copying) with held-out parameterisations:
+//! pair placement depth, distractor density, query multiplicity, and
+//! copy periods. Token conventions mirror `python/compile/tasks.py`:
+//!
+//! ```text
+//! PAD=0  BOS=1  KEY=2  VAL=3  QUERY=4  SEP=5  content: 6..vocab-1
+//! ```
+
+use crate::rng::Rng;
+
+pub const PAD: u32 = 0;
+pub const BOS: u32 = 1;
+pub const KEY: u32 = 2;
+pub const VAL: u32 = 3;
+pub const QUERY: u32 = 4;
+pub const SEP: u32 = 5;
+pub const CONTENT_START: u32 = 6;
+/// Disjoint token sub-ranges (mirror of python/compile/tasks.py): keys
+/// never collide with filler, keeping retrieval unambiguous.
+pub const KEY_LO: u32 = 6;
+pub const KEY_HI: u32 = 20;
+pub const VAL_LO: u32 = 20;
+pub const VAL_HI: u32 = 34;
+pub const FILLER_LO: u32 = 34;
+
+/// Task family (names map to the LongBench-E columns of Tab. 4).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum TaskKind {
+    /// Retrieval with the pair placed in a context-depth band.
+    KvDepth { lo_pct: u8, hi_pct: u8 },
+    /// Retrieval among `distractors` additional pairs.
+    KvDistractors { distractors: u8 },
+    /// Retrieval scored over two consecutive queries.
+    KvTwoQueries,
+    /// Retrieval where the target pair is stated twice (consistency).
+    KvRepeated,
+    /// Pure single-pair passkey retrieval.
+    Passkey,
+    /// Induction copying with the given period.
+    Induction { period: u16 },
+}
+
+/// One benchmark task: a name (LongBench analogue) + generator kind.
+#[derive(Clone, Debug)]
+pub struct LongContextTask {
+    pub name: &'static str,
+    pub kind: TaskKind,
+}
+
+/// The 13-task suite in Tab. 4 column order.
+pub fn task_suite() -> Vec<LongContextTask> {
+    use TaskKind::*;
+    vec![
+        LongContextTask { name: "qasper", kind: KvDepth { lo_pct: 5, hi_pct: 25 } },
+        LongContextTask { name: "multifield", kind: KvDepth { lo_pct: 30, hi_pct: 55 } },
+        LongContextTask { name: "hotpot", kind: KvDepth { lo_pct: 60, hi_pct: 85 } },
+        LongContextTask { name: "2wiki", kind: KvDistractors { distractors: 2 } },
+        LongContextTask { name: "gov", kind: KvDistractors { distractors: 5 } },
+        LongContextTask { name: "multinews", kind: KvDistractors { distractors: 9 } },
+        LongContextTask { name: "trec", kind: KvTwoQueries },
+        LongContextTask { name: "trivia", kind: Induction { period: 16 } },
+        LongContextTask { name: "samsum", kind: Induction { period: 48 } },
+        LongContextTask { name: "p.count", kind: KvRepeated },
+        LongContextTask { name: "p.ret", kind: Passkey },
+        LongContextTask { name: "lcc", kind: Induction { period: 24 } },
+        LongContextTask { name: "repo-p", kind: Induction { period: 32 } },
+    ]
+}
+
+/// One evaluation episode under the serving protocol: prefill `context`
+/// (the document), compress the cache, then feed `query` tokens through
+/// *decode* (they arrive after compression, like a user turn), and
+/// greedily decode `expected.len()` answer tokens; score = fraction
+/// matching `expected`.
+#[derive(Clone, Debug)]
+pub struct TaskInstance {
+    pub context: Vec<u32>,
+    pub query: Vec<u32>,
+    pub expected: Vec<u32>,
+}
+
+fn content(rng: &mut Rng, vocab: u32) -> u32 {
+    CONTENT_START + rng.below((vocab - CONTENT_START) as usize) as u32
+}
+
+fn filler(rng: &mut Rng, vocab: u32) -> u32 {
+    FILLER_LO + rng.below((vocab - FILLER_LO) as usize) as u32
+}
+
+fn key_token(rng: &mut Rng) -> u32 {
+    KEY_LO + rng.below((KEY_HI - KEY_LO) as usize) as u32
+}
+
+fn val_token(rng: &mut Rng) -> u32 {
+    VAL_LO + rng.below((VAL_HI - VAL_LO) as usize) as u32
+}
+
+/// Place `pairs` [KEY k v] triplets at depths within `[lo, hi)` (absolute
+/// positions) of a filler sequence; returns (keys, vals).
+fn place_pairs(
+    toks: &mut [u32],
+    rng: &mut Rng,
+    _vocab: u32,
+    n_pairs: usize,
+    lo: usize,
+    hi: usize,
+) -> (Vec<u32>, Vec<u32>) {
+    assert!(hi <= toks.len() && lo < hi);
+    let slots_avail = (hi - lo) / 3;
+    assert!(slots_avail >= n_pairs, "band too narrow for {n_pairs} pairs");
+    let chosen = rng.sample_without_replacement(slots_avail, n_pairs);
+    let mut keys = Vec::with_capacity(n_pairs);
+    let mut vals = Vec::with_capacity(n_pairs);
+    for &slot in &chosen {
+        let s = lo + slot * 3;
+        let mut k = key_token(rng);
+        while keys.contains(&k) {
+            k = key_token(rng);
+        }
+        let v = val_token(rng);
+        toks[s] = KEY;
+        toks[s + 1] = k;
+        toks[s + 2] = v;
+        keys.push(k);
+        vals.push(v);
+    }
+    (keys, vals)
+}
+
+impl TaskKind {
+    /// Generate one instance with context length `n`.
+    pub fn generate(&self, rng: &mut Rng, n: usize, vocab: u32) -> TaskInstance {
+        let mut toks: Vec<u32> = (0..n).map(|_| filler(rng, vocab)).collect();
+        toks[0] = BOS;
+        match *self {
+            TaskKind::KvDepth { lo_pct, hi_pct } => {
+                let lo = (n * lo_pct as usize / 100).max(1);
+                let hi = (n * hi_pct as usize / 100).min(n - 3).max(lo + 9);
+                let (keys, vals) = place_pairs(&mut toks, rng, vocab, 3, lo, hi);
+                let t = rng.below(3);
+                toks.truncate(n - 2);
+                TaskInstance {
+                    context: toks,
+                    query: vec![KEY, keys[t]],
+                    expected: vec![vals[t]],
+                }
+            }
+            TaskKind::KvDistractors { distractors } => {
+                let n_pairs = 1 + distractors as usize;
+                let (keys, vals) = place_pairs(&mut toks, rng, vocab, n_pairs, 1, n - 3);
+                let t = rng.below(n_pairs);
+                toks.truncate(n - 2);
+                TaskInstance {
+                    context: toks,
+                    query: vec![KEY, keys[t]],
+                    expected: vec![vals[t]],
+                }
+            }
+            TaskKind::KvTwoQueries => {
+                let (keys, vals) = place_pairs(&mut toks, rng, vocab, 4, 1, n - 6);
+                let t1 = rng.below(4);
+                // first query is fully in-context; second ends the context
+                toks[n - 5] = KEY;
+                toks[n - 4] = keys[t1];
+                toks[n - 3] = vals[t1];
+                let t2 = rng.below(4);
+                toks.truncate(n - 2);
+                TaskInstance {
+                    context: toks,
+                    query: vec![KEY, keys[t2]],
+                    expected: vec![vals[t2]],
+                }
+            }
+            TaskKind::KvRepeated => {
+                let (keys, vals) = place_pairs(&mut toks, rng, vocab, 2, 1, n / 2);
+                // restate pair 0 in the second half
+                let s = n / 2 + rng.below((n - 3) - n / 2 - 2);
+                toks[s] = KEY;
+                toks[s + 1] = keys[0];
+                toks[s + 2] = vals[0];
+                toks.truncate(n - 2);
+                TaskInstance {
+                    context: toks,
+                    query: vec![KEY, keys[0]],
+                    expected: vec![vals[0]],
+                }
+            }
+            TaskKind::Passkey => {
+                let (keys, vals) = place_pairs(&mut toks, rng, vocab, 1, 1, n - 3);
+                toks.truncate(n - 2);
+                TaskInstance {
+                    context: toks,
+                    query: vec![KEY, keys[0]],
+                    expected: vec![vals[0]],
+                }
+            }
+            TaskKind::Induction { period } => {
+                let p = (period as usize).min(n / 3).max(4);
+                let seg: Vec<u32> = (0..p).map(|_| content(rng, vocab)).collect();
+                for i in 0..n {
+                    toks[i] = seg[i % p];
+                }
+                toks[0] = BOS;
+                // the document stops 4 tokens early; the first 2 held-out
+                // tokens arrive as the post-compression "query", the model
+                // must continue the copy for 2 more
+                let cut = n - 4;
+                let query = vec![seg[cut % p], seg[(cut + 1) % p]];
+                let expected = vec![seg[(cut + 2) % p], seg[(cut + 3) % p]];
+                TaskInstance { context: toks[..cut].to_vec(), query, expected }
+            }
+        }
+    }
+}
+
+/// Score one decoded continuation against the expected tokens.
+pub fn score(expected: &[u32], got: &[u32]) -> f64 {
+    if expected.is_empty() {
+        return 1.0;
+    }
+    let hits = expected
+        .iter()
+        .zip(got)
+        .filter(|(a, b)| a == b)
+        .count();
+    hits as f64 / expected.len() as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn suite_has_13_named_tasks() {
+        let s = task_suite();
+        assert_eq!(s.len(), 13);
+        let names: std::collections::HashSet<&str> = s.iter().map(|t| t.name).collect();
+        assert_eq!(names.len(), 13);
+        assert!(names.contains("p.ret"));
+    }
+
+    #[test]
+    fn instances_well_formed() {
+        let mut rng = Rng::seed_from(1);
+        for task in task_suite() {
+            for _ in 0..5 {
+                let inst = task.kind.generate(&mut rng, 256, 64);
+                assert!(!inst.context.is_empty(), "{}", task.name);
+                assert!(!inst.query.is_empty(), "{}", task.name);
+                assert!(!inst.expected.is_empty());
+                assert!(inst.context.iter().all(|&t| t < 64), "{}", task.name);
+                assert!(inst.query.iter().all(|&t| t < 64));
+                assert!(inst.expected.iter().all(|&t| (6..64).contains(&t)));
+                assert_eq!(inst.context[0], BOS);
+            }
+        }
+    }
+
+    #[test]
+    fn retrieval_answer_is_recoverable_from_context() {
+        // the [KEY k v] pair for the queried key must exist in context
+        let mut rng = Rng::seed_from(2);
+        let inst = TaskKind::Passkey.generate(&mut rng, 200, 64);
+        let n = inst.context.len();
+        assert_eq!(inst.query[0], KEY);
+        let qk = inst.query[1];
+        let found = (0..n - 2).any(|i| {
+            inst.context[i] == KEY
+                && inst.context[i + 1] == qk
+                && inst.context[i + 2] == inst.expected[0]
+        });
+        assert!(found);
+    }
+
+    #[test]
+    fn depth_band_respected() {
+        let mut rng = Rng::seed_from(3);
+        let kind = TaskKind::KvDepth { lo_pct: 60, hi_pct: 85 };
+        let inst = kind.generate(&mut rng, 300, 64);
+        // all KEY markers in the body sit within [60%, 85%) of the context
+        let n = inst.context.len();
+        for i in 1..n - 2 {
+            if inst.context[i] == KEY {
+                let pct = i * 100 / n;
+                assert!((60..88).contains(&pct), "KEY at {pct}%");
+            }
+        }
+    }
+
+    #[test]
+    fn induction_expectation_is_continuation() {
+        let mut rng = Rng::seed_from(4);
+        let inst = TaskKind::Induction { period: 16 }.generate(&mut rng, 256, 64);
+        let cut = inst.context.len();
+        // query + expected continue the periodic pattern
+        assert_eq!(inst.query[0], inst.context[cut - 16]);
+        assert_eq!(inst.query[1], inst.context[cut - 15]);
+        assert_eq!(inst.expected[0], inst.context[cut - 14]);
+        assert_eq!(inst.expected[1], inst.context[cut - 13]);
+    }
+
+    #[test]
+    fn score_fraction() {
+        assert_eq!(score(&[1, 2], &[1, 2]), 1.0);
+        assert_eq!(score(&[1, 2], &[1, 3]), 0.5);
+        assert_eq!(score(&[1, 2], &[0, 0]), 0.0);
+        assert_eq!(score(&[1, 2], &[1]), 0.5); // short output
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let a = TaskKind::Passkey.generate(&mut Rng::seed_from(9), 128, 64);
+        let b = TaskKind::Passkey.generate(&mut Rng::seed_from(9), 128, 64);
+        assert_eq!(a.context, b.context);
+        assert_eq!(a.query, b.query);
+        assert_eq!(a.expected, b.expected);
+    }
+}

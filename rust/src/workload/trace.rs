@@ -1,0 +1,81 @@
+//! Poisson arrival traces — the synthetic stand-in for production request
+//! traces (DESIGN.md §3). Used by the serving demo and §M.3-style
+//! overhead measurements.
+
+use crate::rng::Rng;
+use std::time::Duration;
+
+/// One request arrival.
+#[derive(Clone, Debug)]
+pub struct Arrival {
+    /// Offset from trace start.
+    pub at: Duration,
+    pub prompt_len: usize,
+    pub max_new: usize,
+}
+
+/// Poisson arrivals at `rate` req/s for `duration`, with prompt lengths
+/// log-uniform in `[min_prompt, max_prompt]` and decode lengths uniform
+/// in `[1, max_new]`.
+pub fn poisson_trace(
+    rng: &mut Rng,
+    rate: f64,
+    duration: Duration,
+    min_prompt: usize,
+    max_prompt: usize,
+    max_new: usize,
+) -> Vec<Arrival> {
+    assert!(rate > 0.0 && min_prompt >= 1 && max_prompt >= min_prompt && max_new >= 1);
+    let mut t = 0.0f64;
+    let horizon = duration.as_secs_f64();
+    let mut out = Vec::new();
+    loop {
+        t += rng.exponential(rate);
+        if t >= horizon {
+            break;
+        }
+        let lo = (min_prompt as f64).ln();
+        let hi = (max_prompt as f64).ln();
+        let prompt_len = rng.uniform_in(lo, hi).exp().round() as usize;
+        out.push(Arrival {
+            at: Duration::from_secs_f64(t),
+            prompt_len: prompt_len.clamp(min_prompt, max_prompt),
+            max_new: 1 + rng.below(max_new),
+        });
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn arrival_count_near_expectation() {
+        let mut rng = Rng::seed_from(1);
+        let trace = poisson_trace(&mut rng, 100.0, Duration::from_secs(10), 8, 64, 4);
+        // E = 1000; Poisson sd ≈ 32
+        assert!((850..1150).contains(&trace.len()), "n={}", trace.len());
+        // sorted in time
+        for w in trace.windows(2) {
+            assert!(w[0].at <= w[1].at);
+        }
+    }
+
+    #[test]
+    fn bounds_respected() {
+        let mut rng = Rng::seed_from(2);
+        for a in poisson_trace(&mut rng, 50.0, Duration::from_secs(5), 16, 128, 8) {
+            assert!((16..=128).contains(&a.prompt_len));
+            assert!((1..=8).contains(&a.max_new));
+            assert!(a.at < Duration::from_secs(5));
+        }
+    }
+
+    #[test]
+    fn empty_for_tiny_duration() {
+        let mut rng = Rng::seed_from(3);
+        let trace = poisson_trace(&mut rng, 0.0001, Duration::from_millis(1), 8, 16, 2);
+        assert!(trace.is_empty());
+    }
+}

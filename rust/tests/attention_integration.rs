@@ -1,0 +1,242 @@
+//! Cross-module integration tests over the attention stack: the Thm. 1 /
+//! Lem. 2 error chain measured end to end, invariances from Sec. 2.4, and
+//! compressor-fidelity orderings that Tab. 4 depends on.
+
+use wildcat::attention::{
+    compress_kv, exact_attention, wildcat_attention, wtd_attention, ClipRange, CompressOpts,
+    WildcatParams,
+};
+use wildcat::kernels::{kernel_cross, recenter_keys, temperature};
+use wildcat::linalg::norms::{max_abs, max_abs_diff, norm_2inf};
+use wildcat::linalg::{op_norm_sym_f64, Matrix};
+use wildcat::rng::Rng;
+use wildcat::rpnys::{residual_op_norm, rpnys};
+use wildcat::util::prop::Cases;
+
+/// Lem. 2 chain: ‖A − Â‖²_{2,∞} ≤ exp(β R_Q²) ‖h_res(K,K)‖_op, with the
+/// Nyström Â built from RPNYS output. Measured, not just asserted in the
+/// abstract: we verify the bound holds numerically.
+#[test]
+fn lemma2_nystrom_bound_holds() {
+    Cases::new(6).run(|rng| {
+        let n = 24 + rng.below(24);
+        let m = 8 + rng.below(16);
+        let d = 2 + rng.below(4);
+        let beta = 0.3f64;
+        let q = Matrix::randn(rng, m, d).scale(0.8);
+        let k = Matrix::randn(rng, n, d).scale(0.8);
+        let approx = rpnys(&k, beta, 8.min(n), rng);
+        // Â = h(Q, K_S) W ; A = h(Q, K)
+        let ks = k.select_rows(&approx.indices);
+        let r = approx.rank();
+        let h_qs = kernel_cross(&q, &ks, beta); // m×r
+        let a_true = kernel_cross(&q, &k, beta); // m×n
+        let mut a_hat = vec![0.0f64; m * n];
+        for i in 0..m {
+            for l in 0..n {
+                let mut acc = 0.0;
+                for j in 0..r {
+                    acc += h_qs[i * r + j] * approx.weights[j * n + l];
+                }
+                a_hat[i * n + l] = acc;
+            }
+        }
+        // ‖A − Â‖_{2,∞}
+        let mut row_err_max: f64 = 0.0;
+        for i in 0..m {
+            let s: f64 = (0..n)
+                .map(|l| (a_true[i * n + l] - a_hat[i * n + l]).powi(2))
+                .sum();
+            row_err_max = row_err_max.max(s);
+        }
+        let res_norm = residual_op_norm(&k, &approx, beta);
+        let r_q = q.max_row_norm();
+        let bound = (beta * r_q * r_q).exp() * res_norm;
+        assert!(
+            row_err_max <= bound * 1.05 + 1e-9,
+            "Lem.2 violated: {row_err_max} > {bound}"
+        );
+    });
+}
+
+/// Thm. 1 direction: expected residual decays roughly like the best
+/// low-rank approximation as r grows (checked as strict improvement over
+/// a wide rank range plus near-zero at full rank).
+#[test]
+fn thm1_residual_decay() {
+    let mut data_rng = Rng::seed_from(1);
+    let n = 64;
+    let k = Matrix::randn(&mut data_rng, n, 3);
+    let h = kernel_cross(&k, &k, 0.4);
+    let h_norm = op_norm_sym_f64(&h, n, 100);
+    let avg_err = |r: usize| -> f64 {
+        let mut tot = 0.0;
+        for s in 0..4 {
+            let mut rng = Rng::seed_from(50 + s);
+            let a = rpnys(&k, 0.4, r, &mut rng);
+            tot += residual_op_norm(&k, &a, 0.4);
+        }
+        tot / 4.0
+    };
+    let e4 = avg_err(4);
+    let e16 = avg_err(16);
+    let e64 = avg_err(64);
+    assert!(e16 < e4, "e4={e4} e16={e16}");
+    assert!(e64 < 1e-5 * h_norm, "full rank not exact: {e64}");
+}
+
+/// Sec. 2.4 invariances on the full WILDCAT pipeline: recentring the keys
+/// must not change the output beyond Monte-Carlo noise (the pipeline
+/// recentres internally, so we compare two *differently shifted* inputs
+/// under the same seed).
+#[test]
+fn wildcat_shift_invariance() {
+    let mut rng = Rng::seed_from(2);
+    let q = Matrix::randn(&mut rng, 40, 6);
+    let k = Matrix::randn(&mut rng, 120, 6);
+    let v = Matrix::randn(&mut rng, 120, 4);
+    let shift: Vec<f32> = (0..6).map(|i| 1.5 * ((i as f32) - 2.0)).collect();
+    let k_shift = k.sub_row_vector(&shift);
+    let params = WildcatParams { rank: 24, bins: 2, beta: Some(0.3) };
+    let a = wildcat_attention(&q, &k, &v, &params, &mut Rng::seed_from(77));
+    let b = wildcat_attention(&q, &k_shift, &v, &params, &mut Rng::seed_from(77));
+    // recentring maps both to the SAME internal keys, so with the same
+    // seed the pipelines are identical up to float noise
+    let err = max_abs_diff(&a, &b);
+    assert!(err < 2e-3, "shift changed the output: {err}");
+}
+
+/// Lem. 1's clipping: the WildCat output entries always lie in the
+/// per-column value range even at tiny rank (where raw ratios explode).
+#[test]
+fn clipping_bounds_any_rank() {
+    Cases::new(8).run(|rng| {
+        let n = 32 + rng.below(64);
+        let q = Matrix::randn(rng, 16, 8).scale(3.0);
+        let k = Matrix::randn(rng, n, 8).scale(3.0);
+        let v = Matrix::randn(rng, n, 3);
+        let params = WildcatParams { rank: 1 + rng.below(4), bins: 1, beta: Some(1.0) };
+        let o = wildcat_attention(&q, &k, &v, &params, rng);
+        let (mn, mx) = v.col_min_max();
+        for i in 0..o.rows() {
+            for j in 0..o.cols() {
+                assert!(o.get(i, j) >= mn[j] - 1e-6 && o.get(i, j) <= mx[j] + 1e-6);
+            }
+        }
+    });
+}
+
+/// The temperature rule (Eq. 4) helps: compare WildCat error with the
+/// chosen τ against a deliberately mis-scaled kernel (τ = 1, no
+/// rescaling) at the same rank on anisotropic keys.
+#[test]
+fn temperature_improves_accuracy() {
+    let mut data_rng = Rng::seed_from(3);
+    let n = 256;
+    let d = 8;
+    let q = Matrix::randn(&mut data_rng, 64, d).scale(1.2);
+    let mut k = Matrix::randn(&mut data_rng, n, d).scale(1.2);
+    // anisotropy: one heavy direction, making raw H poorly conditioned
+    for i in 0..n {
+        let boost = 3.0 * (i as f32 / n as f32 - 0.5);
+        k.row_mut(i)[0] += boost;
+    }
+    let v = Matrix::randn(&mut data_rng, n, 4);
+    let beta = 0.5f64;
+    let exact = exact_attention(&q, &k, &v, beta as f32);
+    let clip = ClipRange::from_values(&v);
+    let rank = 24;
+
+    let err_with = |use_temp: bool| -> f64 {
+        let mut tot = 0.0;
+        for s in 0..5 {
+            let mut rng = Rng::seed_from(100 + s);
+            let rc = recenter_keys(&k);
+            let r_k = rc.keys.max_row_norm();
+            let tau = if use_temp {
+                temperature(beta, q.max_row_norm(), r_k, n)
+            } else {
+                1.0
+            };
+            let approx = rpnys(&rc.keys, beta / (tau * tau), rank, &mut rng);
+            let mut ks = rc.keys.select_rows(&approx.indices);
+            ks.add_row_vector_mut(&rc.mean);
+            let vs = approx.compress_values(&v);
+            let w = approx.weight_row_sums();
+            let o = wtd_attention(&q, &ks, &vs, &w, &clip, beta as f32);
+            tot += max_abs_diff(&o, &exact);
+        }
+        tot / 5.0
+    };
+    let with_t = err_with(true);
+    let without_t = err_with(false);
+    assert!(
+        with_t <= without_t * 1.25,
+        "temperature hurt badly: with={with_t} without={without_t}"
+    );
+}
+
+/// End-to-end serving fidelity ordering at matched budget: CompressKV's
+/// weighted coreset tracks exact attention better than StreamingLLM's
+/// recency window on uniformly-spread key mass.
+#[test]
+fn compression_fidelity_ordering() {
+    use wildcat::kvcache::{CompressKvPolicy, CompressionCtx, KvCompressor, StreamingLlm};
+    let mut data_rng = Rng::seed_from(4);
+    let n = 512;
+    let k = Matrix::randn(&mut data_rng, n, 8);
+    let v = Matrix::randn(&mut data_rng, n, 4);
+    let q = Matrix::randn(&mut data_rng, 32, 8);
+    let beta = 0.35f32;
+    let exact = exact_attention(&q, &k, &v, beta);
+    let clip = ClipRange::from_values(&v);
+    let fidelity = |comp: &dyn KvCompressor| -> f64 {
+        let mut tot = 0.0;
+        for s in 0..4 {
+            let mut rng = Rng::seed_from(10 + s);
+            let ctx = CompressionCtx {
+                keys: &k,
+                values: &v,
+                budget: 128,
+                beta: beta as f64,
+                layer: 0,
+                n_layers: 1,
+                obs_queries: None,
+            };
+            let e = comp.compress(&ctx, &mut rng);
+            tot += max_abs_diff(&wtd_attention(&q, &e.keys, &e.values, &e.weights, &clip, beta), &exact);
+        }
+        tot / 4.0
+    };
+    let ours = fidelity(&CompressKvPolicy::default());
+    let streaming = fidelity(&StreamingLlm);
+    assert!(
+        ours < streaming,
+        "CompressKV ({ours}) should beat StreamingLLM ({streaming})"
+    );
+}
+
+/// The paper's headline error metric behaves: err_max scaled by ‖V‖_max
+/// is scale-equivariant under V → cV.
+#[test]
+fn error_metric_scale_equivariance() {
+    let mut rng = Rng::seed_from(5);
+    let q = Matrix::randn(&mut rng, 16, 4);
+    let k = Matrix::randn(&mut rng, 64, 4);
+    let v = Matrix::randn(&mut rng, 64, 3);
+    let opts = CompressOpts { rank: 8, bins: 1, beta: 0.3, r_q: q.max_row_norm() };
+    let exact = exact_attention(&q, &k, &v, 0.3);
+    let c = compress_kv(&k, &v, &opts, &mut Rng::seed_from(9));
+    let clip = ClipRange::from_values(&v);
+    let o = wtd_attention(&q, &c.keys, &c.values, &c.weights, &clip, 0.3);
+    let err1 = max_abs_diff(&o, &exact) / max_abs(&v);
+
+    let v2 = v.scale(10.0);
+    let exact2 = exact_attention(&q, &k, &v2, 0.3);
+    let c2 = compress_kv(&k, &v2, &opts, &mut Rng::seed_from(9));
+    let clip2 = ClipRange::from_values(&v2);
+    let o2 = wtd_attention(&q, &c2.keys, &c2.values, &c2.weights, &clip2, 0.3);
+    let err2 = max_abs_diff(&o2, &exact2) / max_abs(&v2);
+    assert!((err1 - err2).abs() < 1e-5 * (1.0 + err1), "err1={err1} err2={err2}");
+    let _ = norm_2inf(&v); // keep helper linked
+}

@@ -1,0 +1,187 @@
+//! Property tests on coordinator invariants (DESIGN.md §6):
+//! * every admitted request is answered exactly once, none lost
+//! * batch admission never exceeds configured maxima
+//! * per-sequence caches never exceed budget + slack + 1
+//! * rejected requests surface as rejections, not drops
+
+use std::sync::Arc;
+use std::time::Duration;
+use wildcat::coordinator::{
+    AdmissionQueue, Batcher, BatcherConfig, Request, Scheduler, SchedulerConfig, Server,
+    ServerConfig, ServingMetrics,
+};
+use wildcat::kvcache::{StreamingLlm, UniformKv};
+use wildcat::model::{ModelConfig, Transformer};
+use wildcat::rng::Rng;
+use wildcat::util::prop::Cases;
+
+fn tiny_model(seed: u64) -> Transformer {
+    let cfg = ModelConfig { vocab: 16, d_model: 16, n_layers: 2, n_heads: 2, d_ff: 32, max_len: 512 };
+    Transformer::random(cfg, &mut Rng::seed_from(seed))
+}
+
+#[test]
+fn prop_no_request_lost_or_duplicated() {
+    Cases::new(6).run(|rng| {
+        let n_req = 3 + rng.below(8);
+        let mut sched = Scheduler::new(
+            tiny_model(7),
+            SchedulerConfig { cache_budget: 64, slack: 8 },
+            Arc::new(StreamingLlm),
+            Arc::new(ServingMetrics::new()),
+            rng.next_u64(),
+        );
+        let batcher = Batcher::new(BatcherConfig {
+            max_active: 1 + rng.below(6),
+            max_admit_per_step: 1 + rng.below(3),
+            max_wait: Duration::from_millis(1),
+            soft_active: 1,
+        });
+        let reqs: Vec<Request> = (0..n_req)
+            .map(|i| {
+                let len = 4 + rng.below(60);
+                Request::new(
+                    i as u64,
+                    (0..len).map(|j| (j % 16) as u32).collect(),
+                    1 + rng.below(5),
+                )
+            })
+            .collect();
+        let want: Vec<(u64, usize)> = reqs.iter().map(|r| (r.id, r.max_new)).collect();
+        let responses = sched.run_to_completion(reqs, &batcher);
+        assert_eq!(responses.len(), n_req, "response count");
+        let mut got: Vec<(u64, usize)> =
+            responses.iter().map(|r| (r.id, r.tokens.len())).collect();
+        got.sort_unstable();
+        let mut want = want;
+        want.sort_unstable();
+        assert_eq!(got, want, "ids/token counts mismatch");
+    });
+}
+
+#[test]
+fn prop_cache_budget_never_exceeded() {
+    Cases::new(4).run(|rng| {
+        let budget = 48 + rng.below(32);
+        let slack = 8;
+        let mut sched = Scheduler::new(
+            tiny_model(9),
+            SchedulerConfig { cache_budget: budget, slack },
+            Arc::new(StreamingLlm),
+            Arc::new(ServingMetrics::new()),
+            rng.next_u64(),
+        );
+        let batcher = Batcher::new(BatcherConfig::default());
+        let reqs: Vec<Request> = (0..3)
+            .map(|i| {
+                Request::new(
+                    i as u64,
+                    (0..150).map(|j| (j % 16) as u32).collect(),
+                    20 + rng.below(20),
+                )
+            })
+            .collect();
+        for r in sched.run_to_completion(reqs, &batcher) {
+            assert!(
+                r.cache_entries <= budget + slack + 1,
+                "cache {} > budget {budget} + slack {slack} + 1",
+                r.cache_entries
+            );
+        }
+    });
+}
+
+#[test]
+fn prop_admission_queue_conservation() {
+    // Under concurrent producers and a consumer, every submitted request
+    // is either rejected (observed by the producer) or drained exactly
+    // once — nothing disappears.
+    Cases::new(4).run(|rng| {
+        let cap = 1 + rng.below(16);
+        let q = Arc::new(AdmissionQueue::new(cap, 1000));
+        let n_producers = 2 + rng.below(3);
+        let per_producer = 30;
+        let accepted = Arc::new(std::sync::Mutex::new(Vec::<u64>::new()));
+        std::thread::scope(|s| {
+            for p in 0..n_producers {
+                let q = q.clone();
+                let accepted = accepted.clone();
+                s.spawn(move || {
+                    for i in 0..per_producer {
+                        let id = (p * 1000 + i) as u64;
+                        if q.submit(Request::new(id, vec![1], 1)).is_ok() {
+                            accepted.lock().unwrap().push(id);
+                        }
+                        std::thread::yield_now();
+                    }
+                });
+            }
+            let q2 = q.clone();
+            let drained = s.spawn(move || {
+                let mut got = Vec::new();
+                loop {
+                    match q2.pop_batch(4, Duration::from_millis(5)) {
+                        None => break,
+                        Some(batch) => {
+                            if batch.is_empty() && got.len() >= 1 {
+                                // idle; keep polling until closed
+                            }
+                            got.extend(batch.iter().map(|r| r.id));
+                        }
+                    }
+                    if got.len() >= n_producers * per_producer {
+                        break;
+                    }
+                    // producers may still be running
+                    std::thread::yield_now();
+                }
+                got
+            });
+            // close after producers finish: drain the rest
+            // (scope join order: spawn a closer thread that waits)
+            let q3 = q.clone();
+            s.spawn(move || {
+                std::thread::sleep(Duration::from_millis(200));
+                q3.close();
+            });
+            let mut got = drained.join().unwrap();
+            // drain any remainder post-close
+            while let Some(batch) = q.pop_batch(64, Duration::from_millis(5)) {
+                got.extend(batch.iter().map(|r| r.id));
+            }
+            let mut acc = accepted.lock().unwrap().clone();
+            acc.sort_unstable();
+            got.sort_unstable();
+            got.dedup();
+            assert_eq!(got, acc, "drained set != accepted set");
+        });
+    });
+}
+
+#[test]
+fn server_end_to_end_under_load() {
+    let cfg = ServerConfig {
+        queue_capacity: 64,
+        max_prompt: 512,
+        scheduler: SchedulerConfig { cache_budget: 96, slack: 16 },
+        ..Default::default()
+    };
+    let handle = Server::spawn(cfg, Arc::new(UniformKv), || tiny_model(21));
+    let mut rxs = Vec::new();
+    let mut rng = Rng::seed_from(5);
+    for _ in 0..20 {
+        let len = 10 + rng.below(120);
+        let prompt: Vec<u32> = (0..len).map(|_| rng.below(16) as u32).collect();
+        let (id, rx) = handle.submit(prompt, 1 + rng.below(4)).unwrap();
+        rxs.push((id, rx));
+    }
+    for (id, rx) in rxs {
+        let resp = rx.recv_timeout(Duration::from_secs(120)).unwrap();
+        assert_eq!(resp.id, id);
+        assert!(!resp.tokens.is_empty());
+    }
+    let c = handle.metrics().counters();
+    assert_eq!(c.completed, 20);
+    assert_eq!(c.submitted, 20);
+    handle.shutdown();
+}

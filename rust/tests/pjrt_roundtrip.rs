@@ -1,0 +1,158 @@
+//! PJRT round-trip integration tests: the AOT artifacts (python-lowered
+//! HLO) executed through the Rust runtime must match the native Rust
+//! implementations. Skips gracefully when `make artifacts` has not run.
+
+use wildcat::attention::{exact_attention, wtd_attention, ClipRange};
+use wildcat::linalg::Matrix;
+use wildcat::model::{ModelBackend, ModelConfig, Transformer, WeightFile};
+use wildcat::rng::Rng;
+use wildcat::runtime::{LiteralArg, PjrtBackend, PjrtRuntime};
+
+fn artifacts_dir() -> Option<std::path::PathBuf> {
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if dir.join("manifest.json").exists() {
+        Some(dir)
+    } else {
+        eprintln!("SKIP: artifacts not built (run `make artifacts`)");
+        None
+    }
+}
+
+#[test]
+fn wtd_attn_artifact_matches_native() {
+    let Some(dir) = artifacts_dir() else { return };
+    let mut rt = PjrtRuntime::open(&dir).unwrap();
+    let name = "wtd_attn_256x96x64";
+    if rt.manifest.artifact(name).is_none() {
+        eprintln!("SKIP: {name} not exported");
+        return;
+    }
+    let beta = rt.manifest.model.beta as f32;
+    let mut rng = Rng::seed_from(3);
+    let q = Matrix::randn(&mut rng, 256, 64);
+    let ks = Matrix::randn(&mut rng, 96, 64);
+    let vs = Matrix::randn(&mut rng, 96, 64);
+    let w: Vec<f32> = (0..96).map(|_| rng.uniform_in(0.1, 2.0) as f32).collect();
+    let (vmin, vmax) = vs.col_min_max();
+    let outs = rt
+        .execute_f32(
+            name,
+            &[
+                LiteralArg::MatrixRef(&q),
+                LiteralArg::MatrixRef(&ks),
+                LiteralArg::MatrixRef(&vs),
+                LiteralArg::F32(&w, vec![96]),
+                LiteralArg::F32(&vmin, vec![64]),
+                LiteralArg::F32(&vmax, vec![64]),
+            ],
+        )
+        .unwrap();
+    let got = Matrix::from_vec(outs[0].clone(), 256, 64);
+    let w64: Vec<f64> = w.iter().map(|&x| x as f64).collect();
+    let clip = ClipRange { lo: vmin, hi: vmax };
+    let want = wtd_attention(&q, &ks, &vs, &w64, &clip, beta);
+    let err = wildcat::linalg::norms::max_abs_diff(&got, &want);
+    assert!(err < 1e-3, "PJRT vs native WTDATTN err={err}");
+}
+
+#[test]
+fn exact_attn_artifact_matches_native() {
+    let Some(dir) = artifacts_dir() else { return };
+    let mut rt = PjrtRuntime::open(&dir).unwrap();
+    let name = "exact_attn_256x256x64";
+    if rt.manifest.artifact(name).is_none() {
+        eprintln!("SKIP: {name} not exported");
+        return;
+    }
+    let beta = rt.manifest.model.beta as f32;
+    let mut rng = Rng::seed_from(4);
+    let q = Matrix::randn(&mut rng, 256, 64);
+    let k = Matrix::randn(&mut rng, 256, 64);
+    let v = Matrix::randn(&mut rng, 256, 64);
+    let outs = rt
+        .execute_f32(
+            name,
+            &[
+                LiteralArg::MatrixRef(&q),
+                LiteralArg::MatrixRef(&k),
+                LiteralArg::MatrixRef(&v),
+            ],
+        )
+        .unwrap();
+    let got = Matrix::from_vec(outs[0].clone(), 256, 64);
+    let want = exact_attention(&q, &k, &v, beta);
+    let err = wildcat::linalg::norms::max_abs_diff(&got, &want);
+    assert!(err < 1e-3, "PJRT vs native exact attention err={err}");
+}
+
+#[test]
+fn pjrt_backend_matches_native_model() {
+    // The production contract: the PJRT path (AOT HLO with baked weights)
+    // and the native path (weights.bin) produce the same logits.
+    let Some(dir) = artifacts_dir() else { return };
+    let mut pjrt = PjrtBackend::open(&dir).unwrap();
+    let weights = WeightFile::load(dir.join("weights.bin")).unwrap();
+    let cfg = pjrt.config();
+    let mut native = Transformer::from_weights(&weights, cfg).unwrap();
+
+    let mut rng = Rng::seed_from(5);
+    let n = 40;
+    let tokens: Vec<u32> = (0..n).map(|_| 6 + rng.below(58) as u32).collect();
+
+    // prefill parity
+    let a = ModelBackend::prefill(&mut pjrt, &tokens);
+    let b = ModelBackend::prefill(&mut native, &tokens);
+    let logit_err: f32 = a
+        .logits
+        .iter()
+        .zip(&b.logits)
+        .map(|(x, y)| (x - y).abs())
+        .fold(0.0, f32::max);
+    assert!(logit_err < 2e-2, "prefill logits diverge: {logit_err}");
+    for lh in 0..cfg.n_layers * cfg.n_heads {
+        assert_eq!(a.k_cache[lh].rows(), n);
+        let err = wildcat::linalg::norms::max_abs_diff(&a.k_cache[lh], &b.k_cache[lh]);
+        assert!(err < 1e-2, "k cache diverges at lh={lh}: {err}");
+    }
+
+    // decode parity over the (uncompressed) cache
+    let caches: Vec<(Matrix, Matrix, Vec<f64>)> = b
+        .k_cache
+        .iter()
+        .zip(&b.v_cache)
+        .map(|(k, v)| (k.clone(), v.clone(), vec![1.0f64; k.rows()]))
+        .collect();
+    let refs: Vec<(&Matrix, &Matrix, &[f64])> =
+        caches.iter().map(|(k, v, w)| (k, v, w.as_slice())).collect();
+    let (la, ka, _va) = ModelBackend::decode(&mut pjrt, 7, n, &refs);
+    let (lb, kb, _vb) = ModelBackend::decode(&mut native, 7, n, &refs);
+    let derr: f32 = la.iter().zip(&lb).map(|(x, y)| (x - y).abs()).fold(0.0, f32::max);
+    assert!(derr < 2e-2, "decode logits diverge: {derr}");
+    for (x, y) in ka[0].iter().zip(&kb[0]) {
+        assert!((x - y).abs() < 1e-2);
+    }
+}
+
+#[test]
+fn pjrt_decode_capacity_selection() {
+    let Some(dir) = artifacts_dir() else { return };
+    let mut pjrt = PjrtBackend::open(&dir).unwrap();
+    let cfg = pjrt.config();
+    // small cache must route to the small decode artifact without error
+    let mut rng = Rng::seed_from(6);
+    let tokens: Vec<u32> = (0..10).map(|_| 6 + rng.below(58) as u32).collect();
+    let out = ModelBackend::prefill(&mut pjrt, &tokens);
+    let caches: Vec<(Matrix, Matrix, Vec<f64>)> = out
+        .k_cache
+        .iter()
+        .zip(&out.v_cache)
+        .map(|(k, v)| (k.clone(), v.clone(), vec![1.0f64; k.rows()]))
+        .collect();
+    let refs: Vec<(&Matrix, &Matrix, &[f64])> =
+        caches.iter().map(|(k, v, w)| (k, v, w.as_slice())).collect();
+    let (logits, nk, nv) = ModelBackend::decode(&mut pjrt, 3, 10, &refs);
+    assert_eq!(logits.len(), cfg.vocab);
+    assert_eq!(nk.len(), cfg.n_layers * cfg.n_heads);
+    assert_eq!(nv[0].len(), cfg.d_head());
+    assert!(logits.iter().all(|x| x.is_finite()));
+}
