@@ -1,0 +1,56 @@
+"""Collection guard for the python test suite.
+
+The layer-1/2 tests need CPU JAX (and hypothesis for the property
+sweeps). CI runners and offline images do not always ship them, and the
+test modules import jax/hypothesis at module scope — without this guard,
+collection itself would error instead of skipping. Here we ignore the
+modules whose hard dependencies are missing, so `pytest python/tests`
+always exits green (the dependency-free tests in test_sanity.py keep the
+run non-empty).
+"""
+
+import importlib.util
+import os
+import sys
+
+# Make `compile.*` imports resolve exactly as the test modules expect
+# (they are run with python/ on sys.path by the Makefile; keep that
+# working when pytest is invoked from the repo root too).
+_PY_DIR = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
+if _PY_DIR not in sys.path:
+    sys.path.insert(0, _PY_DIR)
+
+
+def _have(mod):
+    try:
+        return importlib.util.find_spec(mod) is not None
+    except (ImportError, ValueError):
+        return False
+
+
+_HAVE_JAX = _have("jax")
+_HAVE_HYPOTHESIS = _have("hypothesis")
+
+# module -> required third-party deps (all import them at module scope)
+_REQUIRES = {
+    "test_aot.py": _HAVE_JAX,
+    "test_kernels.py": _HAVE_JAX and _HAVE_HYPOTHESIS,
+    "test_model.py": _HAVE_JAX,
+    # test_rpnys uses the jnp oracle (compile.kernels.ref) + hypothesis
+    "test_rpnys.py": _HAVE_JAX and _HAVE_HYPOTHESIS,
+}
+
+collect_ignore = sorted(name for name, ok in _REQUIRES.items() if not ok)
+
+if collect_ignore:
+    sys.stderr.write(
+        "conftest: skipping %s (missing: %s)\n"
+        % (
+            ", ".join(collect_ignore),
+            ", ".join(
+                m
+                for m, have in [("jax", _HAVE_JAX), ("hypothesis", _HAVE_HYPOTHESIS)]
+                if not have
+            ),
+        )
+    )

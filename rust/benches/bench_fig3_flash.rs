@@ -11,77 +11,16 @@
 //! substrate. The default sweep caps at 2^14 (exact attention is O(n²d)
 //! on CPU); pass `--max-exp 18` to run the full paper range.
 //!
-//! Also prints the Tab. 1-oriented error-decay panel: measured error vs n
-//! for WildCat at fixed (r, B) — the empirical counterpart of the
-//! super-polynomial decay guarantee.
+//! All logic lives in `wildcat::bench::runners::run_fig3`, shared with
+//! `wildcat bench --smoke`. Pass `--json DIR` to also write
+//! `BENCH_fig3.json`; `--smoke` switches to the seconds-scale preset.
 
-use wildcat::attention::{flash_attention, wildcat_attention, WildcatParams};
-use wildcat::bench::harness::{bench, BenchOpts};
-use wildcat::linalg::norms::max_abs_diff;
-use wildcat::rng::Rng;
+use wildcat::bench::runners::{maybe_write_json, run_fig3, RunCfg};
 use wildcat::util::cli::Args;
-use wildcat::util::table::Table;
-use wildcat::workload::gaussian_qkv;
 
-fn main() {
+fn main() -> anyhow::Result<()> {
     let args = Args::from_env();
-    let seed = args.get_parse::<u64>("seed", 0);
-    let fast = std::env::var("WILDCAT_BENCH_FAST").as_deref() == Ok("1");
-    let min_exp = args.get_parse::<u32>("min-exp", 10);
-    let max_exp = args.get_parse::<u32>("max-exp", if fast { 12 } else { 14 });
-    let rank = args.get_parse::<usize>("rank", 64);
-    let bins = args.get_parse::<usize>("bins", 16);
-    let d = args.get_parse::<usize>("d", 64);
-    let err_seeds = args.get_parse::<u64>("err-seeds", 3);
-
-    let opts = BenchOpts::from_env();
-    let mut table = Table::new(
-        &format!("Fig. 3 — WildCat (r={rank}, B={bins}) vs exact blocked attention, d={d}"),
-        &["n", "exact (ms)", "wildcat (ms)", "speed-up", "err_max"],
-    );
-
-    let mut errs = Vec::new();
-    let mut speedups = Vec::new();
-    for exp in min_exp..=max_exp {
-        let n = 1usize << exp;
-        let mut rng = Rng::seed_from(seed + exp as u64);
-        let w = gaussian_qkv(&mut rng, n, n, d, d);
-        let t_exact = bench(&format!("exact n={n}"), opts, || {
-            flash_attention(&w.q, &w.k, &w.v, w.beta)
-        });
-        let exact_out = flash_attention(&w.q, &w.k, &w.v, w.beta);
-        let params = WildcatParams { rank, bins, beta: Some(w.beta as f64) };
-        let t_wc = bench(&format!("wildcat n={n}"), opts, || {
-            let mut r = Rng::seed_from(seed);
-            wildcat_attention(&w.q, &w.k, &w.v, &params, &mut r)
-        });
-        let mut err = 0.0;
-        for s in 0..err_seeds {
-            let mut r = Rng::seed_from(seed + 10 + s);
-            let approx = wildcat_attention(&w.q, &w.k, &w.v, &params, &mut r);
-            err += max_abs_diff(&approx, &exact_out);
-        }
-        let err = err / err_seeds as f64;
-        let sp = t_exact.median() / t_wc.median();
-        errs.push(err);
-        speedups.push(sp);
-        table.add_row(vec![
-            format!("2^{exp}"),
-            format!("{:.1}", t_exact.median() * 1e3),
-            format!("{:.1}", t_wc.median() * 1e3),
-            format!("{sp:.2}x"),
-            format!("{err:.3e}"),
-        ]);
-    }
-    table.print();
-    println!("\n(markdown)\n{}", table.render_markdown());
-
-    // paper-shape checks: speed-up increasing, error non-increasing in n
-    let sp_up = speedups.windows(2).all(|w| w[1] >= w[0] * 0.85);
-    let err_down = errs.first().zip(errs.last()).map(|(a, b)| *b <= a * 1.1).unwrap_or(true);
-    println!(
-        "[fig3] speed-up increasing with n: {}   error decreasing with n: {}",
-        if sp_up { "YES" } else { "NO" },
-        if err_down { "YES" } else { "NO" }
-    );
+    let cfg = RunCfg::from_args(&args);
+    let report = run_fig3(&cfg)?;
+    maybe_write_json(&report, &args)
 }

@@ -5,72 +5,16 @@
 //!
 //! Expected shape: larger r → slower + more accurate; larger B → faster
 //! at slightly higher error (the Sec. 2.5 trade-off).
+//!
+//! All logic lives in `wildcat::bench::runners::run_figm1`, shared with
+//! `wildcat bench --smoke`.
 
-use wildcat::attention::{flash_attention, wildcat_attention, WildcatParams};
-use wildcat::bench::harness::{bench, BenchOpts};
-use wildcat::linalg::norms::max_abs_diff;
-use wildcat::rng::Rng;
+use wildcat::bench::runners::{maybe_write_json, run_figm1, RunCfg};
 use wildcat::util::cli::Args;
-use wildcat::util::table::Table;
-use wildcat::workload::gaussian_qkv;
 
-fn main() {
+fn main() -> anyhow::Result<()> {
     let args = Args::from_env();
-    let seed = args.get_parse::<u64>("seed", 0);
-    let fast = std::env::var("WILDCAT_BENCH_FAST").as_deref() == Ok("1");
-    let n = args.get_parse::<usize>("n", if fast { 4096 } else { 8192 });
-    let d = args.get_parse::<usize>("d", 64);
-    let ranks: Vec<usize> = args.get_list("ranks", &[64, 128, 256, 512]);
-    let bins: Vec<usize> = args.get_list("bins", &[2, 16, 64]);
-    let err_seeds = args.get_parse::<u64>("err-seeds", if fast { 2 } else { 5 });
-
-    let mut rng = Rng::seed_from(seed);
-    let w = gaussian_qkv(&mut rng, n, n, d, d);
-    let exact = flash_attention(&w.q, &w.k, &w.v, w.beta);
-    let opts = BenchOpts::from_env();
-    let t_exact = bench("exact", opts, || flash_attention(&w.q, &w.k, &w.v, w.beta));
-    println!(
-        "[figM1] n={n}, d={d}; exact attention median {:.1} ms",
-        t_exact.median() * 1e3
-    );
-
-    let mut table = Table::new(
-        "Fig. M.1 — WildCat time-accuracy trade-off",
-        &["B", "r", "time (ms)", "speed-up", "err_max"],
-    );
-    for &b in &bins {
-        let mut last_err = f64::INFINITY;
-        for &r in &ranks {
-            if b > r {
-                continue;
-            }
-            let params = WildcatParams { rank: r, bins: b, beta: Some(w.beta as f64) };
-            let t = bench(&format!("r={r} B={b}"), opts, || {
-                let mut run_rng = Rng::seed_from(seed);
-                wildcat_attention(&w.q, &w.k, &w.v, &params, &mut run_rng)
-            });
-            let mut err = 0.0;
-            for s in 0..err_seeds {
-                let mut run_rng = Rng::seed_from(seed + 20 + s);
-                err += max_abs_diff(
-                    &wildcat_attention(&w.q, &w.k, &w.v, &params, &mut run_rng),
-                    &exact,
-                );
-            }
-            let err = err / err_seeds as f64;
-            table.add_row(vec![
-                b.to_string(),
-                r.to_string(),
-                format!("{:.1}", t.median() * 1e3),
-                format!("{:.2}x", t_exact.median() / t.median()),
-                format!("{err:.3e}"),
-            ]);
-            // within a series, error should broadly decrease with r
-            if err < last_err {
-                last_err = err;
-            }
-        }
-    }
-    table.print();
-    println!("\n(markdown)\n{}", table.render_markdown());
+    let cfg = RunCfg::from_args(&args);
+    let report = run_figm1(&cfg)?;
+    maybe_write_json(&report, &args)
 }

@@ -5,147 +5,16 @@
 //! Covered: GEMM (matmul / matmul_transb), RPNYS (unbinned vs binned),
 //! kernel-matrix evaluation, WTDATTN, exact vs flash attention, the
 //! native model decode step, and compressor throughput.
+//!
+//! All logic lives in `wildcat::bench::runners::run_micro`, shared with
+//! `wildcat bench --smoke`.
 
-use std::sync::Arc;
-use wildcat::attention::{
-    compress_kv, exact_attention, flash_attention, wtd_attention, ClipRange, CompressOpts,
-};
-use wildcat::bench::harness::{bench, BenchOpts};
-use wildcat::coordinator::ServingMetrics;
-use wildcat::kvcache::{CompressKvPolicy, CompressionCtx, KvCompressor, SnapKv};
-use wildcat::linalg::{gemm, Matrix};
-use wildcat::model::{ModelConfig, Transformer};
-use wildcat::rng::Rng;
-use wildcat::rpnys::rpnys;
-use wildcat::util::table::Table;
+use wildcat::bench::runners::{maybe_write_json, run_micro, RunCfg};
+use wildcat::util::cli::Args;
 
-fn main() {
-    let opts = BenchOpts::from_env();
-    let mut rng = Rng::seed_from(0);
-    let mut table = Table::new("micro-benchmarks", &["op", "median", "notes"]);
-    let mut add = |name: &str, secs: f64, notes: String| {
-        table.add_row(vec![name.into(), format!("{:.3} ms", secs * 1e3), notes]);
-    };
-
-    // GEMM
-    let a = Matrix::randn(&mut rng, 1024, 64);
-    let b = Matrix::randn(&mut rng, 64, 1024);
-    let bt = Matrix::randn(&mut rng, 1024, 64);
-    let r = bench("matmul 1024x64x1024", opts, || gemm::matmul(&a, &b));
-    let flops = 2.0 * 1024.0 * 64.0 * 1024.0;
-    add("matmul 1024x64x1024", r.median(), format!("{:.2} GFLOP/s", flops / r.median() / 1e9));
-    let r = bench("matmul_transb", opts, || gemm::matmul_transb(&a, &bt));
-    add("matmul_transb 1024x64x1024", r.median(), format!("{:.2} GFLOP/s", flops / r.median() / 1e9));
-
-    // attention kernels
-    let n = 4096;
-    let q = Matrix::randn(&mut rng, n, 64);
-    let k = Matrix::randn(&mut rng, n, 64);
-    let v = Matrix::randn(&mut rng, n, 64);
-    let r = bench("exact_attention 4096", opts, || exact_attention(&q, &k, &v, 0.125));
-    add("exact_attention n=4096", r.median(), String::new());
-    let r = bench("flash_attention 4096", opts, || flash_attention(&q, &k, &v, 0.125));
-    add("flash_attention n=4096", r.median(), String::new());
-
-    // WTDATTN over a 96-point coreset
-    let ks = k.slice_rows(0, 96);
-    let vs = v.slice_rows(0, 96);
-    let wts = vec![1.0f64; 96];
-    let clip = ClipRange::from_values(&vs);
-    let r = bench("wtd_attention 4096x96", opts, || {
-        wtd_attention(&q, &ks, &vs, &wts, &clip, 0.125)
-    });
-    add("wtd_attention m=4096 r=96", r.median(), String::new());
-
-    // RPNYS: unbinned vs binned (Sec. 2.5 speed-up)
-    let r1 = bench("rpnys r=96 B=1", opts, || {
-        let mut r = Rng::seed_from(1);
-        rpnys(&k, 0.125, 96, &mut r)
-    });
-    add("rpnys n=4096 r=96 (B=1)", r1.median(), String::new());
-    let copts = CompressOpts { rank: 96, bins: 8, beta: 0.125, r_q: q.max_row_norm() };
-    let r8 = bench("compress_kv B=8", opts, || {
-        let mut r = Rng::seed_from(1);
-        compress_kv(&k, &v, &copts, &mut r)
-    });
-    add(
-        "compress_kv n=4096 r=96 B=8",
-        r8.median(),
-        format!("{:.2}x vs B=1", r1.median() / r8.median()),
-    );
-
-    // compressors at serving shapes
-    let keys = Matrix::randn(&mut rng, 1024, 32);
-    let vals = Matrix::randn(&mut rng, 1024, 32);
-    for comp in [
-        Box::new(SnapKv::default()) as Box<dyn KvCompressor>,
-        Box::new(CompressKvPolicy::default()),
-    ] {
-        let r = bench(comp.name(), opts, || {
-            let mut rr = Rng::seed_from(2);
-            let ctx = CompressionCtx {
-                keys: &keys,
-                values: &vals,
-                budget: 256,
-                beta: 0.176,
-                layer: 0,
-                n_layers: 2,
-                obs_queries: None,
-            };
-            comp.compress(&ctx, &mut rr)
-        });
-        add(&format!("compress[{}] 1024->256", comp.name()), r.median(), String::new());
-    }
-
-    // native model steps
-    let mcfg = ModelConfig::default();
-    let model = Transformer::random(mcfg, &mut rng);
-    let toks: Vec<u32> = (0..256).map(|i| (i % 60 + 2) as u32).collect();
-    let r = bench("prefill 256", opts, || model.prefill(&toks));
-    add("model prefill n=256", r.median(), String::new());
-    let out = model.prefill(&toks);
-    let caches: Vec<(Matrix, Matrix, Vec<f64>)> = out
-        .k_cache
-        .iter()
-        .zip(&out.v_cache)
-        .map(|(k, v)| (k.clone(), v.clone(), vec![1.0f64; k.rows()]))
-        .collect();
-    let r = bench("decode", opts, || {
-        let refs: Vec<(&Matrix, &Matrix, &[f64])> =
-            caches.iter().map(|(k, v, w)| (k, v, w.as_slice())).collect();
-        model.decode(5, 256, &refs)
-    });
-    add("model decode @ 256 ctx", r.median(), String::new());
-
-    // streaming/causal extension (§5 future work): per-token attend cost
-    // over a compressed stream vs exact causal attention
-    let n_s = 512usize;
-    let ks = Matrix::randn(&mut rng, n_s, 32);
-    let vs2 = Matrix::randn(&mut rng, n_s, 32);
-    let qs = Matrix::randn(&mut rng, n_s, 32);
-    let r = bench("causal wildcat", opts, || {
-        wildcat::attention::causal_wildcat_attention(&qs, &ks, &vs2, 64, 16, 1, 0.176, 3)
-    });
-    add("causal wildcat n=512 (c=64,r=16)", r.median(), String::new());
-    let r = bench("causal exact", opts, || {
-        let mut out = Matrix::zeros(n_s, 32);
-        for i in 0..n_s {
-            let qi = Matrix::from_vec(qs.row(i).to_vec(), 1, 32);
-            let o = exact_attention(&qi, &ks.slice_rows(0, i + 1), &vs2.slice_rows(0, i + 1), 0.176);
-            out.row_mut(i).copy_from_slice(o.row(0));
-        }
-        out
-    });
-    add("causal exact n=512", r.median(), String::new());
-
-    // metrics overhead (coordinator lock contention sanity)
-    let metrics = Arc::new(ServingMetrics::new());
-    let r = bench("metrics record", opts, || {
-        for _ in 0..1000 {
-            metrics.on_submit();
-        }
-    });
-    add("metrics 1000 submits", r.median(), String::new());
-
-    table.print();
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env();
+    let cfg = RunCfg::from_args(&args);
+    let report = run_micro(&cfg)?;
+    maybe_write_json(&report, &args)
 }

@@ -13,58 +13,15 @@
 //! WildCat fastest with the smallest degradation; Reformer slowest with
 //! the largest.
 //!
-//! `WILDCAT_BENCH_FAST=1` shrinks iterations for smoke runs.
+//! All logic lives in `wildcat::bench::runners::run_table2`, shared with
+//! `wildcat bench --smoke`. `WILDCAT_BENCH_FAST=1` shrinks iterations.
 
-use wildcat::bench::harness::{speedup, BenchOpts};
-use wildcat::bench::paperbench::{roster, run_roster};
-use wildcat::rng::Rng;
+use wildcat::bench::runners::{maybe_write_json, run_table2, RunCfg};
 use wildcat::util::cli::Args;
-use wildcat::util::table::{fmt_pct, fmt_speedup, Table};
-use wildcat::workload::gaussian::{activation_qkv, biggan_shapes};
 
-fn main() {
+fn main() -> anyhow::Result<()> {
     let args = Args::from_env();
-    let seed = args.get_parse::<u64>("seed", 0);
-    let seeds = args.get_parse::<u64>("quality-seeds", 3);
-    let (m, n, d, dv) = biggan_shapes();
-    let mut rng = Rng::seed_from(seed);
-    let w = activation_qkv(&mut rng, m, n, d, dv, 4, 2.0);
-    println!("[table2] BigGAN shapes: Q {m}x{d}, K {n}x{d}, V {n}x{dv} (beta={:.4})", w.beta);
-
-    let opts = BenchOpts::from_env();
-    // paper setting: WildCat r=96, B=8
-    let methods = roster(96, 8, n);
-    let (exact_t, results) = run_roster(&w, methods, opts, seeds, seed);
-
-    let mut table = Table::new(
-        "Table 2 — BigGAN attention: speed-up and quality degradation",
-        &["Attention Algorithm", "Speed-up over Exact", "MeanErr/Vmax (IS-proxy)", "RelFrob (FID-proxy)", "ErrMax/Vmax"],
-    );
-    table.add_row(vec![
-        "Exact".into(),
-        "1.00x".into(),
-        fmt_pct(0.0),
-        fmt_pct(0.0),
-        fmt_pct(0.0),
-    ]);
-    for r in &results {
-        table.add_row(vec![
-            r.name.into(),
-            fmt_speedup(speedup(&exact_t, &r.timing)),
-            fmt_pct(100.0 * r.quality.err_mean_rel),
-            fmt_pct(100.0 * r.quality.rel_frob),
-            fmt_pct(100.0 * r.quality.err_max_rel),
-        ]);
-    }
-    table.print();
-    println!("\n(markdown for EXPERIMENTS.md)\n{}", table.render_markdown());
-
-    // sanity: the paper's headline — WildCat is the fastest approximation
-    // with the smallest degradation — should reproduce in *shape*.
-    let wc = results.iter().find(|r| r.name == "WILDCAT").unwrap();
-    println!(
-        "[table2] WildCat: {:.2}x speed-up, {:.2}% rel-frob degradation",
-        speedup(&exact_t, &wc.timing),
-        100.0 * wc.quality.rel_frob
-    );
+    let cfg = RunCfg::from_args(&args);
+    let report = run_table2(&cfg)?;
+    maybe_write_json(&report, &args)
 }

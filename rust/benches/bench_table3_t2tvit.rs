@@ -9,48 +9,16 @@
 //! activation-statistics inputs; "Top-1 agreement" = fraction of rows
 //! whose argmax under a fixed random readout head matches exact attention
 //! (the monotone readout the paper's top-1 accuracy responds to).
+//!
+//! All logic lives in `wildcat::bench::runners::run_table3`, shared with
+//! `wildcat bench --smoke`.
 
-use wildcat::bench::harness::{speedup, BenchOpts};
-use wildcat::bench::paperbench::{roster, run_roster, MethodResult};
-use wildcat::bench::harness::BenchResult;
-use wildcat::rng::Rng;
+use wildcat::bench::runners::{maybe_write_json, run_table3, RunCfg};
 use wildcat::util::cli::Args;
-use wildcat::util::table::{fmt_pct, fmt_speedup, Table};
-use wildcat::workload::gaussian::activation_qkv;
 
-fn main() {
+fn main() -> anyhow::Result<()> {
     let args = Args::from_env();
-    let seed = args.get_parse::<u64>("seed", 0);
-    let seeds = args.get_parse::<u64>("quality-seeds", 3);
-    let opts = BenchOpts::from_env();
-
-    // (n, d, r, B) per layer, from Sec. 4.2
-    let layers = [(3136usize, 64usize, 224usize, 224usize), (784, 64, 196, 196)];
-    let mut per_layer: Vec<(BenchResult, Vec<MethodResult>)> = Vec::new();
-    for (li, &(n, d, r, b)) in layers.iter().enumerate() {
-        let mut rng = Rng::seed_from(seed + li as u64);
-        let w = activation_qkv(&mut rng, n, n, d, d, 4, 2.0);
-        println!("[table3] layer {} shapes: n={n}, d={d}, r={r}, B={b}", li + 1);
-        per_layer.push(run_roster(&w, roster(r, b, n), opts, seeds, seed));
-    }
-
-    let mut table = Table::new(
-        "Table 3 — T2T-ViT attention: top-1 agreement and per-layer speed-ups",
-        &["Attention Algorithm", "Top-1 Agreement (%)", "Layer 1 Speed-up", "Layer 2 Speed-up"],
-    );
-    table.add_row(vec!["Exact".into(), "100.00%".into(), "1.00x".into(), "1.00x".into()]);
-    let (e1, r1) = &per_layer[0];
-    let (e2, r2) = &per_layer[1];
-    for (m1, m2) in r1.iter().zip(r2.iter()) {
-        assert_eq!(m1.name, m2.name);
-        // accuracy dominated by the (larger) layer 1; report its agreement
-        table.add_row(vec![
-            m1.name.into(),
-            fmt_pct(100.0 * m1.quality.top1_agree),
-            fmt_speedup(speedup(e1, &m1.timing)),
-            fmt_speedup(speedup(e2, &m2.timing)),
-        ]);
-    }
-    table.print();
-    println!("\n(markdown for EXPERIMENTS.md)\n{}", table.render_markdown());
+    let cfg = RunCfg::from_args(&args);
+    let report = run_table3(&cfg)?;
+    maybe_write_json(&report, &args)
 }

@@ -9,162 +9,17 @@
 //!
 //! Also measures the §M.3 prefill-compression overhead (pass `--overhead`).
 //!
-//! Requires `make artifacts` (the build-time-trained LM).
+//! Requires `make artifacts` (the build-time-trained LM) in full mode;
+//! `--smoke` falls back to a seeded random model of the same shape.
+//! All logic lives in `wildcat::bench::runners::run_table4`, shared with
+//! `wildcat bench --smoke`.
 
-use std::time::Instant;
-use wildcat::kvcache::{
-    BalanceKv, CompressKvPolicy, CompressionCtx, KvCompressor, PyramidKv, SnapKv, StreamingLlm,
-    UniformKv,
-};
-use wildcat::model::{generate::greedy_decode_with_query, ModelConfig, Transformer, WeightFile};
-use wildcat::rng::Rng;
+use wildcat::bench::runners::{maybe_write_json, run_table4, RunCfg};
 use wildcat::util::cli::Args;
-use wildcat::util::table::Table;
-use wildcat::workload::tasks::{score, task_suite};
-
-fn methods() -> Vec<Box<dyn KvCompressor>> {
-    vec![
-        Box::new(StreamingLlm),
-        Box::new(PyramidKv::default()),
-        Box::new(BalanceKv),
-        Box::new(UniformKv),
-        Box::new(SnapKv::default()),
-        Box::new(CompressKvPolicy::default()),
-    ]
-}
-
-fn fxhash(s: &str) -> u64 {
-    s.bytes().fold(0xcbf29ce484222325u64, |h, b| {
-        (h ^ b as u64).wrapping_mul(0x100000001b3)
-    })
-}
 
 fn main() -> anyhow::Result<()> {
     let args = Args::from_env();
-    let artifacts = args.get_or("artifacts", "artifacts");
-    let context = args.get_parse::<usize>("context", 256);
-    let fast = std::env::var("WILDCAT_BENCH_FAST").as_deref() == Ok("1");
-    let trials = args.get_parse::<usize>("trials", if fast { 3 } else { 10 });
-    let seed = args.get_parse::<u64>("seed", 0);
-
-    let w = WeightFile::load(format!("{artifacts}/weights.bin"))
-        .expect("weights.bin missing — run `make artifacts` first");
-    let model = Transformer::from_weights(&w, ModelConfig::default())?;
-    let suite = task_suite();
-
-    if args.flag("overhead") {
-        return overhead_measurement(&model, context, seed);
-    }
-
-    // compression levels of Tab. 4 (budget = context * (1 - level))
-    for (level_name, keep_frac) in
-        [("75.0%", 0.25f64), ("87.5%", 0.125), ("93.75%", 0.0625)]
-    {
-        let budget = ((context as f64) * keep_frac).round() as usize;
-        let mut header: Vec<String> = vec!["Method".into()];
-        header.extend(suite.iter().map(|t| t.name.to_string()));
-        header.push("average".into());
-        let header_refs: Vec<&str> = header.iter().map(|s| s.as_str()).collect();
-        let mut table = Table::new(
-            &format!("Table 4 — {level_name} compression (context {context}, budget {budget}, {trials} trials)"),
-            &header_refs,
-        );
-
-        // Exact row: no compression
-        let mut run_method = |name: &str, comp: Option<&dyn KvCompressor>| {
-            let mut row = vec![name.to_string()];
-            let mut total = 0.0;
-            for task in &suite {
-                let mut task_rng = Rng::seed_from(seed ^ fxhash(task.name));
-                let mut s = 0.0;
-                for _ in 0..trials {
-                    let inst = task.kind.generate(&mut task_rng, context, model.cfg.vocab as u32);
-                    let mut decode_rng = Rng::seed_from(seed + 1);
-                    let out = match comp {
-                        None => greedy_decode_with_query(
-                            &model,
-                            &inst.context,
-                            &inst.query,
-                            inst.expected.len(),
-                            usize::MAX,
-                            &UniformKv,
-                            &mut decode_rng,
-                        ),
-                        Some(c) => greedy_decode_with_query(
-                            &model,
-                            &inst.context,
-                            &inst.query,
-                            inst.expected.len(),
-                            budget,
-                            c,
-                            &mut decode_rng,
-                        ),
-                    };
-                    s += score(&inst.expected, &out.tokens);
-                }
-                let pct = 100.0 * s / trials as f64;
-                total += pct;
-                row.push(format!("{pct:.1}"));
-            }
-            row.push(format!("{:.1}", total / suite.len() as f64));
-            row
-        };
-
-        table.add_row(run_method("Exact", None));
-        for comp in methods() {
-            table.add_row(run_method(comp.name(), Some(comp.as_ref())));
-        }
-        table.print();
-        println!("\n(markdown)\n{}", table.render_markdown());
-    }
-    Ok(())
-}
-
-/// §M.3: prefill + compression wall time, CompressKV vs SnapKV.
-fn overhead_measurement(model: &Transformer, context: usize, seed: u64) -> anyhow::Result<()> {
-    let mut rng = Rng::seed_from(seed);
-    let inst =
-        wildcat::workload::tasks::TaskKind::Passkey.generate(&mut rng, context, model.cfg.vocab as u32);
-    let budget = context / 4;
-    let mut table = Table::new(
-        &format!("§M.3 prefill overhead at {context} tokens, 75% compression"),
-        &["Method", "prefill+compress", "overhead vs SnapKV"],
-    );
-    let mut t_snap = 0.0;
-    for comp in [
-        Box::new(SnapKv::default()) as Box<dyn KvCompressor>,
-        Box::new(CompressKvPolicy::default()),
-    ] {
-        let t0 = Instant::now();
-        for _ in 0..5 {
-            let out = model.prefill(&inst.context);
-            for lh in 0..model.cfg.n_layers * model.cfg.n_heads {
-                let ctx = CompressionCtx {
-                    keys: &out.k_cache[lh],
-                    values: &out.v_cache[lh],
-                    budget,
-                    beta: model.cfg.beta() as f64,
-                    layer: lh / model.cfg.n_heads,
-                    n_layers: model.cfg.n_layers,
-                    obs_queries: None,
-                };
-                let _ = comp.compress(&ctx, &mut rng);
-            }
-        }
-        let dt = t0.elapsed().as_secs_f64() / 5.0;
-        if comp.name() == "SnapKV" {
-            t_snap = dt;
-        }
-        table.add_row(vec![
-            comp.name().into(),
-            format!("{:.2} ms", dt * 1e3),
-            if t_snap > 0.0 {
-                format!("{:+.1}%", 100.0 * (dt - t_snap) / t_snap)
-            } else {
-                "-".into()
-            },
-        ]);
-    }
-    table.print();
-    Ok(())
+    let cfg = RunCfg::from_args(&args);
+    let report = run_table4(&cfg)?;
+    maybe_write_json(&report, &args)
 }

@@ -6,75 +6,17 @@
 //! Expected shape: γ(n) decreasing in n — the Cor. 2 assumption that
 //! justifies near-constant cache sizes (Veličković et al. 2025 show Q/K
 //! norms of any trained transformer are bounded in n).
+//!
+//! All logic lives in `wildcat::bench::runners::run_table5`, shared with
+//! `wildcat bench --smoke` (which substitutes a seeded random model when
+//! `make artifacts` has not run).
 
-use wildcat::kernels::gamma_growth;
-use wildcat::model::{ModelConfig, Transformer, WeightFile};
-use wildcat::rng::Rng;
+use wildcat::bench::runners::{maybe_write_json, run_table5, RunCfg};
 use wildcat::util::cli::Args;
-use wildcat::util::table::Table;
-use wildcat::workload::tasks::TaskKind;
 
 fn main() -> anyhow::Result<()> {
     let args = Args::from_env();
-    let artifacts = args.get_or("artifacts", "artifacts");
-    let seed = args.get_parse::<u64>("seed", 0);
-    let trials = args.get_parse::<usize>("trials", 5);
-
-    let w = WeightFile::load(format!("{artifacts}/weights.bin"))
-        .expect("weights.bin missing — run `make artifacts` first");
-    let model = Transformer::from_weights(&w, ModelConfig::default())?;
-    let beta = model.cfg.beta() as f64;
-    let n_lh = model.cfg.n_layers * model.cfg.n_heads;
-
-    // paper sweeps n = 4 … 16384; our model's max_len caps the range
-    let lens: Vec<usize> = [4usize, 16, 64, 128, 256, 512]
-        .into_iter()
-        .filter(|&n| n <= model.cfg.max_len)
-        .collect();
-
-    let mut table = Table::new(
-        "Table 5 — entry growth factor γ(n) = β·R_Q·R_K / log(n)",
-        &["n", "R_K (mean)", "gamma(n)"],
-    );
-    let mut gammas = Vec::new();
-    for &n in &lens {
-        let mut rng = Rng::seed_from(seed);
-        let mut g_acc = 0.0;
-        let mut rk_acc = 0.0;
-        for _ in 0..trials {
-            let inst = TaskKind::Passkey.generate(&mut rng, n.max(16), model.cfg.vocab as u32);
-            let toks = &inst.context[..n.min(inst.context.len())];
-            let out = model.prefill(toks);
-            // R_K per (layer, head); R_Q proxied by R_K of the same head
-            // (queries and keys share scale in trained layers; the paper
-            // measures both from activations — we average over heads)
-            let mut g = 0.0;
-            let mut rk_mean = 0.0;
-            for lh in 0..n_lh {
-                let r_k = out.k_cache[lh].max_row_norm();
-                rk_mean += r_k / n_lh as f64;
-                g += gamma_growth(beta, r_k, r_k, toks.len().max(2)) / n_lh as f64;
-            }
-            g_acc += g;
-            rk_acc += rk_mean;
-        }
-        let g = g_acc / trials as f64;
-        gammas.push(g);
-        table.add_row(vec![
-            n.to_string(),
-            format!("{:.3}", rk_acc / trials as f64),
-            format!("{g:.3}"),
-        ]);
-    }
-    table.print();
-    println!("\n(markdown)\n{}", table.render_markdown());
-
-    // headline check: γ decreasing in n (Tab. 5's finding)
-    let decreasing = gammas.windows(2).all(|w| w[1] <= w[0] * 1.05);
-    println!(
-        "[table5] gamma(n) decreasing: {} ({:?})",
-        if decreasing { "YES (matches paper)" } else { "NO" },
-        gammas.iter().map(|g| (g * 1000.0).round() / 1000.0).collect::<Vec<_>>()
-    );
-    Ok(())
+    let cfg = RunCfg::from_args(&args);
+    let report = run_table5(&cfg)?;
+    maybe_write_json(&report, &args)
 }

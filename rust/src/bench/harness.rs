@@ -43,6 +43,12 @@ impl BenchOpts {
             Self::default()
         }
     }
+
+    /// Seconds-scale smoke preset used by `wildcat bench --smoke`: one
+    /// warmup, three measured iterations, hard 2 s cap per closure.
+    pub fn smoke() -> Self {
+        BenchOpts { warmup_iters: 1, measure_iters: 3, max_seconds: 2.0 }
+    }
 }
 
 /// Time `f` under `opts`; the closure's return value is black-boxed so the

@@ -1,5 +1,16 @@
 //! Benchmark harness substrate (criterion is unavailable offline) and
 //! shared paper-benchmark plumbing.
+//!
+//! * [`harness`] — warmup/measure/summarise timing loop
+//! * [`paperbench`] — method rosters + speed/quality measurement
+//! * [`runners`] — one runner per paper bench, shared by the
+//!   `rust/benches/bench_*` binaries and the `wildcat bench` subcommand
+//! * [`report`] — the machine-readable `BENCH_*.json` schema
 
 pub mod harness;
 pub mod paperbench;
+pub mod report;
+pub mod runners;
+
+pub use report::{BenchRecord, BenchReport};
+pub use runners::{run_all, BENCH_IDS, RunCfg};

@@ -17,6 +17,9 @@ use crate::workload::AttentionWorkload;
 /// of attention-output error, which we report directly.
 #[derive(Clone, Copy, Debug, Default)]
 pub struct Quality {
+    /// ‖O − Ô‖_max — absolute worst-entry error vs exact attention (the
+    /// raw value behind `err_max_rel`; reported in BENCH_*.json).
+    pub err_max_abs: f64,
     /// ‖O − Ô‖_max / ‖V‖_max — the paper's theoretical metric (Lem. 1).
     pub err_max_rel: f64,
     /// Mean |O − Ô| / ‖V‖_max — average-entry degradation (IS-proxy:
@@ -61,8 +64,10 @@ pub fn quality(approx: &Matrix, exact: &Matrix, v: &Matrix, readout: &Matrix) ->
         mean_err += ((a as f64) - (b as f64)).abs();
     }
     mean_err /= exact.as_slice().len().max(1) as f64;
+    let err_max_abs = max_abs_diff(approx, exact);
     Quality {
-        err_max_rel: max_abs_diff(approx, exact) / v_max,
+        err_max_abs,
+        err_max_rel: err_max_abs / v_max,
         err_mean_rel: mean_err / v_max,
         rel_frob: rel_frobenius_err(approx, exact),
         top1_agree: agree as f64 / exact.rows().max(1) as f64,
@@ -132,6 +137,7 @@ pub fn run_roster(
             let mut r = Rng::seed_from(seed0 + 1 + s);
             let out = m.attend(&w.q, &w.k, &w.v, w.beta, &mut r);
             let q = quality(&out, &exact_out, &w.v, &readout);
+            q_acc.err_max_abs += q.err_max_abs;
             q_acc.err_max_rel += q.err_max_rel;
             q_acc.err_mean_rel += q.err_mean_rel;
             q_acc.rel_frob += q.rel_frob;
@@ -142,6 +148,7 @@ pub fn run_roster(
             name: m.name(),
             timing,
             quality: Quality {
+                err_max_abs: q_acc.err_max_abs * inv,
                 err_max_rel: q_acc.err_max_rel * inv,
                 err_mean_rel: q_acc.err_mean_rel * inv,
                 rel_frob: q_acc.rel_frob * inv,

@@ -1,0 +1,319 @@
+//! Machine-readable bench reports — the `BENCH_*.json` perf-trajectory
+//! contract every PR is measured against.
+//!
+//! One report per paper bench (`fig3`, `table2`, … `micro`), written at
+//! the repo root by `wildcat bench --smoke`. The schema is deliberately
+//! small and stable:
+//!
+//! ```json
+//! {
+//!   "schema_version": 1,
+//!   "bench": "fig3",
+//!   "title": "Fig. 3 — WildCat vs exact blocked attention",
+//!   "mode": "smoke",
+//!   "seed": 0,
+//!   "unit": "ns",
+//!   "records": [
+//!     {"name": "wildcat n=1024", "median_ns": 1234567.0,
+//!      "max_abs_err": 0.031, "coreset_size": 64, "speedup": 3.2}
+//!   ]
+//! }
+//! ```
+//!
+//! Per record, `median_ns` is the median wall time per operation;
+//! `max_abs_err` is ‖O − Ô‖_max against exact attention (`null` when the
+//! record has no attention-error semantics, e.g. a GEMM micro-bench);
+//! `coreset_size` is the coreset/budget the method ran at (`null` for
+//! exact baselines). Extra numeric fields (speed-ups, scores, γ values)
+//! may appear per record; consumers must ignore unknown keys.
+
+use crate::util::json::{parse, Json};
+use anyhow::{Context, Result};
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+/// Schema version stamped into every report.
+pub const SCHEMA_VERSION: f64 = 1.0;
+
+/// One measured row of a bench report.
+#[derive(Clone, Debug)]
+pub struct BenchRecord {
+    pub name: String,
+    /// Median wall time per operation, nanoseconds.
+    pub median_ns: f64,
+    /// ‖O − Ô‖_max vs exact attention; `None` when not applicable.
+    pub max_abs_err: Option<f64>,
+    /// Coreset size / retained-entry budget; `None` when not applicable.
+    pub coreset_size: Option<usize>,
+    /// Additional numeric readouts (speed-up, score, gamma, ...).
+    pub extra: BTreeMap<String, f64>,
+}
+
+impl BenchRecord {
+    pub fn new(name: impl Into<String>, median_seconds: f64) -> Self {
+        BenchRecord {
+            name: name.into(),
+            median_ns: median_seconds * 1e9,
+            max_abs_err: None,
+            coreset_size: None,
+            extra: BTreeMap::new(),
+        }
+    }
+
+    pub fn err(mut self, max_abs_err: f64) -> Self {
+        self.max_abs_err = Some(max_abs_err);
+        self
+    }
+
+    pub fn coreset(mut self, size: usize) -> Self {
+        self.coreset_size = Some(size);
+        self
+    }
+
+    pub fn extra(mut self, key: &str, value: f64) -> Self {
+        self.extra.insert(key.to_string(), value);
+        self
+    }
+
+    fn to_json(&self) -> Json {
+        let mut o = BTreeMap::new();
+        o.insert("name".to_string(), Json::Str(self.name.clone()));
+        o.insert("median_ns".to_string(), finite_num(self.median_ns));
+        o.insert(
+            "max_abs_err".to_string(),
+            match self.max_abs_err {
+                Some(e) => finite_num(e),
+                None => Json::Null,
+            },
+        );
+        o.insert(
+            "coreset_size".to_string(),
+            match self.coreset_size {
+                Some(r) => Json::Num(r as f64),
+                None => Json::Null,
+            },
+        );
+        for (k, v) in &self.extra {
+            o.insert(k.clone(), finite_num(*v));
+        }
+        Json::Obj(o)
+    }
+}
+
+/// Non-finite floats have no JSON encoding; map them to null so a NaN
+/// measurement can never corrupt the report file.
+fn finite_num(x: f64) -> Json {
+    if x.is_finite() {
+        Json::Num(x)
+    } else {
+        Json::Null
+    }
+}
+
+/// A full per-bench report.
+#[derive(Clone, Debug)]
+pub struct BenchReport {
+    /// Short bench id: `fig3`, `table2`, `table3`, `table4`, `table5`,
+    /// `figm1`, `micro`. Also the file stem (`BENCH_<bench>.json`).
+    pub bench: String,
+    pub title: String,
+    /// `"smoke"` or `"full"`.
+    pub mode: String,
+    pub seed: u64,
+    pub records: Vec<BenchRecord>,
+}
+
+impl BenchReport {
+    pub fn new(bench: &str, title: &str, smoke: bool, seed: u64) -> Self {
+        BenchReport {
+            bench: bench.to_string(),
+            title: title.to_string(),
+            mode: if smoke { "smoke" } else { "full" }.to_string(),
+            seed,
+            records: Vec::new(),
+        }
+    }
+
+    pub fn push(&mut self, record: BenchRecord) {
+        self.records.push(record);
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut o = BTreeMap::new();
+        o.insert("schema_version".to_string(), Json::Num(SCHEMA_VERSION));
+        o.insert("bench".to_string(), Json::Str(self.bench.clone()));
+        o.insert("title".to_string(), Json::Str(self.title.clone()));
+        o.insert("mode".to_string(), Json::Str(self.mode.clone()));
+        o.insert("seed".to_string(), Json::Num(self.seed as f64));
+        o.insert("unit".to_string(), Json::Str("ns".to_string()));
+        o.insert(
+            "records".to_string(),
+            Json::Arr(self.records.iter().map(BenchRecord::to_json).collect()),
+        );
+        Json::Obj(o)
+    }
+
+    /// File name this report is written under.
+    pub fn file_name(&self) -> String {
+        format!("BENCH_{}.json", self.bench)
+    }
+
+    /// Validate, serialise and write `BENCH_<bench>.json` into `dir`.
+    pub fn write(&self, dir: &Path) -> Result<PathBuf> {
+        let j = self.to_json();
+        validate(&j).map_err(|e| anyhow::anyhow!("internal: invalid report for {}: {e}", self.bench))?;
+        let path = dir.join(self.file_name());
+        std::fs::write(&path, j.to_string_compact())
+            .with_context(|| format!("writing {path:?}"))?;
+        Ok(path)
+    }
+}
+
+/// Validate a parsed report against the schema described in the module
+/// docs. Returns the first violation as an error string.
+pub fn validate(j: &Json) -> std::result::Result<(), String> {
+    let obj = j.as_obj().ok_or("report is not a JSON object")?;
+    let version = j
+        .get("schema_version")
+        .and_then(Json::as_f64)
+        .ok_or("missing numeric schema_version")?;
+    if version != SCHEMA_VERSION {
+        return Err(format!("unsupported schema_version {version}"));
+    }
+    for key in ["bench", "title", "mode", "unit"] {
+        let s = j
+            .get(key)
+            .and_then(Json::as_str)
+            .ok_or_else(|| format!("missing string field {key:?}"))?;
+        if s.is_empty() {
+            return Err(format!("empty field {key:?}"));
+        }
+    }
+    match j.get("mode").and_then(Json::as_str) {
+        Some("smoke") | Some("full") => {}
+        other => return Err(format!("mode must be smoke|full, got {other:?}")),
+    }
+    j.get("seed").and_then(Json::as_f64).ok_or("missing numeric seed")?;
+    let records = j
+        .get("records")
+        .and_then(Json::as_arr)
+        .ok_or("missing records array")?;
+    if records.is_empty() {
+        return Err("records array is empty".to_string());
+    }
+    for (i, r) in records.iter().enumerate() {
+        let name = r
+            .get("name")
+            .and_then(Json::as_str)
+            .ok_or_else(|| format!("record {i}: missing string name"))?;
+        let ns = r
+            .get("median_ns")
+            .and_then(Json::as_f64)
+            .ok_or_else(|| format!("record {i} ({name}): missing numeric median_ns"))?;
+        if !(ns.is_finite() && ns >= 0.0) {
+            return Err(format!("record {i} ({name}): median_ns {ns} not a finite non-negative number"));
+        }
+        match r.get("max_abs_err") {
+            None | Some(Json::Null) => {}
+            Some(Json::Num(e)) if e.is_finite() && *e >= 0.0 => {}
+            Some(other) => {
+                return Err(format!("record {i} ({name}): bad max_abs_err {other:?}"))
+            }
+        }
+        match r.get("coreset_size") {
+            None | Some(Json::Null) => {}
+            Some(Json::Num(c)) if c.is_finite() && *c >= 0.0 && c.fract() == 0.0 => {}
+            Some(other) => {
+                return Err(format!("record {i} ({name}): bad coreset_size {other:?}"))
+            }
+        }
+    }
+    let _ = obj;
+    Ok(())
+}
+
+/// Parse + validate a report file's text; returns the parsed JSON.
+pub fn validate_str(text: &str) -> std::result::Result<Json, String> {
+    let j = parse(text)?;
+    validate(&j)?;
+    Ok(j)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> BenchReport {
+        let mut rep = BenchReport::new("fig3", "Fig. 3 smoke", true, 7);
+        rep.push(
+            BenchRecord::new("exact n=512", 0.0123)
+                .err(0.0),
+        );
+        rep.push(
+            BenchRecord::new("wildcat n=512", 0.0034)
+                .err(0.021)
+                .coreset(64)
+                .extra("speedup", 3.61),
+        );
+        rep
+    }
+
+    #[test]
+    fn roundtrips_through_schema() {
+        let rep = sample();
+        let j = rep.to_json();
+        validate(&j).unwrap();
+        let text = j.to_string_compact();
+        let back = validate_str(&text).unwrap();
+        assert_eq!(back, j);
+        assert_eq!(back.get("bench").unwrap().as_str(), Some("fig3"));
+        let recs = back.get("records").unwrap().as_arr().unwrap();
+        assert_eq!(recs.len(), 2);
+        assert_eq!(recs[1].get("coreset_size").unwrap().as_usize(), Some(64));
+        let ns = recs[1].get("median_ns").unwrap().as_f64().unwrap();
+        assert!((ns - 0.0034e9).abs() < 1.0, "ns={ns}");
+        assert!((recs[1].get("speedup").unwrap().as_f64().unwrap() - 3.61).abs() < 1e-9);
+    }
+
+    #[test]
+    fn rejects_schema_violations() {
+        // not an object
+        assert!(validate(&Json::Arr(vec![])).is_err());
+        // empty records
+        let mut rep = sample();
+        rep.records.clear();
+        assert!(validate(&rep.to_json()).is_err());
+        // bad mode
+        let mut rep = sample();
+        rep.mode = "warp".to_string();
+        assert!(validate(&rep.to_json()).is_err());
+        // record with negative time
+        let mut rep = sample();
+        rep.records[0].median_ns = -5.0;
+        assert!(validate(&rep.to_json()).is_err());
+        // malformed text
+        assert!(validate_str("{not json").is_err());
+    }
+
+    #[test]
+    fn nan_measurements_become_null() {
+        let mut rep = sample();
+        rep.records[0].max_abs_err = Some(f64::NAN);
+        let j = rep.to_json();
+        // NaN err serialises as null, which the schema accepts
+        validate(&j).unwrap();
+        let recs = j.get("records").unwrap().as_arr().unwrap();
+        assert_eq!(recs[0].get("max_abs_err"), Some(&Json::Null));
+    }
+
+    #[test]
+    fn write_creates_named_file() {
+        let dir = std::env::temp_dir().join(format!("wildcat_report_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = sample().write(&dir).unwrap();
+        assert!(path.ends_with("BENCH_fig3.json"));
+        let text = std::fs::read_to_string(&path).unwrap();
+        validate_str(&text).unwrap();
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

@@ -3,7 +3,9 @@
 //! step is milliseconds, so contention is negligible — re-examined in
 //! EXPERIMENTS.md §Perf).
 
+use crate::util::json::Json;
 use crate::util::stats::{LogHistogram, Welford};
+use std::collections::BTreeMap;
 use std::sync::Mutex;
 use std::time::{Duration, Instant};
 
@@ -95,6 +97,33 @@ impl ServingMetrics {
         g.counters.tokens_generated as f64 / dt
     }
 
+    /// Machine-readable snapshot — same data as [`ServingMetrics::report`]
+    /// but as JSON, for `wildcat serve --metrics-json PATH` dumps and for
+    /// the bench tooling's perf-trajectory files.
+    pub fn to_json(&self) -> Json {
+        let g = self.inner.lock().unwrap();
+        let c = g.counters;
+        // non-finite values (empty Welford extremes) have no JSON encoding
+        let num = |x: f64| Json::Num(if x.is_finite() { x } else { 0.0 });
+        let mut o = BTreeMap::new();
+        o.insert("submitted".to_string(), Json::Num(c.submitted as f64));
+        o.insert("rejected".to_string(), Json::Num(c.rejected as f64));
+        o.insert("completed".to_string(), Json::Num(c.completed as f64));
+        o.insert("prefill_tokens".to_string(), Json::Num(c.prefill_tokens as f64));
+        o.insert("tokens_generated".to_string(), Json::Num(c.tokens_generated as f64));
+        o.insert("compressions".to_string(), Json::Num(c.compressions as f64));
+        o.insert("queue_us_mean".to_string(), num(g.queue_us.mean()));
+        o.insert("prefill_us_mean".to_string(), num(g.prefill_us.mean()));
+        o.insert(
+            "decode_us_per_token_mean".to_string(),
+            num(g.decode_per_token_us.mean()),
+        );
+        o.insert("e2e_ms_p50".to_string(), num(g.e2e_us.quantile(0.5) / 1e3));
+        o.insert("e2e_ms_p99".to_string(), num(g.e2e_us.quantile(0.99) / 1e3));
+        o.insert("uptime_s".to_string(), num(g.started.elapsed().as_secs_f64()));
+        Json::Obj(o)
+    }
+
     /// Render a human-readable report block.
     pub fn report(&self) -> String {
         let g = self.inner.lock().unwrap();
@@ -152,6 +181,29 @@ mod tests {
         assert!(m.decode_throughput() > 0.0);
         let rep = m.report();
         assert!(rep.contains("completed=1"));
+    }
+
+    #[test]
+    fn json_snapshot_roundtrips() {
+        let m = ServingMetrics::new();
+        // empty metrics: every field present and finite-encoded
+        let j0 = m.to_json();
+        assert_eq!(j0.get("completed").and_then(Json::as_f64), Some(0.0));
+        m.on_submit();
+        m.on_complete(
+            Duration::from_micros(100),
+            Duration::from_millis(5),
+            Duration::from_millis(10),
+            64,
+            8,
+        );
+        let j = m.to_json();
+        assert_eq!(j.get("submitted").and_then(Json::as_f64), Some(1.0));
+        assert_eq!(j.get("tokens_generated").and_then(Json::as_f64), Some(8.0));
+        assert!(j.get("e2e_ms_p50").and_then(Json::as_f64).unwrap() > 0.0);
+        // serialise + reparse = fixed point
+        let text = j.to_string_compact();
+        assert_eq!(crate::util::json::parse(&text).unwrap(), j);
     }
 
     #[test]

@@ -19,7 +19,7 @@
 //!
 //! ## Quick tour
 //!
-//! ```no_run
+//! ```
 //! use wildcat::attention::{wildcat_attention, WildcatParams};
 //! use wildcat::linalg::Matrix;
 //! use wildcat::rng::Rng;

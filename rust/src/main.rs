@@ -6,6 +6,8 @@
 //!               (native or PJRT backend) and report serving metrics
 //! * `attn`    — one-shot WildCat-vs-exact attention comparison
 //! * `tasks`   — evaluate a KV compression policy on the 13-task suite
+//! * `bench`   — run the paper benches; `--smoke` runs the whole suite in
+//!               seconds and writes machine-readable `BENCH_*.json`
 
 use std::sync::Arc;
 use std::time::{Duration, Instant};
@@ -43,15 +45,39 @@ fn main() -> anyhow::Result<()> {
         "serve" => cmd_serve(&args),
         "attn" => cmd_attn(&args),
         "tasks" => cmd_tasks(&args),
+        "bench" => cmd_bench(&args),
         _ => {
             println!(
                 "wildcat — near-linear attention serving coordinator\n\
-                 usage: wildcat <info|serve|attn|tasks> [--options]\n\
+                 usage: wildcat <info|serve|attn|tasks|bench> [--options]\n\
                  see README.md for per-command options"
             );
             Ok(())
         }
     }
+}
+
+/// `wildcat bench [--smoke] [--out DIR] [--only fig3,table4,...] [--seed N]`
+///
+/// Runs the paper benches through the shared runners in
+/// `wildcat::bench::runners` and writes one `BENCH_<id>.json` per bench
+/// into `--out` (default: the current directory, i.e. the repo root when
+/// invoked from a checkout). `--smoke` is the CI contract: the full suite
+/// in well under two minutes on four cores, deterministic for a given
+/// `--seed`.
+fn cmd_bench(args: &Args) -> anyhow::Result<()> {
+    let cfg = wildcat::bench::RunCfg::from_args(args);
+    let out_dir = args.get_or("out", ".");
+    let only = args.get("only");
+    let written = wildcat::bench::run_all(&cfg, std::path::Path::new(&out_dir), only)?;
+    for p in &written {
+        // re-read + validate what landed on disk: the CI job greps this
+        let text = std::fs::read_to_string(p)?;
+        wildcat::bench::report::validate_str(&text)
+            .map_err(|e| anyhow::anyhow!("{}: {e}", p.display()))?;
+    }
+    println!("[bench] all {} report(s) validate against the schema", written.len());
+    Ok(())
 }
 
 fn cmd_info(args: &Args) -> anyhow::Result<()> {
@@ -113,6 +139,10 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
         let _ = rx.recv_timeout(Duration::from_secs(300));
     }
     println!("{}", handle.metrics().report());
+    if let Some(path) = args.get("metrics-json") {
+        std::fs::write(path, handle.metrics().to_json().to_string_compact())?;
+        println!("metrics snapshot written to {path}");
+    }
     handle.shutdown();
     Ok(())
 }

@@ -7,13 +7,19 @@
 //!   carries the true token count; caches are sliced to `length`.
 //! * decode: the cache is padded to the artifact capacity `R` with
 //!   arbitrary keys, **zero values** and **zero weights** (inert rows).
+//!
+//! Gated behind the `pjrt` cargo feature (see [`super`] module docs);
+//! without it a stub with the same API reports the missing feature.
 
+#[cfg(feature = "pjrt")]
 use super::{LiteralArg, PjrtRuntime};
 use crate::linalg::Matrix;
 use crate::model::{ModelBackend, ModelConfig, PrefillOutput};
+#[cfg(feature = "pjrt")]
 use anyhow::{anyhow, Result};
 
 /// PJRT-backed serving model.
+#[cfg(feature = "pjrt")]
 pub struct PjrtBackend {
     rt: PjrtRuntime,
     cfg: ModelConfig,
@@ -23,6 +29,7 @@ pub struct PjrtBackend {
     decode_caps: Vec<usize>,
 }
 
+#[cfg(feature = "pjrt")]
 impl PjrtBackend {
     pub fn open(dir: impl AsRef<std::path::Path>) -> Result<Self> {
         let rt = PjrtRuntime::open(dir)?;
@@ -78,6 +85,7 @@ impl PjrtBackend {
     }
 }
 
+#[cfg(feature = "pjrt")]
 impl ModelBackend for PjrtBackend {
     fn config(&self) -> ModelConfig {
         self.cfg
@@ -168,5 +176,50 @@ impl ModelBackend for PjrtBackend {
                 .collect()
         };
         (logits, unpack(&outs[1]), unpack(&outs[2]))
+    }
+}
+
+/// Stub backend for builds without the `pjrt` feature. [`PjrtBackend::open`]
+/// always errors, so the `ModelBackend` methods below are unreachable; they
+/// exist so `Server::spawn(cfg, comp, || PjrtBackend::open(dir).unwrap())`
+/// still typechecks in the CLI and examples.
+#[cfg(not(feature = "pjrt"))]
+pub struct PjrtBackend {
+    #[allow(dead_code)] // never constructed: open() always errors
+    cfg: ModelConfig,
+}
+
+#[cfg(not(feature = "pjrt"))]
+impl PjrtBackend {
+    pub fn open(dir: impl AsRef<std::path::Path>) -> anyhow::Result<Self> {
+        let _ = dir;
+        anyhow::bail!(
+            "this build of wildcat has no PJRT support (built without the \
+             `pjrt` feature); use the native backend instead"
+        )
+    }
+
+    pub fn platform(&self) -> String {
+        "unavailable (built without the `pjrt` feature)".to_string()
+    }
+}
+
+#[cfg(not(feature = "pjrt"))]
+impl ModelBackend for PjrtBackend {
+    fn config(&self) -> ModelConfig {
+        self.cfg
+    }
+
+    fn prefill(&mut self, _tokens: &[u32]) -> PrefillOutput {
+        unreachable!("PjrtBackend cannot be constructed without the `pjrt` feature")
+    }
+
+    fn decode(
+        &mut self,
+        _token: u32,
+        _pos: usize,
+        _caches: &[(&Matrix, &Matrix, &[f64])],
+    ) -> (Vec<f32>, Vec<Vec<f32>>, Vec<Vec<f32>>) {
+        unreachable!("PjrtBackend cannot be constructed without the `pjrt` feature")
     }
 }

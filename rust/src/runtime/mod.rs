@@ -4,6 +4,14 @@
 //! protos) which this module parses, compiles once per process through
 //! the PJRT CPU client, and caches.
 //!
+//! The PJRT client comes from the external `xla` bindings, which are not
+//! available in the offline build. The execution path is therefore gated
+//! behind the `pjrt` cargo feature: without it, [`PjrtRuntime::open`] and
+//! [`PjrtBackend::open`](backend::PjrtBackend::open) return a descriptive
+//! error and everything else in the crate (native model, benches,
+//! coordinator) works unchanged. The manifest parser ([`artifacts`]) is
+//! pure Rust and always available.
+//!
 //! `xla::PjRtClient` is `Rc`-backed (not `Send`), so a [`PjrtRuntime`] is
 //! owned by a single thread — the coordinator dedicates a model-worker
 //! thread to it and communicates over channels.
@@ -14,12 +22,17 @@ pub mod backend;
 pub use artifacts::{ArtifactSpec, Manifest, ModelSpec, TensorSpec};
 pub use backend::PjrtBackend;
 
+#[cfg(feature = "pjrt")]
 use crate::linalg::Matrix;
+#[cfg(feature = "pjrt")]
 use anyhow::{anyhow, Context, Result};
+#[cfg(feature = "pjrt")]
 use std::collections::HashMap;
+#[cfg(feature = "pjrt")]
 use std::path::{Path, PathBuf};
 
 /// A loaded-and-compiled artifact registry over one PJRT client.
+#[cfg(feature = "pjrt")]
 pub struct PjrtRuntime {
     client: xla::PjRtClient,
     dir: PathBuf,
@@ -27,6 +40,7 @@ pub struct PjrtRuntime {
     executables: HashMap<String, xla::PjRtLoadedExecutable>,
 }
 
+#[cfg(feature = "pjrt")]
 impl PjrtRuntime {
     /// Open the artifact directory (reads `manifest.json`) and create the
     /// PJRT CPU client. Compilation is lazy per artifact.
@@ -97,6 +111,7 @@ impl PjrtRuntime {
 }
 
 /// Typed argument helper for [`PjrtRuntime::execute_f32`].
+#[cfg(feature = "pjrt")]
 pub enum LiteralArg<'a> {
     /// Flat f32 data with an explicit shape.
     F32(&'a [f32], Vec<i64>),
@@ -108,6 +123,7 @@ pub enum LiteralArg<'a> {
     I32Vec(&'a [i32]),
 }
 
+#[cfg(feature = "pjrt")]
 impl LiteralArg<'_> {
     pub fn to_literal(&self) -> Result<xla::Literal> {
         Ok(match self {
@@ -127,7 +143,34 @@ impl LiteralArg<'_> {
     }
 }
 
-#[cfg(test)]
+/// Stub runtime used when the crate is built without the `pjrt` feature:
+/// [`PjrtRuntime::open`] always fails with a clear message, so every
+/// downstream caller (the `wildcat info` / `wildcat serve --pjrt` paths)
+/// reports the build configuration instead of a missing-symbol error.
+#[cfg(not(feature = "pjrt"))]
+pub struct PjrtRuntime {
+    /// Parsed artifact manifest (kept so callers can typecheck; a stub
+    /// runtime is never actually constructed).
+    pub manifest: Manifest,
+}
+
+#[cfg(not(feature = "pjrt"))]
+impl PjrtRuntime {
+    pub fn open(dir: impl AsRef<std::path::Path>) -> anyhow::Result<Self> {
+        let _ = dir;
+        anyhow::bail!(
+            "this build of wildcat has no PJRT support (the `xla` bindings are \
+             not available offline); rebuild with `--features pjrt` in an \
+             environment that provides the xla crate, or use the native backend"
+        )
+    }
+
+    pub fn platform(&self) -> String {
+        "unavailable (built without the `pjrt` feature)".to_string()
+    }
+}
+
+#[cfg(all(test, feature = "pjrt"))]
 mod tests {
     use super::*;
 

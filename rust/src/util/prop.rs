@@ -3,8 +3,7 @@
 //! `Cases` drives a closure over many seeded random cases and reports the
 //! first failing seed so a failure reproduces deterministically:
 //!
-//! ```no_run
-//! // (no_run: doctest binaries don't inherit the xla rpath link flags)
+//! ```
 //! use wildcat::util::prop::Cases;
 //! Cases::new(64).run(|rng| {
 //!     let n = 1 + rng.below(100);

@@ -1,0 +1,113 @@
+//! Integration tests for the self-measuring contract introduced with the
+//! `wildcat bench` runner:
+//!
+//! * the paper's qualitative error-decay claim — WildCat's attention error
+//!   shrinks as the coreset rank grows on a fixed-seed Gaussian workload
+//!   (the empirical counterpart of the super-polynomial decay guarantee);
+//! * `wildcat bench --smoke` output round-trips through the BENCH_*.json
+//!   schema: written files parse, validate, and re-serialise to the same
+//!   document.
+
+use wildcat::attention::{exact_attention, wildcat_attention, WildcatParams};
+use wildcat::bench::report::validate_str;
+use wildcat::bench::runners::{run_all, RunCfg};
+use wildcat::linalg::norms::max_abs_diff;
+use wildcat::linalg::Matrix;
+use wildcat::rng::Rng;
+use wildcat::util::cli::Args;
+use wildcat::util::json::parse;
+
+/// Error monotonically shrinks as rank grows (averaged over RPNYS seeds;
+/// "monotone" allows the small Monte-Carlo wiggle the paper's Fig. M.1
+/// also shows — every step must stay within 1.2x of the previous level,
+/// and the overall trend must be strictly decreasing).
+#[test]
+fn wildcat_error_monotone_in_rank() {
+    let mut data_rng = Rng::seed_from(71);
+    let n = 256;
+    let q = Matrix::randn(&mut data_rng, 64, 8);
+    let k = Matrix::randn(&mut data_rng, n, 8);
+    let v = Matrix::randn(&mut data_rng, n, 4);
+    let beta = 0.35f32;
+    let exact = exact_attention(&q, &k, &v, beta);
+
+    let ranks = [4usize, 16, 64, 192];
+    let mut errs = Vec::new();
+    for &rank in &ranks {
+        let mut tot = 0.0;
+        for seed in 0..4u64 {
+            let mut rng = Rng::seed_from(1000 + seed);
+            let params = WildcatParams { rank, bins: 1, beta: Some(beta as f64) };
+            let o = wildcat_attention(&q, &k, &v, &params, &mut rng);
+            tot += max_abs_diff(&o, &exact);
+        }
+        errs.push(tot / 4.0);
+    }
+    for w in errs.windows(2) {
+        assert!(
+            w[1] <= w[0] * 1.2 + 1e-9,
+            "error increased along the rank sweep: {errs:?}"
+        );
+    }
+    assert!(
+        errs[ranks.len() - 1] < errs[0] * 0.5,
+        "error did not shrink substantially from r={} to r={}: {errs:?}",
+        ranks[0],
+        ranks[ranks.len() - 1]
+    );
+    // near-full rank is near-exact
+    let mut rng = Rng::seed_from(9);
+    let params = WildcatParams { rank: n, bins: 1, beta: Some(beta as f64) };
+    let o = wildcat_attention(&q, &k, &v, &params, &mut rng);
+    assert!(max_abs_diff(&o, &exact) < 2e-4);
+}
+
+/// `wildcat bench --smoke` writes schema-valid JSON that survives a full
+/// parse → validate → serialise → parse round trip. Runs a two-bench
+/// subset at tiny shapes so the test stays seconds-scale.
+#[test]
+fn bench_smoke_reports_roundtrip_schema() {
+    let out = std::env::temp_dir().join(format!("wildcat_bench_smoke_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&out);
+    std::fs::create_dir_all(&out).unwrap();
+
+    let args = Args::parse([
+        "--smoke",
+        "--min-exp",
+        "8",
+        "--max-exp",
+        "9",
+        "--err-seeds",
+        "1",
+        "--trials",
+        "1",
+    ]);
+    let cfg = RunCfg::from_args(&args);
+    let written = run_all(&cfg, &out, Some("fig3,table5")).unwrap();
+    assert_eq!(written.len(), 2, "expected one report per requested bench");
+
+    let mut saw_coreset = false;
+    for path in &written {
+        let text = std::fs::read_to_string(path).unwrap();
+        let j = validate_str(&text).unwrap_or_else(|e| panic!("{}: {e}", path.display()));
+        // round trip: serialise + reparse is a fixed point
+        let again = parse(&j.to_string_compact()).unwrap();
+        assert_eq!(again, j, "{}: serialisation not a fixed point", path.display());
+        assert_eq!(j.get("mode").unwrap().as_str(), Some("smoke"));
+        let records = j.get("records").unwrap().as_arr().unwrap();
+        assert!(!records.is_empty());
+        for r in records {
+            assert!(r.get("name").unwrap().as_str().is_some());
+            let ns = r.get("median_ns").unwrap().as_f64().unwrap();
+            assert!(ns >= 0.0 && ns.is_finite());
+            if r.get("coreset_size").map(|c| c.as_f64().is_some()).unwrap_or(false) {
+                saw_coreset = true;
+            }
+        }
+    }
+    assert!(saw_coreset, "no record carried a coreset size");
+
+    // unknown bench ids are rejected up front
+    assert!(run_all(&cfg, &out, Some("nope")).is_err());
+    let _ = std::fs::remove_dir_all(&out);
+}

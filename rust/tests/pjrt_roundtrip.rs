@@ -1,6 +1,9 @@
 //! PJRT round-trip integration tests: the AOT artifacts (python-lowered
 //! HLO) executed through the Rust runtime must match the native Rust
 //! implementations. Skips gracefully when `make artifacts` has not run.
+//! The whole file is compiled only with the `pjrt` feature (the offline
+//! build has no xla bindings; see rust/src/runtime/mod.rs).
+#![cfg(feature = "pjrt")]
 
 use wildcat::attention::{exact_attention, wtd_attention, ClipRange};
 use wildcat::linalg::Matrix;
