@@ -1,4 +1,5 @@
-//! Shared runners for the seven paper benches.
+//! Shared runners for the seven paper benches plus the `serve` cluster
+//! serving bench.
 //!
 //! Every `rust/benches/bench_*.rs` binary is a thin wrapper around one of
 //! the `run_*` functions here, and `wildcat bench` drives the same
@@ -18,7 +19,10 @@ use crate::attention::{
 use crate::bench::harness::{bench, speedup, BenchOpts, BenchResult};
 use crate::bench::paperbench::{roster, run_roster, MethodResult};
 use crate::bench::report::{BenchRecord, BenchReport};
-use crate::coordinator::ServingMetrics;
+use crate::cluster::{
+    replay, Pacing, ReplayConfig, ReplicaPool, Router, RouterConfig, RoutingPolicy,
+};
+use crate::coordinator::{ServerConfig, ServingMetrics};
 use crate::kernels::gamma_growth;
 use crate::kvcache::{
     BalanceKv, CompressKvPolicy, CompressionCtx, KvCompressor, PyramidKv, SnapKv, StreamingLlm,
@@ -36,10 +40,11 @@ use crate::util::table::{fmt_pct, fmt_speedup, Table};
 use crate::workload::gaussian::{activation_qkv, biggan_shapes};
 use crate::workload::gaussian_qkv;
 use crate::workload::tasks::{score, task_suite, TaskKind};
+use crate::workload::trace::{shaped_trace, TraceShape};
 use anyhow::{Context, Result};
 use std::path::{Path, PathBuf};
 use std::sync::Arc;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 /// Configuration shared by every runner.
 pub struct RunCfg<'a> {
@@ -79,27 +84,59 @@ pub fn maybe_write_json(report: &BenchReport, args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// Try `artifacts/weights.bin` under `--artifacts`. `Ok(None)` means the
+/// caller should fall back to a seeded random model — allowed only when
+/// `allow_fallback` (smoke benches, the cluster CLI); otherwise the load
+/// error propagates. The single copy of the fallback policy shared by
+/// `load_model`, the `serve` bench, and `wildcat cluster`.
+pub fn load_weights(
+    args: &Args,
+    allow_fallback: bool,
+    who: &str,
+) -> Result<Option<Arc<WeightFile>>> {
+    let dir = args.get_or("artifacts", "artifacts");
+    match WeightFile::load(format!("{dir}/weights.bin")) {
+        Ok(w) => Ok(Some(Arc::new(w))),
+        Err(e) if allow_fallback => {
+            println!(
+                "[{who}] weights.bin unavailable ({e:#}); falling back to a seeded random model"
+            );
+            Ok(None)
+        }
+        Err(e) => Err(e).context("weights.bin missing — run `make artifacts` first"),
+    }
+}
+
+/// Per-replica backend factory implementing the weights-or-seeded-random
+/// policy resolved by [`load_weights`]: every replica loads the trained
+/// weights when present, else builds a random model with a deterministic
+/// per-replica seed (`seed + i`). Shared by the `serve` bench and the
+/// `wildcat cluster` CLI so the two paths can never drift.
+pub fn replica_backend_factory(
+    weights: Option<Arc<WeightFile>>,
+    model_cfg: ModelConfig,
+    seed: u64,
+) -> impl Fn(usize) -> Transformer + Send + Sync + 'static {
+    move |i| match &weights {
+        Some(w) => Transformer::from_weights(w.as_ref(), model_cfg).expect("model load"),
+        None => Transformer::random(
+            model_cfg,
+            &mut Rng::seed_from(seed.wrapping_add(0x5E52).wrapping_add(i as u64)),
+        ),
+    }
+}
+
 /// The model used by the Tab. 4 / Tab. 5 benches: the build-time-trained
 /// LM when `artifacts/weights.bin` exists; in smoke mode a seeded random
 /// model of the same architecture stands in so `wildcat bench --smoke`
 /// needs no artifacts.
 fn load_model(cfg: &RunCfg) -> Result<Transformer> {
-    let dir = cfg.args.get_or("artifacts", "artifacts");
-    match WeightFile::load(format!("{dir}/weights.bin")) {
-        Ok(w) => Transformer::from_weights(&w, ModelConfig::default()),
-        Err(e) => {
-            if cfg.smoke {
-                println!(
-                    "[bench] weights.bin unavailable ({e:#}); smoke mode falls back to a seeded random model"
-                );
-                Ok(Transformer::random(
-                    ModelConfig::default(),
-                    &mut Rng::seed_from(cfg.seed.wrapping_add(0x517C)),
-                ))
-            } else {
-                Err(e).context("weights.bin missing — run `make artifacts` first")
-            }
-        }
+    match load_weights(cfg.args, cfg.smoke, "bench")? {
+        Some(w) => Transformer::from_weights(w.as_ref(), ModelConfig::default()),
+        None => Ok(Transformer::random(
+            ModelConfig::default(),
+            &mut Rng::seed_from(cfg.seed.wrapping_add(0x517C)),
+        )),
     }
 }
 
@@ -924,12 +961,138 @@ pub fn run_micro(cfg: &RunCfg) -> Result<BenchReport> {
 }
 
 // ---------------------------------------------------------------------
+// serve — the cluster serving bench (trace-driven, per routing policy)
+// ---------------------------------------------------------------------
+
+/// Compare the routing policies at 1 vs N replicas on one fixed-seed
+/// bursty trace. Smoke mode replays in virtual time (saturation test,
+/// seconds-scale, needs no artifacts); full mode replays at wall-clock
+/// rate against the trained model. Writes `BENCH_serve.json`: per config
+/// `median_ns` is the p50 end-to-end latency, with throughput (req/s,
+/// tok/s), p95/p99, and the cluster reject rate as extra fields.
+pub fn run_serve(cfg: &RunCfg) -> Result<BenchReport> {
+    let args = cfg.args;
+    let seed = cfg.seed;
+    let virtual_time = cfg.smoke || args.flag("fast");
+    let replica_counts: Vec<usize> = args.get_list("replicas", &[1usize, 4]);
+    let max_replicas = replica_counts.iter().copied().max().unwrap_or(1);
+    let rate = args.get_parse::<f64>("rate", if cfg.smoke { 400.0 } else { 30.0 });
+    let secs = args.get_parse::<f64>("duration", if cfg.smoke { 0.25 } else { 10.0 });
+    let queue_cap = args.get_parse::<usize>("queue-cap", if cfg.smoke { 16 } else { 64 });
+    let budget = args.get_parse::<usize>("budget", 96);
+    // bursty by default (satellite: non-uniform traffic), short periods
+    // in smoke so several on/off cycles fit the compressed trace
+    let shape = match args.get("shape") {
+        Some(name) => TraceShape::parse(name)?,
+        None => TraceShape::OnOff {
+            period: Duration::from_millis(if cfg.smoke { 100 } else { 2000 }),
+            duty: 0.3,
+            burst: 3.0,
+        },
+    };
+    let model_cfg = ModelConfig::default();
+    let weights = load_weights(args, cfg.smoke, "serve")?;
+
+    let title = "serve — multi-replica serving: throughput & latency per routing policy";
+    let mut report = BenchReport::new("serve", title, cfg.smoke, seed);
+    let mut table = Table::new(
+        title,
+        &["policy", "replicas", "req/s", "tok/s", "p50 (ms)", "p95 (ms)", "p99 (ms)", "reject %"],
+    );
+    println!(
+        "[serve] trace: rate {rate}/s x {secs}s, shape {}, {} pacing, queue cap {queue_cap}",
+        shape.name(),
+        if virtual_time { "virtual-time" } else { "wall-clock" }
+    );
+    let mut jsq_by_replicas: Vec<(usize, f64, f64)> = Vec::new();
+    for &n in &replica_counts {
+        for policy in RoutingPolicy::ALL {
+            let mut scfg = ServerConfig::default();
+            scfg.queue_capacity = queue_cap;
+            scfg.scheduler.cache_budget = budget;
+            scfg.seed = seed;
+            let pool = ReplicaPool::spawn(
+                n,
+                scfg,
+                Arc::new(StreamingLlm),
+                replica_backend_factory(weights.clone(), model_cfg, seed),
+            );
+            let router =
+                Router::new(pool.clients(), RouterConfig { policy, ..Default::default() });
+            // same fixed-seed trace and prompts for every configuration
+            let mut trace_rng = Rng::seed_from(seed.wrapping_add(0xACE));
+            let trace = shaped_trace(
+                &mut trace_rng,
+                rate,
+                Duration::from_secs_f64(secs),
+                &shape,
+                8,
+                48,
+                4,
+            );
+            let rcfg = ReplayConfig {
+                pacing: if virtual_time { Pacing::Virtual } else { Pacing::WallClock },
+                vocab: model_cfg.vocab as u32,
+                ..Default::default()
+            };
+            let mut prompt_rng = Rng::seed_from(seed.wrapping_add(0xBEE));
+            let stats = replay(&router, &trace, &rcfg, &mut prompt_rng);
+            pool.shutdown();
+            if policy == RoutingPolicy::JoinShortestQueue {
+                jsq_by_replicas.push((n, stats.throughput_rps, stats.reject_rate));
+            }
+            table.add_row(vec![
+                policy.name().into(),
+                n.to_string(),
+                format!("{:.1}", stats.throughput_rps),
+                format!("{:.1}", stats.tokens_per_s),
+                format!("{:.2}", stats.p50_ms),
+                format!("{:.2}", stats.p95_ms),
+                format!("{:.2}", stats.p99_ms),
+                fmt_pct(100.0 * stats.reject_rate),
+            ]);
+            report.push(
+                BenchRecord::new(format!("{} x{n}", policy.name()), stats.p50_ms / 1e3)
+                    .extra("replicas", n as f64)
+                    .extra("throughput_rps", stats.throughput_rps)
+                    .extra("tokens_per_s", stats.tokens_per_s)
+                    .extra("p95_ms", stats.p95_ms)
+                    .extra("p99_ms", stats.p99_ms)
+                    .extra("reject_rate", stats.reject_rate)
+                    .extra("completed", stats.completed as f64)
+                    .extra("rejected", stats.rejected as f64),
+            );
+        }
+    }
+    table.print();
+    println!("\n(markdown)\n{}", table.render_markdown());
+
+    // headline check: scaling out under join_shortest_queue raises
+    // throughput and lowers the reject rate (the PR-2 acceptance shape)
+    let one = jsq_by_replicas.iter().find(|(n, _, _)| *n == 1);
+    let many = jsq_by_replicas.iter().find(|(n, _, _)| *n == max_replicas && *n > 1);
+    if let (Some(one), Some(many)) = (one, many) {
+        println!(
+            "[serve] jsq x{} vs x1: throughput {:.1} vs {:.1} req/s ({}), reject rate {:.1}% vs {:.1}% ({})",
+            max_replicas,
+            many.1,
+            one.1,
+            if many.1 > one.1 { "YES scales" } else { "NO" },
+            100.0 * many.2,
+            100.0 * one.2,
+            if many.2 <= one.2 { "YES drops" } else { "NO" },
+        );
+    }
+    Ok(report)
+}
+
+// ---------------------------------------------------------------------
 // The unified entry point behind `wildcat bench`
 // ---------------------------------------------------------------------
 
 /// All bench ids in canonical order.
-pub const BENCH_IDS: [&str; 7] =
-    ["fig3", "table2", "table3", "table4", "table5", "figm1", "micro"];
+pub const BENCH_IDS: [&str; 8] =
+    ["fig3", "table2", "table3", "table4", "table5", "figm1", "micro", "serve"];
 
 /// Run the selected benches (all by default, or a comma-separated subset
 /// via `only`) and write one `BENCH_<id>.json` per bench into `out_dir`.
@@ -967,6 +1130,7 @@ pub fn run_all(cfg: &RunCfg, out_dir: &Path, only: Option<&str>) -> Result<Vec<P
             "table5" => run_table5(cfg)?,
             "figm1" => run_figm1(cfg)?,
             "micro" => run_micro(cfg)?,
+            "serve" => run_serve(cfg)?,
             _ => unreachable!(),
         };
         let path = report.write(out_dir)?;

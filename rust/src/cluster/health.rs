@@ -1,0 +1,111 @@
+//! Per-replica health / backpressure state.
+//!
+//! A replica whose admission queue rejects is *cooled down*: the router
+//! stops preferring it for a short window so queued work drains, and
+//! re-routes traffic to its siblings. Cooled replicas are still tried as
+//! a last resort — a request is only ever rejected when every replica
+//! has refused it, never dropped silently.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+/// Health/backpressure bookkeeping for one replica.
+pub struct ReplicaHealth {
+    cooled_until: Mutex<Option<Instant>>,
+    rejects: AtomicU64,
+    cooldowns: AtomicU64,
+}
+
+impl Default for ReplicaHealth {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl ReplicaHealth {
+    pub fn new() -> Self {
+        ReplicaHealth {
+            cooled_until: Mutex::new(None),
+            rejects: AtomicU64::new(0),
+            cooldowns: AtomicU64::new(0),
+        }
+    }
+
+    /// Is this replica inside a cooldown window?
+    pub fn is_cooled(&self, now: Instant) -> bool {
+        match *self.cooled_until.lock().unwrap() {
+            Some(until) => now < until,
+            None => false,
+        }
+    }
+
+    /// Record a backpressure rejection and start (or extend) a cooldown.
+    pub fn on_reject(&self, now: Instant, cooldown: Duration) {
+        self.rejects.fetch_add(1, Ordering::Relaxed);
+        let mut g = self.cooled_until.lock().unwrap();
+        let was_cooled = g.map(|u| now < u).unwrap_or(false);
+        if !was_cooled {
+            self.cooldowns.fetch_add(1, Ordering::Relaxed);
+        }
+        let until = now + cooldown;
+        if g.map(|u| u < until).unwrap_or(true) {
+            *g = Some(until);
+        }
+    }
+
+    /// A successful submission ends any cooldown early: the queue
+    /// evidently has room again.
+    pub fn on_accept(&self) {
+        *self.cooled_until.lock().unwrap() = None;
+    }
+
+    /// Total backpressure rejections observed at this replica.
+    pub fn rejects(&self) -> u64 {
+        self.rejects.load(Ordering::Relaxed)
+    }
+
+    /// Distinct cooldown windows entered.
+    pub fn cooldowns(&self) -> u64 {
+        self.cooldowns.load(Ordering::Relaxed)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cooldown_lifecycle() {
+        let h = ReplicaHealth::new();
+        let t0 = Instant::now();
+        assert!(!h.is_cooled(t0));
+        h.on_reject(t0, Duration::from_millis(50));
+        assert!(h.is_cooled(t0));
+        assert!(h.is_cooled(t0 + Duration::from_millis(49)));
+        assert!(!h.is_cooled(t0 + Duration::from_millis(51)));
+        assert_eq!(h.rejects(), 1);
+        assert_eq!(h.cooldowns(), 1);
+    }
+
+    #[test]
+    fn accept_clears_cooldown() {
+        let h = ReplicaHealth::new();
+        let t0 = Instant::now();
+        h.on_reject(t0, Duration::from_secs(60));
+        assert!(h.is_cooled(t0));
+        h.on_accept();
+        assert!(!h.is_cooled(t0));
+    }
+
+    #[test]
+    fn repeated_rejects_extend_one_window() {
+        let h = ReplicaHealth::new();
+        let t0 = Instant::now();
+        h.on_reject(t0, Duration::from_millis(50));
+        h.on_reject(t0 + Duration::from_millis(10), Duration::from_millis(50));
+        assert_eq!(h.rejects(), 2);
+        assert_eq!(h.cooldowns(), 1, "second reject extends the same window");
+        assert!(h.is_cooled(t0 + Duration::from_millis(55)));
+    }
+}

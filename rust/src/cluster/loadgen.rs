@@ -1,0 +1,168 @@
+//! Trace-driven load generation against a [`Router`].
+//!
+//! Replays a [`crate::workload::trace`] arrival sequence either at
+//! wall-clock rate (sleeping until each arrival's timestamp — the
+//! realistic serving measurement) or in *virtual time* (submitting
+//! back-to-back — the CI/`--fast` mode, which turns the same trace into
+//! a saturation test that finishes in seconds).
+
+use super::router::Router;
+use crate::rng::Rng;
+use crate::workload::trace::Arrival;
+use std::time::{Duration, Instant};
+
+/// How arrival timestamps are honoured during replay.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Pacing {
+    /// Sleep until each arrival's wall-clock offset.
+    WallClock,
+    /// Ignore timestamps; submit arrivals back-to-back (virtual time).
+    Virtual,
+}
+
+#[derive(Clone, Debug)]
+pub struct ReplayConfig {
+    pub pacing: Pacing,
+    /// Vocabulary size prompts are sampled from.
+    pub vocab: u32,
+    /// Arrivals are assigned round-robin to this many logical sessions
+    /// (the `affinity` policy's key space).
+    pub n_sessions: usize,
+    /// Per-response wait budget during the drain phase.
+    pub timeout: Duration,
+}
+
+impl Default for ReplayConfig {
+    fn default() -> Self {
+        ReplayConfig {
+            pacing: Pacing::WallClock,
+            vocab: 64,
+            n_sessions: 8,
+            timeout: Duration::from_secs(120),
+        }
+    }
+}
+
+/// Outcome of one trace replay.
+#[derive(Clone, Debug)]
+pub struct ReplayStats {
+    pub submitted: usize,
+    pub rejected: usize,
+    pub completed: usize,
+    pub timed_out: usize,
+    pub tokens_generated: usize,
+    /// Submission of the first arrival → last awaited response.
+    pub elapsed: Duration,
+    /// Completed requests per second of replay.
+    pub throughput_rps: f64,
+    /// Generated tokens per second of replay.
+    pub tokens_per_s: f64,
+    pub reject_rate: f64,
+    pub p50_ms: f64,
+    pub p95_ms: f64,
+    pub p99_ms: f64,
+}
+
+/// Replay `trace` against `router`, wait for every accepted request, and
+/// summarise. Rejections are counted (the router only rejects after every
+/// replica refused); prompts are seeded from `rng`, so a fixed seed and
+/// trace make the workload — though not the timing — deterministic.
+pub fn replay(
+    router: &Router,
+    trace: &[Arrival],
+    cfg: &ReplayConfig,
+    rng: &mut Rng,
+) -> ReplayStats {
+    assert!(cfg.vocab >= 2 && cfg.n_sessions >= 1);
+    let start = Instant::now();
+    let mut pending = Vec::new();
+    let mut rejected = 0usize;
+    for (idx, a) in trace.iter().enumerate() {
+        if cfg.pacing == Pacing::WallClock {
+            let now = start.elapsed();
+            if a.at > now {
+                std::thread::sleep(a.at - now);
+            }
+        }
+        let prompt: Vec<u32> =
+            (0..a.prompt_len).map(|_| rng.below(cfg.vocab as usize) as u32).collect();
+        let session = (idx % cfg.n_sessions) as u64;
+        match router.submit(prompt, a.max_new, Some(session)) {
+            Ok(r) => pending.push(r),
+            Err(_) => rejected += 1,
+        }
+    }
+    let mut completed = 0usize;
+    let mut timed_out = 0usize;
+    let mut tokens = 0usize;
+    for r in pending {
+        match r.wait(cfg.timeout) {
+            Some(resp) => {
+                completed += 1;
+                tokens += resp.tokens.len();
+            }
+            None => timed_out += 1,
+        }
+    }
+    let elapsed = start.elapsed();
+    let secs = elapsed.as_secs_f64().max(1e-9);
+    let snap = router.snapshot();
+    ReplayStats {
+        submitted: trace.len(),
+        rejected,
+        completed,
+        timed_out,
+        tokens_generated: tokens,
+        elapsed,
+        throughput_rps: completed as f64 / secs,
+        tokens_per_s: tokens as f64 / secs,
+        reject_rate: if trace.is_empty() { 0.0 } else { rejected as f64 / trace.len() as f64 },
+        p50_ms: snap.p50_ms,
+        p95_ms: snap.p95_ms,
+        p99_ms: snap.p99_ms,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::pool::ReplicaPool;
+    use crate::cluster::router::RouterConfig;
+    use crate::coordinator::ServerConfig;
+    use crate::kvcache::StreamingLlm;
+    use crate::model::{ModelConfig, Transformer};
+    use crate::workload::poisson_trace;
+    use std::sync::Arc;
+
+    #[test]
+    fn virtual_replay_accounts_for_every_arrival() {
+        let pool = ReplicaPool::spawn(2, ServerConfig::default(), Arc::new(StreamingLlm), |i| {
+            let cfg = ModelConfig {
+                vocab: 16,
+                d_model: 16,
+                n_layers: 2,
+                n_heads: 2,
+                d_ff: 32,
+                max_len: 256,
+            };
+            Transformer::random(cfg, &mut Rng::seed_from(i as u64))
+        });
+        let router = Router::new(pool.clients(), RouterConfig::default());
+        let mut rng = Rng::seed_from(3);
+        let trace = poisson_trace(&mut rng, 40.0, Duration::from_secs(1), 4, 16, 3);
+        assert!(!trace.is_empty());
+        let cfg = ReplayConfig { pacing: Pacing::Virtual, vocab: 16, ..Default::default() };
+        let stats = replay(&router, &trace, &cfg, &mut rng);
+        assert_eq!(stats.submitted, trace.len());
+        assert_eq!(
+            stats.completed + stats.rejected + stats.timed_out,
+            stats.submitted,
+            "arrivals must be answered, rejected, or timed out — never lost"
+        );
+        assert_eq!(stats.timed_out, 0);
+        assert!(stats.completed > 0);
+        assert!(stats.throughput_rps > 0.0);
+        assert!(stats.p50_ms > 0.0 || stats.completed == 0);
+        pool.shutdown();
+    }
+}

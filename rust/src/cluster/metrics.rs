@@ -1,0 +1,177 @@
+//! Cluster-level serving metrics: routing counters plus end-to-end
+//! latency measured at the router (submission → response receipt), the
+//! number a client of the whole cluster actually experiences. Per-replica
+//! [`crate::coordinator::ServingMetrics`] snapshots are aggregated next
+//! to it in one JSON document by [`crate::cluster::Router::metrics_json`].
+
+use crate::util::json::Json;
+use crate::util::stats::LogHistogram;
+use std::collections::BTreeMap;
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+/// Plain-number snapshot for benches and tests.
+#[derive(Clone, Debug)]
+pub struct ClusterSnapshot {
+    /// Requests accepted by some replica.
+    pub routed: u64,
+    /// Requests rejected by *every* replica (surface to the caller).
+    pub rejected: u64,
+    /// Extra submission attempts after a replica refused (re-routes).
+    pub rerouted: u64,
+    pub completed: u64,
+    pub tokens_generated: u64,
+    pub p50_ms: f64,
+    pub p95_ms: f64,
+    pub p99_ms: f64,
+}
+
+impl ClusterSnapshot {
+    pub fn submitted(&self) -> u64 {
+        self.routed + self.rejected
+    }
+
+    /// Fraction of submissions rejected cluster-wide.
+    pub fn reject_rate(&self) -> f64 {
+        if self.submitted() == 0 {
+            0.0
+        } else {
+            self.rejected as f64 / self.submitted() as f64
+        }
+    }
+}
+
+struct Inner {
+    routed_per_replica: Vec<u64>,
+    rerouted: u64,
+    rejected: u64,
+    completed: u64,
+    tokens_generated: u64,
+    e2e_us: LogHistogram,
+    started: Instant,
+}
+
+/// Thread-safe cluster metrics sink (same locking story as
+/// `ServingMetrics`: recording is ns-scale against ms-scale model steps).
+pub struct ClusterMetrics {
+    inner: Mutex<Inner>,
+}
+
+impl ClusterMetrics {
+    pub fn new(n_replicas: usize) -> Self {
+        ClusterMetrics {
+            inner: Mutex::new(Inner {
+                routed_per_replica: vec![0; n_replicas],
+                rerouted: 0,
+                rejected: 0,
+                completed: 0,
+                tokens_generated: 0,
+                e2e_us: LogHistogram::latency_us(),
+                started: Instant::now(),
+            }),
+        }
+    }
+
+    pub fn on_routed(&self, replica: usize) {
+        self.inner.lock().unwrap().routed_per_replica[replica] += 1;
+    }
+
+    pub fn on_reroute(&self) {
+        self.inner.lock().unwrap().rerouted += 1;
+    }
+
+    pub fn on_reject(&self) {
+        self.inner.lock().unwrap().rejected += 1;
+    }
+
+    pub fn on_complete(&self, e2e: Duration, tokens: usize) {
+        let mut g = self.inner.lock().unwrap();
+        g.completed += 1;
+        g.tokens_generated += tokens as u64;
+        g.e2e_us.record(e2e.as_secs_f64() * 1e6);
+    }
+
+    pub fn routed_to(&self, replica: usize) -> u64 {
+        self.inner.lock().unwrap().routed_per_replica[replica]
+    }
+
+    pub fn snapshot(&self) -> ClusterSnapshot {
+        let g = self.inner.lock().unwrap();
+        ClusterSnapshot {
+            routed: g.routed_per_replica.iter().sum(),
+            rejected: g.rejected,
+            rerouted: g.rerouted,
+            completed: g.completed,
+            tokens_generated: g.tokens_generated,
+            p50_ms: g.e2e_us.quantile(0.5) / 1e3,
+            p95_ms: g.e2e_us.quantile(0.95) / 1e3,
+            p99_ms: g.e2e_us.quantile(0.99) / 1e3,
+        }
+    }
+
+    /// The aggregate block of the cluster JSON snapshot.
+    pub fn to_json(&self) -> Json {
+        let g = self.inner.lock().unwrap();
+        let num = |x: f64| Json::Num(if x.is_finite() { x } else { 0.0 });
+        let routed: u64 = g.routed_per_replica.iter().sum();
+        let submitted = routed + g.rejected;
+        let mut o = BTreeMap::new();
+        o.insert("submitted".to_string(), Json::Num(submitted as f64));
+        o.insert("routed".to_string(), Json::Num(routed as f64));
+        o.insert("rejected".to_string(), Json::Num(g.rejected as f64));
+        o.insert("rerouted".to_string(), Json::Num(g.rerouted as f64));
+        o.insert("completed".to_string(), Json::Num(g.completed as f64));
+        o.insert("tokens_generated".to_string(), Json::Num(g.tokens_generated as f64));
+        o.insert(
+            "reject_rate".to_string(),
+            num(if submitted == 0 { 0.0 } else { g.rejected as f64 / submitted as f64 }),
+        );
+        o.insert("e2e_ms_p50".to_string(), num(g.e2e_us.quantile(0.5) / 1e3));
+        o.insert("e2e_ms_p95".to_string(), num(g.e2e_us.quantile(0.95) / 1e3));
+        o.insert("e2e_ms_p99".to_string(), num(g.e2e_us.quantile(0.99) / 1e3));
+        o.insert("uptime_s".to_string(), num(g.started.elapsed().as_secs_f64()));
+        Json::Obj(o)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_and_snapshot() {
+        let m = ClusterMetrics::new(2);
+        m.on_routed(0);
+        m.on_routed(1);
+        m.on_routed(1);
+        m.on_reroute();
+        m.on_reject();
+        m.on_complete(Duration::from_millis(12), 4);
+        m.on_complete(Duration::from_millis(30), 2);
+        let s = m.snapshot();
+        assert_eq!(s.routed, 3);
+        assert_eq!(s.rejected, 1);
+        assert_eq!(s.rerouted, 1);
+        assert_eq!(s.completed, 2);
+        assert_eq!(s.tokens_generated, 6);
+        assert_eq!(s.submitted(), 4);
+        assert!((s.reject_rate() - 0.25).abs() < 1e-12);
+        assert!(s.p50_ms > 0.0 && s.p99_ms >= s.p50_ms);
+        assert_eq!(m.routed_to(1), 2);
+    }
+
+    #[test]
+    fn json_parses_and_is_finite() {
+        let m = ClusterMetrics::new(1);
+        // empty metrics must still serialise with finite fields
+        let j0 = m.to_json();
+        assert_eq!(j0.get("completed").and_then(Json::as_f64), Some(0.0));
+        m.on_routed(0);
+        m.on_complete(Duration::from_millis(5), 3);
+        let j = m.to_json();
+        let text = j.to_string_compact();
+        assert_eq!(crate::util::json::parse(&text).unwrap(), j);
+        assert_eq!(j.get("routed").and_then(Json::as_f64), Some(1.0));
+        assert!(j.get("e2e_ms_p50").and_then(Json::as_f64).unwrap() > 0.0);
+    }
+}

@@ -1,0 +1,36 @@
+//! The multi-replica serving tier — scaling the Layer-3 coordinator out.
+//!
+//! One [`crate::coordinator::Server`] is a single-replica engine; this
+//! module shards load across N of them:
+//!
+//! * [`pool`] — [`ReplicaPool`]: N independent servers, each owning its
+//!   backend on its own worker thread, seeded deterministically.
+//! * [`router`] — [`Router`] with pluggable [`RoutingPolicy`]s
+//!   (`round_robin`, `join_shortest_queue` over the per-replica
+//!   in-flight/queue-depth gauges, `affinity` session hashing for warm
+//!   KV-cache reuse).
+//! * [`health`] — per-replica cooldown on backpressure; refused traffic
+//!   is re-routed, and only rejected once every replica has refused.
+//! * [`metrics`] — [`ClusterMetrics`]: router-side counters and
+//!   end-to-end latency, aggregated with per-replica
+//!   [`crate::coordinator::ServingMetrics`] into one JSON snapshot.
+//! * [`loadgen`] — trace-driven load generator: replays
+//!   [`crate::workload::trace`] arrivals at wall-clock rate, or in
+//!   virtual time (`--fast`) for CI.
+//!
+//! Invariants (property-tested in `rust/tests/coordinator_props.rs`):
+//! every request submitted to the router is answered or rejected exactly
+//! once across replicas, for any replica count and policy; a rejection
+//! implies every replica refused.
+
+pub mod health;
+pub mod loadgen;
+pub mod metrics;
+pub mod pool;
+pub mod router;
+
+pub use health::ReplicaHealth;
+pub use loadgen::{replay, Pacing, ReplayConfig, ReplayStats};
+pub use metrics::{ClusterMetrics, ClusterSnapshot};
+pub use pool::ReplicaPool;
+pub use router::{RoutedRequest, Router, RouterConfig, RoutingPolicy};

@@ -1,0 +1,112 @@
+//! The replica pool: N independent [`Server`] workers, each owning its
+//! own backend (constructed on its own worker thread — `!Send` backends
+//! like PJRT work unchanged) and seeded deterministically from a base
+//! seed, so a fixed-seed cluster run is reproducible replica-by-replica.
+
+use crate::coordinator::{Server, ServerClient, ServerConfig, ServerHandle, ServingMetrics};
+use crate::kvcache::KvCompressor;
+use crate::model::ModelBackend;
+use std::sync::Arc;
+
+/// A pool of identical serving replicas. Owns shutdown; clients go
+/// through [`ReplicaPool::clients`] (and usually a
+/// [`crate::cluster::Router`] on top).
+pub struct ReplicaPool {
+    handles: Vec<ServerHandle>,
+}
+
+impl ReplicaPool {
+    /// Spawn `n_replicas` servers. Replica `i` runs `cfg` with seed
+    /// `cfg.seed + i` (independent deterministic streams) and a backend
+    /// built by `make_backend(i)` on the replica's worker thread.
+    pub fn spawn<B, F>(
+        n_replicas: usize,
+        cfg: ServerConfig,
+        compressor: Arc<dyn KvCompressor>,
+        make_backend: F,
+    ) -> Self
+    where
+        B: ModelBackend,
+        F: Fn(usize) -> B + Send + Sync + 'static,
+    {
+        let factory = Arc::new(make_backend);
+        let handles = (0..n_replicas.max(1))
+            .map(|i| {
+                let mut rcfg = cfg.clone();
+                rcfg.seed = cfg.seed.wrapping_add(i as u64);
+                let f = factory.clone();
+                Server::spawn(rcfg, compressor.clone(), move || (*f)(i))
+            })
+            .collect();
+        ReplicaPool { handles }
+    }
+
+    pub fn len(&self) -> usize {
+        self.handles.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.handles.is_empty()
+    }
+
+    /// One clone-able submit-side client per replica, in replica order.
+    pub fn clients(&self) -> Vec<ServerClient> {
+        self.handles.iter().map(|h| h.client()).collect()
+    }
+
+    pub fn metrics(&self, replica: usize) -> &ServingMetrics {
+        self.handles[replica].metrics()
+    }
+
+    /// Graceful shutdown: each replica stops admissions, finishes its
+    /// in-flight work, and joins.
+    pub fn shutdown(self) {
+        for h in self.handles {
+            h.shutdown();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kvcache::StreamingLlm;
+    use crate::model::{ModelConfig, Transformer};
+    use crate::rng::Rng;
+    use std::time::Duration;
+
+    fn tiny_cfg() -> ModelConfig {
+        ModelConfig { vocab: 16, d_model: 16, n_layers: 2, n_heads: 2, d_ff: 32, max_len: 256 }
+    }
+
+    #[test]
+    fn replicas_serve_independently() {
+        let pool = ReplicaPool::spawn(3, ServerConfig::default(), Arc::new(StreamingLlm), |i| {
+            Transformer::random(tiny_cfg(), &mut Rng::seed_from(100 + i as u64))
+        });
+        assert_eq!(pool.len(), 3);
+        let clients = pool.clients();
+        let mut rxs = Vec::new();
+        for (i, c) in clients.iter().enumerate() {
+            let (_, rx) = c.submit(vec![1, 2, 3, (i % 16) as u32], 2).unwrap();
+            rxs.push(rx);
+        }
+        for rx in rxs {
+            let resp = rx.recv_timeout(Duration::from_secs(30)).unwrap();
+            assert_eq!(resp.tokens.len(), 2);
+        }
+        for i in 0..3 {
+            assert_eq!(pool.metrics(i).counters().completed, 1);
+        }
+        pool.shutdown();
+    }
+
+    #[test]
+    fn zero_replicas_clamps_to_one() {
+        let pool = ReplicaPool::spawn(0, ServerConfig::default(), Arc::new(StreamingLlm), |_| {
+            Transformer::random(tiny_cfg(), &mut Rng::seed_from(1))
+        });
+        assert_eq!(pool.len(), 1);
+        pool.shutdown();
+    }
+}

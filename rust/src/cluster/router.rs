@@ -1,0 +1,401 @@
+//! The cluster router: pluggable load-balancing over a replica pool.
+//!
+//! Policies:
+//! * `round_robin` — rotate the first-choice replica per request.
+//! * `join_shortest_queue` — pick the replica with the least
+//!   accepted-but-unfinished work (in-flight gauge, queue depth as the
+//!   tie-break) at submission time.
+//! * `affinity` — hash a session key to a home replica so repeated
+//!   requests of one session land on the same warm KV cache; falls back
+//!   to least-loaded siblings under backpressure.
+//!
+//! Backpressure: a replica that refuses a request is cooled down
+//! ([`ReplicaHealth`]) and the request is re-routed to the next
+//! candidate. Every replica (cooled ones last) is tried before the
+//! router surfaces a rejection — requests are answered or rejected,
+//! never dropped silently.
+
+use super::health::ReplicaHealth;
+use super::metrics::{ClusterMetrics, ClusterSnapshot};
+use crate::coordinator::admission::RejectReason;
+use crate::coordinator::request::{RequestId, Response};
+use crate::coordinator::ServerClient;
+use crate::rng::splitmix64;
+use crate::util::json::Json;
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::mpsc::Receiver;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// A pluggable load-balancing policy.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RoutingPolicy {
+    RoundRobin,
+    JoinShortestQueue,
+    Affinity,
+}
+
+impl RoutingPolicy {
+    /// Every policy, in the order the serving bench compares them.
+    pub const ALL: [RoutingPolicy; 3] =
+        [RoutingPolicy::RoundRobin, RoutingPolicy::JoinShortestQueue, RoutingPolicy::Affinity];
+
+    /// Parse a CLI name (`round_robin` / `join_shortest_queue` /
+    /// `affinity`, plus the obvious short forms).
+    pub fn parse(name: &str) -> anyhow::Result<RoutingPolicy> {
+        Ok(match name {
+            "round_robin" | "rr" => RoutingPolicy::RoundRobin,
+            "join_shortest_queue" | "jsq" => RoutingPolicy::JoinShortestQueue,
+            "affinity" => RoutingPolicy::Affinity,
+            other => anyhow::bail!(
+                "unknown routing policy {other:?} (try round_robin/join_shortest_queue/affinity)"
+            ),
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            RoutingPolicy::RoundRobin => "round_robin",
+            RoutingPolicy::JoinShortestQueue => "join_shortest_queue",
+            RoutingPolicy::Affinity => "affinity",
+        }
+    }
+}
+
+#[derive(Clone, Copy, Debug)]
+pub struct RouterConfig {
+    pub policy: RoutingPolicy,
+    /// How long a replica that refused a request is de-preferred.
+    pub cooldown: Duration,
+}
+
+impl Default for RouterConfig {
+    fn default() -> Self {
+        RouterConfig {
+            policy: RoutingPolicy::JoinShortestQueue,
+            cooldown: Duration::from_millis(50),
+        }
+    }
+}
+
+/// An accepted, routed request: await the response with
+/// [`RoutedRequest::wait`], which also records cluster-level end-to-end
+/// latency at receipt.
+pub struct RoutedRequest {
+    /// Replica index the request landed on.
+    pub replica: usize,
+    /// Per-replica request id.
+    pub id: RequestId,
+    rx: Receiver<Response>,
+    submitted_at: Instant,
+    metrics: Arc<ClusterMetrics>,
+}
+
+impl RoutedRequest {
+    /// Block for the response up to `timeout`. `None` on timeout (the
+    /// replica keeps working; the response is simply no longer awaited).
+    pub fn wait(self, timeout: Duration) -> Option<Response> {
+        match self.rx.recv_timeout(timeout) {
+            Ok(resp) => {
+                self.metrics.on_complete(self.submitted_at.elapsed(), resp.tokens.len());
+                Some(resp)
+            }
+            Err(_) => None,
+        }
+    }
+}
+
+/// The router: submit-side front door of a replica pool.
+pub struct Router {
+    clients: Vec<ServerClient>,
+    cfg: RouterConfig,
+    health: Vec<ReplicaHealth>,
+    rr: AtomicUsize,
+    metrics: Arc<ClusterMetrics>,
+}
+
+impl Router {
+    pub fn new(clients: Vec<ServerClient>, cfg: RouterConfig) -> Self {
+        assert!(!clients.is_empty(), "router needs at least one replica");
+        let n = clients.len();
+        Router {
+            clients,
+            cfg,
+            health: (0..n).map(|_| ReplicaHealth::new()).collect(),
+            rr: AtomicUsize::new(0),
+            metrics: Arc::new(ClusterMetrics::new(n)),
+        }
+    }
+
+    pub fn n_replicas(&self) -> usize {
+        self.clients.len()
+    }
+
+    pub fn policy(&self) -> RoutingPolicy {
+        self.cfg.policy
+    }
+
+    pub fn metrics(&self) -> &ClusterMetrics {
+        &self.metrics
+    }
+
+    pub fn snapshot(&self) -> ClusterSnapshot {
+        self.metrics.snapshot()
+    }
+
+    /// Submit a request, re-routing around backpressure. `session` keys
+    /// the `affinity` policy; other policies ignore it. On success the
+    /// replica's health resets; a rejection here means *every* replica
+    /// refused (or the request is malformed, e.g. over-long prompt).
+    pub fn submit(
+        &self,
+        tokens: Vec<u32>,
+        max_new: usize,
+        session: Option<u64>,
+    ) -> Result<RoutedRequest, RejectReason> {
+        let order = self.candidate_order(session);
+        let mut last = RejectReason::QueueFull;
+        let mut tokens = Some(tokens);
+        for (attempt, &i) in order.iter().enumerate() {
+            if attempt > 0 {
+                self.metrics.on_reroute();
+            }
+            // clone only while re-route targets remain; the last
+            // candidate consumes the prompt without copying
+            let attempt_tokens = if attempt + 1 == order.len() {
+                tokens.take().expect("prompt consumed before last attempt")
+            } else {
+                tokens.as_ref().expect("prompt missing").clone()
+            };
+            match self.clients[i].submit(attempt_tokens, max_new) {
+                Ok((id, rx)) => {
+                    self.health[i].on_accept();
+                    self.metrics.on_routed(i);
+                    return Ok(RoutedRequest {
+                        replica: i,
+                        id,
+                        rx,
+                        submitted_at: Instant::now(),
+                        metrics: self.metrics.clone(),
+                    });
+                }
+                Err(reason @ RejectReason::PromptTooLong { .. }) => {
+                    // deterministic across identically-configured
+                    // replicas: re-routing cannot help
+                    self.metrics.on_reject();
+                    return Err(reason);
+                }
+                Err(reason) => {
+                    self.health[i].on_reject(Instant::now(), self.cfg.cooldown);
+                    last = reason;
+                }
+            }
+        }
+        self.metrics.on_reject();
+        Err(last)
+    }
+
+    /// Replica indices in preference order: the policy's choice first,
+    /// then the remaining replicas least-loaded-first as re-route
+    /// targets; cooled-down replicas are demoted to the tail (still
+    /// tried, as the last resort before rejecting).
+    fn candidate_order(&self, session: Option<u64>) -> Vec<usize> {
+        let n = self.clients.len();
+        let mut order: Vec<usize> = match self.cfg.policy {
+            RoutingPolicy::RoundRobin => {
+                let start = self.rr.fetch_add(1, Ordering::Relaxed) % n;
+                (0..n).map(|k| (start + k) % n).collect()
+            }
+            RoutingPolicy::JoinShortestQueue => self.least_loaded(),
+            RoutingPolicy::Affinity => {
+                let home = match session {
+                    Some(key) => {
+                        let mut s = key;
+                        (splitmix64(&mut s) % n as u64) as usize
+                    }
+                    // sessionless requests rotate like round_robin
+                    None => self.rr.fetch_add(1, Ordering::Relaxed) % n,
+                };
+                let mut rest = self.least_loaded();
+                rest.retain(|&i| i != home);
+                std::iter::once(home).chain(rest).collect()
+            }
+        };
+        // stable partition: healthy replicas first, cooled ones last
+        // (snapshot health before sorting — the gauges are live and a
+        // key that changes mid-sort is an inconsistent comparator)
+        let now = Instant::now();
+        let cooled: Vec<bool> = (0..n).map(|i| self.health[i].is_cooled(now)).collect();
+        order.sort_by_key(|&i| cooled[i]);
+        order
+    }
+
+    /// All replica indices sorted by load: in-flight gauge, then queue
+    /// depth, then index (deterministic tie-break). Loads are snapshotted
+    /// once up front: the gauges move concurrently with the sort, and a
+    /// live key would be an inconsistent comparator (and take the metrics
+    /// lock O(n log n) times).
+    fn least_loaded(&self) -> Vec<usize> {
+        let mut loads: Vec<(u64, usize, usize)> = self
+            .clients
+            .iter()
+            .enumerate()
+            .map(|(i, c)| (c.in_flight(), c.queue_depth(), i))
+            .collect();
+        loads.sort_unstable();
+        loads.into_iter().map(|(_, _, i)| i).collect()
+    }
+
+    /// One JSON document: the cluster aggregate plus a per-replica block
+    /// (serving metrics snapshot + router-side gauges), the cluster
+    /// counterpart of `ServingMetrics::to_json`.
+    pub fn metrics_json(&self) -> Json {
+        let mut o = BTreeMap::new();
+        o.insert("policy".to_string(), Json::Str(self.cfg.policy.name().to_string()));
+        o.insert("n_replicas".to_string(), Json::Num(self.clients.len() as f64));
+        o.insert("aggregate".to_string(), self.metrics.to_json());
+        let replicas: Vec<Json> = self
+            .clients
+            .iter()
+            .enumerate()
+            .map(|(i, c)| {
+                let mut r = match c.metrics().to_json() {
+                    Json::Obj(m) => m,
+                    _ => BTreeMap::new(),
+                };
+                r.insert("replica".to_string(), Json::Num(i as f64));
+                r.insert("routed".to_string(), Json::Num(self.metrics.routed_to(i) as f64));
+                r.insert("queue_depth".to_string(), Json::Num(c.queue_depth() as f64));
+                r.insert("router_rejects".to_string(), Json::Num(self.health[i].rejects() as f64));
+                r.insert("cooldowns".to_string(), Json::Num(self.health[i].cooldowns() as f64));
+                Json::Obj(r)
+            })
+            .collect();
+        o.insert("replicas".to_string(), Json::Arr(replicas));
+        Json::Obj(o)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::pool::ReplicaPool;
+    use crate::coordinator::ServerConfig;
+    use crate::kvcache::StreamingLlm;
+    use crate::model::{ModelConfig, Transformer};
+    use crate::rng::Rng;
+
+    fn tiny_pool(n: usize) -> ReplicaPool {
+        ReplicaPool::spawn(n, ServerConfig::default(), Arc::new(StreamingLlm), |i| {
+            let cfg = ModelConfig {
+                vocab: 16,
+                d_model: 16,
+                n_layers: 2,
+                n_heads: 2,
+                d_ff: 32,
+                max_len: 256,
+            };
+            Transformer::random(cfg, &mut Rng::seed_from(50 + i as u64))
+        })
+    }
+
+    #[test]
+    fn round_robin_spreads_requests() {
+        let pool = tiny_pool(3);
+        let router = Router::new(
+            pool.clients(),
+            RouterConfig { policy: RoutingPolicy::RoundRobin, ..Default::default() },
+        );
+        let mut pending = Vec::new();
+        for _ in 0..9 {
+            pending.push(router.submit(vec![1, 2, 3], 1, None).unwrap());
+        }
+        for p in pending {
+            assert!(p.wait(Duration::from_secs(30)).is_some());
+        }
+        for i in 0..3 {
+            assert_eq!(router.metrics().routed_to(i), 3, "replica {i} share");
+        }
+        let s = router.snapshot();
+        assert_eq!(s.completed, 9);
+        assert_eq!(s.rejected, 0);
+        pool.shutdown();
+    }
+
+    #[test]
+    fn affinity_pins_sessions() {
+        let pool = tiny_pool(4);
+        let router = Router::new(
+            pool.clients(),
+            RouterConfig { policy: RoutingPolicy::Affinity, ..Default::default() },
+        );
+        let mut homes = std::collections::BTreeMap::new();
+        let mut pending = Vec::new();
+        for turn in 0..3 {
+            for session in 0..6u64 {
+                let r = router.submit(vec![1, 2, 3, 4], 1, Some(session)).unwrap();
+                let prev = homes.insert(session, r.replica);
+                if turn > 0 {
+                    assert_eq!(prev, Some(r.replica), "session {session} moved replicas");
+                }
+                pending.push(r);
+            }
+        }
+        // 6 sessions over 4 replicas: at least two distinct homes
+        let distinct: std::collections::BTreeSet<_> = homes.values().collect();
+        assert!(distinct.len() >= 2, "all sessions hashed to one replica");
+        for p in pending {
+            assert!(p.wait(Duration::from_secs(30)).is_some());
+        }
+        pool.shutdown();
+    }
+
+    #[test]
+    fn overlong_prompt_rejects_without_reroute() {
+        let pool = tiny_pool(2);
+        let router = Router::new(pool.clients(), RouterConfig::default());
+        let err = router.submit(vec![0; 5000], 1, None).unwrap_err();
+        assert!(matches!(err, RejectReason::PromptTooLong { .. }));
+        let s = router.snapshot();
+        assert_eq!(s.rejected, 1);
+        assert_eq!(s.rerouted, 0, "malformed requests must not be re-routed");
+        pool.shutdown();
+    }
+
+    #[test]
+    fn policy_parsing() {
+        assert_eq!(RoutingPolicy::parse("rr").unwrap(), RoutingPolicy::RoundRobin);
+        assert_eq!(
+            RoutingPolicy::parse("join_shortest_queue").unwrap(),
+            RoutingPolicy::JoinShortestQueue
+        );
+        assert_eq!(RoutingPolicy::parse("affinity").unwrap(), RoutingPolicy::Affinity);
+        assert!(RoutingPolicy::parse("random").is_err());
+        for p in RoutingPolicy::ALL {
+            assert_eq!(RoutingPolicy::parse(p.name()).unwrap(), p);
+        }
+    }
+
+    #[test]
+    fn metrics_json_has_aggregate_and_replicas() {
+        let pool = tiny_pool(2);
+        let router = Router::new(pool.clients(), RouterConfig::default());
+        let r = router.submit(vec![1, 2, 3], 1, None).unwrap();
+        assert!(r.wait(Duration::from_secs(30)).is_some());
+        let j = router.metrics_json();
+        assert_eq!(j.get("policy").and_then(Json::as_str), Some("join_shortest_queue"));
+        assert_eq!(j.get("n_replicas").and_then(Json::as_f64), Some(2.0));
+        let agg = j.get("aggregate").unwrap();
+        assert_eq!(agg.get("completed").and_then(Json::as_f64), Some(1.0));
+        let reps = j.get("replicas").unwrap().as_arr().unwrap();
+        assert_eq!(reps.len(), 2);
+        let routed_sum: f64 =
+            reps.iter().map(|r| r.get("routed").and_then(Json::as_f64).unwrap()).sum();
+        assert_eq!(routed_sum, 1.0);
+        // document parses back (fixed point)
+        let text = j.to_string_compact();
+        assert_eq!(crate::util::json::parse(&text).unwrap(), j);
+        pool.shutdown();
+    }
+}

@@ -19,6 +19,13 @@ pub struct Counters {
     pub compressions: u64,
 }
 
+impl Counters {
+    /// Accepted-but-not-finished load (queued + decoding).
+    pub fn in_flight(&self) -> u64 {
+        self.submitted.saturating_sub(self.rejected + self.completed)
+    }
+}
+
 struct Inner {
     counters: Counters,
     queue_us: Welford,
@@ -90,6 +97,13 @@ impl ServingMetrics {
         self.inner.lock().unwrap().counters
     }
 
+    /// Requests accepted but not yet completed (queued + actively
+    /// decoding). The gauge the cluster router's `join_shortest_queue`
+    /// policy balances on.
+    pub fn in_flight(&self) -> u64 {
+        self.inner.lock().unwrap().counters.in_flight()
+    }
+
     /// Generated-token throughput since start (tokens/s).
     pub fn decode_throughput(&self) -> f64 {
         let g = self.inner.lock().unwrap();
@@ -112,6 +126,7 @@ impl ServingMetrics {
         o.insert("prefill_tokens".to_string(), Json::Num(c.prefill_tokens as f64));
         o.insert("tokens_generated".to_string(), Json::Num(c.tokens_generated as f64));
         o.insert("compressions".to_string(), Json::Num(c.compressions as f64));
+        o.insert("in_flight".to_string(), Json::Num(c.in_flight() as f64));
         o.insert("queue_us_mean".to_string(), num(g.queue_us.mean()));
         o.insert("prefill_us_mean".to_string(), num(g.prefill_us.mean()));
         o.insert(

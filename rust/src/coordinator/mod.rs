@@ -18,6 +18,9 @@
 //! exceed the configured maximum; per-sequence KV caches never exceed
 //! budget + 1 entries between compressions; rejected requests are
 //! reported as rejected, never dropped silently.
+//!
+//! One server is a single replica; [`crate::cluster`] shards load across
+//! N of them behind pluggable routing policies.
 
 pub mod admission;
 pub mod batcher;
@@ -31,4 +34,4 @@ pub use batcher::{Batcher, BatcherConfig};
 pub use metrics::ServingMetrics;
 pub use request::{Request, RequestId, Response};
 pub use scheduler::{Scheduler, SchedulerConfig};
-pub use server::{Server, ServerConfig, ServerHandle};
+pub use server::{Server, ServerClient, ServerConfig, ServerHandle};

@@ -40,12 +40,60 @@ impl Default for ServerConfig {
 
 type Waiters = Arc<Mutex<HashMap<RequestId, Sender<Response>>>>;
 
-/// Client handle: submit requests, read metrics, shut down.
-pub struct ServerHandle {
+/// Cheap clone-able submit-side handle: everything a client (or the
+/// cluster router) needs to drive one replica — submission, the
+/// backpressure verdicts, and the load gauges the `join_shortest_queue`
+/// routing policy balances on. Cloning shares the underlying server; the
+/// owning [`ServerHandle`] keeps shutdown authority.
+#[derive(Clone)]
+pub struct ServerClient {
     queue: Arc<AdmissionQueue>,
     waiters: Waiters,
     metrics: Arc<ServingMetrics>,
-    next_id: AtomicU64,
+    next_id: Arc<AtomicU64>,
+}
+
+impl ServerClient {
+    /// Submit a generation request. Returns a receiver for the response,
+    /// or the rejection reason (backpressure).
+    pub fn submit(
+        &self,
+        tokens: Vec<u32>,
+        max_new: usize,
+    ) -> Result<(RequestId, Receiver<Response>), RejectReason> {
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        let (tx, rx) = channel();
+        self.waiters.lock().unwrap().insert(id, tx);
+        self.metrics.on_submit();
+        match self.queue.submit(Request::new(id, tokens, max_new)) {
+            Ok(()) => Ok((id, rx)),
+            Err(reason) => {
+                self.waiters.lock().unwrap().remove(&id);
+                self.metrics.on_reject();
+                Err(reason)
+            }
+        }
+    }
+
+    pub fn metrics(&self) -> &ServingMetrics {
+        &self.metrics
+    }
+
+    /// Requests sitting in the admission queue (not yet prefilled).
+    pub fn queue_depth(&self) -> usize {
+        self.queue.len()
+    }
+
+    /// Accepted-but-not-finished requests (queued + decoding) — the
+    /// gauge `join_shortest_queue` routing balances on.
+    pub fn in_flight(&self) -> u64 {
+        self.metrics.in_flight()
+    }
+}
+
+/// Owning handle: submit requests, read metrics, shut down.
+pub struct ServerHandle {
+    client: ServerClient,
     stopping: Arc<AtomicBool>,
     worker: Option<std::thread::JoinHandle<()>>,
 }
@@ -71,6 +119,17 @@ impl Server {
             let metrics = metrics.clone();
             let stopping = stopping.clone();
             std::thread::spawn(move || {
+                // close the admission queue however this thread exits: a
+                // panicking backend factory must not leave a zombie queue
+                // accepting requests that will never be served (clients —
+                // and the cluster router — see ShuttingDown instead)
+                struct CloseOnExit(Arc<AdmissionQueue>);
+                impl Drop for CloseOnExit {
+                    fn drop(&mut self) {
+                        self.0.close();
+                    }
+                }
+                let _close_guard = CloseOnExit(queue.clone());
                 let backend = make_backend();
                 let mut sched = Scheduler::new(
                     backend,
@@ -119,10 +178,12 @@ impl Server {
         };
 
         ServerHandle {
-            queue,
-            waiters,
-            metrics,
-            next_id: AtomicU64::new(1),
+            client: ServerClient {
+                queue,
+                waiters,
+                metrics,
+                next_id: Arc::new(AtomicU64::new(1)),
+            },
             stopping,
             worker: Some(worker),
         }
@@ -137,32 +198,30 @@ impl ServerHandle {
         tokens: Vec<u32>,
         max_new: usize,
     ) -> Result<(RequestId, Receiver<Response>), RejectReason> {
-        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
-        let (tx, rx) = channel();
-        self.waiters.lock().unwrap().insert(id, tx);
-        self.metrics.on_submit();
-        match self.queue.submit(Request::new(id, tokens, max_new)) {
-            Ok(()) => Ok((id, rx)),
-            Err(reason) => {
-                self.waiters.lock().unwrap().remove(&id);
-                self.metrics.on_reject();
-                Err(reason)
-            }
-        }
+        self.client.submit(tokens, max_new)
+    }
+
+    /// A cheap clone-able submit-side handle sharing this server.
+    pub fn client(&self) -> ServerClient {
+        self.client.clone()
     }
 
     pub fn metrics(&self) -> &ServingMetrics {
-        &self.metrics
+        self.client.metrics()
     }
 
     pub fn queue_len(&self) -> usize {
-        self.queue.len()
+        self.client.queue_depth()
     }
 
     /// Graceful shutdown: stop admissions, finish in-flight work, join.
     pub fn shutdown(mut self) {
+        self.stop_and_join();
+    }
+
+    fn stop_and_join(&mut self) {
         self.stopping.store(true, Ordering::Relaxed);
-        self.queue.close();
+        self.client.queue.close();
         if let Some(w) = self.worker.take() {
             let _ = w.join();
         }
@@ -171,11 +230,7 @@ impl ServerHandle {
 
 impl Drop for ServerHandle {
     fn drop(&mut self) {
-        self.stopping.store(true, Ordering::Relaxed);
-        self.queue.close();
-        if let Some(w) = self.worker.take() {
-            let _ = w.join();
-        }
+        self.stop_and_join();
     }
 }
 
@@ -232,6 +287,46 @@ mod tests {
         let c = server.metrics().counters();
         assert_eq!(c.completed, 12);
         assert_eq!(c.rejected, 0);
+        server.shutdown();
+    }
+
+    #[test]
+    fn panicking_backend_factory_closes_admissions() {
+        let server = Server::spawn(
+            ServerConfig::default(),
+            Arc::new(StreamingLlm),
+            || -> crate::model::Transformer { panic!("backend construction failed") },
+        );
+        // the worker dies at startup; the queue must close so clients see
+        // backpressure (ShuttingDown) instead of hanging forever
+        let mut closed = false;
+        for _ in 0..1000 {
+            match server.submit(vec![1, 2, 3], 1) {
+                Err(RejectReason::ShuttingDown) => {
+                    closed = true;
+                    break;
+                }
+                _ => std::thread::sleep(Duration::from_millis(5)),
+            }
+        }
+        assert!(closed, "queue never closed after worker panic");
+        server.shutdown();
+    }
+
+    #[test]
+    fn cloned_clients_share_server_and_gauges() {
+        let server = spawn_test_server(1000);
+        let c1 = server.client();
+        let c2 = c1.clone();
+        let (id1, rx1) = c1.submit(vec![1, 2, 3], 2).unwrap();
+        let (id2, rx2) = c2.submit(vec![4, 5], 1).unwrap();
+        assert_ne!(id1, id2, "clones must draw from one id space");
+        assert_eq!(rx1.recv_timeout(Duration::from_secs(30)).unwrap().id, id1);
+        assert_eq!(rx2.recv_timeout(Duration::from_secs(30)).unwrap().id, id2);
+        // both clones observe the same shared metrics and drained gauges
+        assert_eq!(c1.metrics().counters().completed, 2);
+        assert_eq!(c2.in_flight(), 0);
+        assert_eq!(c2.queue_depth(), 0);
         server.shutdown();
     }
 

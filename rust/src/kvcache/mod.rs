@@ -30,6 +30,26 @@ pub use uniform::UniformKv;
 
 use crate::linalg::Matrix;
 use crate::rng::Rng;
+use std::sync::Arc;
+
+/// All policy names accepted by [`compressor_by_name`], in Tab. 4 order.
+pub const COMPRESSOR_NAMES: [&str; 6] =
+    ["compresskv", "streaming", "snapkv", "pyramidkv", "balancekv", "uniform"];
+
+/// Resolve a compression policy by its CLI name (`wildcat serve/tasks/
+/// cluster --compressor ...`). Errors on unknown names so operator typos
+/// surface with the full roster instead of a panic.
+pub fn compressor_by_name(name: &str) -> anyhow::Result<Arc<dyn KvCompressor>> {
+    Ok(match name {
+        "compresskv" => Arc::new(CompressKvPolicy::default()) as Arc<dyn KvCompressor>,
+        "streaming" => Arc::new(StreamingLlm),
+        "snapkv" => Arc::new(SnapKv::default()),
+        "pyramidkv" => Arc::new(PyramidKv::default()),
+        "balancekv" => Arc::new(BalanceKv),
+        "uniform" => Arc::new(UniformKv),
+        other => anyhow::bail!("unknown compressor {other:?} (try {})", COMPRESSOR_NAMES.join("/")),
+    })
+}
 
 /// Tokens protected verbatim at each end of the context (paper Sec. 4.3:
 /// "retain the first and last 32 context tokens").
@@ -187,6 +207,16 @@ mod tests {
             assert_eq!(e.keys.get(66, j), k.get(99, j));
         }
         assert_eq!(e.source_len, 100);
+    }
+
+    #[test]
+    fn compressor_roster_resolves() {
+        for name in COMPRESSOR_NAMES {
+            assert!(!compressor_by_name(name).unwrap().name().is_empty());
+        }
+        let err = compressor_by_name("nope").unwrap_err().to_string();
+        assert!(err.contains("unknown compressor"), "{err}");
+        assert!(err.contains("compresskv"), "roster missing from error: {err}");
     }
 
     #[test]

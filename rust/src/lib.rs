@@ -6,8 +6,9 @@
 //!
 //! * **Layer 3 (this crate)** — the serving coordinator: request routing,
 //!   dynamic batching, prefill/decode scheduling and KV-cache management
-//!   with six compression policies, plus the complete numeric substrate
-//!   (linear algebra, RPNYS, attention algorithms, baselines).
+//!   with six compression policies, scaled out by the [`cluster`] tier
+//!   (replica pool + pluggable routing), plus the complete numeric
+//!   substrate (linear algebra, RPNYS, attention algorithms, baselines).
 //! * **Layer 2 (`python/compile/model.py`)** — the JAX compute graph of the
 //!   WildCat pipeline and a small transformer LM, AOT-lowered once to HLO
 //!   text artifacts.
@@ -49,6 +50,7 @@ pub mod kvcache;
 pub mod model;
 pub mod runtime;
 pub mod coordinator;
+pub mod cluster;
 pub mod workload;
 
 /// Crate-wide result alias.

@@ -4,38 +4,25 @@
 //! * `info`    — print the artifact manifest + platform
 //! * `serve`   — run the serving coordinator on a synthetic Poisson trace
 //!               (native or PJRT backend) and report serving metrics
+//! * `cluster` — run the multi-replica serving tier: a replica pool
+//!               behind a routing policy, driven by a trace replay
 //! * `attn`    — one-shot WildCat-vs-exact attention comparison
 //! * `tasks`   — evaluate a KV compression policy on the 13-task suite
 //! * `bench`   — run the paper benches; `--smoke` runs the whole suite in
 //!               seconds and writes machine-readable `BENCH_*.json`
 
-use std::sync::Arc;
 use std::time::{Duration, Instant};
 use wildcat::attention::{exact_attention, wildcat_attention, WildcatParams};
-use wildcat::coordinator::{Server, ServerConfig};
-use wildcat::kvcache::{
-    BalanceKv, CompressKvPolicy, KvCompressor, PyramidKv, SnapKv, StreamingLlm, UniformKv,
+use wildcat::cluster::{
+    replay, Pacing, ReplayConfig, ReplicaPool, Router, RouterConfig, RoutingPolicy,
 };
+use wildcat::coordinator::{Server, ServerConfig};
+use wildcat::kvcache::compressor_by_name;
 use wildcat::linalg::norms::max_abs_diff;
 use wildcat::model::{ModelConfig, Transformer};
 use wildcat::rng::Rng;
 use wildcat::util::cli::Args;
-use wildcat::workload::{gaussian_qkv, poisson_trace, task_suite};
-
-/// Resolve a compressor by CLI name.
-pub fn compressor_by_name(name: &str) -> Arc<dyn KvCompressor> {
-    match name {
-        "compresskv" => Arc::new(CompressKvPolicy::default()),
-        "streaming" => Arc::new(StreamingLlm),
-        "snapkv" => Arc::new(SnapKv::default()),
-        "pyramidkv" => Arc::new(PyramidKv::default()),
-        "balancekv" => Arc::new(BalanceKv),
-        "uniform" => Arc::new(UniformKv),
-        other => panic!(
-            "unknown compressor {other:?} (try compresskv/streaming/snapkv/pyramidkv/balancekv/uniform)"
-        ),
-    }
-}
+use wildcat::workload::{gaussian_qkv, poisson_trace, shaped_trace, task_suite, TraceShape};
 
 fn main() -> anyhow::Result<()> {
     let args = Args::from_env();
@@ -43,13 +30,14 @@ fn main() -> anyhow::Result<()> {
     match cmd {
         "info" => cmd_info(&args),
         "serve" => cmd_serve(&args),
+        "cluster" => cmd_cluster(&args),
         "attn" => cmd_attn(&args),
         "tasks" => cmd_tasks(&args),
         "bench" => cmd_bench(&args),
         _ => {
             println!(
                 "wildcat — near-linear attention serving coordinator\n\
-                 usage: wildcat <info|serve|attn|tasks|bench> [--options]\n\
+                 usage: wildcat <info|serve|cluster|attn|tasks|bench> [--options]\n\
                  see README.md for per-command options"
             );
             Ok(())
@@ -92,13 +80,90 @@ fn cmd_info(args: &Args) -> anyhow::Result<()> {
     Ok(())
 }
 
+/// `wildcat cluster --replicas N --policy P [--rate R --duration D]
+/// [--shape stationary|onoff|gamma] [--fast] [--metrics-json PATH]`
+///
+/// Spawns a replica pool behind the chosen routing policy and replays a
+/// synthetic trace against it — at wall-clock rate by default, or in
+/// virtual time with `--fast` (the CI smoke path). Uses the trained
+/// model when `artifacts/weights.bin` exists, else a seeded random model
+/// so the command works on a bare checkout.
+fn cmd_cluster(args: &Args) -> anyhow::Result<()> {
+    let seed = args.get_parse::<u64>("seed", 0);
+    let n_replicas = args.get_parse::<usize>("replicas", 4);
+    let policy = RoutingPolicy::parse(&args.get_or("policy", "join_shortest_queue"))?;
+    let rate = args.get_parse::<f64>("rate", 8.0);
+    let secs = args.get_parse::<f64>("duration", 5.0);
+    let budget = args.get_parse::<usize>("budget", 96);
+    let queue_cap = args.get_parse::<usize>("queue-cap", 64);
+    let fast = args.flag("fast");
+    let shape = TraceShape::parse(&args.get_or("shape", "stationary"))?;
+    let compressor = compressor_by_name(&args.get_or("compressor", "compresskv"))?;
+
+    let mut cfg = ServerConfig::default();
+    cfg.queue_capacity = queue_cap;
+    cfg.scheduler.cache_budget = budget;
+    cfg.seed = seed;
+
+    let model_cfg = ModelConfig::default();
+    // the cluster CLI always works on a bare checkout: fall back (with
+    // the underlying load error surfaced) to a seeded random model
+    let weights = wildcat::bench::runners::load_weights(args, true, "cluster")?;
+    let pool = ReplicaPool::spawn(
+        n_replicas,
+        cfg,
+        compressor,
+        wildcat::bench::runners::replica_backend_factory(weights, model_cfg, seed),
+    );
+    let router = Router::new(pool.clients(), RouterConfig { policy, ..Default::default() });
+
+    let mut rng = Rng::seed_from(seed);
+    let trace = shaped_trace(&mut rng, rate, Duration::from_secs_f64(secs), &shape, 16, 96, 8);
+    println!(
+        "[cluster] {} replica(s), policy {}, replaying {} arrivals ({} shape, {})...",
+        pool.len(),
+        policy.name(),
+        trace.len(),
+        shape.name(),
+        if fast { "virtual time" } else { "wall clock" }
+    );
+    let rcfg = ReplayConfig {
+        pacing: if fast { Pacing::Virtual } else { Pacing::WallClock },
+        vocab: model_cfg.vocab as u32,
+        ..Default::default()
+    };
+    let stats = replay(&router, &trace, &rcfg, &mut rng);
+    println!(
+        "requests: submitted={} completed={} rejected={} timed-out={} (reject rate {:.1}%)\n\
+         throughput: {:.1} req/s, {:.1} tok/s\n\
+         e2e latency: p50 {:.2} ms  p95 {:.2} ms  p99 {:.2} ms",
+        stats.submitted,
+        stats.completed,
+        stats.rejected,
+        stats.timed_out,
+        100.0 * stats.reject_rate,
+        stats.throughput_rps,
+        stats.tokens_per_s,
+        stats.p50_ms,
+        stats.p95_ms,
+        stats.p99_ms,
+    );
+    let snapshot = router.metrics_json();
+    if let Some(path) = args.get("metrics-json") {
+        std::fs::write(path, snapshot.to_string_compact())?;
+        println!("cluster metrics snapshot written to {path}");
+    }
+    pool.shutdown();
+    Ok(())
+}
+
 fn cmd_serve(args: &Args) -> anyhow::Result<()> {
     let seed = args.get_parse::<u64>("seed", 0);
     let rate = args.get_parse::<f64>("rate", 4.0);
     let secs = args.get_parse::<u64>("secs", 5);
     let budget = args.get_parse::<usize>("budget", 96);
     let use_pjrt = args.flag("pjrt");
-    let compressor = compressor_by_name(&args.get_or("compressor", "compresskv"));
+    let compressor = compressor_by_name(&args.get_or("compressor", "compresskv"))?;
     let artifacts = args.get_or("artifacts", "artifacts");
 
     let mut cfg = ServerConfig::default();
@@ -176,7 +241,7 @@ fn cmd_tasks(args: &Args) -> anyhow::Result<()> {
     let budget = args.get_parse::<usize>("budget", 96);
     let n_ctx = args.get_parse::<usize>("context", 256);
     let trials = args.get_parse::<usize>("trials", 10);
-    let compressor = compressor_by_name(&args.get_or("compressor", "compresskv"));
+    let compressor = compressor_by_name(&args.get_or("compressor", "compresskv"))?;
     let w = wildcat::model::WeightFile::load(format!("{dir}/weights.bin"))?;
     let model = Transformer::from_weights(&w, ModelConfig::default())?;
     let mut rng = Rng::seed_from(args.get_parse::<u64>("seed", 0));

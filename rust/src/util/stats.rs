@@ -224,6 +224,51 @@ mod tests {
     }
 
     #[test]
+    fn histogram_quantiles_within_one_bucket_of_ground_truth() {
+        // The serving benches' p50/p99 numbers come straight from this
+        // estimator: feed distributions with known quantiles and assert
+        // the estimate lands within one log-bucket of the truth. The
+        // estimator returns the upper edge of the bucket containing the
+        // target rank, so truth ≤ estimate < truth · growth²; one extra
+        // growth factor of slack covers the edge-straddling case.
+        let check = |h: &LogHistogram, growth: f64, q: f64, truth: f64| {
+            let est = h.quantile(q);
+            assert!(
+                est >= truth && est <= truth * growth * growth,
+                "q={q}: estimate {est} not within one ×{growth} bucket of {truth}"
+            );
+        };
+
+        // uniform 1..=100_000: p50 = 50_000, p90 = 90_000, p99 = 99_000
+        let mut h = LogHistogram::latency_us();
+        for i in 1..=100_000 {
+            h.record(i as f64);
+        }
+        check(&h, 1.5, 0.5, 50_000.0);
+        check(&h, 1.5, 0.9, 90_000.0);
+        check(&h, 1.5, 0.99, 99_000.0);
+
+        // exponential via inverse CDF on a deterministic grid: the p-th
+        // quantile of Exp(λ) is −ln(1−p)/λ (λ = 1e−3 → mean 1000)
+        let mut h = LogHistogram::latency_us();
+        let n = 100_000;
+        for i in 0..n {
+            let u = (i as f64 + 0.5) / n as f64;
+            h.record(-(1.0 - u).ln() * 1000.0);
+        }
+        check(&h, 1.5, 0.5, -(0.5f64).ln() * 1000.0);
+        check(&h, 1.5, 0.99, -(0.01f64).ln() * 1000.0);
+
+        // a finer histogram tightens the bound correspondingly
+        let mut h = LogHistogram::new(1.0, 1.1, 200);
+        for i in 1..=100_000 {
+            h.record(i as f64);
+        }
+        check(&h, 1.1, 0.5, 50_000.0);
+        check(&h, 1.1, 0.99, 99_000.0);
+    }
+
+    #[test]
     fn histogram_underflow() {
         let mut h = LogHistogram::new(10.0, 2.0, 8);
         h.record(0.5);

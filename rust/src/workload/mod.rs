@@ -8,4 +8,4 @@ pub mod trace;
 
 pub use gaussian::{biggan_shapes, gaussian_qkv, t2t_vit_shapes, AttentionWorkload};
 pub use tasks::{task_suite, LongContextTask, TaskInstance, TaskKind};
-pub use trace::{poisson_trace, Arrival};
+pub use trace::{poisson_trace, shaped_trace, Arrival, TraceShape};

@@ -1,6 +1,11 @@
-//! Poisson arrival traces — the synthetic stand-in for production request
-//! traces (DESIGN.md §3). Used by the serving demo and §M.3-style
-//! overhead measurements.
+//! Arrival traces — the synthetic stand-in for production request traces
+//! (DESIGN.md §3). Used by the serving demo, the cluster serving bench,
+//! and §M.3-style overhead measurements.
+//!
+//! The base process is Poisson; [`TraceShape`] modulates it into bursty
+//! (on/off) or heavy-tailed (Gamma-modulated) traffic via thinning of a
+//! dominating homogeneous process, so the long-run mean rate stays at the
+//! requested base rate.
 
 use crate::rng::Rng;
 use std::time::Duration;
@@ -14,25 +19,95 @@ pub struct Arrival {
     pub max_new: usize,
 }
 
-/// Poisson arrivals at `rate` req/s for `duration`, with prompt lengths
-/// log-uniform in `[min_prompt, max_prompt]` and decode lengths uniform
-/// in `[1, max_new]`.
-pub fn poisson_trace(
+/// Arrival-process shape: stationary Poisson or bursty modulations of it.
+#[derive(Clone, Debug)]
+pub enum TraceShape {
+    /// Homogeneous Poisson at the base rate.
+    Stationary,
+    /// On/off (interrupted Poisson): within each `period`, the first
+    /// `duty` fraction runs at `burst` × base rate and the remainder at
+    /// the complementary rate, so the long-run mean stays at the base
+    /// rate (the off-rate clamps at zero when `burst > 1/duty`).
+    OnOff { period: Duration, duty: f64, burst: f64 },
+    /// Gamma-modulated Poisson: each `period` draws an independent
+    /// Gamma(shape, 1/shape) rate multiplier (mean 1). Smaller `shape`
+    /// means burstier, heavier-tailed traffic than on/off.
+    GammaModulated { period: Duration, shape: u32 },
+}
+
+impl TraceShape {
+    /// Parse a CLI name: `stationary`, `onoff`, or `gamma` (with the
+    /// defaults used by the serving bench).
+    pub fn parse(name: &str) -> anyhow::Result<TraceShape> {
+        Ok(match name {
+            "stationary" | "poisson" => TraceShape::Stationary,
+            "onoff" => TraceShape::OnOff {
+                period: Duration::from_secs(2),
+                duty: 0.3,
+                burst: 3.0,
+            },
+            "gamma" => TraceShape::GammaModulated { period: Duration::from_secs(1), shape: 2 },
+            other => anyhow::bail!("unknown trace shape {other:?} (try stationary/onoff/gamma)"),
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            TraceShape::Stationary => "stationary",
+            TraceShape::OnOff { .. } => "onoff",
+            TraceShape::GammaModulated { .. } => "gamma",
+        }
+    }
+}
+
+/// Arrivals at mean `rate` req/s for `duration` under the given shape,
+/// with prompt lengths log-uniform in `[min_prompt, max_prompt]` and
+/// decode lengths uniform in `[1, max_new]`.
+pub fn shaped_trace(
     rng: &mut Rng,
     rate: f64,
     duration: Duration,
+    shape: &TraceShape,
     min_prompt: usize,
     max_prompt: usize,
     max_new: usize,
 ) -> Vec<Arrival> {
     assert!(rate > 0.0 && min_prompt >= 1 && max_prompt >= min_prompt && max_new >= 1);
-    let mut t = 0.0f64;
     let horizon = duration.as_secs_f64();
+    // Piecewise-constant rate multiplier and its supremum, for thinning.
+    let (mult, mmax): (Box<dyn Fn(f64) -> f64>, f64) = match shape {
+        TraceShape::Stationary => (Box::new(|_| 1.0), 1.0),
+        TraceShape::OnOff { period, duty, burst } => {
+            let p = period.as_secs_f64();
+            assert!(p > 0.0 && *duty > 0.0 && *duty < 1.0 && *burst >= 1.0);
+            let (duty, on) = (*duty, *burst);
+            let off = ((1.0 - duty * on) / (1.0 - duty)).max(0.0);
+            (Box::new(move |t: f64| if (t / p).fract() < duty { on } else { off }), on)
+        }
+        TraceShape::GammaModulated { period, shape } => {
+            let p = period.as_secs_f64();
+            assert!(p > 0.0);
+            let k = (*shape).max(1);
+            let n_periods = (horizon / p).ceil() as usize + 1;
+            let mults: Vec<f64> = (0..n_periods)
+                .map(|_| (0..k).map(|_| rng.exponential(1.0)).sum::<f64>() / k as f64)
+                .collect();
+            let mmax = mults.iter().copied().fold(f64::MIN_POSITIVE, f64::max);
+            (Box::new(move |t: f64| mults[((t / p) as usize).min(mults.len() - 1)]), mmax)
+        }
+    };
+    let stationary = matches!(shape, TraceShape::Stationary);
+    let mut t = 0.0f64;
     let mut out = Vec::new();
     loop {
-        t += rng.exponential(rate);
+        t += rng.exponential(rate * mmax);
         if t >= horizon {
             break;
+        }
+        // Thinning: keep a dominating-process point with prob mult(t)/mmax
+        // (skipped when stationary so the base process is drawn directly).
+        if !stationary && rng.uniform() * mmax > mult(t) {
+            continue;
         }
         let lo = (min_prompt as f64).ln();
         let hi = (max_prompt as f64).ln();
@@ -44,6 +119,19 @@ pub fn poisson_trace(
         });
     }
     out
+}
+
+/// Stationary Poisson arrivals at `rate` req/s for `duration` — the
+/// original trace generator, kept as the common case.
+pub fn poisson_trace(
+    rng: &mut Rng,
+    rate: f64,
+    duration: Duration,
+    min_prompt: usize,
+    max_prompt: usize,
+    max_new: usize,
+) -> Vec<Arrival> {
+    shaped_trace(rng, rate, duration, &TraceShape::Stationary, min_prompt, max_prompt, max_new)
 }
 
 #[cfg(test)]
@@ -77,5 +165,64 @@ mod tests {
         let mut rng = Rng::seed_from(3);
         let trace = poisson_trace(&mut rng, 0.0001, Duration::from_millis(1), 8, 16, 2);
         assert!(trace.is_empty());
+    }
+
+    #[test]
+    fn onoff_concentrates_arrivals_in_bursts() {
+        let mut rng = Rng::seed_from(4);
+        let shape = TraceShape::OnOff { period: Duration::from_secs(1), duty: 0.25, burst: 3.0 };
+        let trace = shaped_trace(&mut rng, 200.0, Duration::from_secs(20), &shape, 8, 64, 4);
+        // mean preserved: E = 4000 (duty·burst + (1−duty)·off = 1)
+        assert!((3500..4500).contains(&trace.len()), "n={}", trace.len());
+        let on_count = trace
+            .iter()
+            .filter(|a| a.at.as_secs_f64().fract() < 0.25)
+            .count();
+        // the on-quarter runs 3× the base rate → 75% of arrivals
+        let on_frac = on_count as f64 / trace.len() as f64;
+        assert!(
+            (0.68..0.82).contains(&on_frac),
+            "on-window fraction {on_frac} not bursty"
+        );
+        for w in trace.windows(2) {
+            assert!(w[0].at <= w[1].at);
+        }
+    }
+
+    #[test]
+    fn gamma_modulation_is_overdispersed() {
+        // Per-period counts of a Gamma-modulated trace have variance well
+        // above the mean (index of dispersion > 1); stationary ≈ 1.
+        let dispersion = |trace: &[Arrival]| {
+            let mut counts = vec![0f64; 40];
+            for a in trace {
+                counts[(a.at.as_secs_f64() as usize).min(39)] += 1.0;
+            }
+            let mean = counts.iter().sum::<f64>() / counts.len() as f64;
+            let var = counts.iter().map(|c| (c - mean) * (c - mean)).sum::<f64>()
+                / counts.len() as f64;
+            var / mean.max(1e-9)
+        };
+        let mut rng = Rng::seed_from(5);
+        let shape = TraceShape::GammaModulated { period: Duration::from_secs(1), shape: 1 };
+        let bursty = shaped_trace(&mut rng, 50.0, Duration::from_secs(40), &shape, 8, 64, 4);
+        let stationary = poisson_trace(&mut rng, 50.0, Duration::from_secs(40), 8, 64, 4);
+        let (d_b, d_s) = (dispersion(&bursty), dispersion(&stationary));
+        assert!(d_b > 2.0 * d_s, "gamma dispersion {d_b} vs stationary {d_s}");
+        for a in &bursty {
+            assert!((8..=64).contains(&a.prompt_len) && (1..=4).contains(&a.max_new));
+        }
+    }
+
+    #[test]
+    fn shape_parsing() {
+        assert!(matches!(TraceShape::parse("stationary").unwrap(), TraceShape::Stationary));
+        assert!(matches!(TraceShape::parse("onoff").unwrap(), TraceShape::OnOff { .. }));
+        assert!(matches!(
+            TraceShape::parse("gamma").unwrap(),
+            TraceShape::GammaModulated { .. }
+        ));
+        assert!(TraceShape::parse("warp").is_err());
+        assert_eq!(TraceShape::parse("onoff").unwrap().name(), "onoff");
     }
 }

@@ -3,9 +3,14 @@
 //! * batch admission never exceeds configured maxima
 //! * per-sequence caches never exceed budget + slack + 1
 //! * rejected requests surface as rejections, not drops
+//!
+//! Extended to the cluster tier: every request submitted to the
+//! [`Router`] is answered or rejected exactly once across replicas, for
+//! random replica counts and routing policies.
 
 use std::sync::Arc;
 use std::time::Duration;
+use wildcat::cluster::{ReplicaPool, Router, RouterConfig, RoutingPolicy};
 use wildcat::coordinator::{
     AdmissionQueue, Batcher, BatcherConfig, Request, Scheduler, SchedulerConfig, Server,
     ServerConfig, ServingMetrics,
@@ -155,6 +160,66 @@ fn prop_admission_queue_conservation() {
             got.dedup();
             assert_eq!(got, acc, "drained set != accepted set");
         });
+    });
+}
+
+#[test]
+fn prop_cluster_router_answers_or_rejects_exactly_once() {
+    // For random replica counts, routing policies, and (small) queue
+    // capacities, every request submitted to the router is either
+    // answered exactly once by some replica or surfaced as a rejection —
+    // and the router's accounting agrees with the per-replica metrics.
+    Cases::new(5).run(|rng| {
+        let n_replicas = 1 + rng.below(4);
+        let policy = RoutingPolicy::ALL[rng.below(RoutingPolicy::ALL.len())];
+        let cfg = ServerConfig {
+            queue_capacity: 2 + rng.below(8),
+            max_prompt: 128,
+            scheduler: SchedulerConfig { cache_budget: 96, slack: 8 },
+            ..Default::default()
+        };
+        let pool = ReplicaPool::spawn(n_replicas, cfg, Arc::new(StreamingLlm), |i| {
+            tiny_model(30 + i as u64)
+        });
+        let router = Router::new(
+            pool.clients(),
+            RouterConfig { policy, cooldown: Duration::from_millis(5) },
+        );
+        let n_req = 10 + rng.below(30);
+        let mut accepted = Vec::new();
+        let mut rejected = 0usize;
+        for k in 0..n_req {
+            let len = 4 + rng.below(40);
+            let prompt: Vec<u32> = (0..len).map(|j| (j % 16) as u32).collect();
+            let max_new = 1 + rng.below(4);
+            match router.submit(prompt, max_new, Some((k % 5) as u64)) {
+                Ok(r) => accepted.push((r, max_new)),
+                Err(_) => rejected += 1,
+            }
+        }
+        let mut completed = 0usize;
+        for (r, want) in accepted {
+            let resp = r
+                .wait(Duration::from_secs(120))
+                .expect("accepted request must be answered");
+            assert_eq!(resp.tokens.len(), want, "wrong response for request");
+            completed += 1;
+        }
+        assert_eq!(
+            completed + rejected,
+            n_req,
+            "every request must be answered or rejected exactly once"
+        );
+        let snap = router.snapshot();
+        assert_eq!(snap.routed as usize, completed, "router routed-count drift");
+        assert_eq!(snap.rejected as usize, rejected, "router reject-count drift");
+        assert_eq!(snap.completed as usize, completed, "router completion drift");
+        // replica-side conservation: completions across replicas sum to
+        // the cluster total; nothing was double-served
+        let replica_completed: u64 =
+            (0..pool.len()).map(|i| pool.metrics(i).counters().completed).sum();
+        assert_eq!(replica_completed as usize, completed, "replica completion drift");
+        pool.shutdown();
     });
 }
 
