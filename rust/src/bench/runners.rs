@@ -1,5 +1,5 @@
 //! Shared runners for the seven paper benches plus the `serve` cluster
-//! serving bench.
+//! serving bench and the `kvpool` memory-manager bench.
 //!
 //! Every `rust/benches/bench_*.rs` binary is a thin wrapper around one of
 //! the `run_*` functions here, and `wildcat bench` drives the same
@@ -22,12 +22,15 @@ use crate::bench::report::{BenchRecord, BenchReport};
 use crate::cluster::{
     replay, Pacing, ReplayConfig, ReplicaPool, Router, RouterConfig, RoutingPolicy,
 };
-use crate::coordinator::{ServerConfig, ServingMetrics};
+use crate::coordinator::{
+    Batcher, BatcherConfig, Request, Scheduler, SchedulerConfig, ServerConfig, ServingMetrics,
+};
 use crate::kernels::gamma_growth;
 use crate::kvcache::{
-    BalanceKv, CompressKvPolicy, CompressionCtx, KvCompressor, PyramidKv, SnapKv, StreamingLlm,
-    UniformKv,
+    compressor_by_name, BalanceKv, CompressKvPolicy, CompressionCtx, KvCompressor, PyramidKv,
+    SnapKv, StreamingLlm, UniformKv,
 };
+use crate::kvpool::{KvPool, KvPoolConfig, PoolSnapshot};
 use crate::linalg::gemm;
 use crate::linalg::norms::max_abs_diff;
 use crate::linalg::Matrix;
@@ -35,7 +38,7 @@ use crate::model::{generate::greedy_decode_with_query, ModelConfig, Transformer,
 use crate::rng::Rng;
 use crate::rpnys::rpnys;
 use crate::util::cli::Args;
-use crate::util::stats::summarize;
+use crate::util::stats::{percentile, summarize};
 use crate::util::table::{fmt_pct, fmt_speedup, Table};
 use crate::workload::gaussian::{activation_qkv, biggan_shapes};
 use crate::workload::gaussian_qkv;
@@ -1087,12 +1090,241 @@ pub fn run_serve(cfg: &RunCfg) -> Result<BenchReport> {
 }
 
 // ---------------------------------------------------------------------
+// kvpool — paged KV memory manager: prefix sharing + pressure ladder
+// ---------------------------------------------------------------------
+
+/// Outcome of one `kvpool` bench configuration.
+struct KvPoolRunStats {
+    snap: PoolSnapshot,
+    logical_tokens: usize,
+    completed: usize,
+    rejected_responses: usize,
+    p50_decode_s: f64,
+    p99_decode_s: f64,
+}
+
+impl KvPoolRunStats {
+    fn bytes_per_token(&self) -> f64 {
+        self.snap.peak_bytes() as f64 / self.logical_tokens.max(1) as f64
+    }
+}
+
+/// Replay one fixed-seed shared-prefix-tree trace through a scheduler
+/// over a fresh pool with the given sharing/budget settings.
+#[allow(clippy::too_many_arguments)]
+fn kvpool_run(
+    weights: &Option<Arc<WeightFile>>,
+    model_cfg: ModelConfig,
+    compressor: &Arc<dyn KvCompressor>,
+    prompts: &[Vec<u32>],
+    max_new: usize,
+    sharing: bool,
+    budget_floats: usize,
+    compress_budget: usize,
+    seed: u64,
+) -> KvPoolRunStats {
+    let pool_cfg = KvPoolConfig {
+        budget_floats,
+        prefix_sharing: sharing,
+        compress_budget,
+        block_tokens: 16,
+        ..Default::default()
+    };
+    let pool = Arc::new(KvPool::new(pool_cfg, compressor.clone()));
+    let backend = replica_backend_factory(weights.clone(), model_cfg, seed)(0);
+    let mut sched = Scheduler::with_pool(
+        backend,
+        // loose per-sequence budget: memory pressure is exercised
+        // globally through the pool ladder, not per-sequence
+        SchedulerConfig { cache_budget: 100_000, slack: 32 },
+        Arc::new(ServingMetrics::new()),
+        seed,
+        pool.clone(),
+    );
+    // admit aggressively so the full request set decodes concurrently —
+    // that is when shared prefixes actually coexist in memory
+    let n = prompts.len();
+    let batcher = Batcher::new(BatcherConfig {
+        max_active: n,
+        max_admit_per_step: n,
+        max_wait: Duration::ZERO,
+        soft_active: n,
+    });
+    let reqs: Vec<Request> = prompts
+        .iter()
+        .enumerate()
+        .map(|(i, p)| Request::new(i as u64, p.clone(), max_new))
+        .collect();
+    let responses = sched.run_to_completion(reqs, &batcher);
+    let mut decode_s: Vec<f64> = Vec::new();
+    let mut logical_tokens = 0;
+    let mut completed = 0;
+    let mut rejected_responses = 0;
+    for r in &responses {
+        if r.tokens.is_empty() {
+            rejected_responses += 1;
+            continue;
+        }
+        completed += 1;
+        logical_tokens += r.context_len + r.tokens.len();
+        decode_s.push(r.timing.decode.as_secs_f64());
+    }
+    decode_s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let pct = |q| if decode_s.is_empty() { 0.0 } else { percentile(&decode_s, q) };
+    KvPoolRunStats {
+        snap: pool.snapshot(),
+        logical_tokens,
+        completed,
+        rejected_responses,
+        p50_decode_s: pct(0.5),
+        p99_decode_s: pct(0.99),
+    }
+}
+
+/// The `kvpool` bench: a fixed-seed trace of prompts drawn from a
+/// shared-prefix tree, replayed with prefix sharing on/off at a loose
+/// (unbounded) and a tight pool budget. Reports bytes-per-token (pool
+/// peak / logical tokens served), prefix-hit rate, compression-tier
+/// activations, eviction count and p50/p99 decode latency per
+/// configuration; `max_abs_err` is the attention-fidelity probe of the
+/// tier's compressor at its budget when the tier fired (0 otherwise).
+///
+/// Acceptance shape (pinned by `rust/tests/kvpool_serve.rs`): sharing
+/// cuts bytes-per-token by ≥ 30% on this trace, and the tight-budget run
+/// completes with zero admission rejections — the ladder absorbs the
+/// pressure by degrading accuracy, not availability.
+pub fn run_kvpool(cfg: &RunCfg) -> Result<BenchReport> {
+    let args = cfg.args;
+    let seed = cfg.seed;
+    let (n_roots, root_len, suffix_len, n_req, max_new, compress_budget) =
+        if cfg.smoke { (4, 64, 24, 24, 6, 16) } else { (4, 96, 48, 64, 8, 24) };
+    let n_req = args.get_parse::<usize>("requests", n_req);
+    let compressor = compressor_by_name(&args.get_or("compressor", "streaming"))?;
+    let model_cfg = ModelConfig::default();
+    let weights = load_weights(args, true, "kvpool")?;
+
+    // the shared-prefix tree: n_roots system prompts, each request is
+    // root ++ unique suffix (fixed seed => identical trace per config)
+    let mut trace_rng = Rng::seed_from(seed ^ 0x5EED);
+    let vocab = model_cfg.vocab as u32;
+    let roots: Vec<Vec<u32>> = (0..n_roots)
+        .map(|_| (0..root_len).map(|_| trace_rng.below(vocab as usize) as u32).collect())
+        .collect();
+    let prompts: Vec<Vec<u32>> = (0..n_req)
+        .map(|i| {
+            let mut p = roots[i % n_roots].clone();
+            p.extend((0..suffix_len).map(|_| trace_rng.below(vocab as usize) as u32));
+            p
+        })
+        .collect();
+
+    let title = "kvpool — paged KV pool: prefix sharing & compression-tier eviction";
+    let mut report = BenchReport::new("kvpool", title, cfg.smoke, seed);
+    let mut table = Table::new(
+        title,
+        &[
+            "config",
+            "bytes/token",
+            "peak (MiB)",
+            "hit rate",
+            "tier compr",
+            "evicted",
+            "rejects",
+            "p50 dec (ms)",
+            "p99 dec (ms)",
+        ],
+    );
+
+    let run = |sharing: bool, budget: usize| {
+        kvpool_run(
+            &weights,
+            model_cfg,
+            &compressor,
+            &prompts,
+            max_new,
+            sharing,
+            budget,
+            compress_budget,
+            seed,
+        )
+    };
+    let loose_on = run(true, 0);
+    let loose_off = run(false, 0);
+    // tight: 60% of the sharing-on peak — compression/eviction must
+    // absorb what no longer fits
+    let tight_budget = (loose_on.snap.peak_floats * 3) / 5;
+    let tight_on = run(true, tight_budget);
+    let tight_off = run(false, tight_budget);
+
+    let fidelity = kv_fidelity(compressor.as_ref(), compress_budget, seed);
+    let configs: [(&str, &KvPoolRunStats); 4] = [
+        ("sharing=on budget=loose", &loose_on),
+        ("sharing=off budget=loose", &loose_off),
+        ("sharing=on budget=tight", &tight_on),
+        ("sharing=off budget=tight", &tight_off),
+    ];
+    for (name, s) in configs {
+        table.add_row(vec![
+            name.into(),
+            format!("{:.1}", s.bytes_per_token()),
+            format!("{:.2}", s.snap.peak_bytes() as f64 / (1024.0 * 1024.0)),
+            fmt_pct(100.0 * s.snap.prefix_hit_rate()),
+            s.snap.tier_compressions.to_string(),
+            s.snap.evicted_blocks.to_string(),
+            // pool rejections only: every one also surfaces as a
+            // zero-token response, so summing the two would double-count
+            s.snap.admission_rejects.to_string(),
+            format!("{:.2}", s.p50_decode_s * 1e3),
+            format!("{:.2}", s.p99_decode_s * 1e3),
+        ]);
+        let err = if s.snap.tier_compressions > 0 { fidelity } else { 0.0 };
+        report.push(
+            BenchRecord::new(name, s.p50_decode_s)
+                .err(err)
+                .coreset(compress_budget)
+                .extra("bytes_per_token", s.bytes_per_token())
+                .extra("peak_bytes", s.snap.peak_bytes() as f64)
+                .extra("prefix_hit_rate", s.snap.prefix_hit_rate())
+                .extra("shared_tokens", s.snap.shared_tokens as f64)
+                .extra("tier_compressions", s.snap.tier_compressions as f64)
+                .extra("evicted_blocks", s.snap.evicted_blocks as f64)
+                .extra("admission_rejects", s.snap.admission_rejects as f64)
+                .extra("rejected_responses", s.rejected_responses as f64)
+                .extra("completed", s.completed as f64)
+                .extra("logical_tokens", s.logical_tokens as f64)
+                .extra("p99_decode_ms", s.p99_decode_s * 1e3),
+        );
+    }
+    table.print();
+    println!("\n(markdown)\n{}", table.render_markdown());
+
+    // headline checks — the PR-3 acceptance shape
+    let reduction = 1.0 - loose_on.bytes_per_token() / loose_off.bytes_per_token();
+    println!(
+        "[kvpool] prefix sharing cuts bytes-per-token by {:.1}% (target >= 30%): {}",
+        100.0 * reduction,
+        if reduction >= 0.30 { "YES" } else { "NO" }
+    );
+    let absorbed = tight_on.snap.admission_rejects == 0
+        && tight_on.rejected_responses == 0
+        && tight_on.completed == n_req;
+    println!(
+        "[kvpool] tight budget ({:.2} MiB) absorbed by the ladder ({} compressions, {} evictions, 0 rejects): {}",
+        (tight_budget * 4) as f64 / (1024.0 * 1024.0),
+        tight_on.snap.tier_compressions,
+        tight_on.snap.evicted_blocks,
+        if absorbed { "YES" } else { "NO" }
+    );
+    Ok(report)
+}
+
+// ---------------------------------------------------------------------
 // The unified entry point behind `wildcat bench`
 // ---------------------------------------------------------------------
 
 /// All bench ids in canonical order.
-pub const BENCH_IDS: [&str; 8] =
-    ["fig3", "table2", "table3", "table4", "table5", "figm1", "micro", "serve"];
+pub const BENCH_IDS: [&str; 9] =
+    ["fig3", "table2", "table3", "table4", "table5", "figm1", "micro", "serve", "kvpool"];
 
 /// Run the selected benches (all by default, or a comma-separated subset
 /// via `only`) and write one `BENCH_<id>.json` per bench into `out_dir`.
@@ -1131,6 +1363,7 @@ pub fn run_all(cfg: &RunCfg, out_dir: &Path, only: Option<&str>) -> Result<Vec<P
             "figm1" => run_figm1(cfg)?,
             "micro" => run_micro(cfg)?,
             "serve" => run_serve(cfg)?,
+            "kvpool" => run_kvpool(cfg)?,
             _ => unreachable!(),
         };
         let path = report.write(out_dir)?;

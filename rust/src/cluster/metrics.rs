@@ -24,6 +24,11 @@ pub struct ClusterSnapshot {
     pub p50_ms: f64,
     pub p95_ms: f64,
     pub p99_ms: f64,
+    /// KV pool bytes summed over the replicas' (disjoint) pools —
+    /// filled in by [`crate::cluster::Router::snapshot`], which can see
+    /// the per-replica clients; 0 for a bare `ClusterMetrics` snapshot.
+    pub kv_bytes_used: usize,
+    pub kv_bytes_peak: usize,
 }
 
 impl ClusterSnapshot {
@@ -106,6 +111,8 @@ impl ClusterMetrics {
             p50_ms: g.e2e_us.quantile(0.5) / 1e3,
             p95_ms: g.e2e_us.quantile(0.95) / 1e3,
             p99_ms: g.e2e_us.quantile(0.99) / 1e3,
+            kv_bytes_used: 0,
+            kv_bytes_peak: 0,
         }
     }
 

@@ -5,6 +5,7 @@
 
 use crate::coordinator::{Server, ServerClient, ServerConfig, ServerHandle, ServingMetrics};
 use crate::kvcache::KvCompressor;
+use crate::kvpool::PoolSnapshot;
 use crate::model::ModelBackend;
 use std::sync::Arc;
 
@@ -58,6 +59,13 @@ impl ReplicaPool {
         self.handles[replica].metrics()
     }
 
+    /// Per-replica KV pool gauges, in replica order. Every replica owns
+    /// a *private* pool sized by `ServerConfig::pool` (prefix sharing is
+    /// within-replica; cross-replica dedup is a ROADMAP follow-up).
+    pub fn pool_snapshots(&self) -> Vec<PoolSnapshot> {
+        self.handles.iter().map(|h| h.client().pool_snapshot()).collect()
+    }
+
     /// Graceful shutdown: each replica stops admissions, finishes its
     /// in-flight work, and joins.
     pub fn shutdown(self) {
@@ -97,6 +105,13 @@ mod tests {
         }
         for i in 0..3 {
             assert_eq!(pool.metrics(i).counters().completed, 1);
+        }
+        // each replica served from its own private KV pool
+        let snaps = pool.pool_snapshots();
+        assert_eq!(snaps.len(), 3);
+        for s in &snaps {
+            assert!(s.peak_bytes() > 0, "replica pool never held KV state");
+            assert_eq!(s.sequences, 0, "sequences must be retired after completion");
         }
         pool.shutdown();
     }

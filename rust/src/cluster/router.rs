@@ -20,6 +20,7 @@ use super::metrics::{ClusterMetrics, ClusterSnapshot};
 use crate::coordinator::admission::RejectReason;
 use crate::coordinator::request::{RequestId, Response};
 use crate::coordinator::ServerClient;
+use crate::kvpool::{aggregate_snapshots, PoolSnapshot};
 use crate::rng::splitmix64;
 use crate::util::json::Json;
 use std::collections::BTreeMap;
@@ -141,7 +142,21 @@ impl Router {
     }
 
     pub fn snapshot(&self) -> ClusterSnapshot {
-        self.metrics.snapshot()
+        let mut s = self.metrics.snapshot();
+        let kv = self.pool_aggregate();
+        s.kv_bytes_used = kv.used_bytes();
+        s.kv_bytes_peak = kv.peak_bytes();
+        s
+    }
+
+    /// Per-replica KV pool snapshots, in replica order.
+    pub fn pool_snapshots(&self) -> Vec<PoolSnapshot> {
+        self.clients.iter().map(|c| c.pool_snapshot()).collect()
+    }
+
+    /// The replicas' pool gauges summed into one cluster-level view.
+    pub fn pool_aggregate(&self) -> PoolSnapshot {
+        aggregate_snapshots(&self.pool_snapshots())
     }
 
     /// Submit a request, re-routing around backpressure. `session` keys
@@ -255,6 +270,7 @@ impl Router {
         o.insert("policy".to_string(), Json::Str(self.cfg.policy.name().to_string()));
         o.insert("n_replicas".to_string(), Json::Num(self.clients.len() as f64));
         o.insert("aggregate".to_string(), self.metrics.to_json());
+        o.insert("kv".to_string(), self.pool_aggregate().to_json());
         let replicas: Vec<Json> = self
             .clients
             .iter()
@@ -269,6 +285,7 @@ impl Router {
                 r.insert("queue_depth".to_string(), Json::Num(c.queue_depth() as f64));
                 r.insert("router_rejects".to_string(), Json::Num(self.health[i].rejects() as f64));
                 r.insert("cooldowns".to_string(), Json::Num(self.health[i].cooldowns() as f64));
+                r.insert("kv_pool".to_string(), c.pool_snapshot().to_json());
                 Json::Obj(r)
             })
             .collect();
@@ -393,6 +410,21 @@ mod tests {
         let routed_sum: f64 =
             reps.iter().map(|r| r.get("routed").and_then(Json::as_f64).unwrap()).sum();
         assert_eq!(routed_sum, 1.0);
+        // every replica block carries its pool gauges; the one request
+        // landed on exactly one replica, whose pool saw KV bytes
+        let peaks: Vec<f64> = reps
+            .iter()
+            .map(|r| {
+                let kvp = r.get("kv_pool").expect("replica kv_pool block");
+                kvp.get("peak_bytes").and_then(Json::as_f64).unwrap()
+            })
+            .collect();
+        assert!(peaks.iter().any(|&p| p > 0.0), "no replica pool held KV state");
+        // the cluster aggregate sums the per-replica pools
+        let peak_sum: f64 = peaks.iter().sum();
+        let kv = j.get("kv").expect("cluster kv aggregate");
+        assert_eq!(kv.get("peak_bytes").and_then(Json::as_f64), Some(peak_sum));
+        assert_eq!(router.snapshot().kv_bytes_peak as f64, peak_sum);
         // document parses back (fixed point)
         let text = j.to_string_compact();
         assert_eq!(crate::util::json::parse(&text).unwrap(), j);

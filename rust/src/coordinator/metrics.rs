@@ -32,6 +32,10 @@ struct Inner {
     prefill_us: Welford,
     decode_per_token_us: Welford,
     e2e_us: LogHistogram,
+    /// KV pool gauges pushed by the scheduler (current + peak bytes of
+    /// the replica's pool ledger).
+    kv_bytes_current: usize,
+    kv_bytes_peak: usize,
     started: Instant,
 }
 
@@ -55,6 +59,8 @@ impl ServingMetrics {
                 prefill_us: Welford::new(),
                 decode_per_token_us: Welford::new(),
                 e2e_us: LogHistogram::latency_us(),
+                kv_bytes_current: 0,
+                kv_bytes_peak: 0,
                 started: Instant::now(),
             }),
         }
@@ -91,6 +97,20 @@ impl ServingMetrics {
 
     pub fn on_compression(&self, n: u64) {
         self.inner.lock().unwrap().counters.compressions += n;
+    }
+
+    /// Record the replica's KV pool memory gauges (bytes, current +
+    /// peak). Pushed by the scheduler after admissions and engine steps.
+    pub fn set_kv_bytes(&self, current: usize, peak: usize) {
+        let mut g = self.inner.lock().unwrap();
+        g.kv_bytes_current = current;
+        g.kv_bytes_peak = g.kv_bytes_peak.max(peak);
+    }
+
+    /// Current KV pool bytes as last pushed by the scheduler.
+    pub fn kv_bytes(&self) -> (usize, usize) {
+        let g = self.inner.lock().unwrap();
+        (g.kv_bytes_current, g.kv_bytes_peak)
     }
 
     pub fn counters(&self) -> Counters {
@@ -135,6 +155,8 @@ impl ServingMetrics {
         );
         o.insert("e2e_ms_p50".to_string(), num(g.e2e_us.quantile(0.5) / 1e3));
         o.insert("e2e_ms_p99".to_string(), num(g.e2e_us.quantile(0.99) / 1e3));
+        o.insert("kv_bytes_current".to_string(), Json::Num(g.kv_bytes_current as f64));
+        o.insert("kv_bytes_peak".to_string(), Json::Num(g.kv_bytes_peak as f64));
         o.insert("uptime_s".to_string(), num(g.started.elapsed().as_secs_f64()));
         Json::Obj(o)
     }
@@ -151,6 +173,7 @@ impl ServingMetrics {
              prefill:  mean {:.2} ms (max {:.2})\n\
              decode:   mean {:.2} ms/token\n\
              e2e:      p50 {:.2} ms  p99 {:.2} ms\n\
+             kv pool:  {:.2} MiB current, {:.2} MiB peak\n\
              compressions: {}",
             c.submitted,
             c.rejected,
@@ -165,6 +188,8 @@ impl ServingMetrics {
             g.decode_per_token_us.mean() / 1e3,
             g.e2e_us.quantile(0.5) / 1e3,
             g.e2e_us.quantile(0.99) / 1e3,
+            g.kv_bytes_current as f64 / (1024.0 * 1024.0),
+            g.kv_bytes_peak as f64 / (1024.0 * 1024.0),
             c.compressions,
         )
     }
@@ -219,6 +244,19 @@ mod tests {
         // serialise + reparse = fixed point
         let text = j.to_string_compact();
         assert_eq!(crate::util::json::parse(&text).unwrap(), j);
+    }
+
+    #[test]
+    fn kv_gauges_track_current_and_sticky_peak() {
+        let m = ServingMetrics::new();
+        assert_eq!(m.kv_bytes(), (0, 0));
+        m.set_kv_bytes(1000, 1500);
+        m.set_kv_bytes(400, 400); // peak must not regress
+        assert_eq!(m.kv_bytes(), (400, 1500));
+        let j = m.to_json();
+        assert_eq!(j.get("kv_bytes_current").and_then(Json::as_f64), Some(400.0));
+        assert_eq!(j.get("kv_bytes_peak").and_then(Json::as_f64), Some(1500.0));
+        assert!(m.report().contains("kv pool"));
     }
 
     #[test]

@@ -7,8 +7,9 @@
 //! * [`admission`] — bounded admission queue with backpressure
 //! * [`batcher`] — dynamic batch formation (size/deadline policy)
 //! * [`scheduler`] — continuous-batching engine loop: prefill on admit,
-//!   per-iteration decode across active sequences, KV compression via
-//!   [`crate::kvcache::CacheManager`]
+//!   per-iteration decode across active sequences, KV state in the
+//!   block-paged [`crate::kvpool::KvPool`] (per-replica budget, prefix
+//!   sharing, pressure ladder) via [`crate::kvcache::CacheManager`]
 //! * [`server`] — the worker thread owning the model backend; clients
 //!   submit over channels and receive a response handle
 //! * [`metrics`] — latency histograms and throughput counters

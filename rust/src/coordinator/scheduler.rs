@@ -1,12 +1,17 @@
 //! Continuous-batching scheduler: the engine loop that interleaves
 //! prefill (admission) and decode (one token per active sequence per
-//! step) over a [`ModelBackend`], with KV compression at prefill time and
-//! budget-triggered re-compression during decode.
+//! step) over a [`ModelBackend`], with KV state held in the block-paged
+//! [`KvPool`] through a [`CacheManager`] — prefill registration maps
+//! shared prompt-prefix blocks, compression fires at prefill time and
+//! past the per-sequence high-water mark during decode, and the pool's
+//! pressure ladder (compress cold sequences → evict cached prefixes)
+//! absorbs global memory pressure before admission ever rejects.
 
 use super::batcher::Batcher;
 use super::metrics::ServingMetrics;
 use super::request::{Request, RequestTiming, Response};
-use crate::kvcache::{CompressionCtx, KvCompressor, KvEntry};
+use crate::kvcache::{CacheManager, KvCompressor};
+use crate::kvpool::{KvPool, KvPoolConfig};
 use crate::linalg::Matrix;
 use crate::model::{generate::argmax, ModelBackend};
 use crate::rng::Rng;
@@ -27,10 +32,9 @@ impl Default for SchedulerConfig {
     }
 }
 
-/// One active sequence's state.
+/// One active sequence's state (KV lives in the pool, keyed by `req.id`).
 struct SeqState {
     req: Request,
-    caches: Vec<(Matrix, Matrix, Vec<f64>)>,
     generated: Vec<u32>,
     next_token: u32,
     pos: usize,
@@ -42,13 +46,14 @@ struct SeqState {
 pub struct Scheduler<B: ModelBackend> {
     backend: B,
     pub cfg: SchedulerConfig,
-    compressor: Arc<dyn KvCompressor>,
+    cache: CacheManager,
     active: Vec<SeqState>,
     metrics: Arc<ServingMetrics>,
     rng: Rng,
 }
 
 impl<B: ModelBackend> Scheduler<B> {
+    /// Stand-alone scheduler over a private, unbounded pool.
     pub fn new(
         backend: B,
         cfg: SchedulerConfig,
@@ -56,71 +61,93 @@ impl<B: ModelBackend> Scheduler<B> {
         metrics: Arc<ServingMetrics>,
         seed: u64,
     ) -> Self {
-        Scheduler {
-            backend,
-            cfg,
-            compressor,
-            active: Vec::new(),
-            metrics,
-            rng: Rng::seed_from(seed),
-        }
+        let pool = Arc::new(KvPool::new(KvPoolConfig::default(), compressor));
+        Self::with_pool(backend, cfg, metrics, seed, pool)
+    }
+
+    /// Scheduler over a shared pool (the server threads one per replica).
+    pub fn with_pool(
+        backend: B,
+        cfg: SchedulerConfig,
+        metrics: Arc<ServingMetrics>,
+        seed: u64,
+        pool: Arc<KvPool>,
+    ) -> Self {
+        let model_cfg = backend.config();
+        let n_lh = model_cfg.n_layers * model_cfg.n_heads;
+        let mut cache =
+            CacheManager::with_pool(cfg.cache_budget, n_lh, model_cfg.beta() as f64, pool);
+        cache.high_water = cfg.cache_budget + cfg.slack;
+        Scheduler { backend, cfg, cache, active: Vec::new(), metrics, rng: Rng::seed_from(seed) }
     }
 
     pub fn active_count(&self) -> usize {
         self.active.len()
     }
 
-    /// Admit one request: prefill, compress the caches, seed decode state.
-    pub fn admit(&mut self, req: Request) {
+    /// The pool backing this scheduler's caches (metrics surface).
+    pub fn pool(&self) -> &Arc<KvPool> {
+        self.cache.pool()
+    }
+
+    /// Admit one request: prefill, register the caches with the pool
+    /// (prefix sharing + admission control), compress past budget, seed
+    /// decode state. `None` on success; a `Some` response means the
+    /// pool's pressure ladder could not make room — the request is
+    /// answered immediately with zero tokens and counted as rejected
+    /// (never silently dropped).
+    pub fn admit(&mut self, req: Request) -> Option<Response> {
         let queue = req.arrived.elapsed();
         let t0 = Instant::now();
-        let model_cfg = self.backend.config();
-        let n_lh = model_cfg.n_layers * model_cfg.n_heads;
         let out = self.backend.prefill(&req.tokens);
-        let mut caches = Vec::with_capacity(n_lh);
-        let mut compressions = 0;
-        for lh in 0..n_lh {
-            let keys = &out.k_cache[lh];
-            let values = &out.v_cache[lh];
-            let entry = if keys.rows() <= self.cfg.cache_budget {
-                KvEntry::exact(keys.clone(), values.clone())
-            } else {
-                compressions += 1;
-                let ctx = CompressionCtx {
-                    keys,
-                    values,
-                    budget: self.cfg.cache_budget,
-                    beta: model_cfg.beta() as f64,
-                    layer: lh / model_cfg.n_heads,
-                    n_layers: model_cfg.n_layers,
-                    obs_queries: None,
-                };
-                self.compressor.compress(&ctx, &mut self.rng)
-            };
-            caches.push((entry.keys, entry.values, entry.weights));
+        let before = self.cache.compressions();
+        if self
+            .cache
+            .ingest_prefill(req.id, &req.tokens, &out.k_cache, &out.v_cache)
+            .is_err()
+        {
+            self.metrics.on_reject();
+            self.push_kv_gauges();
+            return Some(Response {
+                id: req.id,
+                tokens: Vec::new(),
+                timing: RequestTiming { queue, prefill: t0.elapsed(), ..Default::default() },
+                cache_entries: 0,
+                context_len: req.tokens.len(),
+            });
         }
-        self.metrics.on_compression(compressions);
+        // prefill compression down to the per-sequence budget
+        self.cache.compress_sequence(req.id, None, &mut self.rng);
+        self.metrics.on_compression(self.cache.compressions() - before);
+        self.push_kv_gauges();
         let prefill = t0.elapsed();
         let pos = req.tokens.len();
         let next_token = argmax(&out.logits) as u32;
         self.active.push(SeqState {
             req,
-            caches,
             generated: Vec::new(),
             next_token,
             pos,
             timing: RequestTiming { queue, prefill, ..Default::default() },
             decode_started: Instant::now(),
         });
+        None
+    }
+
+    fn push_kv_gauges(&self) {
+        let pool = self.cache.pool();
+        self.metrics.set_kv_bytes(pool.used_bytes(), pool.peak_bytes());
     }
 
     /// One engine iteration: decode one token for every active sequence.
     /// Returns completed responses.
     pub fn step(&mut self) -> Vec<Response> {
         let model_cfg = self.backend.config();
+        let n_lh = model_cfg.n_layers * model_cfg.n_heads;
         let max_pos = model_cfg.max_len - 1;
         let mut done = Vec::new();
         let mut i = 0;
+        let compressions_before = self.cache.compressions();
         while i < self.active.len() {
             // emit the pending token, then compute the next one
             let finished = {
@@ -130,43 +157,25 @@ impl<B: ModelBackend> Scheduler<B> {
             };
             if !finished {
                 let st = &mut self.active[i];
-                let refs: Vec<(&Matrix, &Matrix, &[f64])> = st
-                    .caches
-                    .iter()
-                    .map(|(k, v, w)| (k, v, w.as_slice()))
-                    .collect();
+                let caches = self.cache.gather(st.req.id).expect("active sequence in pool");
+                let refs: Vec<(&Matrix, &Matrix, &[f64])> =
+                    caches.iter().map(|(k, v, w)| (k, v, w.as_slice())).collect();
                 let (logits, new_k, new_v) =
-                    self.backend
-                        .decode(st.next_token, st.pos.min(max_pos), &refs);
-                for (lh, (k, v, w)) in st.caches.iter_mut().enumerate() {
-                    k.push_row(&new_k[lh]);
-                    v.push_row(&new_v[lh]);
-                    w.push(1.0);
+                    self.backend.decode(st.next_token, st.pos.min(max_pos), &refs);
+                for lh in 0..n_lh {
+                    // crossing budget + slack triggers sequence
+                    // re-compression inside the manager
+                    self.cache.append_and_maybe_compress(
+                        st.req.id,
+                        lh,
+                        &new_k[lh],
+                        &new_v[lh],
+                        None,
+                        &mut self.rng,
+                    );
                 }
                 st.pos += 1;
                 st.next_token = argmax(&logits) as u32;
-                // decode-time re-compression past budget + slack
-                let limit = self.cfg.cache_budget + self.cfg.slack;
-                if st.caches[0].0.rows() > limit {
-                    let mut n_comp = 0;
-                    for (lh, (k, v, w)) in st.caches.iter_mut().enumerate() {
-                        let ctx = CompressionCtx {
-                            keys: k,
-                            values: v,
-                            budget: self.cfg.cache_budget,
-                            beta: model_cfg.beta() as f64,
-                            layer: lh / model_cfg.n_heads,
-                            n_layers: model_cfg.n_layers,
-                            obs_queries: None,
-                        };
-                        let entry = self.compressor.compress(&ctx, &mut self.rng);
-                        *k = entry.keys;
-                        *v = entry.values;
-                        *w = entry.weights;
-                        n_comp += 1;
-                    }
-                    self.metrics.on_compression(n_comp);
-                }
                 i += 1;
             } else {
                 let mut st = self.active.swap_remove(i);
@@ -178,8 +187,19 @@ impl<B: ModelBackend> Scheduler<B> {
                     st.req.tokens.len(),
                     st.generated.len(),
                 );
-                let cache_entries =
-                    st.caches.iter().map(|(k, _, _)| k.rows()).max().unwrap_or(0);
+                let cache_entries = self
+                    .cache
+                    .pool()
+                    .seq_stats(st.req.id)
+                    .map(|s| s.physical_max)
+                    .unwrap_or(0);
+                // retire exactly once: a false return here means the
+                // sequence leaked or was double-freed
+                assert!(
+                    self.cache.drop_sequence(st.req.id),
+                    "retired unknown sequence {}",
+                    st.req.id
+                );
                 done.push(Response {
                     id: st.req.id,
                     tokens: st.generated,
@@ -189,11 +209,15 @@ impl<B: ModelBackend> Scheduler<B> {
                 });
             }
         }
+        self.metrics
+            .on_compression(self.cache.compressions() - compressions_before);
+        self.push_kv_gauges();
         done
     }
 
     /// Drive a full offline run: admit per the batcher policy from a FIFO
-    /// of requests, stepping until everything completes.
+    /// of requests, stepping until everything completes. Pool-rejected
+    /// admissions surface as zero-token responses.
     pub fn run_to_completion(&mut self, mut queue: Vec<Request>, batcher: &Batcher) -> Vec<Response> {
         queue.reverse(); // pop from the back = FIFO front
         let mut responses = Vec::new();
@@ -205,7 +229,9 @@ impl<B: ModelBackend> Scheduler<B> {
             let n = batcher.admit_count(self.active.len(), queue.len(), oldest_wait);
             for _ in 0..n {
                 let req = queue.pop().unwrap();
-                self.admit(req);
+                if let Some(rejected) = self.admit(req) {
+                    responses.push(rejected);
+                }
             }
             if self.active.is_empty() {
                 continue;
@@ -254,6 +280,8 @@ mod tests {
         ids.sort_unstable();
         assert_eq!(ids, (0..9).collect::<Vec<_>>());
         assert!(rs.iter().all(|r| r.tokens.len() == 4));
+        // all sequences retired: the pool is empty again
+        assert_eq!(s.pool().snapshot().sequences, 0);
     }
 
     #[test]
@@ -290,7 +318,7 @@ mod tests {
             Arc::new(ServingMetrics::new()),
             3,
         );
-        s.admit(Request::new(0, prompt, 5));
+        assert!(s.admit(Request::new(0, prompt, 5)).is_none());
         let mut out = Vec::new();
         while out.is_empty() {
             out = s.step();
@@ -301,8 +329,8 @@ mod tests {
     #[test]
     fn interleaves_multiple_sequences() {
         let mut s = mk_sched(1000);
-        s.admit(Request::new(0, vec![1, 2, 3], 3));
-        s.admit(Request::new(1, vec![4, 5, 6, 7], 2));
+        assert!(s.admit(Request::new(0, vec![1, 2, 3], 3)).is_none());
+        assert!(s.admit(Request::new(1, vec![4, 5, 6, 7], 2)).is_none());
         assert_eq!(s.active_count(), 2);
         let mut all = Vec::new();
         for _ in 0..5 {
@@ -312,5 +340,65 @@ mod tests {
         assert_eq!(s.active_count(), 0);
         let r1 = all.iter().find(|r| r.id == 1).unwrap();
         assert_eq!(r1.tokens.len(), 2);
+    }
+
+    #[test]
+    fn shared_prompt_prefixes_are_stored_once() {
+        let mut s = mk_sched(1000);
+        // 6 requests over 2 distinct prompts — blocks dedup the prefills
+        let prompt_a: Vec<u32> = (0..40).map(|j| (j % 16) as u32).collect();
+        let prompt_b: Vec<u32> = (0..40).map(|j| ((j + 5) % 16) as u32).collect();
+        for i in 0..6u64 {
+            let p = if i % 2 == 0 { prompt_a.clone() } else { prompt_b.clone() };
+            assert!(s.admit(Request::new(i, p, 2)).is_none());
+        }
+        let snap = s.pool().snapshot();
+        assert_eq!(snap.prefix_queries, 6);
+        assert_eq!(snap.prefix_hits, 4, "4 of 6 admissions reuse a stored prefix");
+        assert!(snap.shared_tokens > 0);
+        // pool bytes are well below six private copies
+        let per_seq = snap.used_floats / 6;
+        // 6 private copies would cost 6 seqs x 40 tokens x 4 lh x 17
+        // floats (d_head 8 keys + 8 values + 1 weight)
+        assert!(
+            snap.used_floats < 6 * 40 * 4 * 17,
+            "no deduplication happened: used={} (per seq {per_seq})",
+            snap.used_floats
+        );
+        while s.active_count() > 0 {
+            s.step();
+        }
+    }
+
+    #[test]
+    fn tight_pool_budget_absorbs_pressure_without_rejection() {
+        let cfg = ModelConfig { vocab: 16, d_model: 16, n_layers: 2, n_heads: 2, d_ff: 32, max_len: 256 };
+        let model = Transformer::random(cfg, &mut Rng::seed_from(11));
+        // one uncompressed 64-token sequence = 64 * 4 lh * 17 floats
+        let pool = Arc::new(KvPool::new(
+            KvPoolConfig {
+                budget_floats: 2 * 64 * 4 * 17,
+                compress_budget: 16,
+                block_tokens: 8,
+                ..Default::default()
+            },
+            Arc::new(StreamingLlm) as Arc<dyn KvCompressor>,
+        ));
+        let metrics = Arc::new(ServingMetrics::new());
+        let mut s = Scheduler::with_pool(
+            model,
+            SchedulerConfig { cache_budget: 1000, slack: 8 },
+            metrics.clone(),
+            7,
+            pool,
+        );
+        let batcher = Batcher::new(BatcherConfig::default());
+        let rs = s.run_to_completion(reqs(6, 64, 4), &batcher);
+        assert_eq!(rs.len(), 6);
+        assert!(rs.iter().all(|r| r.tokens.len() == 4), "pressure rejected load");
+        let snap = s.pool().snapshot();
+        assert_eq!(snap.admission_rejects, 0);
+        assert!(snap.tier_compressions > 0, "compression tier never fired");
+        assert_eq!(metrics.counters().rejected, 0);
     }
 }

@@ -10,6 +10,7 @@ use super::metrics::ServingMetrics;
 use super::request::{Request, RequestId, Response};
 use super::scheduler::{Scheduler, SchedulerConfig};
 use crate::kvcache::KvCompressor;
+use crate::kvpool::{KvPool, KvPoolConfig, PoolSnapshot};
 use crate::model::ModelBackend;
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
@@ -23,6 +24,10 @@ pub struct ServerConfig {
     pub max_prompt: usize,
     pub batcher: BatcherConfig,
     pub scheduler: SchedulerConfig,
+    /// The replica's KV memory pool: global float budget, prefix
+    /// sharing, pressure-ladder knobs (`--kv-budget-mb`,
+    /// `--prefix-sharing` on the CLI). Default: unbounded, sharing on.
+    pub pool: KvPoolConfig,
     pub seed: u64,
 }
 
@@ -33,6 +38,7 @@ impl Default for ServerConfig {
             max_prompt: 1024,
             batcher: BatcherConfig::default(),
             scheduler: SchedulerConfig::default(),
+            pool: KvPoolConfig::default(),
             seed: 0,
         }
     }
@@ -50,6 +56,7 @@ pub struct ServerClient {
     queue: Arc<AdmissionQueue>,
     waiters: Waiters,
     metrics: Arc<ServingMetrics>,
+    pool: Arc<KvPool>,
     next_id: Arc<AtomicU64>,
 }
 
@@ -77,6 +84,16 @@ impl ServerClient {
 
     pub fn metrics(&self) -> &ServingMetrics {
         &self.metrics
+    }
+
+    /// The replica's KV memory pool (shared with its scheduler).
+    pub fn pool(&self) -> &Arc<KvPool> {
+        &self.pool
+    }
+
+    /// Point-in-time KV pool gauges — what the cluster router aggregates.
+    pub fn pool_snapshot(&self) -> PoolSnapshot {
+        self.pool.snapshot()
     }
 
     /// Requests sitting in the admission queue (not yet prefilled).
@@ -111,12 +128,16 @@ impl Server {
         let queue = Arc::new(AdmissionQueue::new(cfg.queue_capacity, cfg.max_prompt));
         let waiters: Waiters = Arc::new(Mutex::new(HashMap::new()));
         let metrics = Arc::new(ServingMetrics::new());
+        // the pool is created here (not on the worker) so clients and the
+        // cluster router can read its gauges while the backend serves
+        let pool = Arc::new(KvPool::new(cfg.pool.clone(), compressor));
         let stopping = Arc::new(AtomicBool::new(false));
 
         let worker = {
             let queue = queue.clone();
             let waiters = waiters.clone();
             let metrics = metrics.clone();
+            let pool = pool.clone();
             let stopping = stopping.clone();
             std::thread::spawn(move || {
                 // close the admission queue however this thread exits: a
@@ -131,12 +152,12 @@ impl Server {
                 }
                 let _close_guard = CloseOnExit(queue.clone());
                 let backend = make_backend();
-                let mut sched = Scheduler::new(
+                let mut sched = Scheduler::with_pool(
                     backend,
                     cfg.scheduler.clone(),
-                    compressor,
                     metrics.clone(),
                     cfg.seed,
+                    pool,
                 );
                 let batcher = Batcher::new(cfg.batcher);
                 loop {
@@ -157,7 +178,14 @@ impl Server {
                         }
                         Some(batch) => {
                             for req in batch {
-                                sched.admit(req);
+                                // a pool-rejected admission is answered
+                                // immediately (zero tokens), never dropped
+                                if let Some(rejected) = sched.admit(req) {
+                                    let tx = waiters.lock().unwrap().remove(&rejected.id);
+                                    if let Some(tx) = tx {
+                                        let _ = tx.send(rejected);
+                                    }
+                                }
                             }
                         }
                     }
@@ -182,6 +210,7 @@ impl Server {
                 queue,
                 waiters,
                 metrics,
+                pool,
                 next_id: Arc::new(AtomicU64::new(1)),
             },
             stopping,

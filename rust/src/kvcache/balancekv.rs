@@ -9,7 +9,7 @@
 //! shuffled pairing (same discrepancy order, seed-stable), and trim any
 //! overshoot uniformly.
 
-use super::{assemble_selection, split_protected, CompressionCtx, KvCompressor, KvEntry};
+use super::{assemble_selection, shrink_to_budget, split_protected, CompressionCtx, KvCompressor, KvEntry};
 use crate::linalg::Matrix;
 use crate::rng::Rng;
 
@@ -72,7 +72,7 @@ impl KvCompressor for BalanceKv {
     fn compress(&self, ctx: &CompressionCtx, rng: &mut Rng) -> KvEntry {
         let n = ctx.keys.rows();
         let Some((head, mid, tail)) = split_protected(n, ctx.budget) else {
-            return KvEntry::exact(ctx.keys.clone(), ctx.values.clone());
+            return shrink_to_budget(ctx.keys, ctx.values, ctx.budget);
         };
         let take = ctx.budget.saturating_sub(head + tail).min(mid.len());
         let feat = Self::features(ctx.keys, ctx.values);

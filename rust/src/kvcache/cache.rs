@@ -1,16 +1,26 @@
-//! The serving-side KV-cache manager.
+//! The serving-side KV-cache manager, backed by the block-paged
+//! [`KvPool`].
 //!
-//! Owns per-sequence, per-layer caches; enforces a per-layer entry budget
-//! by invoking the configured [`KvCompressor`] when a cache grows past its
-//! high-water mark (prefill compression and mid-stream re-compression);
-//! tracks memory/compression statistics for the coordinator's metrics.
+//! The manager keeps the per-sequence *policy* — a per-layer entry budget
+//! with a high-water mark that triggers [`KvCompressor`] re-compression —
+//! while the pool owns the actual bytes: shared prefix blocks plus
+//! private tails, charged against one global float budget. Several
+//! managers (or a manager and the scheduler) can share one pool, which is
+//! how per-replica global budgets and cross-request prefix sharing reach
+//! the serving stack.
+//!
+//! [`LayerCache`] is the *materialised view* of one layer-head cache —
+//! block rows (unit weights) concatenated with the sequence's tail —
+//! handed out by value; the storage behind it is pool block handles.
 
-use super::{CompressionCtx, KvCompressor, KvEntry};
+use super::{KvCompressor, KvEntry};
+use crate::kvpool::{AdmitError, CompressDims, KvPool, KvPoolConfig, RegisterOutcome};
 use crate::linalg::Matrix;
 use crate::rng::Rng;
-use std::collections::HashMap;
+use std::collections::BTreeSet;
+use std::sync::Arc;
 
-/// One layer's cache for one sequence: weighted key/value rows.
+/// One layer's cache view for one sequence: weighted key/value rows.
 #[derive(Clone, Debug)]
 pub struct LayerCache {
     pub keys: Matrix,
@@ -69,70 +79,129 @@ pub struct CacheStats {
     pub sequences: usize,
     pub physical_entries: usize,
     pub logical_tokens: usize,
+    /// Per-sequence float attribution (shared blocks counted once per
+    /// mapping sequence — the "what would this cost unshared" view).
     pub footprint_floats: usize,
     pub compressions: u64,
+    /// Pool-ledger bytes (shared blocks counted once): the real memory.
+    pub kv_bytes_current: usize,
+    pub kv_bytes_peak: usize,
 }
 
-/// Per-sequence KV caches with budget-triggered compression.
+/// Per-sequence KV caches with budget-triggered compression, stored in a
+/// (possibly shared) [`KvPool`].
 pub struct CacheManager {
-    /// Physical entries allowed per layer per sequence.
+    /// Physical entries allowed per (layer, head) per sequence.
     pub budget: usize,
     /// Entries past which compression triggers (hysteresis avoids
     /// re-compressing every decode step). Defaults to `budget`.
     pub high_water: usize,
     pub beta: f64,
     pub n_layers: usize,
-    compressor: Box<dyn KvCompressor>,
-    seqs: HashMap<u64, Vec<LayerCache>>,
+    pool: Arc<KvPool>,
+    /// Sequence ids this manager created (a shared pool may hold others).
+    seqs: BTreeSet<u64>,
     compressions: u64,
 }
 
 impl CacheManager {
+    /// Stand-alone manager over a private, unbounded pool.
     pub fn new(
         budget: usize,
         n_layers: usize,
         beta: f64,
-        compressor: Box<dyn KvCompressor>,
+        compressor: Arc<dyn KvCompressor>,
     ) -> Self {
+        let pool = Arc::new(KvPool::new(KvPoolConfig::default(), compressor));
+        Self::with_pool(budget, n_layers, beta, pool)
+    }
+
+    /// Manager over a shared pool (the serving path: one pool per
+    /// replica, threaded through scheduler and server).
+    pub fn with_pool(budget: usize, n_layers: usize, beta: f64, pool: Arc<KvPool>) -> Self {
+        pool.set_dims(CompressDims { n_layers, beta });
         CacheManager {
             budget,
             high_water: budget,
             beta,
             n_layers,
-            compressor,
-            seqs: HashMap::new(),
+            pool,
+            seqs: BTreeSet::new(),
             compressions: 0,
         }
     }
 
+    pub fn pool(&self) -> &Arc<KvPool> {
+        &self.pool
+    }
+
     pub fn compressor_name(&self) -> &'static str {
-        self.compressor.name()
+        self.pool.compressor_name()
+    }
+
+    pub fn compressions(&self) -> u64 {
+        self.compressions
     }
 
     /// Create (or reset) the caches for a sequence.
     pub fn create_sequence(&mut self, seq: u64, d_k: usize, d_v: usize) {
-        let layers = (0..self.n_layers).map(|_| LayerCache::new(d_k, d_v)).collect();
-        self.seqs.insert(seq, layers);
+        self.pool.create_sequence(seq, self.n_layers, d_k, d_v);
+        self.seqs.insert(seq);
     }
 
-    pub fn drop_sequence(&mut self, seq: u64) {
-        self.seqs.remove(&seq);
+    /// Register a prefilled sequence through the pool: shared prefix
+    /// blocks are mapped (not copied), new full blocks are sealed for
+    /// future requests, the remainder becomes the private tail. The only
+    /// admission-controlled entry point — a `PoolExhausted` error means
+    /// the pressure ladder could not reclaim enough for this prompt.
+    pub fn ingest_prefill(
+        &mut self,
+        seq: u64,
+        tokens: &[u32],
+        k_cache: &[Matrix],
+        v_cache: &[Matrix],
+    ) -> Result<RegisterOutcome, AdmitError> {
+        assert_eq!(k_cache.len(), self.n_layers, "layer-cache count mismatch");
+        let out = self.pool.register_prefill(seq, tokens, k_cache, v_cache)?;
+        self.seqs.insert(seq);
+        Ok(out)
+    }
+
+    /// Drop a sequence's caches. Returns whether it existed — retire
+    /// paths assert on this so leaked/double-freed sequences fail loudly
+    /// instead of silently growing the pool.
+    #[must_use]
+    pub fn drop_sequence(&mut self, seq: u64) -> bool {
+        let tracked = self.seqs.remove(&seq);
+        let existed = self.pool.drop_sequence(seq);
+        debug_assert_eq!(tracked, existed, "manager/pool sequence tracking diverged");
+        existed
     }
 
     pub fn has_sequence(&self, seq: u64) -> bool {
-        self.seqs.contains_key(&seq)
+        self.pool.has_sequence(seq)
     }
 
-    pub fn layer(&self, seq: u64, layer: usize) -> Option<&LayerCache> {
-        self.seqs.get(&seq).and_then(|l| l.get(layer))
+    /// Materialised view of one layer-head cache.
+    pub fn layer(&self, seq: u64, layer: usize) -> Option<LayerCache> {
+        let (keys, values, weights, logical_len) = self.pool.layer_view(seq, layer)?;
+        Some(LayerCache { keys, values, weights, logical_len })
     }
 
-    pub fn layer_mut(&mut self, seq: u64, layer: usize) -> Option<&mut LayerCache> {
-        self.seqs.get_mut(&seq).and_then(|l| l.get_mut(layer))
+    /// Materialise every layer-head cache (the decode hot path).
+    pub fn gather(&self, seq: u64) -> Option<Vec<(Matrix, Matrix, Vec<f64>)>> {
+        self.pool.gather(seq)
     }
 
-    /// Append a token's K/V to a layer cache; compress if past the
-    /// high-water mark. Returns whether a compression ran.
+    /// Raw append without the budget check (prefill ingestion in tests).
+    pub fn append_row(&mut self, seq: u64, layer: usize, k_row: &[f32], v_row: &[f32]) {
+        self.pool.append_row(seq, layer, k_row, v_row);
+    }
+
+    /// Append a token's K/V to a layer cache; when the layer crosses the
+    /// high-water mark the *sequence* is compressed back to budget (every
+    /// layer-head past budget — they cross together on the decode path).
+    /// Returns whether a compression ran.
     pub fn append_and_maybe_compress(
         &mut self,
         seq: u64,
@@ -142,81 +211,41 @@ impl CacheManager {
         obs_queries: Option<&Matrix>,
         rng: &mut Rng,
     ) -> bool {
-        let beta = self.beta;
-        let n_layers = self.n_layers;
-        let budget = self.budget;
-        let high_water = self.high_water.max(budget);
-        let cache = self
-            .seqs
-            .get_mut(&seq)
-            .and_then(|l| l.get_mut(layer))
-            .expect("unknown sequence/layer");
-        cache.append(k_row, v_row);
-        if cache.len() <= high_water {
+        self.pool.append_row(seq, layer, k_row, v_row);
+        let high_water = self.high_water.max(self.budget);
+        let len = self.pool.layer_len(seq, layer).expect("unknown sequence/layer");
+        if len <= high_water {
             return false;
         }
-        // Note: after a compression the weights of the *current* cache are
-        // not all 1.0; the compressor treats stored entries as surrogate
-        // tokens. This is the paper's streaming re-compression caveat
-        // (Sec. 5 limitations) — acceptable because entries were built to
-        // reproduce attention behaviour of the originals.
-        let ctx = CompressionCtx {
-            keys: &cache.keys,
-            values: &cache.values,
-            budget,
-            beta,
-            layer,
-            n_layers,
-            obs_queries,
-        };
-        let entry = self.compressor.compress(&ctx, rng);
-        let logical = cache.logical_len;
-        cache.install(entry, logical);
-        self.compressions += 1;
-        true
+        let n = self.pool.compress_sequence(seq, self.budget, obs_queries, rng);
+        self.compressions += n as u64;
+        n > 0
     }
 
-    /// Compress every layer of a sequence now (prefill compression).
+    /// Compress every layer of a sequence past budget now (prefill
+    /// compression).
     pub fn compress_sequence(
         &mut self,
         seq: u64,
         obs_queries: Option<&Matrix>,
         rng: &mut Rng,
     ) {
-        let beta = self.beta;
-        let n_layers = self.n_layers;
-        let budget = self.budget;
-        let Some(layers) = self.seqs.get_mut(&seq) else { return };
-        for (li, cache) in layers.iter_mut().enumerate() {
-            if cache.len() <= budget {
-                continue;
-            }
-            let ctx = CompressionCtx {
-                keys: &cache.keys,
-                values: &cache.values,
-                budget,
-                beta,
-                layer: li,
-                n_layers,
-                obs_queries,
-            };
-            let entry = self.compressor.compress(&ctx, rng);
-            let logical = cache.logical_len;
-            cache.install(entry, logical);
-            self.compressions += 1;
-        }
+        let n = self.pool.compress_sequence(seq, self.budget, obs_queries, rng);
+        self.compressions += n as u64;
     }
 
     pub fn stats(&self) -> CacheStats {
         let mut s = CacheStats { sequences: self.seqs.len(), ..Default::default() };
-        for layers in self.seqs.values() {
-            for l in layers {
-                s.physical_entries += l.len();
-                s.logical_tokens += l.logical_len;
-                s.footprint_floats += l.footprint_floats();
+        for &seq in &self.seqs {
+            if let Some(st) = self.pool.seq_stats(seq) {
+                s.physical_entries += st.physical_total;
+                s.logical_tokens += st.logical_total;
+                s.footprint_floats += st.footprint_floats;
             }
         }
         s.compressions = self.compressions;
+        s.kv_bytes_current = self.pool.used_bytes();
+        s.kv_bytes_peak = self.pool.peak_bytes();
         s
     }
 }
@@ -227,7 +256,7 @@ mod tests {
     use crate::kvcache::{StreamingLlm, UniformKv};
 
     fn mk(budget: usize) -> CacheManager {
-        CacheManager::new(budget, 2, 0.35, Box::new(StreamingLlm))
+        CacheManager::new(budget, 2, 0.35, Arc::new(StreamingLlm))
     }
 
     #[test]
@@ -268,14 +297,13 @@ mod tests {
 
     #[test]
     fn prefill_compression_all_layers() {
-        let mut m = CacheManager::new(100, 2, 0.35, Box::new(UniformKv));
+        let mut m = CacheManager::new(100, 2, 0.35, Arc::new(UniformKv));
         m.create_sequence(5, 4, 4);
         let mut rng = Rng::seed_from(3);
         for layer in 0..2 {
             for i in 0..400 {
                 // append directly without triggering (budget honoured later)
-                let cache = m.layer_mut(5, layer).unwrap();
-                cache.append(&[i as f32; 4], &[i as f32; 4]);
+                m.append_row(5, layer, &[i as f32; 4], &[i as f32; 4]);
             }
         }
         m.compress_sequence(5, None, &mut rng);
@@ -291,9 +319,10 @@ mod tests {
         m.create_sequence(9, 2, 2);
         assert!(m.has_sequence(9));
         assert_eq!(m.stats().sequences, 1);
-        m.drop_sequence(9);
+        assert!(m.drop_sequence(9), "live sequence must report existed");
         assert!(!m.has_sequence(9));
         assert_eq!(m.stats().sequences, 0);
+        assert!(!m.drop_sequence(9), "double drop must report false");
     }
 
     #[test]
@@ -307,5 +336,31 @@ mod tests {
         let s = m.stats();
         assert_eq!(s.physical_entries, 7);
         assert_eq!(s.footprint_floats, 7 * 3 + 7 * 5 + 7);
+        assert_eq!(s.kv_bytes_current, (7 * 3 + 7 * 5 + 7) * 4);
+        assert!(s.kv_bytes_peak >= s.kv_bytes_current);
+    }
+
+    #[test]
+    fn shared_pool_dedups_across_managers() {
+        // two managers over one pool: identical prompts stored once
+        let pool = Arc::new(KvPool::new(
+            KvPoolConfig { block_tokens: 8, ..Default::default() },
+            Arc::new(StreamingLlm) as Arc<dyn KvCompressor>,
+        ));
+        let mut a = CacheManager::with_pool(1000, 2, 0.35, pool.clone());
+        let mut b = CacheManager::with_pool(1000, 2, 0.35, pool.clone());
+        let tokens: Vec<u32> = (0..32).collect();
+        let mut rng = Rng::seed_from(9);
+        let ks: Vec<Matrix> = (0..2).map(|_| Matrix::randn(&mut rng, 32, 4)).collect();
+        let vs: Vec<Matrix> = (0..2).map(|_| Matrix::randn(&mut rng, 32, 4)).collect();
+        let r1 = a.ingest_prefill(1, &tokens, &ks, &vs).unwrap();
+        let r2 = b.ingest_prefill(2, &tokens, &ks, &vs).unwrap();
+        assert_eq!(r1.matched_tokens, 0);
+        assert_eq!(r2.matched_tokens, 32);
+        // both managers see the same (deduplicated) pool bytes
+        assert_eq!(a.stats().kv_bytes_current, b.stats().kv_bytes_current);
+        // but per-sequence attribution counts each mapping
+        assert_eq!(a.stats().footprint_floats, b.stats().footprint_floats);
+        assert_eq!(a.layer(1, 0).unwrap().keys, b.layer(2, 0).unwrap().keys);
     }
 }

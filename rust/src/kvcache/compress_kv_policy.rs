@@ -4,7 +4,7 @@
 //! (Sec. 4.3), so unlike the selection baselines *every* middle token
 //! contributes to the compressed values `V_S = W V`.
 
-use super::{assemble_entry, split_protected, CompressionCtx, KvCompressor, KvEntry};
+use super::{assemble_entry, shrink_to_budget, split_protected, CompressionCtx, KvCompressor, KvEntry};
 use crate::attention::{compress_kv, CompressOpts};
 use crate::rng::Rng;
 
@@ -32,9 +32,15 @@ impl KvCompressor for CompressKvPolicy {
     fn compress(&self, ctx: &CompressionCtx, rng: &mut Rng) -> KvEntry {
         let n = ctx.keys.rows();
         let Some((head, mid, tail)) = split_protected(n, ctx.budget) else {
-            return KvEntry::exact(ctx.keys.clone(), ctx.values.clone());
+            return shrink_to_budget(ctx.keys, ctx.values, ctx.budget);
         };
-        let rank = ctx.budget.saturating_sub(head + tail).min(mid.len());
+        let take = ctx.budget.saturating_sub(head + tail).min(mid.len());
+        // Round the rank down to a multiple of the bin count: RPNYS
+        // splits the rank per bin with a ceiling, so a ragged rank could
+        // overshoot `take` by up to `bins − 1` entries and break the hard
+        // budget contract the kvpool capacity ladder relies on.
+        let bins = (take / self.bin_div).max(1);
+        let rank = (take / bins) * bins;
         let mid_keys = ctx.keys.slice_rows(mid.start, mid.end);
         let mid_vals = ctx.values.slice_rows(mid.start, mid.end);
         let r_q = match (ctx.obs_queries, self.fallback_rq) {
@@ -42,12 +48,7 @@ impl KvCompressor for CompressKvPolicy {
             (None, Some(rq)) => rq,
             (None, None) => mid_keys.max_row_norm(),
         };
-        let opts = CompressOpts {
-            rank,
-            bins: (rank / self.bin_div).max(1),
-            beta: ctx.beta,
-            r_q,
-        };
+        let opts = CompressOpts { rank, bins, beta: ctx.beta, r_q };
         let c = compress_kv(&mid_keys, &mid_vals, &opts, rng);
         assemble_entry(ctx.keys, ctx.values, c.keys, c.values, c.weights, head)
     }
@@ -78,7 +79,7 @@ mod tests {
         let k = Matrix::randn(&mut rng, 512, 8);
         let v = Matrix::randn(&mut rng, 512, 4);
         let e = CompressKvPolicy::default().compress(&ctx(&k, &v, 128), &mut rng);
-        assert!(e.len() <= 128 + 8, "len={}", e.len()); // bin ceil slack
+        assert!(e.len() <= 128, "len={}", e.len()); // hard budget contract
         assert_eq!(e.weights.len(), e.len());
         // protected ends have unit weights; middle generally not
         assert!(e.weights[..32].iter().all(|&w| w == 1.0));

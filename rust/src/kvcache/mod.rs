@@ -117,13 +117,34 @@ pub fn protected_for(budget: usize) -> usize {
 
 /// Split `0..n` into (protected head, middle range, protected tail) under
 /// the first/last-protected protocol. Returns `None` when the budget or
-/// context is too small to compress (callers keep everything).
+/// context is too small to compress — callers keep everything when the
+/// budget allows it, and otherwise fall back to [`shrink_to_budget`] so
+/// the budget contract (`entry.len() <= budget`) holds even at budgets
+/// of 0/1/2 entries.
 pub fn split_protected(n: usize, budget: usize) -> Option<(usize, std::ops::Range<usize>, usize)> {
     let p = protected_for(budget);
     if budget >= n || n <= 2 * p || budget <= 2 * p {
         return None;
     }
     Some((p, p..n - p, p))
+}
+
+/// Last-resort shrink shared by every policy for budgets too small for
+/// the protected-ends protocol: keep the attention sinks (head) and the
+/// most recent tokens, exactly `budget` entries (`budget == 0` keeps
+/// nothing; `budget >= n` keeps everything verbatim). This is what makes
+/// `entry.len() <= budget` a hard invariant the pool's capacity ladder
+/// can rely on.
+pub fn shrink_to_budget(keys: &Matrix, values: &Matrix, budget: usize) -> KvEntry {
+    let n = keys.rows();
+    if budget >= n {
+        return KvEntry::exact(keys.clone(), values.clone());
+    }
+    let head = budget / 2;
+    let tail = budget - head;
+    let k = Matrix::vcat(&[&keys.slice_rows(0, head), &keys.slice_rows(n - tail, n)]);
+    let v = Matrix::vcat(&[&values.slice_rows(0, head), &values.slice_rows(n - tail, n)]);
+    KvEntry { keys: k, values: v, weights: vec![1.0; budget], source_len: n }
 }
 
 /// Assemble a [`KvEntry`] from protected head/tail plus selected middle
@@ -217,6 +238,24 @@ mod tests {
         let err = compressor_by_name("nope").unwrap_err().to_string();
         assert!(err.contains("unknown compressor"), "{err}");
         assert!(err.contains("compresskv"), "roster missing from error: {err}");
+    }
+
+    #[test]
+    fn shrink_to_budget_is_exact_sized() {
+        let mut rng = Rng::seed_from(3);
+        let k = Matrix::randn(&mut rng, 20, 4);
+        let v = Matrix::randn(&mut rng, 20, 3);
+        for budget in [0usize, 1, 2, 5, 19] {
+            let e = shrink_to_budget(&k, &v, budget);
+            assert_eq!(e.len(), budget, "budget={budget}");
+            assert_eq!(e.weights.len(), budget);
+            assert_eq!(e.source_len, 20);
+        }
+        // budget 1 keeps the newest token (recency over sinks on ties)
+        let e = shrink_to_budget(&k, &v, 1);
+        assert_eq!(e.keys.row(0), k.row(19));
+        // budget >= n is verbatim
+        assert_eq!(shrink_to_budget(&k, &v, 25).keys, k);
     }
 
     #[test]

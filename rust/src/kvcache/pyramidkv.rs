@@ -4,7 +4,7 @@
 //! budget across layers matches the requested one.
 
 use super::snapkv::SnapKv;
-use super::{assemble_selection, split_protected, CompressionCtx, KvCompressor, KvEntry};
+use super::{assemble_selection, shrink_to_budget, split_protected, CompressionCtx, KvCompressor, KvEntry};
 use crate::linalg::Matrix;
 use crate::rng::Rng;
 
@@ -48,7 +48,7 @@ impl KvCompressor for PyramidKv {
         let n = ctx.keys.rows();
         let budget = self.layer_budget(ctx.budget, ctx.layer, ctx.n_layers);
         let Some((head, mid, tail)) = split_protected(n, budget) else {
-            return KvEntry::exact(ctx.keys.clone(), ctx.values.clone());
+            return shrink_to_budget(ctx.keys, ctx.values, budget);
         };
         let take = budget.saturating_sub(head + tail).min(mid.len());
         let owned_obs;

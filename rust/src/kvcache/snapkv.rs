@@ -3,7 +3,7 @@
 //! smooth the scores with 1-D max pooling (to keep local context blocks
 //! together), and retain the top-k middle tokens.
 
-use super::{assemble_selection, split_protected, CompressionCtx, KvCompressor, KvEntry};
+use super::{assemble_selection, shrink_to_budget, split_protected, CompressionCtx, KvCompressor, KvEntry};
 use crate::kernels::safe_exp;
 use crate::linalg::gemm::dot;
 use crate::linalg::Matrix;
@@ -78,7 +78,7 @@ impl KvCompressor for SnapKv {
     fn compress(&self, ctx: &CompressionCtx, _rng: &mut Rng) -> KvEntry {
         let n = ctx.keys.rows();
         let Some((head, mid, tail)) = split_protected(n, ctx.budget) else {
-            return KvEntry::exact(ctx.keys.clone(), ctx.values.clone());
+            return shrink_to_budget(ctx.keys, ctx.values, ctx.budget);
         };
         let take = ctx.budget.saturating_sub(head + tail).min(mid.len());
         // Observation window: supplied recent queries, else the last

@@ -2,7 +2,7 @@
 //! start of the context plus a sliding window of the most recent tokens.
 //! No middle tokens survive — the cheapest and lossiest policy in Tab. 4.
 
-use super::{protected_for, CompressionCtx, KvCompressor, KvEntry};
+use super::{protected_for, shrink_to_budget, CompressionCtx, KvCompressor, KvEntry};
 use crate::linalg::Matrix;
 use crate::rng::Rng;
 
@@ -16,7 +16,9 @@ impl KvCompressor for StreamingLlm {
     fn compress(&self, ctx: &CompressionCtx, _rng: &mut Rng) -> KvEntry {
         let n = ctx.keys.rows();
         if ctx.budget >= n || ctx.budget < 2 {
-            return KvEntry::exact(ctx.keys.clone(), ctx.values.clone());
+            // budget >= n keeps everything; budgets of 0/1 still honour
+            // the budget through the shared tiny-budget fallback
+            return shrink_to_budget(ctx.keys, ctx.values, ctx.budget.min(n));
         }
         // sinks = protected head, recency = the rest of the budget
         let sink = protected_for(ctx.budget).min(ctx.budget / 2);

@@ -1,7 +1,7 @@
 //! Uniform baseline (Han et al. 2025): keep the protected ends and a
 //! uniformly random subset of the middle. The control arm of Tab. 4.
 
-use super::{assemble_selection, split_protected, CompressionCtx, KvCompressor, KvEntry};
+use super::{assemble_selection, shrink_to_budget, split_protected, CompressionCtx, KvCompressor, KvEntry};
 use crate::rng::Rng;
 
 pub struct UniformKv;
@@ -14,7 +14,7 @@ impl KvCompressor for UniformKv {
     fn compress(&self, ctx: &CompressionCtx, rng: &mut Rng) -> KvEntry {
         let n = ctx.keys.rows();
         let Some((head, mid, tail)) = split_protected(n, ctx.budget) else {
-            return KvEntry::exact(ctx.keys.clone(), ctx.values.clone());
+            return shrink_to_budget(ctx.keys, ctx.values, ctx.budget);
         };
         let take = ctx.budget.saturating_sub(head + tail);
         let mid_len = mid.len();

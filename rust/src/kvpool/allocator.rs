@@ -1,0 +1,127 @@
+//! Slab allocator for blocks plus the pool's global float-budget ledger.
+//!
+//! Every stored float — block pages *and* per-sequence private tails —
+//! is charged against one `used_floats` gauge, so the pressure ladder has
+//! a single number to compare against the configured budget. `peak_floats`
+//! tracks the high-water mark for capacity reporting (`bytes-per-token`
+//! in the `kvpool` bench divides it by logical tokens served).
+
+use super::block::{Block, BlockId};
+
+/// Block slab + global accounting.
+pub struct BlockStore {
+    slots: Vec<Option<Block>>,
+    free: Vec<BlockId>,
+    n_blocks: usize,
+    used_floats: usize,
+    peak_floats: usize,
+}
+
+impl BlockStore {
+    pub fn new() -> Self {
+        BlockStore { slots: Vec::new(), free: Vec::new(), n_blocks: 0, used_floats: 0, peak_floats: 0 }
+    }
+
+    /// Insert a sealed block, charging its footprint. Returns its id.
+    pub fn insert(&mut self, block: Block) -> BlockId {
+        self.charge(block.footprint_floats());
+        self.n_blocks += 1;
+        match self.free.pop() {
+            Some(id) => {
+                self.slots[id] = Some(block);
+                id
+            }
+            None => {
+                self.slots.push(Some(block));
+                self.slots.len() - 1
+            }
+        }
+    }
+
+    /// Remove a block, crediting its footprint back to the ledger.
+    pub fn remove(&mut self, id: BlockId) -> Block {
+        let block = self.slots[id].take().expect("remove of free block slot");
+        self.credit(block.footprint_floats());
+        self.n_blocks -= 1;
+        self.free.push(id);
+        block
+    }
+
+    pub fn get(&self, id: BlockId) -> &Block {
+        self.slots[id].as_ref().expect("get of free block slot")
+    }
+
+    pub fn get_mut(&mut self, id: BlockId) -> &mut Block {
+        self.slots[id].as_mut().expect("get_mut of free block slot")
+    }
+
+    /// Charge non-block storage (sequence tails) to the ledger.
+    pub fn charge(&mut self, floats: usize) {
+        self.used_floats += floats;
+        self.peak_floats = self.peak_floats.max(self.used_floats);
+    }
+
+    /// Credit non-block storage back.
+    pub fn credit(&mut self, floats: usize) {
+        debug_assert!(self.used_floats >= floats, "ledger underflow");
+        self.used_floats = self.used_floats.saturating_sub(floats);
+    }
+
+    pub fn used_floats(&self) -> usize {
+        self.used_floats
+    }
+
+    pub fn peak_floats(&self) -> usize {
+        self.peak_floats
+    }
+
+    pub fn n_blocks(&self) -> usize {
+        self.n_blocks
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kvpool::block::BlockLayer;
+    use crate::linalg::Matrix;
+
+    fn blk(n: usize) -> Block {
+        Block {
+            tokens: (0..n as u32).collect(),
+            layers: vec![BlockLayer { keys: Matrix::zeros(n, 2), values: Matrix::zeros(n, 2) }],
+            refs: 0,
+            in_tree: false,
+            last_touch: 0,
+        }
+    }
+
+    #[test]
+    fn insert_remove_roundtrip_and_ledger() {
+        let mut s = BlockStore::new();
+        let a = s.insert(blk(4)); // 4*2 + 4*2 = 16 floats
+        let b = s.insert(blk(2)); // 8 floats
+        assert_eq!(s.used_floats(), 24);
+        assert_eq!(s.peak_floats(), 24);
+        assert_eq!(s.n_blocks(), 2);
+        assert_eq!(s.get(a).n_tokens(), 4);
+        s.remove(a);
+        assert_eq!(s.used_floats(), 8);
+        assert_eq!(s.peak_floats(), 24, "peak is sticky");
+        // freed slot is reused
+        let c = s.insert(blk(1));
+        assert_eq!(c, a);
+        assert_eq!(s.get(b).n_tokens(), 2);
+    }
+
+    #[test]
+    fn tail_charges_share_the_ledger() {
+        let mut s = BlockStore::new();
+        s.charge(100);
+        s.insert(blk(2));
+        assert_eq!(s.used_floats(), 108);
+        s.credit(100);
+        assert_eq!(s.used_floats(), 8);
+        assert_eq!(s.peak_floats(), 108);
+    }
+}

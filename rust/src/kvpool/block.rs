@@ -1,0 +1,78 @@
+//! The unit of pooled KV storage: an immutable page of up to
+//! `block_tokens` consecutive context tokens, holding those tokens'
+//! key/value rows for *every* (layer, head) cache of the model.
+//!
+//! Blocks are sealed at creation and never mutated afterwards — that is
+//! what makes them safely shareable between sequences with a common
+//! prompt prefix (copy-on-write degenerates to "divergent tokens always
+//! land in the owning sequence's private tail"). Reference counts track
+//! *active sequence* mappings; the radix prefix index holds blocks via
+//! the separate `in_tree` mark so a cached-but-unmapped prefix survives
+//! until the eviction tier reclaims it.
+
+use crate::linalg::Matrix;
+
+/// Index into the pool's block store.
+pub type BlockId = usize;
+
+/// One (layer, head) slice of a block: `n_tokens × d_k` keys and
+/// `n_tokens × d_v` values. Weights are implicitly 1.0 — blocks only ever
+/// hold verbatim (uncompressed) rows.
+#[derive(Clone, Debug)]
+pub struct BlockLayer {
+    pub keys: Matrix,
+    pub values: Matrix,
+}
+
+/// An immutable page of KV rows for a token span, across all layer-heads.
+#[derive(Clone, Debug)]
+pub struct Block {
+    /// The token ids this block covers (defines prefix identity).
+    pub tokens: Vec<u32>,
+    /// Per-(layer, head) key/value rows, indexed like the model's caches.
+    pub layers: Vec<BlockLayer>,
+    /// Number of active sequences currently mapping this block.
+    pub refs: usize,
+    /// Whether the radix prefix index references this block.
+    pub in_tree: bool,
+    /// Pool logical clock of the last map/unmap (LRU eviction order).
+    pub last_touch: u64,
+}
+
+impl Block {
+    pub fn n_tokens(&self) -> usize {
+        self.tokens.len()
+    }
+
+    /// f32-equivalent stored footprint. Blocks store no weights (they are
+    /// synthesised as 1.0 at gather time), so only keys + values count.
+    pub fn footprint_floats(&self) -> usize {
+        self.layers
+            .iter()
+            .map(|l| l.keys.rows() * l.keys.cols() + l.values.rows() * l.values.cols())
+            .sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn footprint_counts_all_layers() {
+        let b = Block {
+            tokens: vec![1, 2, 3],
+            layers: (0..4)
+                .map(|_| BlockLayer {
+                    keys: Matrix::zeros(3, 8),
+                    values: Matrix::zeros(3, 4),
+                })
+                .collect(),
+            refs: 0,
+            in_tree: false,
+            last_touch: 0,
+        };
+        assert_eq!(b.n_tokens(), 3);
+        assert_eq!(b.footprint_floats(), 4 * (3 * 8 + 3 * 4));
+    }
+}

@@ -1,0 +1,75 @@
+//! The pressure ladder: what the pool does when it runs out of budget,
+//! ordered from information-free to lossy to fatal:
+//!
+//! 1. **Evict cached prefixes** — LRU leaf blocks of the radix index
+//!    with no active sequence mapping are pure cache (their rows can be
+//!    recomputed by a future prefill), so dropping them loses nothing.
+//! 2. **Compress cold sequences** — the configured [`KvCompressor`]
+//!    shrinks the least-recently-touched sequences in place to
+//!    `compress_budget` physical entries per layer-head (folding their
+//!    shared-block mappings into a private coreset, which in turn frees
+//!    blocks for step 1 to reclaim).
+//! 3. **Reject admission** — only [`super::KvPool::register_prefill`]
+//!    can fail, and only after both tiers came up short; decode appends
+//!    always succeed so accepted sequences always finish.
+
+use super::metrics::PoolMetrics;
+use super::{compress_seq_impl, KvPoolConfig, PoolInner};
+use crate::kvcache::KvCompressor;
+
+/// Drive `used_floats` down toward `target_floats` (best effort).
+pub(crate) fn reclaim(
+    g: &mut PoolInner,
+    cfg: &KvPoolConfig,
+    compressor: &dyn KvCompressor,
+    metrics: &PoolMetrics,
+    target_floats: usize,
+) {
+    evict_blocks(g, metrics, target_floats);
+    if g.store.used_floats() <= target_floats {
+        return;
+    }
+    // Compression tier: coldest first, one attempt per sequence per
+    // reclaim call (compressing can transiently raise usage while the
+    // freed blocks wait for eviction, so interleave the two tiers).
+    let mut cands: Vec<(u64, u64)> = g
+        .seqs
+        .iter()
+        .filter(|(_, s)| s.phys_max(&g.store) > cfg.compress_budget)
+        .map(|(&seq, s)| (s.last_touch, seq))
+        .collect();
+    cands.sort_unstable();
+    let clock = g.clock;
+    let mut rng = g.rng.fork(clock);
+    for (_, seq) in cands {
+        if g.store.used_floats() <= target_floats {
+            break;
+        }
+        if compress_seq_impl(g, compressor, seq, cfg.compress_budget, None, &mut rng) > 0 {
+            PoolMetrics::add(&metrics.tier_compressions, 1);
+        }
+        evict_blocks(g, metrics, target_floats);
+    }
+}
+
+/// Evict LRU unreferenced leaf blocks until the target is met or nothing
+/// evictable remains. Removing a leaf can expose its parent as the next
+/// candidate, so the scan repeats until a pass finds nothing.
+fn evict_blocks(g: &mut PoolInner, metrics: &PoolMetrics, target_floats: usize) {
+    while g.store.used_floats() > target_floats {
+        let victim = g
+            .radix
+            .leaves()
+            .into_iter()
+            .filter(|&idx| g.store.get(g.radix.node_block(idx)).refs == 0)
+            .min_by_key(|&idx| g.store.get(g.radix.node_block(idx)).last_touch);
+        match victim {
+            Some(idx) => {
+                let block = g.radix.remove_leaf(idx);
+                g.store.remove(block);
+                PoolMetrics::add(&metrics.evicted_blocks, 1);
+            }
+            None => break,
+        }
+    }
+}

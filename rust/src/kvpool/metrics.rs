@@ -1,0 +1,147 @@
+//! Pool observability: lock-free counters plus a consistent snapshot of
+//! the ledger gauges, serialisable into the serving-metrics JSON
+//! documents (`wildcat serve --metrics-json`, `Router::metrics_json`).
+
+use crate::util::json::Json;
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Monotonic pool counters (updated under the pool lock, read lock-free).
+#[derive(Default)]
+pub struct PoolMetrics {
+    pub(crate) prefix_queries: AtomicU64,
+    pub(crate) prefix_hits: AtomicU64,
+    pub(crate) shared_tokens: AtomicU64,
+    pub(crate) tier_compressions: AtomicU64,
+    pub(crate) evicted_blocks: AtomicU64,
+    pub(crate) admission_rejects: AtomicU64,
+}
+
+impl PoolMetrics {
+    pub(crate) fn add(counter: &AtomicU64, n: u64) {
+        counter.fetch_add(n, Ordering::Relaxed);
+    }
+}
+
+/// Point-in-time view of one pool, in plain numbers.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct PoolSnapshot {
+    /// Configured budget (0 = unbounded) and ledger gauges, in floats.
+    pub budget_floats: usize,
+    pub used_floats: usize,
+    pub peak_floats: usize,
+    /// Live objects.
+    pub sequences: usize,
+    pub blocks: usize,
+    /// Blocks currently referenced by the radix prefix index.
+    pub tree_blocks: usize,
+    /// Prefix-sharing counters.
+    pub prefix_queries: u64,
+    pub prefix_hits: u64,
+    pub shared_tokens: u64,
+    /// Pressure-ladder counters.
+    pub tier_compressions: u64,
+    pub evicted_blocks: u64,
+    pub admission_rejects: u64,
+}
+
+impl PoolSnapshot {
+    pub fn used_bytes(&self) -> usize {
+        self.used_floats * 4
+    }
+
+    pub fn peak_bytes(&self) -> usize {
+        self.peak_floats * 4
+    }
+
+    /// Fraction of prefill registrations that reused at least one block.
+    pub fn prefix_hit_rate(&self) -> f64 {
+        if self.prefix_queries == 0 {
+            0.0
+        } else {
+            self.prefix_hits as f64 / self.prefix_queries as f64
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut o = BTreeMap::new();
+        o.insert("budget_bytes".into(), Json::Num((self.budget_floats * 4) as f64));
+        o.insert("used_bytes".into(), Json::Num(self.used_bytes() as f64));
+        o.insert("peak_bytes".into(), Json::Num(self.peak_bytes() as f64));
+        o.insert("sequences".into(), Json::Num(self.sequences as f64));
+        o.insert("blocks".into(), Json::Num(self.blocks as f64));
+        o.insert("tree_blocks".into(), Json::Num(self.tree_blocks as f64));
+        o.insert("prefix_queries".into(), Json::Num(self.prefix_queries as f64));
+        o.insert("prefix_hits".into(), Json::Num(self.prefix_hits as f64));
+        o.insert("prefix_hit_rate".into(), Json::Num(self.prefix_hit_rate()));
+        o.insert("shared_tokens".into(), Json::Num(self.shared_tokens as f64));
+        o.insert("tier_compressions".into(), Json::Num(self.tier_compressions as f64));
+        o.insert("evicted_blocks".into(), Json::Num(self.evicted_blocks as f64));
+        o.insert("admission_rejects".into(), Json::Num(self.admission_rejects as f64));
+        Json::Obj(o)
+    }
+}
+
+/// Sum per-replica pool snapshots into one cluster-level gauge block —
+/// what `Router::metrics_json` reports as `"kv"` next to the routing
+/// aggregate (peaks are summed too: replicas hold disjoint pools, so the
+/// cluster's worst-case footprint is the sum of per-replica worst cases).
+pub fn aggregate_snapshots(snaps: &[PoolSnapshot]) -> PoolSnapshot {
+    let mut agg = PoolSnapshot::default();
+    for s in snaps {
+        agg.budget_floats += s.budget_floats;
+        agg.used_floats += s.used_floats;
+        agg.peak_floats += s.peak_floats;
+        agg.sequences += s.sequences;
+        agg.blocks += s.blocks;
+        agg.tree_blocks += s.tree_blocks;
+        agg.prefix_queries += s.prefix_queries;
+        agg.prefix_hits += s.prefix_hits;
+        agg.shared_tokens += s.shared_tokens;
+        agg.tier_compressions += s.tier_compressions;
+        agg.evicted_blocks += s.evicted_blocks;
+        agg.admission_rejects += s.admission_rejects;
+    }
+    agg
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn snapshot_json_parses_back() {
+        let s = PoolSnapshot {
+            budget_floats: 1000,
+            used_floats: 600,
+            peak_floats: 900,
+            sequences: 3,
+            blocks: 5,
+            tree_blocks: 4,
+            prefix_queries: 10,
+            prefix_hits: 4,
+            shared_tokens: 128,
+            tier_compressions: 2,
+            evicted_blocks: 1,
+            admission_rejects: 0,
+        };
+        assert_eq!(s.used_bytes(), 2400);
+        assert!((s.prefix_hit_rate() - 0.4).abs() < 1e-12);
+        let j = s.to_json();
+        let text = j.to_string_compact();
+        assert_eq!(crate::util::json::parse(&text).unwrap(), j);
+        assert_eq!(j.get("peak_bytes").and_then(Json::as_f64), Some(3600.0));
+    }
+
+    #[test]
+    fn aggregation_sums_gauges() {
+        let a = PoolSnapshot { used_floats: 10, prefix_hits: 1, prefix_queries: 2, ..Default::default() };
+        let b = PoolSnapshot { used_floats: 30, prefix_hits: 1, prefix_queries: 2, ..Default::default() };
+        let agg = aggregate_snapshots(&[a, b]);
+        assert_eq!(agg.used_floats, 40);
+        assert_eq!(agg.prefix_queries, 4);
+        assert!((agg.prefix_hit_rate() - 0.5).abs() < 1e-12);
+        // zero-query aggregate divides safely
+        assert_eq!(aggregate_snapshots(&[]).prefix_hit_rate(), 0.0);
+    }
+}

@@ -1,0 +1,839 @@
+//! `kvpool` — the block-paged KV memory manager.
+//!
+//! The serving stack's single authoritative store for KV-cache bytes:
+//!
+//! * **Paged storage** ([`block`], [`allocator`]) — prompt-prefix KV rows
+//!   are sealed into immutable fixed-size blocks charged against one
+//!   global float budget; everything else (divergent prompt tokens,
+//!   decode appends, compressed coresets) lives in per-sequence private
+//!   tails charged against the same ledger.
+//! * **Prefix sharing** ([`radix`]) — a radix index over token chunks
+//!   lets sequences whose prompts share a prefix map the *same* blocks
+//!   (reference-counted), so the shared rows are stored once. Blocks are
+//!   immutable, which makes copy-on-write trivial: the first divergent
+//!   append simply lands in the appending sequence's private tail.
+//! * **Pressure ladder** ([`evict`]) — when the pool crosses its
+//!   high-water mark it first evicts LRU *unreferenced* cached prefix
+//!   blocks (pure cache, information-free), then compresses cold
+//!   sequences in place through the configured [`KvCompressor`] (coreset
+//!   compression as an eviction *tier*, the paper's Sec. 4.3 policies
+//!   reused unchanged — this also frees the sequences' blocks for the
+//!   eviction rung), and only rejects admission when neither tier can
+//!   reclaim enough.
+//!
+//! Decode-time appends never fail: only prefill registration
+//! ([`KvPool::register_prefill`]) is subject to admission control, so an
+//! accepted sequence always runs to completion.
+
+pub mod allocator;
+pub mod block;
+pub mod evict;
+pub mod metrics;
+pub mod radix;
+
+pub use metrics::{aggregate_snapshots, PoolMetrics, PoolSnapshot};
+
+use crate::kvcache::{CompressionCtx, KvCompressor};
+use crate::linalg::Matrix;
+use crate::rng::Rng;
+use allocator::BlockStore;
+use block::{Block, BlockId, BlockLayer};
+use radix::RadixIndex;
+use std::collections::HashMap;
+use std::sync::atomic::Ordering;
+use std::sync::{Arc, Mutex};
+
+/// Pool configuration (CLI surface: `--kv-budget-mb`, `--prefix-sharing`).
+#[derive(Clone, Debug)]
+pub struct KvPoolConfig {
+    /// Global budget in f32-equivalents; 0 = unbounded (no ladder).
+    pub budget_floats: usize,
+    /// Tokens per sealed block (prefix-sharing granularity).
+    pub block_tokens: usize,
+    /// Fraction of the budget above which appends trigger the ladder
+    /// opportunistically (admission always enforces the full budget).
+    pub high_water: f64,
+    /// Whether prompts are deduplicated through the radix index.
+    pub prefix_sharing: bool,
+    /// Per-layer physical entry target the compression tier shrinks cold
+    /// sequences to.
+    pub compress_budget: usize,
+    /// Seed of the pool's private RNG (ladder compressions fork from it,
+    /// keeping fixed-seed runs reproducible).
+    pub seed: u64,
+}
+
+impl Default for KvPoolConfig {
+    fn default() -> Self {
+        KvPoolConfig {
+            budget_floats: 0,
+            block_tokens: 16,
+            high_water: 0.85,
+            prefix_sharing: true,
+            compress_budget: 64,
+            seed: 0x9E3779B9,
+        }
+    }
+}
+
+/// Convert a `--kv-budget-mb` operator value to a float budget.
+pub fn budget_floats_from_mb(mb: f64) -> usize {
+    if mb <= 0.0 {
+        0
+    } else {
+        (mb * 1024.0 * 1024.0 / 4.0).round() as usize
+    }
+}
+
+/// What the compression tier needs to know about the model: the layer-slot
+/// count its [`CompressionCtx::n_layers`] reports (the serving stack uses
+/// one slot per (layer, head)) and the attention scale β.
+#[derive(Clone, Copy, Debug)]
+pub struct CompressDims {
+    pub n_layers: usize,
+    pub beta: f64,
+}
+
+/// Admission verdict when the ladder could not reclaim enough.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum AdmitError {
+    PoolExhausted { need_floats: usize, budget_floats: usize },
+}
+
+impl std::fmt::Display for AdmitError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            AdmitError::PoolExhausted { need_floats, budget_floats } => write!(
+                f,
+                "kv pool exhausted: need {need_floats} floats against a budget of {budget_floats}"
+            ),
+        }
+    }
+}
+
+impl std::error::Error for AdmitError {}
+
+/// What a prefill registration reused and created.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct RegisterOutcome {
+    /// Prompt tokens served from already-stored blocks.
+    pub matched_tokens: usize,
+    pub matched_blocks: usize,
+    /// Full blocks sealed (and indexed) from this prompt.
+    pub new_blocks: usize,
+}
+
+/// Per-sequence stats for cache accounting.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct SeqStats {
+    /// Max physical entries over the layer-head caches.
+    pub physical_max: usize,
+    /// Total physical entries across layer-heads.
+    pub physical_total: usize,
+    /// Total logical tokens represented across layer-heads.
+    pub logical_total: usize,
+    /// Floats attributable to this sequence (its tails plus every block
+    /// it maps — shared blocks count once *per mapping sequence* here,
+    /// while the pool ledger charges them once globally).
+    pub footprint_floats: usize,
+}
+
+/// One layer-head's private storage: rows past the shared blocks —
+/// divergent prompt tokens, decode appends, or a compressed coreset.
+pub(crate) struct Tail {
+    pub keys: Matrix,
+    pub values: Matrix,
+    pub weights: Vec<f64>,
+    /// Logical tokens this tail represents (≥ physical rows once
+    /// compressed; excludes tokens covered by the sequence's blocks).
+    pub logical: usize,
+}
+
+impl Tail {
+    fn new(d_k: usize, d_v: usize) -> Self {
+        Tail { keys: Matrix::zeros(0, d_k), values: Matrix::zeros(0, d_v), weights: Vec::new(), logical: 0 }
+    }
+
+    fn floats(&self) -> usize {
+        self.keys.rows() * self.keys.cols()
+            + self.values.rows() * self.values.cols()
+            + self.weights.len()
+    }
+}
+
+/// A registered sequence: shared block mappings plus private tails.
+pub(crate) struct SeqKv {
+    pub n_lh: usize,
+    pub d_k: usize,
+    pub d_v: usize,
+    pub blocks: Vec<BlockId>,
+    pub tails: Vec<Tail>,
+    pub last_touch: u64,
+}
+
+impl SeqKv {
+    pub(crate) fn block_tokens(&self, store: &BlockStore) -> usize {
+        self.blocks.iter().map(|&b| store.get(b).n_tokens()).sum()
+    }
+
+    pub(crate) fn phys_len(&self, store: &BlockStore, lh: usize) -> usize {
+        self.block_tokens(store) + self.tails[lh].keys.rows()
+    }
+
+    pub(crate) fn phys_max(&self, store: &BlockStore) -> usize {
+        let bt = self.block_tokens(store);
+        bt + self.tails.iter().map(|t| t.keys.rows()).max().unwrap_or(0)
+    }
+
+    fn tail_floats(&self) -> usize {
+        self.tails.iter().map(Tail::floats).sum()
+    }
+}
+
+pub(crate) struct PoolInner {
+    pub(crate) store: BlockStore,
+    pub(crate) radix: RadixIndex,
+    pub(crate) seqs: HashMap<u64, SeqKv>,
+    pub(crate) clock: u64,
+    pub(crate) dims: Option<CompressDims>,
+    pub(crate) rng: Rng,
+}
+
+/// The shared, thread-safe pool facade.
+pub struct KvPool {
+    cfg: KvPoolConfig,
+    compressor: Arc<dyn KvCompressor>,
+    metrics: PoolMetrics,
+    inner: Mutex<PoolInner>,
+}
+
+impl KvPool {
+    pub fn new(cfg: KvPoolConfig, compressor: Arc<dyn KvCompressor>) -> Self {
+        let rng = Rng::seed_from(cfg.seed);
+        KvPool {
+            cfg,
+            compressor,
+            metrics: PoolMetrics::default(),
+            inner: Mutex::new(PoolInner {
+                store: BlockStore::new(),
+                radix: RadixIndex::new(),
+                seqs: HashMap::new(),
+                clock: 0,
+                dims: None,
+                rng,
+            }),
+        }
+    }
+
+    pub fn config(&self) -> &KvPoolConfig {
+        &self.cfg
+    }
+
+    pub fn compressor_name(&self) -> &'static str {
+        self.compressor.name()
+    }
+
+    /// Record the model dims the pressure ladder compresses under. Safe
+    /// to call repeatedly (per-replica pools serve a single model).
+    pub fn set_dims(&self, dims: CompressDims) {
+        self.inner.lock().unwrap().dims = Some(dims);
+    }
+
+    /// Create (or reset) an empty sequence that will be fed by appends.
+    pub fn create_sequence(&self, seq: u64, n_lh: usize, d_k: usize, d_v: usize) {
+        let mut g = self.inner.lock().unwrap();
+        g.clock += 1;
+        let now = g.clock;
+        drop_seq_inner(&mut g, seq);
+        let tails = (0..n_lh).map(|_| Tail::new(d_k, d_v)).collect();
+        g.seqs.insert(
+            seq,
+            SeqKv { n_lh, d_k, d_v, blocks: Vec::new(), tails, last_touch: now },
+        );
+    }
+
+    /// Register a prefilled sequence: map shared prefix blocks, seal new
+    /// full blocks into the index, keep the remainder as a private tail.
+    /// The only pool operation subject to admission control.
+    pub fn register_prefill(
+        &self,
+        seq: u64,
+        tokens: &[u32],
+        k_cache: &[Matrix],
+        v_cache: &[Matrix],
+    ) -> Result<RegisterOutcome, AdmitError> {
+        let n_lh = k_cache.len();
+        assert!(n_lh > 0 && v_cache.len() == n_lh, "empty/mismatched caches");
+        let n = tokens.len();
+        assert!(
+            k_cache.iter().chain(v_cache).all(|m| m.rows() == n),
+            "cache rows must match token count"
+        );
+        let (d_k, d_v) = (k_cache[0].cols(), v_cache[0].cols());
+        let bt = self.cfg.block_tokens.max(1);
+
+        let mut g = self.inner.lock().unwrap();
+        g.clock += 1;
+        let now = g.clock;
+        drop_seq_inner(&mut g, seq);
+
+        // 1. Longest-prefix match against the radix index (incref the
+        //    matched blocks immediately so the ladder cannot evict them).
+        let mut blocks: Vec<BlockId> = Vec::new();
+        let mut matched_tokens = 0;
+        let mut parent: Option<usize> = None;
+        if self.cfg.prefix_sharing {
+            PoolMetrics::add(&self.metrics.prefix_queries, 1);
+            let path = g.radix.lookup(tokens, bt);
+            for &(node, block) in &path {
+                debug_assert_eq!(g.store.get(block).layers.len(), n_lh, "pool reused across models");
+                let b = g.store.get_mut(block);
+                b.refs += 1;
+                b.last_touch = now;
+                blocks.push(block);
+                matched_tokens += bt;
+                parent = Some(node);
+            }
+            if !blocks.is_empty() {
+                PoolMetrics::add(&self.metrics.prefix_hits, 1);
+                PoolMetrics::add(&self.metrics.shared_tokens, matched_tokens as u64);
+            }
+        }
+        let matched_blocks = blocks.len();
+
+        // 2. Admission: everything past the matched prefix is new storage.
+        let need = (n - matched_tokens) * n_lh * (d_k + d_v + 1);
+        if self.cfg.budget_floats > 0 && g.store.used_floats() + need > self.cfg.budget_floats {
+            // a prompt that can never fit (need alone exceeds the whole
+            // budget) is rejected up front — running the ladder for it
+            // would wipe the prefix cache and lossily compress every
+            // live sequence without making the admission possible
+            if need <= self.cfg.budget_floats {
+                let target = self.cfg.budget_floats - need;
+                evict::reclaim(&mut g, &self.cfg, self.compressor.as_ref(), &self.metrics, target);
+            }
+            if g.store.used_floats() + need > self.cfg.budget_floats {
+                for id in blocks {
+                    release_block(&mut g.store, id);
+                }
+                PoolMetrics::add(&self.metrics.admission_rejects, 1);
+                return Err(AdmitError::PoolExhausted {
+                    need_floats: need,
+                    budget_floats: self.cfg.budget_floats,
+                });
+            }
+        }
+
+        // 3. Seal the new full chunks as shared blocks under the matched
+        //    path, so the *next* request with this prefix hits them.
+        let mut pos = matched_tokens;
+        let mut new_blocks = 0;
+        if self.cfg.prefix_sharing {
+            while pos + bt <= n {
+                let chunk = tokens[pos..pos + bt].to_vec();
+                let layers = (0..n_lh)
+                    .map(|lh| BlockLayer {
+                        keys: k_cache[lh].slice_rows(pos, pos + bt),
+                        values: v_cache[lh].slice_rows(pos, pos + bt),
+                    })
+                    .collect();
+                let id = g.store.insert(Block {
+                    tokens: chunk.clone(),
+                    layers,
+                    refs: 1,
+                    in_tree: true,
+                    last_touch: now,
+                });
+                parent = Some(g.radix.insert(parent, chunk, id));
+                blocks.push(id);
+                new_blocks += 1;
+                pos += bt;
+            }
+        }
+
+        // 4. The partial remainder is the private tail.
+        let tails: Vec<Tail> = (0..n_lh)
+            .map(|lh| Tail {
+                keys: k_cache[lh].slice_rows(pos, n),
+                values: v_cache[lh].slice_rows(pos, n),
+                weights: vec![1.0; n - pos],
+                logical: n - pos,
+            })
+            .collect();
+        let tail_floats: usize = tails.iter().map(Tail::floats).sum();
+        g.store.charge(tail_floats);
+        g.seqs.insert(seq, SeqKv { n_lh, d_k, d_v, blocks, tails, last_touch: now });
+        Ok(RegisterOutcome { matched_tokens, matched_blocks, new_blocks })
+    }
+
+    /// Append one decoded token's K/V row to a layer-head tail. Never
+    /// fails; crossing the high-water mark triggers the ladder
+    /// opportunistically (best effort, no rejection).
+    pub fn append_row(&self, seq: u64, lh: usize, k_row: &[f32], v_row: &[f32]) {
+        let mut g = self.inner.lock().unwrap();
+        g.clock += 1;
+        let now = g.clock;
+        let s = g.seqs.get_mut(&seq).expect("append to unknown sequence");
+        debug_assert_eq!(k_row.len(), s.d_k, "key row width mismatch");
+        debug_assert_eq!(v_row.len(), s.d_v, "value row width mismatch");
+        s.last_touch = now;
+        let t = &mut s.tails[lh];
+        t.keys.push_row(k_row);
+        t.values.push_row(v_row);
+        t.weights.push(1.0);
+        t.logical += 1;
+        g.store.charge(k_row.len() + v_row.len() + 1);
+        if self.cfg.budget_floats > 0 {
+            let hw = (self.cfg.high_water * self.cfg.budget_floats as f64) as usize;
+            if g.store.used_floats() > hw {
+                evict::reclaim(&mut g, &self.cfg, self.compressor.as_ref(), &self.metrics, hw);
+            }
+        }
+    }
+
+    /// Materialise one layer-head cache: `(keys, values, weights,
+    /// logical_len)` — block rows (unit weights) then the tail.
+    pub fn layer_view(&self, seq: u64, lh: usize) -> Option<(Matrix, Matrix, Vec<f64>, usize)> {
+        let g = self.inner.lock().unwrap();
+        let s = g.seqs.get(&seq)?;
+        if lh >= s.n_lh {
+            return None;
+        }
+        let (k, v, w) = gather_lh(&g.store, s, lh);
+        let logical = s.block_tokens(&g.store) + s.tails[lh].logical;
+        Some((k, v, w, logical))
+    }
+
+    /// Materialise every layer-head cache of a sequence (the decode path).
+    pub fn gather(&self, seq: u64) -> Option<Vec<(Matrix, Matrix, Vec<f64>)>> {
+        let mut g = self.inner.lock().unwrap();
+        g.clock += 1;
+        let now = g.clock;
+        let s = g.seqs.get_mut(&seq)?;
+        s.last_touch = now;
+        let s = g.seqs.get(&seq)?;
+        Some((0..s.n_lh).map(|lh| gather_lh(&g.store, s, lh)).collect())
+    }
+
+    /// Physical entries of one layer-head cache (blocks + tail rows).
+    pub fn layer_len(&self, seq: u64, lh: usize) -> Option<usize> {
+        let g = self.inner.lock().unwrap();
+        g.seqs.get(&seq).map(|s| s.phys_len(&g.store, lh))
+    }
+
+    /// Compress a sequence in place so every layer-head holds at most
+    /// `budget` physical entries. Folds its shared blocks into the
+    /// private compressed tail (releasing the block references — the
+    /// index keeps the blocks cached for other sequences). Returns the
+    /// number of layer-heads compressed (0 = nothing exceeded budget).
+    pub fn compress_sequence(
+        &self,
+        seq: u64,
+        budget: usize,
+        obs_queries: Option<&Matrix>,
+        rng: &mut Rng,
+    ) -> usize {
+        let mut g = self.inner.lock().unwrap();
+        g.clock += 1;
+        compress_seq_impl(&mut g, self.compressor.as_ref(), seq, budget, obs_queries, rng)
+    }
+
+    /// Drop a sequence: free its tails, release its block references
+    /// (indexed blocks stay cached for future prefix hits). Returns
+    /// whether the sequence existed — callers retire sequences exactly
+    /// once and should assert on this.
+    pub fn drop_sequence(&self, seq: u64) -> bool {
+        let mut g = self.inner.lock().unwrap();
+        drop_seq_inner(&mut g, seq)
+    }
+
+    pub fn has_sequence(&self, seq: u64) -> bool {
+        self.inner.lock().unwrap().seqs.contains_key(&seq)
+    }
+
+    pub fn seq_stats(&self, seq: u64) -> Option<SeqStats> {
+        let g = self.inner.lock().unwrap();
+        let s = g.seqs.get(&seq)?;
+        let bt = s.block_tokens(&g.store);
+        let block_floats: usize = s.blocks.iter().map(|&b| g.store.get(b).footprint_floats()).sum();
+        let mut st = SeqStats { footprint_floats: block_floats + s.tail_floats(), ..Default::default() };
+        for t in &s.tails {
+            let phys = bt + t.keys.rows();
+            st.physical_max = st.physical_max.max(phys);
+            st.physical_total += phys;
+            st.logical_total += bt + t.logical;
+        }
+        Some(st)
+    }
+
+    pub fn snapshot(&self) -> PoolSnapshot {
+        let g = self.inner.lock().unwrap();
+        PoolSnapshot {
+            budget_floats: self.cfg.budget_floats,
+            used_floats: g.store.used_floats(),
+            peak_floats: g.store.peak_floats(),
+            sequences: g.seqs.len(),
+            blocks: g.store.n_blocks(),
+            tree_blocks: g.radix.len(),
+            prefix_queries: self.metrics.prefix_queries.load(Ordering::Relaxed),
+            prefix_hits: self.metrics.prefix_hits.load(Ordering::Relaxed),
+            shared_tokens: self.metrics.shared_tokens.load(Ordering::Relaxed),
+            tier_compressions: self.metrics.tier_compressions.load(Ordering::Relaxed),
+            evicted_blocks: self.metrics.evicted_blocks.load(Ordering::Relaxed),
+            admission_rejects: self.metrics.admission_rejects.load(Ordering::Relaxed),
+        }
+    }
+
+    pub fn used_bytes(&self) -> usize {
+        self.inner.lock().unwrap().store.used_floats() * 4
+    }
+
+    pub fn peak_bytes(&self) -> usize {
+        self.inner.lock().unwrap().store.peak_floats() * 4
+    }
+}
+
+/// Decrement a block's sequence refcount; free it unless the index still
+/// caches it.
+pub(crate) fn release_block(store: &mut BlockStore, id: BlockId) {
+    let b = store.get_mut(id);
+    debug_assert!(b.refs > 0, "double release of block {id}");
+    b.refs -= 1;
+    if b.refs == 0 && !b.in_tree {
+        store.remove(id);
+    }
+}
+
+pub(crate) fn drop_seq_inner(g: &mut PoolInner, seq: u64) -> bool {
+    let Some(s) = g.seqs.remove(&seq) else { return false };
+    g.store.credit(s.tail_floats());
+    for id in s.blocks {
+        release_block(&mut g.store, id);
+    }
+    true
+}
+
+/// Concatenate a sequence's block rows (unit weights) and tail for one
+/// layer-head.
+pub(crate) fn gather_lh(store: &BlockStore, s: &SeqKv, lh: usize) -> (Matrix, Matrix, Vec<f64>) {
+    let t = &s.tails[lh];
+    if s.blocks.is_empty() {
+        return (t.keys.clone(), t.values.clone(), t.weights.clone());
+    }
+    let mut ks: Vec<&Matrix> = Vec::with_capacity(s.blocks.len() + 1);
+    let mut vs: Vec<&Matrix> = Vec::with_capacity(s.blocks.len() + 1);
+    let mut block_rows = 0;
+    for &b in &s.blocks {
+        let layer = &store.get(b).layers[lh];
+        block_rows += layer.keys.rows();
+        ks.push(&layer.keys);
+        vs.push(&layer.values);
+    }
+    ks.push(&t.keys);
+    vs.push(&t.values);
+    let mut weights = vec![1.0f64; block_rows];
+    weights.extend_from_slice(&t.weights);
+    (Matrix::vcat(&ks), Matrix::vcat(&vs), weights)
+}
+
+/// Compress a sequence's layer-heads past `budget` in place: gather each
+/// cache, run the compressor, and install the result as the new private
+/// tail. Releases the sequence's block references (the rows now live in
+/// the coreset). Under-budget layer-heads pass through unchanged.
+pub(crate) fn compress_seq_impl(
+    g: &mut PoolInner,
+    compressor: &dyn KvCompressor,
+    seq: u64,
+    budget: usize,
+    obs_queries: Option<&Matrix>,
+    rng: &mut Rng,
+) -> usize {
+    let Some(mut s) = g.seqs.remove(&seq) else { return 0 };
+    if s.phys_max(&g.store) <= budget {
+        g.seqs.insert(seq, s);
+        return 0;
+    }
+    let dims = g
+        .dims
+        .unwrap_or(CompressDims { n_layers: s.n_lh, beta: 0.35 });
+    let block_tokens = s.block_tokens(&g.store);
+    let mut compressed = 0;
+    let mut new_tails = Vec::with_capacity(s.n_lh);
+    for lh in 0..s.n_lh {
+        let (k, v, w) = gather_lh(&g.store, &s, lh);
+        let logical = block_tokens + s.tails[lh].logical;
+        if k.rows() > budget {
+            // Note: gathered rows may carry non-unit weights from an
+            // earlier compression; the compressor treats them as
+            // surrogate tokens (the paper's streaming re-compression
+            // caveat, Sec. 5 limitations).
+            let ctx = CompressionCtx {
+                keys: &k,
+                values: &v,
+                budget,
+                beta: dims.beta,
+                layer: lh,
+                n_layers: dims.n_layers,
+                obs_queries,
+            };
+            let e = compressor.compress(&ctx, rng);
+            new_tails.push(Tail { keys: e.keys, values: e.values, weights: e.weights, logical });
+            compressed += 1;
+        } else {
+            new_tails.push(Tail { keys: k, values: v, weights: w, logical });
+        }
+    }
+    let old_tail_floats = s.tail_floats();
+    g.store.credit(old_tail_floats);
+    for id in s.blocks.drain(..) {
+        release_block(&mut g.store, id);
+    }
+    s.tails = new_tails;
+    g.store.charge(s.tail_floats());
+    g.seqs.insert(seq, s);
+    compressed
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kvcache::StreamingLlm;
+
+    fn pool(cfg: KvPoolConfig) -> KvPool {
+        KvPool::new(cfg, Arc::new(StreamingLlm))
+    }
+
+    fn fake_prefill(seed: u64, n: usize, n_lh: usize, d: usize) -> (Vec<Matrix>, Vec<Matrix>) {
+        let mut rng = Rng::seed_from(seed);
+        let ks = (0..n_lh).map(|_| Matrix::randn(&mut rng, n, d)).collect();
+        let vs = (0..n_lh).map(|_| Matrix::randn(&mut rng, n, d)).collect();
+        (ks, vs)
+    }
+
+    /// Token stream whose KV rows are a deterministic function of the
+    /// token id — lets tests check that shared blocks serve the *right*
+    /// rows after divergence.
+    fn tagged_prefill(tokens: &[u32], n_lh: usize, d: usize) -> (Vec<Matrix>, Vec<Matrix>) {
+        let mk = |scale: f32| {
+            (0..n_lh)
+                .map(|lh| {
+                    Matrix::from_fn(tokens.len(), d, |i, j| {
+                        scale * (tokens[i] as f32 + lh as f32 * 1000.0 + j as f32 * 0.01)
+                    })
+                })
+                .collect::<Vec<_>>()
+        };
+        (mk(1.0), mk(-1.0))
+    }
+
+    #[test]
+    fn prefix_sharing_stores_shared_rows_once() {
+        let p = pool(KvPoolConfig { block_tokens: 8, ..Default::default() });
+        let prompt: Vec<u32> = (0..40).collect();
+        let (ks, vs) = tagged_prefill(&prompt, 2, 4);
+        let r1 = p.register_prefill(1, &prompt, &ks, &vs).unwrap();
+        assert_eq!(r1.matched_tokens, 0);
+        assert_eq!(r1.new_blocks, 5);
+        let used_one = p.snapshot().used_floats;
+
+        // identical prompt: the whole block-covered prefix is reused
+        let r2 = p.register_prefill(2, &prompt, &ks, &vs).unwrap();
+        assert_eq!(r2.matched_tokens, 40);
+        assert_eq!(r2.matched_blocks, 5);
+        assert_eq!(r2.new_blocks, 0);
+        let used_two = p.snapshot().used_floats;
+        assert!(
+            used_two < used_one + used_one / 10,
+            "second identical prompt nearly free: {used_one} -> {used_two}"
+        );
+        let snap = p.snapshot();
+        assert_eq!(snap.prefix_queries, 2);
+        assert_eq!(snap.prefix_hits, 1);
+        assert_eq!(snap.shared_tokens, 40);
+        assert!((snap.prefix_hit_rate() - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn divergent_suffix_gets_private_storage_with_correct_rows() {
+        let p = pool(KvPoolConfig { block_tokens: 8, ..Default::default() });
+        let a: Vec<u32> = (0..32).collect();
+        let mut b = a.clone();
+        for t in b[16..].iter_mut() {
+            *t += 100; // diverge after two blocks
+        }
+        let (ka, va) = tagged_prefill(&a, 2, 4);
+        let (kb, vb) = tagged_prefill(&b, 2, 4);
+        p.register_prefill(1, &a, &ka, &va).unwrap();
+        let r = p.register_prefill(2, &b, &kb, &vb).unwrap();
+        assert_eq!(r.matched_tokens, 16);
+        // gathers reproduce each sequence's own prefill exactly
+        for (seq, kc) in [(1u64, &ka), (2u64, &kb)] {
+            let g = p.gather(seq).unwrap();
+            for lh in 0..2 {
+                assert_eq!(g[lh].0, kc[lh], "seq {seq} lh {lh} keys corrupted");
+                assert!(g[lh].2.iter().all(|&w| w == 1.0));
+            }
+        }
+    }
+
+    #[test]
+    fn sharing_disabled_stores_everything_privately() {
+        let p = pool(KvPoolConfig { prefix_sharing: false, ..Default::default() });
+        let prompt: Vec<u32> = (0..32).collect();
+        let (ks, vs) = tagged_prefill(&prompt, 2, 4);
+        let r1 = p.register_prefill(1, &prompt, &ks, &vs).unwrap();
+        let used_one = p.snapshot().used_floats;
+        let r2 = p.register_prefill(2, &prompt, &ks, &vs).unwrap();
+        assert_eq!((r1.matched_tokens, r2.matched_tokens), (0, 0));
+        assert_eq!(r1.new_blocks + r2.new_blocks, 0);
+        assert_eq!(p.snapshot().used_floats, 2 * used_one);
+        assert_eq!(p.snapshot().prefix_queries, 0);
+    }
+
+    #[test]
+    fn drop_keeps_indexed_blocks_for_reuse() {
+        let p = pool(KvPoolConfig { block_tokens: 8, ..Default::default() });
+        let prompt: Vec<u32> = (0..24).collect();
+        let (ks, vs) = tagged_prefill(&prompt, 2, 4);
+        p.register_prefill(1, &prompt, &ks, &vs).unwrap();
+        assert!(p.drop_sequence(1));
+        assert!(!p.drop_sequence(1), "double drop must report false");
+        let snap = p.snapshot();
+        assert_eq!(snap.sequences, 0);
+        assert_eq!(snap.tree_blocks, 3, "indexed blocks survive the drop");
+        // a new request with the same prompt hits the cached prefix
+        let r = p.register_prefill(2, &prompt, &ks, &vs).unwrap();
+        assert_eq!(r.matched_tokens, 24);
+    }
+
+    #[test]
+    fn appends_grow_tail_and_ledger() {
+        let p = pool(KvPoolConfig::default());
+        p.create_sequence(7, 2, 3, 5);
+        for i in 0..6 {
+            p.append_row(7, 1, &[i as f32; 3], &[0.0; 5]);
+        }
+        let st = p.seq_stats(7).unwrap();
+        assert_eq!(st.physical_total, 6);
+        assert_eq!(st.logical_total, 6);
+        assert_eq!(st.footprint_floats, 6 * (3 + 5 + 1));
+        assert_eq!(p.snapshot().used_floats, 54);
+        let (k, _, w, logical) = p.layer_view(7, 1).unwrap();
+        assert_eq!(k.rows(), 6);
+        assert_eq!(k.get(3, 0), 3.0);
+        assert_eq!(w.len(), 6);
+        assert_eq!(logical, 6);
+    }
+
+    #[test]
+    fn compress_folds_blocks_into_private_coreset() {
+        let p = pool(KvPoolConfig { block_tokens: 8, ..Default::default() });
+        let prompt: Vec<u32> = (0..64).collect();
+        let (ks, vs) = fake_prefill(3, 64, 2, 4);
+        p.register_prefill(1, &prompt, &ks, &vs).unwrap();
+        p.register_prefill(2, &prompt, &ks, &vs).unwrap();
+        let mut rng = Rng::seed_from(1);
+        let n = p.compress_sequence(1, 16, None, &mut rng);
+        assert_eq!(n, 2);
+        let st = p.seq_stats(1).unwrap();
+        assert_eq!(st.physical_max, 16);
+        assert_eq!(st.logical_total, 128, "logical length survives compression");
+        // seq 2 still maps the blocks and gathers the full context
+        let g2 = p.gather(2).unwrap();
+        assert_eq!(g2[0].0.rows(), 64);
+        assert_eq!(g2[0].0, ks[0]);
+        // under-budget sequences are left alone
+        assert_eq!(p.compress_sequence(1, 64, None, &mut rng), 0);
+    }
+
+    #[test]
+    fn admission_rejects_only_when_nothing_reclaimable() {
+        // budget below one prompt's footprint and nothing to reclaim
+        let cfg = KvPoolConfig { budget_floats: 100, ..Default::default() };
+        let p = pool(cfg);
+        let prompt: Vec<u32> = (0..32).collect();
+        let (ks, vs) = fake_prefill(5, 32, 2, 4);
+        let err = p.register_prefill(1, &prompt, &ks, &vs).unwrap_err();
+        assert!(matches!(err, AdmitError::PoolExhausted { .. }));
+        let snap = p.snapshot();
+        assert_eq!(snap.admission_rejects, 1);
+        assert_eq!(snap.used_floats, 0, "rejected admission must not leak storage");
+        assert!(!p.has_sequence(1));
+    }
+
+    #[test]
+    fn ladder_compresses_cold_sequences_to_admit_new_ones() {
+        // Budget fits ~1.5 uncompressed sequences; the compression tier
+        // must shrink the cold one so the next admission succeeds.
+        let n = 64;
+        let floats_per_seq = n * 2 * (4 + 4 + 1); // 1152
+        let cfg = KvPoolConfig {
+            budget_floats: floats_per_seq + floats_per_seq / 2,
+            compress_budget: 8,
+            prefix_sharing: false,
+            ..Default::default()
+        };
+        let p = pool(cfg);
+        for seq in 0..4u64 {
+            let prompt: Vec<u32> = (0..n as u32).map(|t| t + 100 * seq as u32).collect();
+            let (ks, vs) = fake_prefill(seq, n, 2, 4);
+            p.register_prefill(seq, &prompt, &ks, &vs)
+                .unwrap_or_else(|e| panic!("seq {seq} rejected: {e}"));
+        }
+        let snap = p.snapshot();
+        assert!(snap.tier_compressions > 0, "compression tier never fired");
+        assert_eq!(snap.admission_rejects, 0);
+        assert_eq!(snap.sequences, 4);
+        assert!(snap.used_floats <= cfg_budget(&p));
+    }
+
+    fn cfg_budget(p: &KvPool) -> usize {
+        p.config().budget_floats
+    }
+
+    #[test]
+    fn ladder_evicts_unreferenced_cached_prefixes() {
+        // Fill the index with dead prefixes, then admit under pressure:
+        // eviction (not compression) must make room.
+        let n = 32;
+        let floats_per_seq = n * 2 * (4 + 4 + 1);
+        let cfg = KvPoolConfig {
+            budget_floats: 2 * floats_per_seq,
+            block_tokens: 8,
+            ..Default::default()
+        };
+        let p = pool(cfg);
+        for seq in 0..2u64 {
+            let prompt: Vec<u32> = (0..n as u32).map(|t| t + 1000 * seq as u32).collect();
+            let (ks, vs) = fake_prefill(10 + seq, n, 2, 4);
+            p.register_prefill(seq, &prompt, &ks, &vs).unwrap();
+            p.drop_sequence(seq);
+        }
+        assert_eq!(p.snapshot().tree_blocks, 8);
+        let prompt: Vec<u32> = (0..n as u32).map(|t| t + 50_000).collect();
+        let (ks, vs) = fake_prefill(99, n, 2, 4);
+        p.register_prefill(9, &prompt, &ks, &vs).unwrap();
+        let snap = p.snapshot();
+        assert!(snap.evicted_blocks > 0, "eviction tier never fired");
+        assert_eq!(snap.admission_rejects, 0);
+    }
+
+    #[test]
+    fn appends_never_fail_past_budget() {
+        let cfg = KvPoolConfig {
+            budget_floats: 64,
+            prefix_sharing: false,
+            compress_budget: 4,
+            ..Default::default()
+        };
+        let p = pool(cfg);
+        p.create_sequence(1, 1, 3, 3);
+        for i in 0..100 {
+            p.append_row(1, 0, &[i as f32; 3], &[0.0; 3]);
+        }
+        // the ladder kept shrinking the tail opportunistically
+        let st = p.seq_stats(1).unwrap();
+        assert!(st.physical_max < 100, "high-water ladder never compressed");
+        assert_eq!(st.logical_total, 100);
+    }
+}

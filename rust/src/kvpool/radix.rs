@@ -1,0 +1,189 @@
+//! Radix (prefix) index over fixed-size token chunks.
+//!
+//! Every node covers exactly `block_tokens` consecutive token ids and
+//! owns one sealed [`super::block::Block`]; a root-to-node path therefore
+//! spells out a prompt prefix in whole blocks. Because all chunks have
+//! the same length the radix tree degenerates into a trie keyed by the
+//! chunk's token ids — lookups walk full-chunk matches only, which is
+//! exactly the granularity at which KV rows can be shared (a partial
+//! chunk lives in the requesting sequence's private tail instead).
+//!
+//! The index never owns reference counts: a node just names a block. The
+//! eviction tier asks for *leaves* whose block has zero active mappings
+//! and prunes them LRU-first, which frees deeper (colder) prefixes before
+//! shallower (hotter) ones by construction.
+
+use super::block::BlockId;
+use std::collections::HashMap;
+
+struct Node {
+    chunk: Vec<u32>,
+    block: BlockId,
+    parent: Option<usize>,
+    children: HashMap<Vec<u32>, usize>,
+}
+
+/// The prefix index: a trie over `block_tokens`-sized token chunks.
+pub struct RadixIndex {
+    nodes: Vec<Option<Node>>,
+    free: Vec<usize>,
+    root_children: HashMap<Vec<u32>, usize>,
+    len: usize,
+}
+
+impl RadixIndex {
+    pub fn new() -> Self {
+        RadixIndex { nodes: Vec::new(), free: Vec::new(), root_children: HashMap::new(), len: 0 }
+    }
+
+    /// Number of indexed blocks.
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    fn node(&self, idx: usize) -> &Node {
+        self.nodes[idx].as_ref().expect("use of freed radix node")
+    }
+
+    /// Longest full-chunk prefix match of `tokens`: the `(node, block)`
+    /// path from the root, in order. Stops at the first chunk with no
+    /// child (or when fewer than `chunk_len` tokens remain).
+    pub fn lookup(&self, tokens: &[u32], chunk_len: usize) -> Vec<(usize, BlockId)> {
+        let mut path = Vec::new();
+        if chunk_len == 0 {
+            return path;
+        }
+        let mut pos = 0;
+        let mut children = &self.root_children;
+        while pos + chunk_len <= tokens.len() {
+            let chunk = &tokens[pos..pos + chunk_len];
+            match children.get(chunk) {
+                Some(&idx) => {
+                    let n = self.node(idx);
+                    path.push((idx, n.block));
+                    children = &n.children;
+                    pos += chunk_len;
+                }
+                None => break,
+            }
+        }
+        path
+    }
+
+    /// Insert `chunk → block` under `parent` (`None` = root). The chunk
+    /// must not already exist at that position (lookups stop exactly at
+    /// the first missing child, so callers can't race themselves).
+    pub fn insert(&mut self, parent: Option<usize>, chunk: Vec<u32>, block: BlockId) -> usize {
+        let idx = match self.free.pop() {
+            Some(i) => i,
+            None => {
+                self.nodes.push(None);
+                self.nodes.len() - 1
+            }
+        };
+        let node = Node { chunk: chunk.clone(), block, parent, children: HashMap::new() };
+        self.nodes[idx] = Some(node);
+        let children = match parent {
+            None => &mut self.root_children,
+            Some(p) => &mut self.nodes[p].as_mut().expect("freed parent").children,
+        };
+        let prev = children.insert(chunk, idx);
+        assert!(prev.is_none(), "duplicate radix chunk insertion");
+        self.len += 1;
+        idx
+    }
+
+    pub fn node_block(&self, idx: usize) -> BlockId {
+        self.node(idx).block
+    }
+
+    /// Indices of all leaf nodes (no children) — the only evictable ones.
+    pub fn leaves(&self) -> Vec<usize> {
+        self.nodes
+            .iter()
+            .enumerate()
+            .filter_map(|(i, n)| match n {
+                Some(node) if node.children.is_empty() => Some(i),
+                _ => None,
+            })
+            .collect()
+    }
+
+    /// Remove a leaf node, returning its block id. Panics on non-leaves
+    /// (evicting an interior node would orphan deeper cached prefixes).
+    pub fn remove_leaf(&mut self, idx: usize) -> BlockId {
+        let node = self.nodes[idx].take().expect("remove of freed radix node");
+        assert!(node.children.is_empty(), "remove_leaf on interior node");
+        let children = match node.parent {
+            None => &mut self.root_children,
+            Some(p) => &mut self.nodes[p].as_mut().expect("freed parent").children,
+        };
+        children.remove(&node.chunk);
+        self.free.push(idx);
+        self.len -= 1;
+        node.block
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lookup_walks_full_chunks_only() {
+        let mut r = RadixIndex::new();
+        let a = r.insert(None, vec![1, 2], 10);
+        let b = r.insert(Some(a), vec![3, 4], 11);
+        r.insert(Some(b), vec![5, 6], 12);
+        assert_eq!(r.len(), 3);
+        // full three-chunk match
+        let p = r.lookup(&[1, 2, 3, 4, 5, 6], 2);
+        assert_eq!(p.iter().map(|&(_, b)| b).collect::<Vec<_>>(), vec![10, 11, 12]);
+        // divergence after one chunk
+        let p = r.lookup(&[1, 2, 9, 9, 5, 6], 2);
+        assert_eq!(p.len(), 1);
+        assert_eq!(p[0].1, 10);
+        // partial final chunk never matches
+        let p = r.lookup(&[1, 2, 3], 2);
+        assert_eq!(p.len(), 1);
+        // no match at root
+        assert!(r.lookup(&[7, 7, 7, 7], 2).is_empty());
+        assert!(r.lookup(&[1], 2).is_empty());
+    }
+
+    #[test]
+    fn branches_share_a_parent() {
+        let mut r = RadixIndex::new();
+        let a = r.insert(None, vec![1, 2], 1);
+        r.insert(Some(a), vec![3, 4], 2);
+        r.insert(Some(a), vec![8, 8], 3);
+        assert_eq!(r.lookup(&[1, 2, 8, 8], 2).last().unwrap().1, 3);
+        assert_eq!(r.lookup(&[1, 2, 3, 4], 2).last().unwrap().1, 2);
+        // only the two branch tips are leaves
+        let mut leaves: Vec<BlockId> = r.leaves().iter().map(|&i| r.node_block(i)).collect();
+        leaves.sort_unstable();
+        assert_eq!(leaves, vec![2, 3]);
+    }
+
+    #[test]
+    fn remove_leaf_exposes_parent() {
+        let mut r = RadixIndex::new();
+        let a = r.insert(None, vec![1, 2], 1);
+        let b = r.insert(Some(a), vec![3, 4], 2);
+        assert_eq!(r.leaves(), vec![b]);
+        assert_eq!(r.remove_leaf(b), 2);
+        assert_eq!(r.len(), 1);
+        assert_eq!(r.leaves(), vec![a]);
+        assert!(r.lookup(&[1, 2, 3, 4], 2).len() == 1);
+        assert_eq!(r.remove_leaf(a), 1);
+        assert!(r.is_empty());
+        // freed slots are reused
+        let c = r.insert(None, vec![9, 9], 7);
+        assert!(c == a || c == b);
+        assert_eq!(r.lookup(&[9, 9], 2)[0].1, 7);
+    }
+}

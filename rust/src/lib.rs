@@ -6,9 +6,11 @@
 //!
 //! * **Layer 3 (this crate)** — the serving coordinator: request routing,
 //!   dynamic batching, prefill/decode scheduling and KV-cache management
-//!   with six compression policies, scaled out by the [`cluster`] tier
-//!   (replica pool + pluggable routing), plus the complete numeric
-//!   substrate (linear algebra, RPNYS, attention algorithms, baselines).
+//!   with six compression policies over the block-paged [`kvpool`] memory
+//!   manager (global float budget, radix prefix sharing, compression-tier
+//!   eviction), scaled out by the [`cluster`] tier (replica pool +
+//!   pluggable routing), plus the complete numeric substrate (linear
+//!   algebra, RPNYS, attention algorithms, baselines).
 //! * **Layer 2 (`python/compile/model.py`)** — the JAX compute graph of the
 //!   WildCat pipeline and a small transformer LM, AOT-lowered once to HLO
 //!   text artifacts.
@@ -47,6 +49,7 @@ pub mod rpnys;
 pub mod attention;
 pub mod baselines;
 pub mod kvcache;
+pub mod kvpool;
 pub mod model;
 pub mod runtime;
 pub mod coordinator;

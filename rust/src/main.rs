@@ -18,6 +18,7 @@ use wildcat::cluster::{
 };
 use wildcat::coordinator::{Server, ServerConfig};
 use wildcat::kvcache::compressor_by_name;
+use wildcat::kvpool::{budget_floats_from_mb, KvPoolConfig, PoolSnapshot};
 use wildcat::linalg::norms::max_abs_diff;
 use wildcat::model::{ModelConfig, Transformer};
 use wildcat::rng::Rng;
@@ -43,6 +44,34 @@ fn main() -> anyhow::Result<()> {
             Ok(())
         }
     }
+}
+
+/// Shared `--kv-budget-mb` / `--prefix-sharing` parsing for the serving
+/// commands: the per-replica KV pool budget (0 / absent = unbounded) and
+/// whether prompts are deduplicated through the pool's radix prefix index.
+fn pool_config_from_args(args: &Args) -> anyhow::Result<KvPoolConfig> {
+    let mut pool = KvPoolConfig::default();
+    pool.budget_floats = budget_floats_from_mb(args.get_parse::<f64>("kv-budget-mb", 0.0));
+    pool.prefix_sharing = match args.get_or("prefix-sharing", "on").as_str() {
+        "on" | "true" | "1" => true,
+        "off" | "false" | "0" => false,
+        other => anyhow::bail!("--prefix-sharing: expected on/off, got {other:?}"),
+    };
+    pool.compress_budget = args.get_parse::<usize>("kv-compress-budget", pool.compress_budget);
+    Ok(pool)
+}
+
+fn print_pool_line(prefix: &str, s: &PoolSnapshot) {
+    println!(
+        "{prefix}kv pool: used {:.2} MiB (peak {:.2} MiB), prefix hit rate {:.0}%, \
+         tier compressions {}, evicted blocks {}, admission rejects {}",
+        s.used_bytes() as f64 / (1024.0 * 1024.0),
+        s.peak_bytes() as f64 / (1024.0 * 1024.0),
+        100.0 * s.prefix_hit_rate(),
+        s.tier_compressions,
+        s.evicted_blocks,
+        s.admission_rejects,
+    );
 }
 
 /// `wildcat bench [--smoke] [--out DIR] [--only fig3,table4,...] [--seed N]`
@@ -81,7 +110,8 @@ fn cmd_info(args: &Args) -> anyhow::Result<()> {
 }
 
 /// `wildcat cluster --replicas N --policy P [--rate R --duration D]
-/// [--shape stationary|onoff|gamma] [--fast] [--metrics-json PATH]`
+/// [--shape stationary|onoff|gamma] [--fast] [--metrics-json PATH]
+/// [--kv-budget-mb MB --prefix-sharing on|off]`
 ///
 /// Spawns a replica pool behind the chosen routing policy and replays a
 /// synthetic trace against it — at wall-clock rate by default, or in
@@ -103,6 +133,7 @@ fn cmd_cluster(args: &Args) -> anyhow::Result<()> {
     let mut cfg = ServerConfig::default();
     cfg.queue_capacity = queue_cap;
     cfg.scheduler.cache_budget = budget;
+    cfg.pool = pool_config_from_args(args)?;
     cfg.seed = seed;
 
     let model_cfg = ModelConfig::default();
@@ -148,6 +179,7 @@ fn cmd_cluster(args: &Args) -> anyhow::Result<()> {
         stats.p95_ms,
         stats.p99_ms,
     );
+    print_pool_line("", &router.pool_aggregate());
     let snapshot = router.metrics_json();
     if let Some(path) = args.get("metrics-json") {
         std::fs::write(path, snapshot.to_string_compact())?;
@@ -168,6 +200,7 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
 
     let mut cfg = ServerConfig::default();
     cfg.scheduler.cache_budget = budget;
+    cfg.pool = pool_config_from_args(args)?;
     cfg.seed = seed;
 
     let handle = if use_pjrt {
@@ -204,8 +237,16 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
         let _ = rx.recv_timeout(Duration::from_secs(300));
     }
     println!("{}", handle.metrics().report());
+    print_pool_line("", &handle.client().pool_snapshot());
     if let Some(path) = args.get("metrics-json") {
-        std::fs::write(path, handle.metrics().to_json().to_string_compact())?;
+        // serving metrics plus the pool gauges in one document
+        let mut snap = match handle.metrics().to_json() {
+            wildcat::util::json::Json::Obj(o) => o,
+            _ => unreachable!("metrics snapshot is always an object"),
+        };
+        snap.insert("kv_pool".to_string(), handle.client().pool_snapshot().to_json());
+        let doc = wildcat::util::json::Json::Obj(snap);
+        std::fs::write(path, doc.to_string_compact())?;
         println!("metrics snapshot written to {path}");
     }
     handle.shutdown();

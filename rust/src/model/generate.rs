@@ -124,8 +124,9 @@ pub fn argmax(xs: &[f32]) -> usize {
 }
 
 /// Uncompressed greedy decoding through the [`CacheManager`] API —
-/// exercises the serving-side cache plumbing end to end (used by the
-/// coordinator tests).
+/// exercises the serving-side cache plumbing (pool registration, prefix
+/// sharing, gather, budget-triggered re-compression) end to end; used by
+/// the coordinator tests.
 pub fn decode_with_manager(
     model: &Transformer,
     manager: &mut CacheManager,
@@ -136,14 +137,10 @@ pub fn decode_with_manager(
 ) -> Vec<u32> {
     let cfg = &model.cfg;
     let n_lh = cfg.n_layers * cfg.n_heads;
-    manager.create_sequence(seq, cfg.d_head(), cfg.d_head());
     let out = model.prefill(context);
-    for lh in 0..n_lh {
-        for i in 0..out.k_cache[lh].rows() {
-            let cache = manager.layer_mut(seq, lh).expect("layer");
-            cache.append(out.k_cache[lh].row(i), out.v_cache[lh].row(i));
-        }
-    }
+    manager
+        .ingest_prefill(seq, context, &out.k_cache, &out.v_cache)
+        .expect("pool admission (unbounded manager pools never reject)");
     manager.compress_sequence(seq, None, rng);
     let mut logits = out.logits;
     let mut tokens = Vec::with_capacity(n_new);
@@ -151,12 +148,7 @@ pub fn decode_with_manager(
     for _ in 0..n_new {
         let next = argmax(&logits) as u32;
         tokens.push(next);
-        let borrowed: Vec<(Matrix, Matrix, Vec<f64>)> = (0..n_lh)
-            .map(|lh| {
-                let c = manager.layer(seq, lh).expect("layer");
-                (c.keys.clone(), c.values.clone(), c.weights.clone())
-            })
-            .collect();
+        let borrowed = manager.gather(seq).expect("sequence");
         let refs: Vec<(&Matrix, &Matrix, &[f64])> =
             borrowed.iter().map(|(k, v, w)| (k, v, w.as_slice())).collect();
         let (lg, new_k, new_v) = model.decode(next, pos.min(cfg.max_len - 1), &refs);
@@ -166,7 +158,7 @@ pub fn decode_with_manager(
         }
         pos += 1;
     }
-    manager.drop_sequence(seq);
+    assert!(manager.drop_sequence(seq), "sequence retired twice");
     tokens
 }
 
@@ -218,7 +210,8 @@ mod tests {
         let ctx: Vec<u32> = (0..12).map(|i| (i % 16) as u32).collect();
         let mut rng = Rng::seed_from(4);
         let direct = greedy_decode(&m, &ctx, 4, 10_000, &UniformKv, &mut rng);
-        let mut manager = CacheManager::new(10_000, 4, m.cfg.beta() as f64, Box::new(UniformKv));
+        let mut manager =
+            CacheManager::new(10_000, 4, m.cfg.beta() as f64, std::sync::Arc::new(UniformKv));
         let mut rng2 = Rng::seed_from(4);
         let via_manager = decode_with_manager(&m, &mut manager, 1, &ctx, 4, &mut rng2);
         assert_eq!(direct.tokens, via_manager);

@@ -1,0 +1,119 @@
+//! Property test: every compression policy behind `compressor_by_name`
+//! honours its budget — `entry.len() <= budget` for random shapes and
+//! budgets, including `budget >= n` (verbatim passthrough) and the
+//! `split_protected` edge cases `budget = 0 / 1 / 2` where the
+//! protected-ends protocol cannot run and the shared tiny-budget
+//! fallback must kick in.
+//!
+//! The one nuance is PyramidKV, whose *per-layer* budget pyramids around
+//! the requested mean (early layers keep more, late layers less); its
+//! contract is `entry.len() <= layer_budget(budget, layer, n_layers)`,
+//! which is what the pool's capacity accounting sees per layer.
+
+use wildcat::kvcache::{
+    compressor_by_name, CompressionCtx, PyramidKv, COMPRESSOR_NAMES,
+};
+use wildcat::linalg::Matrix;
+use wildcat::rng::Rng;
+use wildcat::util::prop::Cases;
+
+fn budget_for_case(rng: &mut Rng, n: usize) -> usize {
+    // weight the interesting regions: tiny budgets, mid-range, >= n
+    match rng.below(6) {
+        0 => 0,
+        1 => 1,
+        2 => 2,
+        3 => 1 + rng.below(n.max(1)),
+        4 => n,
+        _ => n + 1 + rng.below(64),
+    }
+}
+
+#[test]
+fn every_compressor_honours_its_budget() {
+    Cases::new(48).run(|rng| {
+        let n = 2 + rng.below(300);
+        let d = [2, 4, 8][rng.below(3)];
+        let dv = [2, 4, 8][rng.below(3)];
+        let keys = Matrix::randn(rng, n, d);
+        let values = Matrix::randn(rng, n, dv);
+        let n_layers = 1 + rng.below(4);
+        let layer = rng.below(n_layers);
+        let budget = budget_for_case(rng, n);
+        let with_obs = rng.below(2) == 1;
+        let obs = Matrix::randn(rng, 4, d);
+        for name in COMPRESSOR_NAMES {
+            let comp = compressor_by_name(name).unwrap();
+            let ctx = CompressionCtx {
+                keys: &keys,
+                values: &values,
+                budget,
+                beta: 0.35,
+                layer,
+                n_layers,
+                obs_queries: if with_obs { Some(&obs) } else { None },
+            };
+            let entry = comp.compress(&ctx, rng);
+            // PyramidKV's effective budget is its per-layer pyramid value
+            let allowed = if name == "pyramidkv" {
+                PyramidKv::default().layer_budget(budget, layer, n_layers)
+            } else {
+                budget
+            };
+            assert!(
+                entry.len() <= allowed,
+                "{name}: n={n} d={d} budget={budget} (allowed {allowed}) -> {} entries",
+                entry.len()
+            );
+            assert_eq!(
+                entry.weights.len(),
+                entry.len(),
+                "{name}: weights/rows mismatch at n={n} budget={budget}"
+            );
+            assert_eq!(entry.source_len, n, "{name}: wrong source_len");
+            assert_eq!(entry.keys.cols(), d, "{name}: key width changed");
+            assert_eq!(entry.values.cols(), dv, "{name}: value width changed");
+            if allowed >= n {
+                assert_eq!(
+                    entry.len(),
+                    n,
+                    "{name}: budget >= n must keep the context verbatim"
+                );
+            }
+        }
+    });
+}
+
+/// The tiny-budget fallback specifically: budgets 0/1/2 on contexts far
+/// larger than the protected window still come back exactly sized.
+#[test]
+fn tiny_budgets_shrink_instead_of_passing_through() {
+    let mut rng = Rng::seed_from(7);
+    let keys = Matrix::randn(&mut rng, 200, 4);
+    let values = Matrix::randn(&mut rng, 200, 4);
+    for budget in [0usize, 1, 2] {
+        for name in COMPRESSOR_NAMES {
+            let comp = compressor_by_name(name).unwrap();
+            let ctx = CompressionCtx {
+                keys: &keys,
+                values: &values,
+                budget,
+                beta: 0.35,
+                layer: 0,
+                n_layers: 2,
+                obs_queries: None,
+            };
+            let entry = comp.compress(&ctx, &mut rng);
+            let allowed = if name == "pyramidkv" {
+                PyramidKv::default().layer_budget(budget, 0, 2)
+            } else {
+                budget
+            };
+            assert!(
+                entry.len() <= allowed,
+                "{name}: budget {budget} (allowed {allowed}) -> {} entries",
+                entry.len()
+            );
+        }
+    }
+}
