@@ -1,5 +1,6 @@
 //! Shared runners for the seven paper benches plus the `serve` cluster
-//! serving bench and the `kvpool` memory-manager bench.
+//! serving bench, the `kvpool` memory-manager bench and the `prefill`
+//! prefix-resume bench.
 //!
 //! Every `rust/benches/bench_*.rs` binary is a thin wrapper around one of
 //! the `run_*` functions here, and `wildcat bench` drives the same
@@ -1101,6 +1102,14 @@ struct KvPoolRunStats {
     rejected_responses: usize,
     p50_decode_s: f64,
     p99_decode_s: f64,
+    /// Prompt tokens the backend actually computed at admission
+    /// (prefill skipping resumes from prefix hits, so under sharing this
+    /// is less than the logical prompt-token total).
+    prefill_tokens_computed: u64,
+    /// Prompt tokens seeded from cached prefix KV rows instead.
+    prefill_tokens_skipped: u64,
+    /// Summed prefill wall time across completed responses.
+    prefill_s_total: f64,
 }
 
 impl KvPoolRunStats {
@@ -1119,6 +1128,7 @@ fn kvpool_run(
     prompts: &[Vec<u32>],
     max_new: usize,
     sharing: bool,
+    prefill_skip: bool,
     budget_floats: usize,
     compress_budget: usize,
     seed: u64,
@@ -1132,12 +1142,13 @@ fn kvpool_run(
     };
     let pool = Arc::new(KvPool::new(pool_cfg, compressor.clone()));
     let backend = replica_backend_factory(weights.clone(), model_cfg, seed)(0);
+    let metrics = Arc::new(ServingMetrics::new());
     let mut sched = Scheduler::with_pool(
         backend,
         // loose per-sequence budget: memory pressure is exercised
         // globally through the pool ladder, not per-sequence
-        SchedulerConfig { cache_budget: 100_000, slack: 32 },
-        Arc::new(ServingMetrics::new()),
+        SchedulerConfig { cache_budget: 100_000, slack: 32, prefill_skip },
+        metrics.clone(),
         seed,
         pool.clone(),
     );
@@ -1160,6 +1171,7 @@ fn kvpool_run(
     let mut logical_tokens = 0;
     let mut completed = 0;
     let mut rejected_responses = 0;
+    let mut prefill_s_total = 0.0;
     for r in &responses {
         if r.tokens.is_empty() {
             rejected_responses += 1;
@@ -1168,9 +1180,11 @@ fn kvpool_run(
         completed += 1;
         logical_tokens += r.context_len + r.tokens.len();
         decode_s.push(r.timing.decode.as_secs_f64());
+        prefill_s_total += r.timing.prefill.as_secs_f64();
     }
     decode_s.sort_by(|a, b| a.partial_cmp(b).unwrap());
     let pct = |q| if decode_s.is_empty() { 0.0 } else { percentile(&decode_s, q) };
+    let counters = metrics.counters();
     KvPoolRunStats {
         snap: pool.snapshot(),
         logical_tokens,
@@ -1178,6 +1192,9 @@ fn kvpool_run(
         rejected_responses,
         p50_decode_s: pct(0.5),
         p99_decode_s: pct(0.99),
+        prefill_tokens_computed: counters.prefill_tokens_computed,
+        prefill_tokens_skipped: counters.prefill_tokens_skipped,
+        prefill_s_total,
     }
 }
 
@@ -1243,6 +1260,7 @@ pub fn run_kvpool(cfg: &RunCfg) -> Result<BenchReport> {
             &prompts,
             max_new,
             sharing,
+            true,
             budget,
             compress_budget,
             seed,
@@ -1292,6 +1310,9 @@ pub fn run_kvpool(cfg: &RunCfg) -> Result<BenchReport> {
                 .extra("rejected_responses", s.rejected_responses as f64)
                 .extra("completed", s.completed as f64)
                 .extra("logical_tokens", s.logical_tokens as f64)
+                .extra("prefill_tokens_computed", s.prefill_tokens_computed as f64)
+                .extra("prefill_tokens_skipped", s.prefill_tokens_skipped as f64)
+                .extra("prefill_s_total", s.prefill_s_total)
                 .extra("p99_decode_ms", s.p99_decode_s * 1e3),
         );
     }
@@ -1304,6 +1325,13 @@ pub fn run_kvpool(cfg: &RunCfg) -> Result<BenchReport> {
         "[kvpool] prefix sharing cuts bytes-per-token by {:.1}% (target >= 30%): {}",
         100.0 * reduction,
         if reduction >= 0.30 { "YES" } else { "NO" }
+    );
+    let computed_cut =
+        1.0 - loose_on.prefill_tokens_computed as f64 / loose_off.prefill_tokens_computed as f64;
+    println!(
+        "[kvpool] prefill skipping cuts computed prefill tokens by {:.1}% (target >= 30%): {}",
+        100.0 * computed_cut,
+        if computed_cut >= 0.30 { "YES" } else { "NO" }
     );
     let absorbed = tight_on.snap.admission_rejects == 0
         && tight_on.rejected_responses == 0
@@ -1319,12 +1347,108 @@ pub fn run_kvpool(cfg: &RunCfg) -> Result<BenchReport> {
 }
 
 // ---------------------------------------------------------------------
+// prefill — resumed prefill on prefix hits vs cold recompute
+// ---------------------------------------------------------------------
+
+/// The `prefill` bench: the kvpool shared-prefix trace with `max_new = 1`
+/// so admission-time prefill dominates the run, replayed at three
+/// settings — resume=on (prefix sharing + prefill skipping), resume=off
+/// (sharing on but every prompt recomputed cold), and sharing=off (no
+/// pool index at all). Reports total prefill wall time, prompt tokens
+/// computed vs skipped, and the resume-on speedup over resume-off.
+///
+/// Acceptance shape (pinned by `rust/tests/kvpool_serve.rs` and
+/// `rust/tests/prefill_resume.rs`): resume=on computes ≥ 30% fewer
+/// prompt tokens than resume=off on this trace, with logits equivalent
+/// to cold prefill.
+pub fn run_prefill(cfg: &RunCfg) -> Result<BenchReport> {
+    let args = cfg.args;
+    let seed = cfg.seed;
+    let (n_roots, root_len, suffix_len, n_req) =
+        if cfg.smoke { (4, 64, 24, 24) } else { (4, 96, 48, 64) };
+    let n_req = args.get_parse::<usize>("requests", n_req);
+    let compressor = compressor_by_name(&args.get_or("compressor", "streaming"))?;
+    let model_cfg = ModelConfig::default();
+    let weights = load_weights(args, true, "prefill")?;
+
+    // identical trace construction to run_kvpool (same seed derivation)
+    let mut trace_rng = Rng::seed_from(seed ^ 0x5EED);
+    let vocab = model_cfg.vocab as u32;
+    let roots: Vec<Vec<u32>> = (0..n_roots)
+        .map(|_| (0..root_len).map(|_| trace_rng.below(vocab as usize) as u32).collect())
+        .collect();
+    let prompts: Vec<Vec<u32>> = (0..n_req)
+        .map(|i| {
+            let mut p = roots[i % n_roots].clone();
+            p.extend((0..suffix_len).map(|_| trace_rng.below(vocab as usize) as u32));
+            p
+        })
+        .collect();
+
+    let title = "prefill — resumed prefill on radix prefix hits";
+    let mut report = BenchReport::new("prefill", title, cfg.smoke, seed);
+    let mut table = Table::new(
+        title,
+        &["config", "prefill (ms)", "computed", "skipped", "hit rate", "completed"],
+    );
+
+    let run = |sharing: bool, skip: bool| {
+        kvpool_run(&weights, model_cfg, &compressor, &prompts, 1, sharing, skip, 0, 16, seed)
+    };
+    let resume_on = run(true, true);
+    let resume_off = run(true, false);
+    let sharing_off = run(false, false);
+
+    let configs: [(&str, &KvPoolRunStats); 3] = [
+        ("resume=on", &resume_on),
+        ("resume=off", &resume_off),
+        ("sharing=off", &sharing_off),
+    ];
+    for (name, s) in configs {
+        table.add_row(vec![
+            name.into(),
+            format!("{:.2}", s.prefill_s_total * 1e3),
+            s.prefill_tokens_computed.to_string(),
+            s.prefill_tokens_skipped.to_string(),
+            fmt_pct(100.0 * s.snap.prefix_hit_rate()),
+            s.completed.to_string(),
+        ]);
+        report.push(
+            BenchRecord::new(name, s.prefill_s_total)
+                .extra("prefill_tokens_computed", s.prefill_tokens_computed as f64)
+                .extra("prefill_tokens_skipped", s.prefill_tokens_skipped as f64)
+                .extra("prefix_hit_rate", s.snap.prefix_hit_rate())
+                .extra("completed", s.completed as f64),
+        );
+    }
+    table.print();
+    println!("\n(markdown)\n{}", table.render_markdown());
+
+    // headline checks — the PR-6 acceptance shape
+    let computed_cut = 1.0
+        - resume_on.prefill_tokens_computed as f64 / resume_off.prefill_tokens_computed as f64;
+    println!(
+        "[prefill] resume computes {:.1}% fewer prompt tokens than cold (target >= 30%): {}",
+        100.0 * computed_cut,
+        if computed_cut >= 0.30 { "YES" } else { "NO" }
+    );
+    println!(
+        "[prefill] wall-time speedup over cold: {:.2}x ({:.2} -> {:.2} ms)",
+        resume_off.prefill_s_total / resume_on.prefill_s_total.max(1e-12),
+        resume_off.prefill_s_total * 1e3,
+        resume_on.prefill_s_total * 1e3,
+    );
+    Ok(report)
+}
+
+// ---------------------------------------------------------------------
 // The unified entry point behind `wildcat bench`
 // ---------------------------------------------------------------------
 
 /// All bench ids in canonical order.
-pub const BENCH_IDS: [&str; 9] =
-    ["fig3", "table2", "table3", "table4", "table5", "figm1", "micro", "serve", "kvpool"];
+pub const BENCH_IDS: [&str; 10] = [
+    "fig3", "table2", "table3", "table4", "table5", "figm1", "micro", "serve", "kvpool", "prefill",
+];
 
 /// Run the selected benches (all by default, or a comma-separated subset
 /// via `only`) and write one `BENCH_<id>.json` per bench into `out_dir`.
@@ -1364,6 +1488,7 @@ pub fn run_all(cfg: &RunCfg, out_dir: &Path, only: Option<&str>) -> Result<Vec<P
             "micro" => run_micro(cfg)?,
             "serve" => run_serve(cfg)?,
             "kvpool" => run_kvpool(cfg)?,
+            "prefill" => run_prefill(cfg)?,
             _ => unreachable!(),
         };
         let path = report.write(out_dir)?;

@@ -24,6 +24,7 @@ impl Default for ReplicaHealth {
 }
 
 impl ReplicaHealth {
+    /// Healthy (not cooled) state with zeroed counters.
     pub fn new() -> Self {
         ReplicaHealth {
             cooled_until: Mutex::new(None),

@@ -20,8 +20,10 @@ pub enum Pacing {
     Virtual,
 }
 
+/// Replay parameters.
 #[derive(Clone, Debug)]
 pub struct ReplayConfig {
+    /// Wall-clock or virtual-time pacing.
     pub pacing: Pacing,
     /// Vocabulary size prompts are sampled from.
     pub vocab: u32,
@@ -46,10 +48,15 @@ impl Default for ReplayConfig {
 /// Outcome of one trace replay.
 #[derive(Clone, Debug)]
 pub struct ReplayStats {
+    /// Trace arrivals submitted to the router.
     pub submitted: usize,
+    /// Arrivals rejected after every replica refused.
     pub rejected: usize,
+    /// Responses received within the drain-phase timeout.
     pub completed: usize,
+    /// Accepted requests whose response was not awaited in time.
     pub timed_out: usize,
+    /// Decode tokens across completed responses.
     pub tokens_generated: usize,
     /// Submission of the first arrival → last awaited response.
     pub elapsed: Duration,
@@ -57,9 +64,13 @@ pub struct ReplayStats {
     pub throughput_rps: f64,
     /// Generated tokens per second of replay.
     pub tokens_per_s: f64,
+    /// Fraction of arrivals rejected.
     pub reject_rate: f64,
+    /// Router-measured end-to-end latency median, in milliseconds.
     pub p50_ms: f64,
+    /// Router-measured end-to-end latency 95th percentile, in milliseconds.
     pub p95_ms: f64,
+    /// Router-measured end-to-end latency 99th percentile, in milliseconds.
     pub p99_ms: f64,
 }
 

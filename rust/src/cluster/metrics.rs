@@ -19,19 +19,35 @@ pub struct ClusterSnapshot {
     pub rejected: u64,
     /// Extra submission attempts after a replica refused (re-routes).
     pub rerouted: u64,
+    /// Responses received by awaiting callers.
     pub completed: u64,
+    /// Decode tokens across completed responses.
     pub tokens_generated: u64,
+    /// Cluster end-to-end latency median, in milliseconds.
     pub p50_ms: f64,
+    /// Cluster end-to-end latency 95th percentile, in milliseconds.
     pub p95_ms: f64,
+    /// Cluster end-to-end latency 99th percentile, in milliseconds.
     pub p99_ms: f64,
     /// KV pool bytes summed over the replicas' (disjoint) pools —
     /// filled in by [`crate::cluster::Router::snapshot`], which can see
     /// the per-replica clients; 0 for a bare `ClusterMetrics` snapshot.
     pub kv_bytes_used: usize,
+    /// Peak KV pool bytes summed over replicas (same provenance as
+    /// `kv_bytes_used`).
     pub kv_bytes_peak: usize,
+    /// Prompt tokens actually computed at prefill, summed over replicas —
+    /// filled in by [`crate::cluster::Router::snapshot`] from the
+    /// per-replica serving counters; 0 for a bare `ClusterMetrics`
+    /// snapshot.
+    pub prefill_tokens_computed: u64,
+    /// Prompt tokens skipped via KV-pool prefix hits, summed over
+    /// replicas (see `prefill_tokens_computed` for provenance).
+    pub prefill_tokens_skipped: u64,
 }
 
 impl ClusterSnapshot {
+    /// Total submission attempts (routed + rejected).
     pub fn submitted(&self) -> u64 {
         self.routed + self.rejected
     }
@@ -63,6 +79,7 @@ pub struct ClusterMetrics {
 }
 
 impl ClusterMetrics {
+    /// A fresh sink tracking `n_replicas` routing targets, started now.
     pub fn new(n_replicas: usize) -> Self {
         ClusterMetrics {
             inner: Mutex::new(Inner {
@@ -77,18 +94,22 @@ impl ClusterMetrics {
         }
     }
 
+    /// Record an accepted submission landing on `replica`.
     pub fn on_routed(&self, replica: usize) {
         self.inner.lock().unwrap().routed_per_replica[replica] += 1;
     }
 
+    /// Record a retry on another replica after a refusal.
     pub fn on_reroute(&self) {
         self.inner.lock().unwrap().rerouted += 1;
     }
 
+    /// Record a cluster-wide rejection (every replica refused).
     pub fn on_reject(&self) {
         self.inner.lock().unwrap().rejected += 1;
     }
 
+    /// Record a response receipt with its end-to-end latency.
     pub fn on_complete(&self, e2e: Duration, tokens: usize) {
         let mut g = self.inner.lock().unwrap();
         g.completed += 1;
@@ -96,10 +117,14 @@ impl ClusterMetrics {
         g.e2e_us.record(e2e.as_secs_f64() * 1e6);
     }
 
+    /// Requests routed to one replica so far.
     pub fn routed_to(&self, replica: usize) -> u64 {
         self.inner.lock().unwrap().routed_per_replica[replica]
     }
 
+    /// Plain-number snapshot of the router-side counters. The KV and
+    /// prefill-skipping fields are zero here — [`crate::cluster::Router::snapshot`]
+    /// fills them from the per-replica clients.
     pub fn snapshot(&self) -> ClusterSnapshot {
         let g = self.inner.lock().unwrap();
         ClusterSnapshot {
@@ -113,6 +138,8 @@ impl ClusterMetrics {
             p99_ms: g.e2e_us.quantile(0.99) / 1e3,
             kv_bytes_used: 0,
             kv_bytes_peak: 0,
+            prefill_tokens_computed: 0,
+            prefill_tokens_skipped: 0,
         }
     }
 

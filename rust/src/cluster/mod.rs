@@ -23,6 +23,8 @@
 //! once across replicas, for any replica count and policy; a rejection
 //! implies every replica refused.
 
+#![warn(missing_docs)]
+
 pub mod health;
 pub mod loadgen;
 pub mod metrics;

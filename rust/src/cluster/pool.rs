@@ -42,10 +42,12 @@ impl ReplicaPool {
         ReplicaPool { handles }
     }
 
+    /// Number of replicas in the pool.
     pub fn len(&self) -> usize {
         self.handles.len()
     }
 
+    /// Whether the pool holds no replicas (never true after `spawn`).
     pub fn is_empty(&self) -> bool {
         self.handles.is_empty()
     }
@@ -55,6 +57,7 @@ impl ReplicaPool {
         self.handles.iter().map(|h| h.client()).collect()
     }
 
+    /// One replica's serving metrics.
     pub fn metrics(&self, replica: usize) -> &ServingMetrics {
         self.handles[replica].metrics()
     }

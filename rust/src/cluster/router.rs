@@ -32,8 +32,11 @@ use std::time::{Duration, Instant};
 /// A pluggable load-balancing policy.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum RoutingPolicy {
+    /// Rotate the first-choice replica per request.
     RoundRobin,
+    /// Pick the replica with the least accepted-but-unfinished work.
     JoinShortestQueue,
+    /// Hash the session key to a home replica (warm KV-cache reuse).
     Affinity,
 }
 
@@ -55,6 +58,7 @@ impl RoutingPolicy {
         })
     }
 
+    /// The policy's canonical CLI name.
     pub fn name(&self) -> &'static str {
         match self {
             RoutingPolicy::RoundRobin => "round_robin",
@@ -64,8 +68,10 @@ impl RoutingPolicy {
     }
 }
 
+/// Router tuning knobs.
 #[derive(Clone, Copy, Debug)]
 pub struct RouterConfig {
+    /// The load-balancing policy.
     pub policy: RoutingPolicy,
     /// How long a replica that refused a request is de-preferred.
     pub cooldown: Duration,
@@ -117,6 +123,7 @@ pub struct Router {
 }
 
 impl Router {
+    /// Build a router over one client per replica (panics on zero).
     pub fn new(clients: Vec<ServerClient>, cfg: RouterConfig) -> Self {
         assert!(!clients.is_empty(), "router needs at least one replica");
         let n = clients.len();
@@ -129,23 +136,33 @@ impl Router {
         }
     }
 
+    /// Number of replicas routed over.
     pub fn n_replicas(&self) -> usize {
         self.clients.len()
     }
 
+    /// The configured routing policy.
     pub fn policy(&self) -> RoutingPolicy {
         self.cfg.policy
     }
 
+    /// Router-side counters and latency sink.
     pub fn metrics(&self) -> &ClusterMetrics {
         &self.metrics
     }
 
+    /// Cluster snapshot with the KV and prefill-skipping totals filled
+    /// in from the per-replica clients.
     pub fn snapshot(&self) -> ClusterSnapshot {
         let mut s = self.metrics.snapshot();
         let kv = self.pool_aggregate();
         s.kv_bytes_used = kv.used_bytes();
         s.kv_bytes_peak = kv.peak_bytes();
+        for c in &self.clients {
+            let counters = c.metrics().counters();
+            s.prefill_tokens_computed += counters.prefill_tokens_computed;
+            s.prefill_tokens_skipped += counters.prefill_tokens_skipped;
+        }
         s
     }
 
@@ -271,6 +288,17 @@ impl Router {
         o.insert("n_replicas".to_string(), Json::Num(self.clients.len() as f64));
         o.insert("aggregate".to_string(), self.metrics.to_json());
         o.insert("kv".to_string(), self.pool_aggregate().to_json());
+        // cluster-wide prefill-skipping totals (summed per-replica
+        // serving counters; per-replica values appear in each replica
+        // block below)
+        let (mut computed, mut skipped) = (0u64, 0u64);
+        for c in &self.clients {
+            let counters = c.metrics().counters();
+            computed += counters.prefill_tokens_computed;
+            skipped += counters.prefill_tokens_skipped;
+        }
+        o.insert("prefill_tokens_computed".to_string(), Json::Num(computed as f64));
+        o.insert("prefill_tokens_skipped".to_string(), Json::Num(skipped as f64));
         let replicas: Vec<Json> = self
             .clients
             .iter()

@@ -9,8 +9,14 @@ use std::sync::{Condvar, Mutex};
 /// Rejection reason surfaced to clients.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum RejectReason {
+    /// The admission queue is at capacity (backpressure).
     QueueFull,
-    PromptTooLong { max: usize },
+    /// The prompt exceeds the server's configured maximum.
+    PromptTooLong {
+        /// The configured prompt-length limit.
+        max: usize,
+    },
+    /// The server is draining and no longer accepts work.
     ShuttingDown,
 }
 
@@ -29,6 +35,8 @@ pub struct AdmissionQueue {
 }
 
 impl AdmissionQueue {
+    /// An empty queue bounded at `capacity` requests of up to
+    /// `max_prompt` prompt tokens each.
     pub fn new(capacity: usize, max_prompt: usize) -> Self {
         AdmissionQueue {
             capacity,
@@ -70,14 +78,17 @@ impl AdmissionQueue {
         Some(g.queue.drain(..take).collect())
     }
 
+    /// Requests currently queued.
     pub fn len(&self) -> usize {
         self.inner.lock().unwrap().queue.len()
     }
 
+    /// Whether the queue is empty.
     pub fn is_empty(&self) -> bool {
         self.len() == 0
     }
 
+    /// Stop admissions; queued requests remain poppable until drained.
     pub fn close(&self) {
         self.inner.lock().unwrap().closed = true;
         self.notify.notify_all();

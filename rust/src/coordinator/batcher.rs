@@ -11,6 +11,7 @@
 use super::request::Request;
 use std::time::Duration;
 
+/// Dynamic-batching policy knobs.
 #[derive(Clone, Copy, Debug)]
 pub struct BatcherConfig {
     /// Maximum concurrently active (decoding) sequences.
@@ -37,11 +38,14 @@ impl Default for BatcherConfig {
     }
 }
 
+/// The batching policy: pure decision logic, no queue ownership.
 pub struct Batcher {
+    /// The policy's tuning knobs.
     pub cfg: BatcherConfig,
 }
 
 impl Batcher {
+    /// Validate and wrap a config.
     pub fn new(cfg: BatcherConfig) -> Self {
         assert!(cfg.max_active >= 1);
         assert!(cfg.soft_active <= cfg.max_active);

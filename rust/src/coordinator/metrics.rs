@@ -9,13 +9,26 @@ use std::collections::BTreeMap;
 use std::sync::Mutex;
 use std::time::{Duration, Instant};
 
+/// Monotonic serving counters (one replica's totals since start).
 #[derive(Debug, Default, Clone, Copy)]
 pub struct Counters {
+    /// Requests submitted (accepted or not).
     pub submitted: u64,
+    /// Requests rejected (queue backpressure or pool admission).
     pub rejected: u64,
+    /// Requests answered with a full generation.
     pub completed: u64,
+    /// Decode tokens produced across completed requests.
     pub tokens_generated: u64,
+    /// Prompt tokens of completed requests (logical prefill volume).
     pub prefill_tokens: u64,
+    /// Prompt tokens whose attention was actually computed at admission
+    /// (the tail, under prefill skipping; the whole prompt otherwise).
+    pub prefill_tokens_computed: u64,
+    /// Prompt tokens served from KV-pool prefix hits instead of being
+    /// recomputed (prefill skipping).
+    pub prefill_tokens_skipped: u64,
+    /// Layer-head cache compressions performed by the scheduler.
     pub compressions: u64,
 }
 
@@ -51,6 +64,7 @@ impl Default for ServingMetrics {
 }
 
 impl ServingMetrics {
+    /// A fresh sink with zeroed counters, started now.
     pub fn new() -> Self {
         ServingMetrics {
             inner: Mutex::new(Inner {
@@ -66,14 +80,17 @@ impl ServingMetrics {
         }
     }
 
+    /// Record a submission attempt.
     pub fn on_submit(&self) {
         self.inner.lock().unwrap().counters.submitted += 1;
     }
 
+    /// Record a rejection (backpressure or pool admission).
     pub fn on_reject(&self) {
         self.inner.lock().unwrap().counters.rejected += 1;
     }
 
+    /// Record a completed request: its latency split and token counts.
     pub fn on_complete(
         &self,
         queue: Duration,
@@ -95,6 +112,17 @@ impl ServingMetrics {
         g.e2e_us.record((queue + prefill + decode).as_secs_f64() * 1e6);
     }
 
+    /// Record one admission's prefill split: `computed` tokens ran
+    /// through the backend, `skipped` were seeded from cached prefix KV
+    /// rows. Recorded for every admission, including rejected ones (the
+    /// compute has already happened by the time admission can reject).
+    pub fn on_prefill(&self, computed: usize, skipped: usize) {
+        let mut g = self.inner.lock().unwrap();
+        g.counters.prefill_tokens_computed += computed as u64;
+        g.counters.prefill_tokens_skipped += skipped as u64;
+    }
+
+    /// Record `n` cache compressions.
     pub fn on_compression(&self, n: u64) {
         self.inner.lock().unwrap().counters.compressions += n;
     }
@@ -113,6 +141,7 @@ impl ServingMetrics {
         (g.kv_bytes_current, g.kv_bytes_peak)
     }
 
+    /// Copy of the current counter totals.
     pub fn counters(&self) -> Counters {
         self.inner.lock().unwrap().counters
     }
@@ -144,6 +173,14 @@ impl ServingMetrics {
         o.insert("rejected".to_string(), Json::Num(c.rejected as f64));
         o.insert("completed".to_string(), Json::Num(c.completed as f64));
         o.insert("prefill_tokens".to_string(), Json::Num(c.prefill_tokens as f64));
+        o.insert(
+            "prefill_tokens_computed".to_string(),
+            Json::Num(c.prefill_tokens_computed as f64),
+        );
+        o.insert(
+            "prefill_tokens_skipped".to_string(),
+            Json::Num(c.prefill_tokens_skipped as f64),
+        );
         o.insert("tokens_generated".to_string(), Json::Num(c.tokens_generated as f64));
         o.insert("compressions".to_string(), Json::Num(c.compressions as f64));
         o.insert("in_flight".to_string(), Json::Num(c.in_flight() as f64));
@@ -169,6 +206,7 @@ impl ServingMetrics {
         format!(
             "requests: submitted={} rejected={} completed={}\n\
              tokens:   prefill={} generated={} ({:.1} tok/s decode)\n\
+             prefill skipping: computed={} skipped={}\n\
              queue:    mean {:.1} us (max {:.1})\n\
              prefill:  mean {:.2} ms (max {:.2})\n\
              decode:   mean {:.2} ms/token\n\
@@ -181,6 +219,8 @@ impl ServingMetrics {
             c.prefill_tokens,
             c.tokens_generated,
             c.tokens_generated as f64 / dt,
+            c.prefill_tokens_computed,
+            c.prefill_tokens_skipped,
             g.queue_us.mean(),
             if g.queue_us.count() > 0 { g.queue_us.max() } else { 0.0 },
             g.prefill_us.mean() / 1e3,

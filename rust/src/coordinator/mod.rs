@@ -23,6 +23,8 @@
 //! One server is a single replica; [`crate::cluster`] shards load across
 //! N of them behind pluggable routing policies.
 
+#![warn(missing_docs)]
+
 pub mod admission;
 pub mod batcher;
 pub mod metrics;

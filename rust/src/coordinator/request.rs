@@ -2,11 +2,13 @@
 
 use std::time::{Duration, Instant};
 
+/// Per-replica request identifier (assigned at submission).
 pub type RequestId = u64;
 
 /// A generation request.
 #[derive(Clone, Debug)]
 pub struct Request {
+    /// Identifier responses are matched back to the caller by.
     pub id: RequestId,
     /// Prompt tokens.
     pub tokens: Vec<u32>,
@@ -17,6 +19,7 @@ pub struct Request {
 }
 
 impl Request {
+    /// Build a request stamped with the current time as its arrival.
     pub fn new(id: RequestId, tokens: Vec<u32>, max_new: usize) -> Self {
         Request { id, tokens, max_new, arrived: Instant::now() }
     }
@@ -34,6 +37,7 @@ pub struct RequestTiming {
 }
 
 impl RequestTiming {
+    /// End-to-end latency: queue + prefill + decode.
     pub fn total(&self) -> Duration {
         self.queue + self.prefill + self.decode
     }
@@ -42,8 +46,11 @@ impl RequestTiming {
 /// A completed generation.
 #[derive(Clone, Debug)]
 pub struct Response {
+    /// The request this answers.
     pub id: RequestId,
+    /// Generated tokens (empty for a pool-rejected admission).
     pub tokens: Vec<u32>,
+    /// Latency breakdown measured by the scheduler.
     pub timing: RequestTiming,
     /// Physical KV entries held for this sequence after prefill
     /// compression (max over layer-heads).

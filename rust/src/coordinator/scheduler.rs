@@ -18,17 +18,25 @@ use crate::rng::Rng;
 use std::sync::Arc;
 use std::time::Instant;
 
+/// Scheduler tuning knobs (CLI surface: `--cache-budget`, `--slack`,
+/// `--prefill-skip`).
 #[derive(Clone, Debug)]
 pub struct SchedulerConfig {
     /// Physical KV entries allowed per (layer, head) per sequence.
     pub cache_budget: usize,
     /// Hysteresis above the budget before decode-time re-compression.
     pub slack: usize,
+    /// Resume prefill from KV-pool prefix hits instead of recomputing
+    /// the matched tokens (`--prefill-skip`). Effective only when the
+    /// backend reports [`ModelBackend::supports_prefill_resume`] and the
+    /// pool has prefix sharing enabled; otherwise admissions silently
+    /// fall back to cold prefill.
+    pub prefill_skip: bool,
 }
 
 impl Default for SchedulerConfig {
     fn default() -> Self {
-        SchedulerConfig { cache_budget: 192, slack: 32 }
+        SchedulerConfig { cache_budget: 192, slack: 32, prefill_skip: true }
     }
 }
 
@@ -45,6 +53,7 @@ struct SeqState {
 /// The scheduler: owns the backend and active sequence set.
 pub struct Scheduler<B: ModelBackend> {
     backend: B,
+    /// The scheduler's tuning knobs.
     pub cfg: SchedulerConfig,
     cache: CacheManager,
     active: Vec<SeqState>,
@@ -81,6 +90,7 @@ impl<B: ModelBackend> Scheduler<B> {
         Scheduler { backend, cfg, cache, active: Vec::new(), metrics, rng: Rng::seed_from(seed) }
     }
 
+    /// Sequences currently decoding.
     pub fn active_count(&self) -> usize {
         self.active.len()
     }
@@ -99,13 +109,37 @@ impl<B: ModelBackend> Scheduler<B> {
     pub fn admit(&mut self, req: Request) -> Option<Response> {
         let queue = req.arrived.elapsed();
         let t0 = Instant::now();
-        let out = self.backend.prefill(&req.tokens);
+        let n = req.tokens.len();
         let before = self.cache.compressions();
-        if self
-            .cache
-            .ingest_prefill(req.id, &req.tokens, &out.k_cache, &out.v_cache)
-            .is_err()
-        {
+        // prefill skipping: lookup → compute (tail only) → seal. Falls
+        // back to the cold path when disabled, when the backend cannot
+        // seed attention from cached rows, or when sharing is off.
+        let resume = self.cfg.prefill_skip
+            && self.backend.supports_prefill_resume()
+            && self.cache.pool().config().prefix_sharing;
+        let (logits, skipped, ingested) = if resume {
+            let handle = self.cache.lookup_prefix(&req.tokens);
+            let skipped = handle.matched_tokens();
+            let out = if handle.is_hit() {
+                self.backend.prefill_from(&handle.kv, &req.tokens[skipped..])
+            } else {
+                self.backend.prefill(&req.tokens)
+            };
+            let ok = self
+                .cache
+                .ingest_resumed(req.id, &req.tokens, handle, &out.k_cache, &out.v_cache)
+                .is_ok();
+            (out.logits, skipped, ok)
+        } else {
+            let out = self.backend.prefill(&req.tokens);
+            let ok = self
+                .cache
+                .ingest_prefill(req.id, &req.tokens, &out.k_cache, &out.v_cache)
+                .is_ok();
+            (out.logits, 0, ok)
+        };
+        self.metrics.on_prefill(n - skipped, skipped);
+        if !ingested {
             self.metrics.on_reject();
             self.push_kv_gauges();
             return Some(Response {
@@ -122,7 +156,7 @@ impl<B: ModelBackend> Scheduler<B> {
         self.push_kv_gauges();
         let prefill = t0.elapsed();
         let pos = req.tokens.len();
-        let next_token = argmax(&out.logits) as u32;
+        let next_token = argmax(&logits) as u32;
         self.active.push(SeqState {
             req,
             generated: Vec::new(),
@@ -255,7 +289,7 @@ mod tests {
         let model = Transformer::random(cfg, &mut rng);
         Scheduler::new(
             model,
-            SchedulerConfig { cache_budget: budget, slack: 8 },
+            SchedulerConfig { cache_budget: budget, slack: 8, ..Default::default() },
             Arc::new(StreamingLlm),
             Arc::new(ServingMetrics::new()),
             7,
@@ -313,7 +347,7 @@ mod tests {
         );
         let mut s = Scheduler::new(
             model,
-            SchedulerConfig { cache_budget: 1000, slack: 8 },
+            SchedulerConfig { cache_budget: 1000, slack: 8, ..Default::default() },
             Arc::new(UniformKv),
             Arc::new(ServingMetrics::new()),
             3,
@@ -387,7 +421,7 @@ mod tests {
         let metrics = Arc::new(ServingMetrics::new());
         let mut s = Scheduler::with_pool(
             model,
-            SchedulerConfig { cache_budget: 1000, slack: 8 },
+            SchedulerConfig { cache_budget: 1000, slack: 8, ..Default::default() },
             metrics.clone(),
             7,
             pool,

@@ -18,16 +18,22 @@ use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::{Arc, Mutex};
 use std::time::Duration;
 
+/// Everything one serving replica is configured by.
 #[derive(Clone)]
 pub struct ServerConfig {
+    /// Admission queue capacity (beyond it, submissions are rejected).
     pub queue_capacity: usize,
+    /// Maximum accepted prompt length in tokens.
     pub max_prompt: usize,
+    /// Dynamic-batching policy knobs.
     pub batcher: BatcherConfig,
+    /// Engine-loop knobs (cache budget, slack, prefill skipping).
     pub scheduler: SchedulerConfig,
     /// The replica's KV memory pool: global float budget, prefix
     /// sharing, pressure-ladder knobs (`--kv-budget-mb`,
     /// `--prefix-sharing` on the CLI). Default: unbounded, sharing on.
     pub pool: KvPoolConfig,
+    /// Base RNG seed (replica `i` of a pool runs `seed + i`).
     pub seed: u64,
 }
 
@@ -82,6 +88,7 @@ impl ServerClient {
         }
     }
 
+    /// The replica's serving metrics (shared with its scheduler).
     pub fn metrics(&self) -> &ServingMetrics {
         &self.metrics
     }
@@ -120,6 +127,8 @@ pub struct ServerHandle {
 pub struct Server;
 
 impl Server {
+    /// Start a replica: spawn the worker thread, build the backend on it
+    /// via `make_backend`, and return the owning handle.
     pub fn spawn<B, F>(cfg: ServerConfig, compressor: Arc<dyn KvCompressor>, make_backend: F) -> ServerHandle
     where
         B: ModelBackend,
@@ -235,10 +244,12 @@ impl ServerHandle {
         self.client.clone()
     }
 
+    /// The server's serving metrics.
     pub fn metrics(&self) -> &ServingMetrics {
         self.client.metrics()
     }
 
+    /// Requests sitting in the admission queue.
     pub fn queue_len(&self) -> usize {
         self.client.queue_depth()
     }
@@ -272,7 +283,7 @@ mod tests {
 
     fn spawn_test_server(budget: usize) -> ServerHandle {
         let cfg = ServerConfig {
-            scheduler: SchedulerConfig { cache_budget: budget, slack: 8 },
+            scheduler: SchedulerConfig { cache_budget: budget, slack: 8, ..Default::default() },
             ..Default::default()
         };
         Server::spawn(cfg, Arc::new(StreamingLlm), move || {

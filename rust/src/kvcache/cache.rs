@@ -14,7 +14,7 @@
 //! handed out by value; the storage behind it is pool block handles.
 
 use super::{KvCompressor, KvEntry};
-use crate::kvpool::{AdmitError, CompressDims, KvPool, KvPoolConfig, RegisterOutcome};
+use crate::kvpool::{AdmitError, CompressDims, KvPool, KvPoolConfig, PrefixHandle, RegisterOutcome};
 use crate::linalg::Matrix;
 use crate::rng::Rng;
 use std::collections::BTreeSet;
@@ -163,6 +163,33 @@ impl CacheManager {
     ) -> Result<RegisterOutcome, AdmitError> {
         assert_eq!(k_cache.len(), self.n_layers, "layer-cache count mismatch");
         let out = self.pool.register_prefill(seq, tokens, k_cache, v_cache)?;
+        self.seqs.insert(seq);
+        Ok(out)
+    }
+
+    /// Token-level prefix lookup *before* compute — the first half of a
+    /// resumed prefill. See [`KvPool::lookup_prefix`]; the handle must be
+    /// consumed by [`CacheManager::ingest_resumed`] (or released through
+    /// the pool).
+    pub fn lookup_prefix(&self, tokens: &[u32]) -> PrefixHandle {
+        self.pool.lookup_prefix(tokens)
+    }
+
+    /// Register a sequence prefilled from a prefix hit: the handle's
+    /// blocks are mapped as the sequence's shared prefix, and only the
+    /// tail caches (rows for the unmatched tokens) are new storage.
+    /// Same admission control as [`CacheManager::ingest_prefill`],
+    /// charged for the tail only.
+    pub fn ingest_resumed(
+        &mut self,
+        seq: u64,
+        tokens: &[u32],
+        handle: PrefixHandle,
+        tail_k: &[Matrix],
+        tail_v: &[Matrix],
+    ) -> Result<RegisterOutcome, AdmitError> {
+        assert_eq!(tail_k.len(), self.n_layers, "layer-cache count mismatch");
+        let out = self.pool.register_resumed(seq, tokens, handle, tail_k, tail_v)?;
         self.seqs.insert(seq);
         Ok(out)
     }

@@ -18,6 +18,7 @@ pub struct BlockStore {
 }
 
 impl BlockStore {
+    /// Empty store with a zeroed ledger.
     pub fn new() -> Self {
         BlockStore { slots: Vec::new(), free: Vec::new(), n_blocks: 0, used_floats: 0, peak_floats: 0 }
     }
@@ -47,10 +48,13 @@ impl BlockStore {
         block
     }
 
+    /// Borrow a live block. Panics on a freed slot.
     pub fn get(&self, id: BlockId) -> &Block {
         self.slots[id].as_ref().expect("get of free block slot")
     }
 
+    /// Mutably borrow a live block (refcount/LRU updates only — the KV
+    /// payload is sealed). Panics on a freed slot.
     pub fn get_mut(&mut self, id: BlockId) -> &mut Block {
         self.slots[id].as_mut().expect("get_mut of free block slot")
     }
@@ -67,14 +71,17 @@ impl BlockStore {
         self.used_floats = self.used_floats.saturating_sub(floats);
     }
 
+    /// Floats currently charged (blocks + tails).
     pub fn used_floats(&self) -> usize {
         self.used_floats
     }
 
+    /// High-water mark of [`BlockStore::used_floats`].
     pub fn peak_floats(&self) -> usize {
         self.peak_floats
     }
 
+    /// Live (non-freed) blocks in the slab.
     pub fn n_blocks(&self) -> usize {
         self.n_blocks
     }

@@ -20,7 +20,9 @@ pub type BlockId = usize;
 /// hold verbatim (uncompressed) rows.
 #[derive(Clone, Debug)]
 pub struct BlockLayer {
+    /// `n_tokens × d_k` key rows for this layer-head.
     pub keys: Matrix,
+    /// `n_tokens × d_v` value rows for this layer-head.
     pub values: Matrix,
 }
 
@@ -40,6 +42,7 @@ pub struct Block {
 }
 
 impl Block {
+    /// Context tokens this block covers.
     pub fn n_tokens(&self) -> usize {
         self.tokens.len()
     }

@@ -26,30 +26,39 @@ impl PoolMetrics {
 /// Point-in-time view of one pool, in plain numbers.
 #[derive(Clone, Copy, Debug, Default)]
 pub struct PoolSnapshot {
-    /// Configured budget (0 = unbounded) and ledger gauges, in floats.
+    /// Configured global budget in floats (0 = unbounded).
     pub budget_floats: usize,
+    /// Floats currently charged to the ledger (blocks + tails).
     pub used_floats: usize,
+    /// High-water mark of `used_floats` since pool creation.
     pub peak_floats: usize,
-    /// Live objects.
+    /// Registered sequences.
     pub sequences: usize,
+    /// Live blocks in the slab.
     pub blocks: usize,
     /// Blocks currently referenced by the radix prefix index.
     pub tree_blocks: usize,
-    /// Prefix-sharing counters.
+    /// Prefix lookups performed (one per registration/lookup with sharing on).
     pub prefix_queries: u64,
+    /// Lookups that matched at least one block.
     pub prefix_hits: u64,
+    /// Prompt tokens served from shared blocks instead of new storage.
     pub shared_tokens: u64,
-    /// Pressure-ladder counters.
+    /// Compression-tier firings of the pressure ladder.
     pub tier_compressions: u64,
+    /// Cached prefix blocks reclaimed by the eviction tier.
     pub evicted_blocks: u64,
+    /// Prefill registrations rejected after both reclaim tiers came up short.
     pub admission_rejects: u64,
 }
 
 impl PoolSnapshot {
+    /// `used_floats` in bytes (4 bytes per float).
     pub fn used_bytes(&self) -> usize {
         self.used_floats * 4
     }
 
+    /// `peak_floats` in bytes (4 bytes per float).
     pub fn peak_bytes(&self) -> usize {
         self.peak_floats * 4
     }
@@ -63,6 +72,7 @@ impl PoolSnapshot {
         }
     }
 
+    /// Serialise as the `"kv"` block of the serving metrics documents.
     pub fn to_json(&self) -> Json {
         let mut o = BTreeMap::new();
         o.insert("budget_bytes".into(), Json::Num((self.budget_floats * 4) as f64));

@@ -25,6 +25,8 @@
 //! ([`KvPool::register_prefill`]) is subject to admission control, so an
 //! accepted sequence always runs to completion.
 
+#![warn(missing_docs)]
+
 pub mod allocator;
 pub mod block;
 pub mod evict;
@@ -35,6 +37,7 @@ pub use metrics::{aggregate_snapshots, PoolMetrics, PoolSnapshot};
 
 use crate::kvcache::{CompressionCtx, KvCompressor};
 use crate::linalg::Matrix;
+use crate::model::CachedPrefix;
 use crate::rng::Rng;
 use allocator::BlockStore;
 use block::{Block, BlockId, BlockLayer};
@@ -90,14 +93,22 @@ pub fn budget_floats_from_mb(mb: f64) -> usize {
 /// one slot per (layer, head)) and the attention scale β.
 #[derive(Clone, Copy, Debug)]
 pub struct CompressDims {
+    /// Layer-slot count compressors see (one per (layer, head) here).
     pub n_layers: usize,
+    /// Attention inverse-temperature the compressors score under.
     pub beta: f64,
 }
 
 /// Admission verdict when the ladder could not reclaim enough.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum AdmitError {
-    PoolExhausted { need_floats: usize, budget_floats: usize },
+    /// The prompt's new storage does not fit even after both reclaim tiers.
+    PoolExhausted {
+        /// Floats the registration needed for its unmatched tokens.
+        need_floats: usize,
+        /// The pool's configured global budget.
+        budget_floats: usize,
+    },
 }
 
 impl std::fmt::Display for AdmitError {
@@ -113,11 +124,51 @@ impl std::fmt::Display for AdmitError {
 
 impl std::error::Error for AdmitError {}
 
+/// A prefix-cache hit held between [`KvPool::lookup_prefix`] and
+/// [`KvPool::register_resumed`] — the matched block table plus the
+/// materialised K/V rows the backend resumes attention from.
+///
+/// The matched blocks are reference-counted by the handle, so the
+/// pressure ladder cannot evict them while the resumed prefill computes.
+/// Every handle must be consumed exactly once, either by
+/// [`KvPool::register_resumed`] or [`KvPool::release_prefix`].
+pub struct PrefixHandle {
+    pub(crate) blocks: Vec<BlockId>,
+    /// Radix node of the last matched block — the parent new chunks are
+    /// sealed under.
+    pub(crate) parent: Option<usize>,
+    /// The matched prefix's K/V rows, ready for
+    /// [`crate::model::ModelBackend::prefill_from`]. `kv.len` is the
+    /// matched token count (always a multiple of the pool's
+    /// `block_tokens`, and always leaving at least one prompt token
+    /// unmatched so the resumed prefill has a position to produce logits
+    /// from).
+    pub kv: CachedPrefix,
+}
+
+impl PrefixHandle {
+    /// Prompt tokens covered by the matched blocks.
+    pub fn matched_tokens(&self) -> usize {
+        self.kv.len
+    }
+
+    /// Number of matched blocks.
+    pub fn matched_blocks(&self) -> usize {
+        self.blocks.len()
+    }
+
+    /// Whether the lookup matched anything.
+    pub fn is_hit(&self) -> bool {
+        !self.blocks.is_empty()
+    }
+}
+
 /// What a prefill registration reused and created.
 #[derive(Clone, Copy, Debug, Default)]
 pub struct RegisterOutcome {
     /// Prompt tokens served from already-stored blocks.
     pub matched_tokens: usize,
+    /// Shared blocks mapped (rather than sealed) by this registration.
     pub matched_blocks: usize,
     /// Full blocks sealed (and indexed) from this prompt.
     pub new_blocks: usize,
@@ -208,6 +259,8 @@ pub struct KvPool {
 }
 
 impl KvPool {
+    /// Create an empty pool with the given budget/sharing configuration
+    /// and the compressor its pressure ladder will shrink sequences with.
     pub fn new(cfg: KvPoolConfig, compressor: Arc<dyn KvCompressor>) -> Self {
         let rng = Rng::seed_from(cfg.seed);
         KvPool {
@@ -225,10 +278,12 @@ impl KvPool {
         }
     }
 
+    /// The pool's configuration, as constructed.
     pub fn config(&self) -> &KvPoolConfig {
         &self.cfg
     }
 
+    /// Name of the compressor the pressure ladder runs.
     pub fn compressor_name(&self) -> &'static str {
         self.compressor.name()
     }
@@ -269,7 +324,6 @@ impl KvPool {
             k_cache.iter().chain(v_cache).all(|m| m.rows() == n),
             "cache rows must match token count"
         );
-        let (d_k, d_v) = (k_cache[0].cols(), v_cache[0].cols());
         let bt = self.cfg.block_tokens.max(1);
 
         let mut g = self.inner.lock().unwrap();
@@ -299,9 +353,150 @@ impl KvPool {
                 PoolMetrics::add(&self.metrics.shared_tokens, matched_tokens as u64);
             }
         }
-        let matched_blocks = blocks.len();
+        // 2-4. Admission, sealing, tail — shared with the resumed path;
+        // `k_cache` rows are absolute, so the row of token
+        // `matched_tokens` is `matched_tokens` itself.
+        self.seal_and_register(
+            &mut g,
+            now,
+            seq,
+            tokens,
+            blocks,
+            parent,
+            matched_tokens,
+            k_cache,
+            v_cache,
+            matched_tokens,
+        )
+    }
 
-        // 2. Admission: everything past the matched prefix is new storage.
+    /// Token-level prefix match against the radix index, done *before*
+    /// compute. The matched blocks are increfed (eviction-safe) and
+    /// their K/V rows materialised so the backend can resume prefill
+    /// over the unmatched tail ([`crate::model::ModelBackend::prefill_from`]).
+    /// Returns an empty (miss) handle when sharing is disabled or nothing
+    /// matched; the match is capped to leave at least one prompt token
+    /// for the resumed prefill to compute logits from.
+    pub fn lookup_prefix(&self, tokens: &[u32]) -> PrefixHandle {
+        let bt = self.cfg.block_tokens.max(1);
+        let mut g = self.inner.lock().unwrap();
+        g.clock += 1;
+        let now = g.clock;
+        let mut handle =
+            PrefixHandle { blocks: Vec::new(), parent: None, kv: CachedPrefix::empty() };
+        if !self.cfg.prefix_sharing || tokens.is_empty() {
+            return handle;
+        }
+        PoolMetrics::add(&self.metrics.prefix_queries, 1);
+        let mut path = g.radix.lookup(tokens, bt);
+        // always leave >= 1 unmatched token: prefill needs a position to
+        // produce next-token logits from, so a whole-prompt match resumes
+        // from all but its last block
+        while !path.is_empty() && path.len() * bt >= tokens.len() {
+            path.pop();
+        }
+        if path.is_empty() {
+            return handle;
+        }
+        let n_lh = g.store.get(path[0].1).layers.len();
+        for &(node, block) in &path {
+            debug_assert_eq!(g.store.get(block).layers.len(), n_lh, "pool reused across models");
+            let b = g.store.get_mut(block);
+            b.refs += 1;
+            b.last_touch = now;
+            handle.blocks.push(block);
+            handle.parent = Some(node);
+        }
+        let matched = path.len() * bt;
+        PoolMetrics::add(&self.metrics.prefix_hits, 1);
+        PoolMetrics::add(&self.metrics.shared_tokens, matched as u64);
+        for lh in 0..n_lh {
+            let ks: Vec<&Matrix> =
+                handle.blocks.iter().map(|&b| &g.store.get(b).layers[lh].keys).collect();
+            let vs: Vec<&Matrix> =
+                handle.blocks.iter().map(|&b| &g.store.get(b).layers[lh].values).collect();
+            handle.kv.keys.push(Matrix::vcat(&ks));
+            handle.kv.values.push(Matrix::vcat(&vs));
+        }
+        handle.kv.len = matched;
+        handle
+    }
+
+    /// Register a sequence prefilled *from* a prefix hit: the handle's
+    /// blocks become the sequence's shared prefix mapping, and only the
+    /// tail caches — rows for the unmatched tokens, as returned by a
+    /// resumed prefill — are new storage. Consumes the handle (its
+    /// references transfer to the sequence, or are released on
+    /// rejection). Subject to the same admission control as
+    /// [`KvPool::register_prefill`], charged for the tail only.
+    pub fn register_resumed(
+        &self,
+        seq: u64,
+        tokens: &[u32],
+        handle: PrefixHandle,
+        tail_k: &[Matrix],
+        tail_v: &[Matrix],
+    ) -> Result<RegisterOutcome, AdmitError> {
+        let n_lh = tail_k.len();
+        assert!(n_lh > 0 && tail_v.len() == n_lh, "empty/mismatched caches");
+        let matched = handle.matched_tokens();
+        let n = tokens.len();
+        assert!(matched < n, "resume needs at least one tail token");
+        assert!(
+            tail_k.iter().chain(tail_v).all(|m| m.rows() == n - matched),
+            "tail cache rows must cover exactly the unmatched tokens"
+        );
+        if handle.is_hit() {
+            assert_eq!(handle.kv.keys.len(), n_lh, "handle/cache layer-head count mismatch");
+        }
+        let mut g = self.inner.lock().unwrap();
+        g.clock += 1;
+        let now = g.clock;
+        drop_seq_inner(&mut g, seq);
+        // tail rows start at token `matched`, so its row index is 0
+        self.seal_and_register(
+            &mut g, now, seq, tokens, handle.blocks, handle.parent, matched, tail_k, tail_v, 0,
+        )
+    }
+
+    /// Release a handle without registering a sequence (a lookup whose
+    /// admission was abandoned). Handles must come from this pool.
+    pub fn release_prefix(&self, handle: PrefixHandle) {
+        let mut g = self.inner.lock().unwrap();
+        for id in handle.blocks {
+            release_block(&mut g.store, id);
+        }
+    }
+
+    /// Admission + sealing + tail install, shared by the cold and
+    /// resumed registration paths. `k_rows`/`v_rows` hold the computed
+    /// cache rows, with token index `matched_tokens` living at row
+    /// `base` (cold prefill passes absolute rows with
+    /// `base = matched_tokens`; resumed prefill passes tail-only rows
+    /// with `base = 0`).
+    #[allow(clippy::too_many_arguments)]
+    fn seal_and_register(
+        &self,
+        g: &mut PoolInner,
+        now: u64,
+        seq: u64,
+        tokens: &[u32],
+        mut blocks: Vec<BlockId>,
+        mut parent: Option<usize>,
+        matched_tokens: usize,
+        k_rows: &[Matrix],
+        v_rows: &[Matrix],
+        base: usize,
+    ) -> Result<RegisterOutcome, AdmitError> {
+        let n = tokens.len();
+        let n_lh = k_rows.len();
+        let (d_k, d_v) = (k_rows[0].cols(), v_rows[0].cols());
+        let bt = self.cfg.block_tokens.max(1);
+        let row = |pos: usize| pos - matched_tokens + base;
+        let mut matched_tokens = matched_tokens;
+        let mut matched_blocks = blocks.len();
+
+        // Admission: everything past the matched prefix is new storage.
         let need = (n - matched_tokens) * n_lh * (d_k + d_v + 1);
         if self.cfg.budget_floats > 0 && g.store.used_floats() + need > self.cfg.budget_floats {
             // a prompt that can never fit (need alone exceeds the whole
@@ -310,7 +505,7 @@ impl KvPool {
             // live sequence without making the admission possible
             if need <= self.cfg.budget_floats {
                 let target = self.cfg.budget_floats - need;
-                evict::reclaim(&mut g, &self.cfg, self.compressor.as_ref(), &self.metrics, target);
+                evict::reclaim(g, &self.cfg, self.compressor.as_ref(), &self.metrics, target);
             }
             if g.store.used_floats() + need > self.cfg.budget_floats {
                 for id in blocks {
@@ -324,38 +519,52 @@ impl KvPool {
             }
         }
 
-        // 3. Seal the new full chunks as shared blocks under the matched
-        //    path, so the *next* request with this prefix hits them.
+        // Seal the new full chunks as shared blocks under the matched
+        // path, so the *next* request with this prefix hits them.
         let mut pos = matched_tokens;
         let mut new_blocks = 0;
         if self.cfg.prefix_sharing {
             while pos + bt <= n {
-                let chunk = tokens[pos..pos + bt].to_vec();
-                let layers = (0..n_lh)
-                    .map(|lh| BlockLayer {
-                        keys: k_cache[lh].slice_rows(pos, pos + bt),
-                        values: v_cache[lh].slice_rows(pos, pos + bt),
-                    })
-                    .collect();
-                let id = g.store.insert(Block {
-                    tokens: chunk.clone(),
-                    layers,
-                    refs: 1,
-                    in_tree: true,
-                    last_touch: now,
-                });
-                parent = Some(g.radix.insert(parent, chunk, id));
-                blocks.push(id);
-                new_blocks += 1;
+                let chunk = &tokens[pos..pos + bt];
+                if let Some(idx) = g.radix.child(parent, chunk) {
+                    // another registration sealed this chunk between a
+                    // lookup and this seal — map its block instead of
+                    // inserting a duplicate
+                    let id = g.radix.node_block(idx);
+                    let b = g.store.get_mut(id);
+                    b.refs += 1;
+                    b.last_touch = now;
+                    blocks.push(id);
+                    parent = Some(idx);
+                    matched_tokens += bt;
+                    matched_blocks += 1;
+                } else {
+                    let layers = (0..n_lh)
+                        .map(|lh| BlockLayer {
+                            keys: k_rows[lh].slice_rows(row(pos), row(pos) + bt),
+                            values: v_rows[lh].slice_rows(row(pos), row(pos) + bt),
+                        })
+                        .collect();
+                    let id = g.store.insert(Block {
+                        tokens: chunk.to_vec(),
+                        layers,
+                        refs: 1,
+                        in_tree: true,
+                        last_touch: now,
+                    });
+                    parent = Some(g.radix.insert(parent, chunk.to_vec(), id));
+                    blocks.push(id);
+                    new_blocks += 1;
+                }
                 pos += bt;
             }
         }
 
-        // 4. The partial remainder is the private tail.
+        // The partial remainder is the private tail.
         let tails: Vec<Tail> = (0..n_lh)
             .map(|lh| Tail {
-                keys: k_cache[lh].slice_rows(pos, n),
-                values: v_cache[lh].slice_rows(pos, n),
+                keys: k_rows[lh].slice_rows(row(pos), row(n)),
+                values: v_rows[lh].slice_rows(row(pos), row(n)),
                 weights: vec![1.0; n - pos],
                 logical: n - pos,
             })
@@ -447,10 +656,12 @@ impl KvPool {
         drop_seq_inner(&mut g, seq)
     }
 
+    /// Whether a sequence is currently registered.
     pub fn has_sequence(&self, seq: u64) -> bool {
         self.inner.lock().unwrap().seqs.contains_key(&seq)
     }
 
+    /// Physical/logical size accounting for one sequence.
     pub fn seq_stats(&self, seq: u64) -> Option<SeqStats> {
         let g = self.inner.lock().unwrap();
         let s = g.seqs.get(&seq)?;
@@ -466,6 +677,7 @@ impl KvPool {
         Some(st)
     }
 
+    /// Consistent point-in-time view of the ledger gauges and counters.
     pub fn snapshot(&self) -> PoolSnapshot {
         let g = self.inner.lock().unwrap();
         PoolSnapshot {
@@ -484,10 +696,12 @@ impl KvPool {
         }
     }
 
+    /// Bytes currently charged to the ledger (4 bytes per stored float).
     pub fn used_bytes(&self) -> usize {
         self.inner.lock().unwrap().store.used_floats() * 4
     }
 
+    /// High-water mark of [`KvPool::used_bytes`] since creation.
     pub fn peak_bytes(&self) -> usize {
         self.inner.lock().unwrap().store.peak_floats() * 4
     }
@@ -674,6 +888,104 @@ mod tests {
                 assert!(g[lh].2.iter().all(|&w| w == 1.0));
             }
         }
+    }
+
+    #[test]
+    fn lookup_then_resume_maps_blocks_and_stores_tail() {
+        let p = pool(KvPoolConfig { block_tokens: 8, ..Default::default() });
+        let a: Vec<u32> = (0..32).collect();
+        let (ka, va) = tagged_prefill(&a, 2, 4);
+        p.register_prefill(1, &a, &ka, &va).unwrap();
+
+        // b shares 20 tokens with a: only 2 full blocks (16 tokens)
+        // match — the boundary is NOT a multiple of block_tokens
+        let mut b = a.clone();
+        for t in b[20..].iter_mut() {
+            *t += 100;
+        }
+        let h = p.lookup_prefix(&b);
+        assert!(h.is_hit());
+        assert_eq!(h.matched_tokens(), 16);
+        assert_eq!(h.matched_blocks(), 2);
+        // materialised K/V equal the original prefill's rows
+        assert_eq!(h.kv.keys[0], ka[0].slice_rows(0, 16));
+        assert_eq!(h.kv.values[1], va[1].slice_rows(0, 16));
+
+        let (kb, vb) = tagged_prefill(&b, 2, 4);
+        let tail_k: Vec<Matrix> = kb.iter().map(|m| m.slice_rows(16, 32)).collect();
+        let tail_v: Vec<Matrix> = vb.iter().map(|m| m.slice_rows(16, 32)).collect();
+        let out = p.register_resumed(2, &b, h, &tail_k, &tail_v).unwrap();
+        assert_eq!(out.matched_tokens, 16);
+        assert_eq!(out.new_blocks, 2, "tokens 16..32 sealed as two new chunks");
+        // the gather reproduces b's own full prefill exactly
+        let g = p.gather(2).unwrap();
+        assert_eq!(g[0].0, kb[0]);
+        assert_eq!(g[1].1, vb[1]);
+        assert!(g[0].2.iter().all(|&w| w == 1.0));
+        let snap = p.snapshot();
+        assert_eq!(snap.prefix_hits, 1);
+        assert_eq!(snap.shared_tokens, 16);
+    }
+
+    #[test]
+    fn full_prompt_match_leaves_a_tail_token() {
+        let p = pool(KvPoolConfig { block_tokens: 8, ..Default::default() });
+        let a: Vec<u32> = (0..32).collect();
+        let (ka, va) = tagged_prefill(&a, 2, 4);
+        p.register_prefill(1, &a, &ka, &va).unwrap();
+        let h = p.lookup_prefix(&a);
+        assert_eq!(h.matched_tokens(), 24, "whole-prompt match must drop the last block");
+        let tail_k: Vec<Matrix> = ka.iter().map(|m| m.slice_rows(24, 32)).collect();
+        let tail_v: Vec<Matrix> = va.iter().map(|m| m.slice_rows(24, 32)).collect();
+        let out = p.register_resumed(2, &a, h, &tail_k, &tail_v).unwrap();
+        // the dropped block is rediscovered at seal time, not duplicated
+        assert_eq!(out.matched_tokens, 32);
+        assert_eq!(out.new_blocks, 0);
+        assert_eq!(p.snapshot().tree_blocks, 4);
+        let g = p.gather(2).unwrap();
+        assert_eq!(g[0].0, ka[0]);
+    }
+
+    #[test]
+    fn release_prefix_returns_block_references() {
+        let p = pool(KvPoolConfig { block_tokens: 8, ..Default::default() });
+        let a: Vec<u32> = (0..24).collect();
+        let (ka, va) = tagged_prefill(&a, 2, 4);
+        p.register_prefill(1, &a, &ka, &va).unwrap();
+        assert!(p.drop_sequence(1));
+        let mut b = a.clone();
+        b.extend([99, 98, 97]);
+        let h = p.lookup_prefix(&b);
+        assert_eq!(h.matched_tokens(), 24);
+        p.release_prefix(h);
+        // the blocks stayed cached in the tree and can be matched again
+        let h2 = p.lookup_prefix(&b);
+        assert_eq!(h2.matched_tokens(), 24);
+        p.release_prefix(h2);
+        let snap = p.snapshot();
+        assert_eq!(snap.tree_blocks, 3);
+        assert_eq!(snap.sequences, 0);
+    }
+
+    #[test]
+    fn lookup_miss_and_sharing_off_return_empty_handles() {
+        let p = pool(KvPoolConfig { block_tokens: 8, ..Default::default() });
+        let h = p.lookup_prefix(&[1, 2, 3, 4, 5, 6, 7, 8, 9]);
+        assert!(!h.is_hit());
+        assert_eq!(h.matched_tokens(), 0);
+        // a miss handle still registers like a cold prefill
+        let toks: Vec<u32> = (0..20).collect();
+        let (ks, vs) = tagged_prefill(&toks, 2, 4);
+        let out = p.register_resumed(1, &toks, h, &ks, &vs).unwrap();
+        assert_eq!(out.matched_tokens, 0);
+        assert_eq!(out.new_blocks, 2);
+        assert_eq!(p.gather(1).unwrap()[0].0, ks[0]);
+
+        let off = pool(KvPoolConfig { prefix_sharing: false, ..Default::default() });
+        off.register_prefill(1, &toks, &ks, &vs).unwrap();
+        let h = off.lookup_prefix(&toks);
+        assert!(!h.is_hit());
+        assert_eq!(off.snapshot().prefix_queries, 0, "sharing off: lookups are free");
     }
 
     #[test]

@@ -32,6 +32,7 @@ pub struct RadixIndex {
 }
 
 impl RadixIndex {
+    /// An empty index.
     pub fn new() -> Self {
         RadixIndex { nodes: Vec::new(), free: Vec::new(), root_children: HashMap::new(), len: 0 }
     }
@@ -41,6 +42,7 @@ impl RadixIndex {
         self.len
     }
 
+    /// Whether no blocks are indexed.
     pub fn is_empty(&self) -> bool {
         self.len == 0
     }
@@ -97,8 +99,21 @@ impl RadixIndex {
         idx
     }
 
+    /// Block owned by a node.
     pub fn node_block(&self, idx: usize) -> BlockId {
         self.node(idx).block
+    }
+
+    /// Direct child of `parent` (`None` = root) keyed by exactly `chunk`,
+    /// if one exists. Lets a seal that happens *after* a separate lookup
+    /// (the resumed-prefill path) detect chunks another registration
+    /// indexed in between, and reuse them instead of inserting duplicates.
+    pub fn child(&self, parent: Option<usize>, chunk: &[u32]) -> Option<usize> {
+        let children = match parent {
+            None => &self.root_children,
+            Some(p) => &self.node(p).children,
+        };
+        children.get(chunk).copied()
     }
 
     /// Indices of all leaf nodes (no children) — the only evictable ones.

@@ -61,6 +61,19 @@ fn pool_config_from_args(args: &Args) -> anyhow::Result<KvPoolConfig> {
     Ok(pool)
 }
 
+/// Shared `--prefill-skip on|off` parsing for the serving commands:
+/// whether admission resumes prefill from KV-pool prefix hits (computing
+/// only the unmatched tail) instead of recomputing the whole prompt.
+/// Defaults to on; only takes effect when the backend supports resumed
+/// prefill and `--prefix-sharing` is on.
+fn prefill_skip_from_args(args: &Args) -> anyhow::Result<bool> {
+    Ok(match args.get_or("prefill-skip", "on").as_str() {
+        "on" | "true" | "1" => true,
+        "off" | "false" | "0" => false,
+        other => anyhow::bail!("--prefill-skip: expected on/off, got {other:?}"),
+    })
+}
+
 fn print_pool_line(prefix: &str, s: &PoolSnapshot) {
     println!(
         "{prefix}kv pool: used {:.2} MiB (peak {:.2} MiB), prefix hit rate {:.0}%, \
@@ -111,7 +124,7 @@ fn cmd_info(args: &Args) -> anyhow::Result<()> {
 
 /// `wildcat cluster --replicas N --policy P [--rate R --duration D]
 /// [--shape stationary|onoff|gamma] [--fast] [--metrics-json PATH]
-/// [--kv-budget-mb MB --prefix-sharing on|off]`
+/// [--kv-budget-mb MB --prefix-sharing on|off --prefill-skip on|off]`
 ///
 /// Spawns a replica pool behind the chosen routing policy and replays a
 /// synthetic trace against it — at wall-clock rate by default, or in
@@ -133,6 +146,7 @@ fn cmd_cluster(args: &Args) -> anyhow::Result<()> {
     let mut cfg = ServerConfig::default();
     cfg.queue_capacity = queue_cap;
     cfg.scheduler.cache_budget = budget;
+    cfg.scheduler.prefill_skip = prefill_skip_from_args(args)?;
     cfg.pool = pool_config_from_args(args)?;
     cfg.seed = seed;
 
@@ -200,6 +214,7 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
 
     let mut cfg = ServerConfig::default();
     cfg.scheduler.cache_budget = budget;
+    cfg.scheduler.prefill_skip = prefill_skip_from_args(args)?;
     cfg.pool = pool_config_from_args(args)?;
     cfg.seed = seed;
 

@@ -14,7 +14,7 @@ pub mod transformer;
 pub mod weights;
 
 pub use generate::{greedy_decode, GenerateOutcome};
-pub use transformer::{ModelConfig, PrefillOutput, Transformer};
+pub use transformer::{CachedPrefix, ModelConfig, PrefillOutput, Transformer};
 pub use weights::WeightFile;
 
 use crate::linalg::Matrix;
@@ -30,6 +30,24 @@ pub trait ModelBackend {
     /// Causal prefill producing last-position logits and per-(layer, head)
     /// caches.
     fn prefill(&mut self, tokens: &[u32]) -> PrefillOutput;
+
+    /// Whether [`ModelBackend::prefill_from`] is implemented. Backends
+    /// that cannot seed attention from externally supplied K/V rows (the
+    /// fixed-shape PJRT artifacts) keep the default `false`, and the
+    /// scheduler falls back to cold prefill.
+    fn supports_prefill_resume(&self) -> bool {
+        false
+    }
+
+    /// Resume prefill from cached prefix K/V rows: run attention over
+    /// `tail` only, with tail queries attending across `cached` + new
+    /// keys, producing logits equivalent to a cold prefill of the full
+    /// prompt and tail-only caches. Only called when
+    /// [`ModelBackend::supports_prefill_resume`] is `true`.
+    fn prefill_from(&mut self, cached: &CachedPrefix, tail: &[u32]) -> PrefillOutput {
+        let _ = (cached, tail);
+        unimplemented!("backend does not support resumed prefill")
+    }
 
     /// One decode step over weighted caches (`caches[layer*H + head]`).
     /// Returns (logits, new_k rows, new_v rows) per (layer, head).
@@ -49,6 +67,14 @@ impl ModelBackend for Transformer {
 
     fn prefill(&mut self, tokens: &[u32]) -> PrefillOutput {
         Transformer::prefill(self, tokens)
+    }
+
+    fn supports_prefill_resume(&self) -> bool {
+        true
+    }
+
+    fn prefill_from(&mut self, cached: &CachedPrefix, tail: &[u32]) -> PrefillOutput {
+        Transformer::prefill_from(self, cached, tail)
     }
 
     fn decode(

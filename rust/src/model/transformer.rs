@@ -77,6 +77,27 @@ pub struct PrefillOutput {
     pub v_cache: Vec<Matrix>,
 }
 
+/// Per-(layer, head) K/V rows of an already-computed prompt prefix, the
+/// compute-side view of a KV-pool prefix hit. Feeding one to
+/// [`Transformer::prefill_from`] resumes prefill at position `len`
+/// instead of recomputing positions `0..len`.
+pub struct CachedPrefix {
+    /// Prompt tokens covered (absolute positions `0..len`).
+    pub len: usize,
+    /// Per-(layer, head) keys, each `len × d_head`, indexed
+    /// `layer * n_heads + head`.
+    pub keys: Vec<Matrix>,
+    /// Per-(layer, head) values, same indexing as `keys`.
+    pub values: Vec<Matrix>,
+}
+
+impl CachedPrefix {
+    /// The empty prefix — resuming from it is exactly a cold prefill.
+    pub fn empty() -> Self {
+        CachedPrefix { len: 0, keys: Vec::new(), values: Vec::new() }
+    }
+}
+
 impl Transformer {
     /// Load from a weights file exported by `make artifacts`.
     pub fn from_weights(w: &WeightFile, cfg: ModelConfig) -> Result<Self> {
@@ -138,13 +159,38 @@ impl Transformer {
     /// Causal prefill over `tokens`, producing logits at the last position
     /// and per-(layer, head) KV caches.
     pub fn prefill(&self, tokens: &[u32]) -> PrefillOutput {
-        let n = tokens.len();
+        self.prefill_impl(None, tokens)
+    }
+
+    /// Resume a causal prefill past a prefix whose K/V rows are already
+    /// known: embed only the `tail` (at absolute positions
+    /// `cached.len..`), and let each tail query attend across the cached
+    /// keys *and* the new ones. In a causal pass the tail rows depend on
+    /// the prefix only through its K/V rows, so this produces the same
+    /// logits as `prefill(prefix ++ tail)` while running attention over
+    /// the tail positions only. The returned caches are tail-only (rows
+    /// for positions `cached.len..cached.len + tail.len()`).
+    pub fn prefill_from(&self, cached: &CachedPrefix, tail: &[u32]) -> PrefillOutput {
+        if cached.len == 0 {
+            return self.prefill_impl(None, tail);
+        }
+        self.prefill_impl(Some(cached), tail)
+    }
+
+    fn prefill_impl(&self, cached: Option<&CachedPrefix>, tail: &[u32]) -> PrefillOutput {
         let cfg = &self.cfg;
-        assert!(n >= 1 && n <= cfg.max_len, "prefill length {n}");
+        let hist = cached.map_or(0, |c| c.len);
+        let n = tail.len();
+        assert!(n >= 1 && hist + n <= cfg.max_len, "prefill length {}", hist + n);
+        if let Some(c) = cached {
+            let n_lh = cfg.n_layers * cfg.n_heads;
+            assert_eq!(c.keys.len(), n_lh, "cached prefix (layer, head) count");
+            assert_eq!(c.values.len(), n_lh, "cached prefix (layer, head) count");
+        }
         let mut x = Matrix::zeros(n, cfg.d_model);
-        for (i, &t) in tokens.iter().enumerate() {
+        for (i, &t) in tail.iter().enumerate() {
             let e = self.embed.row(t as usize);
-            let p = self.pos_enc.row(i);
+            let p = self.pos_enc.row(hist + i);
             for (o, (a, b)) in x.row_mut(i).iter_mut().zip(e.iter().zip(p)) {
                 *o = a + b;
             }
@@ -152,7 +198,7 @@ impl Transformer {
         let mut k_cache = Vec::with_capacity(cfg.n_layers * cfg.n_heads);
         let mut v_cache = Vec::with_capacity(cfg.n_layers * cfg.n_heads);
         let beta = cfg.beta();
-        for lw in &self.layers {
+        for (l, lw) in self.layers.iter().enumerate() {
             let h = rmsnorm_mat(&x, &lw.ln1);
             let q = gemm::matmul(&h, &lw.wq);
             let k = gemm::matmul(&h, &lw.wk);
@@ -162,7 +208,16 @@ impl Transformer {
                 let qh = take_head(&q, head, cfg);
                 let kh = take_head(&k, head, cfg);
                 let vh = take_head(&v, head, cfg);
-                let oh = causal_attention(&qh, &kh, &vh, beta);
+                let oh = match cached {
+                    Some(c) => {
+                        let lh = l * cfg.n_heads + head;
+                        debug_assert_eq!(c.keys[lh].rows(), hist, "cached prefix row count");
+                        let ks = Matrix::vcat(&[&c.keys[lh], &kh]);
+                        let vs = Matrix::vcat(&[&c.values[lh], &vh]);
+                        causal_attention(&qh, &ks, &vs, beta, hist)
+                    }
+                    None => causal_attention(&qh, &kh, &vh, beta, 0),
+                };
                 put_head(&mut att, &oh, head, cfg);
                 k_cache.push(kh);
                 v_cache.push(vh);
@@ -341,15 +396,19 @@ fn put_head(out: &mut Matrix, h: &Matrix, head: usize, cfg: &ModelConfig) {
     }
 }
 
-/// Causal softmax attention (prefill path).
-fn causal_attention(q: &Matrix, k: &Matrix, v: &Matrix, beta: f32) -> Matrix {
+/// Causal softmax attention (prefill path). Query row `i` sits at
+/// absolute position `hist + i` and attends over key rows `0..=hist + i`
+/// — `k`/`v` carry all `hist + q.rows()` rows (history first), while `q`
+/// carries the tail only. `hist = 0` is the cold-prefill case.
+fn causal_attention(q: &Matrix, k: &Matrix, v: &Matrix, beta: f32, hist: usize) -> Matrix {
     let n = q.rows();
+    debug_assert_eq!(k.rows(), hist + n, "keys must cover history + tail");
     let dv = v.cols();
     let mut out = Matrix::zeros(n, dv);
     for i in 0..n {
         let qi = q.row(i);
         let mut mx = f32::NEG_INFINITY;
-        let logits: Vec<f32> = (0..=i)
+        let logits: Vec<f32> = (0..=hist + i)
             .map(|j| {
                 let l = beta * gemm::dot(qi, k.row(j));
                 if l > mx {
@@ -468,6 +527,38 @@ mod tests {
         for (a, b) in got.iter().zip(&base) {
             assert!((a - b).abs() < 1e-4, "{a} vs {b}");
         }
+    }
+
+    #[test]
+    fn resumed_prefill_matches_cold_at_any_split() {
+        let (t, cfg) = tiny();
+        let toks: Vec<u32> = (0..24).map(|i| ((i * 5 + 3) % 16) as u32).collect();
+        let cold = t.prefill(&toks);
+        for split in [1usize, 7, 16, 23] {
+            let part = t.prefill(&toks[..split]);
+            let cached =
+                CachedPrefix { len: split, keys: part.k_cache, values: part.v_cache };
+            let resumed = t.prefill_from(&cached, &toks[split..]);
+            for (a, b) in resumed.logits.iter().zip(&cold.logits) {
+                assert!((a - b).abs() < 1e-4, "split {split}: {a} vs {b}");
+            }
+            // tail caches line up with the cold pass row-for-row
+            for lh in 0..cfg.n_layers * cfg.n_heads {
+                assert_eq!(resumed.k_cache[lh].rows(), toks.len() - split);
+                for i in 0..toks.len() - split {
+                    for (a, b) in resumed.k_cache[lh]
+                        .row(i)
+                        .iter()
+                        .zip(cold.k_cache[lh].row(split + i))
+                    {
+                        assert!((a - b).abs() < 1e-4, "split {split} lh {lh} row {i}");
+                    }
+                }
+            }
+        }
+        // the empty prefix degenerates to a cold prefill exactly
+        let via_empty = t.prefill_from(&CachedPrefix::empty(), &toks);
+        assert_eq!(via_empty.logits, cold.logits);
     }
 
     #[test]

@@ -24,7 +24,7 @@ fn run_cluster(n_replicas: usize, policy: RoutingPolicy, seed: u64) -> ReplaySta
         // (all arrivals back-to-back) saturates a single replica
         queue_capacity: 8,
         max_prompt: 128,
-        scheduler: SchedulerConfig { cache_budget: 96, slack: 8 },
+        scheduler: SchedulerConfig { cache_budget: 96, slack: 8, ..Default::default() },
         ..Default::default()
     };
     let pool = ReplicaPool::spawn(n_replicas, cfg, Arc::new(StreamingLlm), |i| {

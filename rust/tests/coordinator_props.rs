@@ -31,7 +31,7 @@ fn prop_no_request_lost_or_duplicated() {
         let n_req = 3 + rng.below(8);
         let mut sched = Scheduler::new(
             tiny_model(7),
-            SchedulerConfig { cache_budget: 64, slack: 8 },
+            SchedulerConfig { cache_budget: 64, slack: 8, ..Default::default() },
             Arc::new(StreamingLlm),
             Arc::new(ServingMetrics::new()),
             rng.next_u64(),
@@ -71,7 +71,7 @@ fn prop_cache_budget_never_exceeded() {
         let slack = 8;
         let mut sched = Scheduler::new(
             tiny_model(9),
-            SchedulerConfig { cache_budget: budget, slack },
+            SchedulerConfig { cache_budget: budget, slack, ..Default::default() },
             Arc::new(StreamingLlm),
             Arc::new(ServingMetrics::new()),
             rng.next_u64(),
@@ -175,7 +175,7 @@ fn prop_cluster_router_answers_or_rejects_exactly_once() {
         let cfg = ServerConfig {
             queue_capacity: 2 + rng.below(8),
             max_prompt: 128,
-            scheduler: SchedulerConfig { cache_budget: 96, slack: 8 },
+            scheduler: SchedulerConfig { cache_budget: 96, slack: 8, ..Default::default() },
             ..Default::default()
         };
         let pool = ReplicaPool::spawn(n_replicas, cfg, Arc::new(StreamingLlm), |i| {
@@ -228,7 +228,7 @@ fn server_end_to_end_under_load() {
     let cfg = ServerConfig {
         queue_capacity: 64,
         max_prompt: 512,
-        scheduler: SchedulerConfig { cache_budget: 96, slack: 16 },
+        scheduler: SchedulerConfig { cache_budget: 96, slack: 16, ..Default::default() },
         ..Default::default()
     };
     let handle = Server::spawn(cfg, Arc::new(UniformKv), || tiny_model(21));

@@ -4,6 +4,10 @@
 //! * on the fixed-seed shared-prefix smoke trace, enabling prefix
 //!   sharing cuts bytes-per-token by at least 30% versus sharing
 //!   disabled;
+//! * prefill skipping (PR-6) rides on the same trace: the sharing-on
+//!   runs resume from prefix hits and compute at least 30% fewer prompt
+//!   tokens than sharing-off (token-level equivalence is pinned by
+//!   `rust/tests/prefill_resume.rs`);
 //! * a tight pool budget (60% of the sharing-on peak) completes the same
 //!   trace with **zero** admission rejections — the pressure ladder
 //!   (compress cold sequences, evict cached prefix blocks) absorbs the
@@ -73,6 +77,25 @@ fn kvpool_bench_prefix_sharing_and_graceful_degradation() {
     assert!(num(on_loose, "prefix_hit_rate") > 0.5, "most admissions should hit the prefix tree");
     assert_eq!(num(off_loose, "prefix_hit_rate"), 0.0);
 
+    // 1b. prefill skipping: sharing-on resumes from the hits and computes
+    //     >= 30% fewer prompt tokens (smoke trace: 4 cold roots of 88
+    //     tokens + 20 resumed tails of 24 = 832, vs 24 x 88 = 2112 cold)
+    let pc_on = num(on_loose, "prefill_tokens_computed");
+    let pc_off = num(off_loose, "prefill_tokens_computed");
+    assert!(
+        pc_on <= 0.7 * pc_off,
+        "resume saved too little prefill compute: {pc_on} vs {pc_off} tokens"
+    );
+    assert!(num(on_loose, "prefill_tokens_skipped") > 0.0);
+    assert_eq!(
+        num(off_loose, "prefill_tokens_skipped"),
+        0.0,
+        "nothing to skip with sharing off"
+    );
+    // the split never loses prompt tokens: computed + skipped is the
+    // same total the cold run computes outright
+    assert_eq!(pc_on + num(on_loose, "prefill_tokens_skipped"), pc_off);
+
     // 2. the tight budget degrades gracefully: full completion, zero
     //    rejections, with the pressure absorbed by the ladder tiers
     for (name, r) in [("on_tight", on_tight), ("off_tight", off_tight)] {
@@ -108,7 +131,7 @@ fn budgeted_server_serves_shared_prefix_burst() {
     // one uncompressed 48-token sequence = 48 tokens * 4 lh * 17 floats
     let per_seq = 48 * 4 * 17;
     let cfg = ServerConfig {
-        scheduler: SchedulerConfig { cache_budget: 1000, slack: 8 },
+        scheduler: SchedulerConfig { cache_budget: 1000, slack: 8, ..Default::default() },
         pool: KvPoolConfig {
             budget_floats: 3 * per_seq,
             block_tokens: 8,

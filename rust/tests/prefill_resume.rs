@@ -1,0 +1,156 @@
+//! Scheduler-level acceptance for prefill skipping (the PR-6 tentpole):
+//!
+//! * with `prefill_skip` on, admissions that hit the KV-pool radix index
+//!   resume prefill from the cached rows — the generated tokens are
+//!   *identical* to a cold run (the resumed tail is arithmetic-identical
+//!   to the corresponding rows of a full causal prefill);
+//! * `prefill_tokens_skipped` is positive under prefix sharing and the
+//!   skipped + computed split accounts for every prompt token;
+//! * the counter stays **zero** when prefill skipping is disabled, and
+//!   when prefix sharing is off (the resume gate falls back to cold
+//!   prefill rather than querying a disabled index).
+//!
+//! The trace uses 37-token roots over 8-token blocks, so every resume
+//! boundary falls mid-block, plus one exact-duplicate prompt pair to
+//! exercise the whole-prompt-match path (the lookup must leave at least
+//! one tail token to compute).
+
+use std::sync::Arc;
+use wildcat::coordinator::{
+    Batcher, BatcherConfig, Request, Response, Scheduler, SchedulerConfig, ServingMetrics,
+};
+use wildcat::kvcache::{KvCompressor, UniformKv};
+use wildcat::kvpool::{KvPool, KvPoolConfig, PoolSnapshot};
+use wildcat::model::{ModelConfig, Transformer};
+use wildcat::rng::Rng;
+
+const BLOCK_TOKENS: usize = 8;
+const ROOT_LEN: usize = 37; // deliberately not a multiple of BLOCK_TOKENS
+const SUFFIX_LEN: usize = 9;
+const MAX_NEW: usize = 4;
+
+fn tiny_cfg() -> ModelConfig {
+    ModelConfig { vocab: 16, d_model: 16, n_layers: 2, n_heads: 2, d_ff: 32, max_len: 256 }
+}
+
+/// Same weights every call: both sides of an equivalence comparison must
+/// run the identical model.
+fn model() -> Transformer {
+    Transformer::random(tiny_cfg(), &mut Rng::seed_from(42))
+}
+
+/// Eight prompts: two roots served three times each (unique suffixes),
+/// then one prompt submitted twice verbatim.
+fn shared_prefix_prompts() -> Vec<Vec<u32>> {
+    let root = |s: u32| (0..ROOT_LEN as u32).map(|j| (s + j) % 16).collect::<Vec<u32>>();
+    let mut prompts = Vec::new();
+    for r in 0..2u32 {
+        for i in 0..3u32 {
+            let mut p = root(5 * r);
+            p.extend((0..SUFFIX_LEN as u32).map(|j| (3 + r + 7 * i + j) % 16));
+            prompts.push(p);
+        }
+    }
+    let mut dup = root(11);
+    dup.extend((0..SUFFIX_LEN as u32).map(|j| (j * 5) % 16));
+    prompts.push(dup.clone());
+    prompts.push(dup);
+    prompts
+}
+
+struct RunOut {
+    responses: Vec<Response>,
+    computed: u64,
+    skipped: u64,
+    snap: PoolSnapshot,
+}
+
+/// Replay the fixed trace through a standalone scheduler and collect the
+/// generated tokens plus the prefill accounting.
+fn run_trace(prefill_skip: bool, prefix_sharing: bool) -> RunOut {
+    let pool = Arc::new(KvPool::new(
+        KvPoolConfig { block_tokens: BLOCK_TOKENS, prefix_sharing, ..Default::default() },
+        Arc::new(UniformKv) as Arc<dyn KvCompressor>,
+    ));
+    let metrics = Arc::new(ServingMetrics::new());
+    let mut s = Scheduler::with_pool(
+        model(),
+        SchedulerConfig { cache_budget: 1000, slack: 8, prefill_skip },
+        metrics.clone(),
+        7,
+        pool,
+    );
+    let batcher = Batcher::new(BatcherConfig::default());
+    let reqs: Vec<Request> = shared_prefix_prompts()
+        .into_iter()
+        .enumerate()
+        .map(|(i, p)| Request::new(i as u64, p, MAX_NEW))
+        .collect();
+    let n_req = reqs.len();
+    let mut responses = s.run_to_completion(reqs, &batcher);
+    responses.sort_by_key(|r| r.id);
+    assert_eq!(responses.len(), n_req, "every request answered exactly once");
+    assert!(
+        responses.iter().all(|r| r.tokens.len() == MAX_NEW),
+        "no request may be pool-rejected on an unbounded budget"
+    );
+    let c = metrics.counters();
+    let snap = s.pool().snapshot();
+    RunOut {
+        responses,
+        computed: c.prefill_tokens_computed,
+        skipped: c.prefill_tokens_skipped,
+        snap,
+    }
+}
+
+#[test]
+fn resumed_prefill_generates_identical_tokens() {
+    let resumed = run_trace(true, true);
+    let cold = run_trace(false, true);
+    let unshared = run_trace(true, false);
+    for ((a, b), c) in resumed.responses.iter().zip(&cold.responses).zip(&unshared.responses) {
+        assert_eq!(a.id, b.id);
+        assert_eq!(
+            a.tokens, b.tokens,
+            "request {}: resumed prefill diverged from cold prefill",
+            a.id
+        );
+        assert_eq!(a.tokens, c.tokens, "request {}: sharing=off diverged", a.id);
+    }
+}
+
+#[test]
+fn skipped_tokens_are_counted_and_account_for_every_prompt_token() {
+    let total: u64 = shared_prefix_prompts().iter().map(|p| p.len() as u64).sum();
+    let out = run_trace(true, true);
+    assert!(out.skipped > 0, "shared roots never resumed from the prefix index");
+    assert!(out.computed < total, "resume never saved any prefill compute");
+    assert_eq!(
+        out.computed + out.skipped,
+        total,
+        "prompt tokens lost by the computed/skipped split"
+    );
+    // the acceptance floor: >= 30% of prompt tokens skipped on this trace
+    // (expected: 4 root hits x 32 tokens + 1 duplicate hit x 40 = 168/368)
+    assert!(
+        out.skipped as f64 >= 0.3 * total as f64,
+        "only {}/{total} prompt tokens skipped",
+        out.skipped
+    );
+    // skipping rides on the radix index: hits and shared tokens agree
+    assert!(out.snap.prefix_hits > 0);
+    assert!(out.snap.shared_tokens > 0);
+}
+
+#[test]
+fn skipping_disabled_or_sharing_off_computes_every_token() {
+    let total: u64 = shared_prefix_prompts().iter().map(|p| p.len() as u64).sum();
+    for (name, out) in [
+        ("prefill_skip=false", run_trace(false, true)),
+        ("prefix_sharing=false", run_trace(true, false)),
+    ] {
+        assert_eq!(out.skipped, 0, "{name}: tokens skipped with resume unavailable");
+        assert_eq!(out.computed, total, "{name}: cold prefill must compute the whole prompt");
+    }
+}
