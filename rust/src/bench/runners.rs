@@ -960,6 +960,41 @@ pub fn run_micro(cfg: &RunCfg) -> Result<BenchReport> {
     ]);
     report.push(BenchRecord::new("metrics 1000 submits", r.median()));
 
+    // tracer overhead: the always-compiled disabled path (one relaxed
+    // load + branch per site) vs enabled recording into the ring;
+    // median_ns is per event, not per batch
+    let tracer = crate::obs::trace::Tracer::new(crate::obs::trace::DEFAULT_CAPACITY);
+    let ev = crate::obs::trace::Event {
+        ts_us: 1,
+        dur_us: 2,
+        kind: crate::obs::SpanKind::DecodeStep,
+        replica: 0,
+        req: 7,
+        a: 1,
+        b: 0,
+    };
+    let batch = 1024u32;
+    let r_off = bench("tracer record (off)", opts, || {
+        for _ in 0..batch {
+            tracer.record(ev);
+        }
+    });
+    tracer.enable_with_capacity(crate::obs::trace::DEFAULT_CAPACITY);
+    let r_on = bench("tracer record (on)", opts, || {
+        for _ in 0..batch {
+            tracer.record(ev);
+        }
+    });
+    for (name, r) in [("tracer_record_off", &r_off), ("tracer_record_on", &r_on)] {
+        let per_event = r.median() / batch as f64;
+        table.add_row(vec![
+            format!("{name} x{batch}"),
+            format!("{:.3} ms", r.median() * 1e3),
+            format!("{:.1} ns/event", per_event * 1e9),
+        ]);
+        report.push(BenchRecord::new(name, per_event).extra("events_per_s", 1.0 / per_event));
+    }
+
     table.print();
     Ok(report)
 }

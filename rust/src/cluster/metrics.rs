@@ -44,6 +44,13 @@ pub struct ClusterSnapshot {
     /// Prompt tokens skipped via KV-pool prefix hits, summed over
     /// replicas (see `prefill_tokens_computed` for provenance).
     pub prefill_tokens_skipped: u64,
+    /// Admissions that resumed from a prefix hit, summed over replicas
+    /// (request-level counterpart of the token counters; same
+    /// provenance as `prefill_tokens_computed`).
+    pub prefix_hits: u64,
+    /// Admissions that prefilled cold, summed over replicas (same
+    /// provenance as `prefill_tokens_computed`).
+    pub prefix_misses: u64,
 }
 
 impl ClusterSnapshot {
@@ -140,6 +147,8 @@ impl ClusterMetrics {
             kv_bytes_peak: 0,
             prefill_tokens_computed: 0,
             prefill_tokens_skipped: 0,
+            prefix_hits: 0,
+            prefix_misses: 0,
         }
     }
 

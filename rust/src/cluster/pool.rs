@@ -35,6 +35,7 @@ impl ReplicaPool {
             .map(|i| {
                 let mut rcfg = cfg.clone();
                 rcfg.seed = cfg.seed.wrapping_add(i as u64);
+                rcfg.replica = i as u32;
                 let f = factory.clone();
                 Server::spawn(rcfg, compressor.clone(), move || (*f)(i))
             })

@@ -21,6 +21,7 @@ use crate::coordinator::admission::RejectReason;
 use crate::coordinator::request::{RequestId, Response};
 use crate::coordinator::ServerClient;
 use crate::kvpool::{aggregate_snapshots, PoolSnapshot};
+use crate::obs::trace::{self, SpanKind, NO_REQ, ROUTE_REJECTED};
 use crate::rng::splitmix64;
 use crate::util::json::Json;
 use std::collections::BTreeMap;
@@ -162,6 +163,8 @@ impl Router {
             let counters = c.metrics().counters();
             s.prefill_tokens_computed += counters.prefill_tokens_computed;
             s.prefill_tokens_skipped += counters.prefill_tokens_skipped;
+            s.prefix_hits += counters.prefix_hits;
+            s.prefix_misses += counters.prefix_misses;
         }
         s
     }
@@ -189,6 +192,9 @@ impl Router {
         let order = self.candidate_order(session);
         let mut last = RejectReason::QueueFull;
         let mut tokens = Some(tokens);
+        // route span: decision start → accept/reject, tagged with the
+        // attempt count and the landing replica (or ROUTE_REJECTED)
+        let t0 = if trace::enabled() { Some(Instant::now()) } else { None };
         for (attempt, &i) in order.iter().enumerate() {
             if attempt > 0 {
                 self.metrics.on_reroute();
@@ -204,6 +210,11 @@ impl Router {
                 Ok((id, rx)) => {
                     self.health[i].on_accept();
                     self.metrics.on_routed(i);
+                    if let Some(t0) = t0 {
+                        let attempts = attempt as u64 + 1;
+                        let now = Instant::now();
+                        trace::span_on(i as u32, SpanKind::Route, t0, now, id, attempts, i as u64);
+                    }
                     return Ok(RoutedRequest {
                         replica: i,
                         id,
@@ -216,6 +227,19 @@ impl Router {
                     // deterministic across identically-configured
                     // replicas: re-routing cannot help
                     self.metrics.on_reject();
+                    if let Some(t0) = t0 {
+                        let attempts = attempt as u64 + 1;
+                        let now = Instant::now();
+                        trace::span_on(
+                            0,
+                            SpanKind::Route,
+                            t0,
+                            now,
+                            NO_REQ,
+                            attempts,
+                            ROUTE_REJECTED,
+                        );
+                    }
                     return Err(reason);
                 }
                 Err(reason) => {
@@ -225,6 +249,11 @@ impl Router {
             }
         }
         self.metrics.on_reject();
+        if let Some(t0) = t0 {
+            let attempts = order.len() as u64;
+            let now = Instant::now();
+            trace::span_on(0, SpanKind::Route, t0, now, NO_REQ, attempts, ROUTE_REJECTED);
+        }
         Err(last)
     }
 
@@ -292,13 +321,18 @@ impl Router {
         // serving counters; per-replica values appear in each replica
         // block below)
         let (mut computed, mut skipped) = (0u64, 0u64);
+        let (mut hits, mut misses) = (0u64, 0u64);
         for c in &self.clients {
             let counters = c.metrics().counters();
             computed += counters.prefill_tokens_computed;
             skipped += counters.prefill_tokens_skipped;
+            hits += counters.prefix_hits;
+            misses += counters.prefix_misses;
         }
         o.insert("prefill_tokens_computed".to_string(), Json::Num(computed as f64));
         o.insert("prefill_tokens_skipped".to_string(), Json::Num(skipped as f64));
+        o.insert("prefix_hits".to_string(), Json::Num(hits as f64));
+        o.insert("prefix_misses".to_string(), Json::Num(misses as f64));
         let replicas: Vec<Json> = self
             .clients
             .iter()
@@ -319,6 +353,66 @@ impl Router {
             .collect();
         o.insert("replicas".to_string(), Json::Arr(replicas));
         Json::Obj(o)
+    }
+
+    /// Cluster-wide Prometheus text exposition (format 0.0.4): the
+    /// router counters and end-to-end quantiles, plus every replica's
+    /// serving and KV-pool metrics labeled `replica="i"` — the scrape
+    /// counterpart of [`Router::metrics_json`].
+    pub fn to_prometheus(&self) -> String {
+        let mut b = crate::obs::PromBuilder::new();
+        let s = self.metrics.snapshot();
+        b.declare(
+            "wildcat_cluster_routed_total",
+            "counter",
+            "Requests accepted by a replica, by landing replica.",
+        );
+        for i in 0..self.clients.len() {
+            let label = i.to_string();
+            b.sample(
+                "wildcat_cluster_routed_total",
+                &[("replica", label.as_str())],
+                self.metrics.routed_to(i) as f64,
+            );
+        }
+        let totals: [(&str, &str, u64); 3] = [
+            (
+                "wildcat_cluster_rejected_total",
+                "Requests rejected by every replica.",
+                s.rejected,
+            ),
+            (
+                "wildcat_cluster_rerouted_total",
+                "Re-route attempts after a replica refused.",
+                s.rerouted,
+            ),
+            (
+                "wildcat_cluster_completed_total",
+                "Responses received by awaiting callers.",
+                s.completed,
+            ),
+        ];
+        for (name, help, v) in totals {
+            b.declare(name, "counter", help);
+            b.sample(name, &[], v as f64);
+        }
+        b.declare(
+            "wildcat_cluster_e2e_latency_ms",
+            "gauge",
+            "Cluster end-to-end latency quantiles in milliseconds.",
+        );
+        for (q, v) in [("0.5", s.p50_ms), ("0.95", s.p95_ms), ("0.99", s.p99_ms)] {
+            b.sample("wildcat_cluster_e2e_latency_ms", &[("quantile", q)], v);
+        }
+        for (i, c) in self.clients.iter().enumerate() {
+            let label = i.to_string();
+            let labels = [("replica", label.as_str())];
+            c.metrics().prom_write(&mut b, &labels);
+            c.pool_snapshot().prom_write(&mut b, &labels);
+            b.declare("wildcat_queue_depth", "gauge", "Requests waiting in the replica queue.");
+            b.sample("wildcat_queue_depth", &labels, c.queue_depth() as f64);
+        }
+        b.finish()
     }
 }
 
@@ -456,6 +550,15 @@ mod tests {
         // document parses back (fixed point)
         let text = j.to_string_compact();
         assert_eq!(crate::util::json::parse(&text).unwrap(), j);
+        // cluster-wide prefix counters are present and consistent
+        let hits = j.get("prefix_hits").and_then(Json::as_f64).unwrap();
+        let misses = j.get("prefix_misses").and_then(Json::as_f64).unwrap();
+        assert_eq!(hits + misses, 1.0, "one admission must be a hit or a miss");
+        // Prometheus exposition carries the router counters per replica
+        let prom = router.to_prometheus();
+        assert!(prom.contains("wildcat_cluster_completed_total 1\n"), "prom:\n{prom}");
+        assert!(prom.contains("wildcat_cluster_routed_total{replica=\"0\"}"), "prom:\n{prom}");
+        assert!(prom.contains("wildcat_kv_pool_bytes{replica=\"1\",state=\"peak\"}"));
         pool.shutdown();
     }
 }

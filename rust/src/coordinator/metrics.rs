@@ -28,6 +28,13 @@ pub struct Counters {
     /// Prompt tokens served from KV-pool prefix hits instead of being
     /// recomputed (prefill skipping).
     pub prefill_tokens_skipped: u64,
+    /// Admissions whose prompt resumed from a KV-pool prefix match
+    /// (request-level hit counterpart of the token-level counters
+    /// above, from which a per-request hit *rate* is not recoverable).
+    pub prefix_hits: u64,
+    /// Admissions that prefilled cold (no usable prefix match, or
+    /// prefix sharing / prefill skipping disabled).
+    pub prefix_misses: u64,
     /// Layer-head cache compressions performed by the scheduler.
     pub compressions: u64,
 }
@@ -116,10 +123,17 @@ impl ServingMetrics {
     /// through the backend, `skipped` were seeded from cached prefix KV
     /// rows. Recorded for every admission, including rejected ones (the
     /// compute has already happened by the time admission can reject).
+    /// Also tallies the request-level prefix hit/miss pair: an admission
+    /// counts as a hit iff any prompt token was skipped.
     pub fn on_prefill(&self, computed: usize, skipped: usize) {
         let mut g = self.inner.lock().unwrap();
         g.counters.prefill_tokens_computed += computed as u64;
         g.counters.prefill_tokens_skipped += skipped as u64;
+        if skipped > 0 {
+            g.counters.prefix_hits += 1;
+        } else {
+            g.counters.prefix_misses += 1;
+        }
     }
 
     /// Record `n` cache compressions.
@@ -181,6 +195,8 @@ impl ServingMetrics {
             "prefill_tokens_skipped".to_string(),
             Json::Num(c.prefill_tokens_skipped as f64),
         );
+        o.insert("prefix_hits".to_string(), Json::Num(c.prefix_hits as f64));
+        o.insert("prefix_misses".to_string(), Json::Num(c.prefix_misses as f64));
         o.insert("tokens_generated".to_string(), Json::Num(c.tokens_generated as f64));
         o.insert("compressions".to_string(), Json::Num(c.compressions as f64));
         o.insert("in_flight".to_string(), Json::Num(c.in_flight() as f64));
@@ -198,6 +214,108 @@ impl ServingMetrics {
         Json::Obj(o)
     }
 
+    /// Write this replica's metrics into a Prometheus text-exposition
+    /// builder, attaching `labels` (e.g. `[("replica", "2")]`) to every
+    /// sample. Shared by [`ServingMetrics::to_prometheus`] and the
+    /// cluster router's aggregated exposition.
+    pub fn prom_write(&self, b: &mut crate::obs::PromBuilder, labels: &[(&str, &str)]) {
+        let g = self.inner.lock().unwrap();
+        let c = g.counters;
+        let counters: [(&str, &str, u64); 8] = [
+            (
+                "wildcat_requests_submitted_total",
+                "Requests submitted (accepted or not).",
+                c.submitted,
+            ),
+            (
+                "wildcat_requests_rejected_total",
+                "Requests rejected (backpressure or pool admission).",
+                c.rejected,
+            ),
+            (
+                "wildcat_requests_completed_total",
+                "Requests answered with a full generation.",
+                c.completed,
+            ),
+            (
+                "wildcat_tokens_generated_total",
+                "Decode tokens produced across completed requests.",
+                c.tokens_generated,
+            ),
+            (
+                "wildcat_prefill_tokens_total",
+                "Prompt tokens of completed requests.",
+                c.prefill_tokens,
+            ),
+            (
+                "wildcat_prefill_tokens_computed_total",
+                "Prompt tokens actually computed at admission.",
+                c.prefill_tokens_computed,
+            ),
+            (
+                "wildcat_prefill_tokens_skipped_total",
+                "Prompt tokens resumed from KV-pool prefix hits.",
+                c.prefill_tokens_skipped,
+            ),
+            (
+                "wildcat_compressions_total",
+                "Layer-head cache compressions by the scheduler.",
+                c.compressions,
+            ),
+        ];
+        for (name, help, v) in counters {
+            b.declare(name, "counter", help);
+            b.sample(name, labels, v as f64);
+        }
+        b.declare(
+            "wildcat_prefix_requests_total",
+            "counter",
+            "Admissions by request-level prefix-cache outcome.",
+        );
+        for (outcome, v) in [("hit", c.prefix_hits), ("miss", c.prefix_misses)] {
+            let mut ls = labels.to_vec();
+            ls.push(("outcome", outcome));
+            b.sample("wildcat_prefix_requests_total", &ls, v as f64);
+        }
+        b.declare("wildcat_in_flight", "gauge", "Requests accepted but not yet completed.");
+        b.sample("wildcat_in_flight", labels, c.in_flight() as f64);
+        let gauges: [(&str, &str, f64); 3] = [
+            ("wildcat_queue_us_mean", "Mean admission-queue wait (us).", g.queue_us.mean()),
+            ("wildcat_prefill_us_mean", "Mean prefill latency (us).", g.prefill_us.mean()),
+            (
+                "wildcat_decode_us_per_token_mean",
+                "Mean decode latency per generated token (us).",
+                g.decode_per_token_us.mean(),
+            ),
+        ];
+        for (name, help, v) in gauges {
+            b.declare(name, "gauge", help);
+            b.sample(name, labels, v);
+        }
+        b.declare("wildcat_e2e_latency_ms", "gauge", "End-to-end request latency quantiles (ms).");
+        for (q, v) in [("0.5", g.e2e_us.quantile(0.5)), ("0.99", g.e2e_us.quantile(0.99))] {
+            let mut ls = labels.to_vec();
+            ls.push(("quantile", q));
+            b.sample("wildcat_e2e_latency_ms", &ls, v / 1e3);
+        }
+        b.declare("wildcat_kv_bytes", "gauge", "KV pool ledger bytes (current and peak).");
+        for (state, v) in [("current", g.kv_bytes_current), ("peak", g.kv_bytes_peak)] {
+            let mut ls = labels.to_vec();
+            ls.push(("state", state));
+            b.sample("wildcat_kv_bytes", &ls, v as f64);
+        }
+        b.declare("wildcat_uptime_seconds", "gauge", "Seconds since this metrics sink started.");
+        b.sample("wildcat_uptime_seconds", labels, g.started.elapsed().as_secs_f64());
+    }
+
+    /// Single-replica Prometheus text exposition (format 0.0.4); the
+    /// cluster-wide aggregation lives on `cluster::Router`.
+    pub fn to_prometheus(&self) -> String {
+        let mut b = crate::obs::PromBuilder::new();
+        self.prom_write(&mut b, &[]);
+        b.finish()
+    }
+
     /// Render a human-readable report block.
     pub fn report(&self) -> String {
         let g = self.inner.lock().unwrap();
@@ -206,7 +324,7 @@ impl ServingMetrics {
         format!(
             "requests: submitted={} rejected={} completed={}\n\
              tokens:   prefill={} generated={} ({:.1} tok/s decode)\n\
-             prefill skipping: computed={} skipped={}\n\
+             prefill skipping: computed={} skipped={} (prefix hits={} misses={})\n\
              queue:    mean {:.1} us (max {:.1})\n\
              prefill:  mean {:.2} ms (max {:.2})\n\
              decode:   mean {:.2} ms/token\n\
@@ -221,6 +339,8 @@ impl ServingMetrics {
             c.tokens_generated as f64 / dt,
             c.prefill_tokens_computed,
             c.prefill_tokens_skipped,
+            c.prefix_hits,
+            c.prefix_misses,
             g.queue_us.mean(),
             if g.queue_us.count() > 0 { g.queue_us.max() } else { 0.0 },
             g.prefill_us.mean() / 1e3,
@@ -297,6 +417,53 @@ mod tests {
         assert_eq!(j.get("kv_bytes_current").and_then(Json::as_f64), Some(400.0));
         assert_eq!(j.get("kv_bytes_peak").and_then(Json::as_f64), Some(1500.0));
         assert!(m.report().contains("kv pool"));
+    }
+
+    #[test]
+    fn prefix_hit_miss_pair_counts_requests() {
+        let m = ServingMetrics::new();
+        m.on_prefill(64, 0); // cold
+        m.on_prefill(8, 56); // resumed from a prefix hit
+        m.on_prefill(1, 63); // resumed
+        let c = m.counters();
+        assert_eq!(c.prefix_hits, 2);
+        assert_eq!(c.prefix_misses, 1);
+        assert_eq!(c.prefill_tokens_computed, 73);
+        assert_eq!(c.prefill_tokens_skipped, 119);
+        let j = m.to_json();
+        assert_eq!(j.get("prefix_hits").and_then(Json::as_f64), Some(2.0));
+        assert_eq!(j.get("prefix_misses").and_then(Json::as_f64), Some(1.0));
+        assert!(m.report().contains("prefix hits=2 misses=1"));
+    }
+
+    #[test]
+    fn prometheus_exposition_shape() {
+        let m = ServingMetrics::new();
+        m.on_submit();
+        m.on_complete(
+            Duration::from_micros(100),
+            Duration::from_millis(5),
+            Duration::from_millis(10),
+            64,
+            8,
+        );
+        m.on_prefill(32, 32);
+        m.set_kv_bytes(1024, 2048);
+        let text = m.to_prometheus();
+        assert!(text.contains("# TYPE wildcat_requests_submitted_total counter"));
+        assert!(text.contains("wildcat_requests_submitted_total 1\n"));
+        assert!(text.contains("wildcat_tokens_generated_total 8\n"));
+        assert!(text.contains("wildcat_prefix_requests_total{outcome=\"hit\"} 1\n"));
+        assert!(text.contains("wildcat_prefix_requests_total{outcome=\"miss\"} 0\n"));
+        assert!(text.contains("wildcat_kv_bytes{state=\"peak\"} 2048\n"));
+        assert!(text.contains("wildcat_e2e_latency_ms{quantile=\"0.5\"}"));
+        // labeled variant used by the cluster aggregation
+        let mut b = crate::obs::PromBuilder::new();
+        m.prom_write(&mut b, &[("replica", "3")]);
+        let labeled = b.finish();
+        assert!(labeled.contains("wildcat_requests_submitted_total{replica=\"3\"} 1\n"));
+        let want = "wildcat_prefix_requests_total{replica=\"3\",outcome=\"hit\"} 1\n";
+        assert!(labeled.contains(want));
     }
 
     #[test]

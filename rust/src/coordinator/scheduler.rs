@@ -14,6 +14,7 @@ use crate::kvcache::{CacheManager, KvCompressor};
 use crate::kvpool::{KvPool, KvPoolConfig};
 use crate::linalg::Matrix;
 use crate::model::{generate::argmax, ModelBackend};
+use crate::obs::trace::{self, SpanKind};
 use crate::rng::Rng;
 use std::sync::Arc;
 use std::time::Instant;
@@ -48,6 +49,11 @@ struct SeqState {
     pos: usize,
     timing: RequestTiming,
     decode_started: Instant,
+    // End of the last span traced on this sequence's lane (prefill end,
+    // then each decode step): decode_step spans tile the window from
+    // decode start to retirement with no gaps, so a request's lifecycle
+    // spans sum to its recorded e2e latency.
+    last_span_end: Instant,
 }
 
 /// The scheduler: owns the backend and active sequence set.
@@ -109,6 +115,12 @@ impl<B: ModelBackend> Scheduler<B> {
     pub fn admit(&mut self, req: Request) -> Option<Response> {
         let queue = req.arrived.elapsed();
         let t0 = Instant::now();
+        // One relaxed atomic load; all tracing below (including every
+        // extra Instant::now) is skipped when the tracer is off.
+        let tracing = trace::enabled();
+        if tracing {
+            trace::span(SpanKind::Queue, req.arrived, t0, req.id, req.tokens.len() as u64, 0);
+        }
         let n = req.tokens.len();
         let before = self.cache.compressions();
         // prefill skipping: lookup → compute (tail only) → seal. Falls
@@ -118,7 +130,13 @@ impl<B: ModelBackend> Scheduler<B> {
             && self.backend.supports_prefill_resume()
             && self.cache.pool().config().prefix_sharing;
         let (logits, skipped, ingested) = if resume {
+            let lk0 = if tracing { Some(Instant::now()) } else { None };
             let handle = self.cache.lookup_prefix(&req.tokens);
+            if let Some(lk0) = lk0 {
+                let matched = handle.matched_tokens() as u64;
+                let hit = u64::from(handle.is_hit());
+                trace::span(SpanKind::PrefixLookup, lk0, Instant::now(), req.id, matched, hit);
+            }
             let skipped = handle.matched_tokens();
             let out = if handle.is_hit() {
                 self.backend.prefill_from(&handle.kv, &req.tokens[skipped..])
@@ -142,10 +160,18 @@ impl<B: ModelBackend> Scheduler<B> {
         if !ingested {
             self.metrics.on_reject();
             self.push_kv_gauges();
+            let prefill = t0.elapsed();
+            if tracing {
+                let now = Instant::now();
+                let computed = (n - skipped) as u64;
+                trace::span(SpanKind::Prefill, t0, now, req.id, computed, skipped as u64);
+                let e2e_us = (queue + prefill).as_micros() as u64;
+                trace::span(SpanKind::Retire, now, now, req.id, 0, e2e_us);
+            }
             return Some(Response {
                 id: req.id,
                 tokens: Vec::new(),
-                timing: RequestTiming { queue, prefill: t0.elapsed(), ..Default::default() },
+                timing: RequestTiming { queue, prefill, ..Default::default() },
                 cache_entries: 0,
                 context_len: req.tokens.len(),
             });
@@ -154,7 +180,12 @@ impl<B: ModelBackend> Scheduler<B> {
         self.cache.compress_sequence(req.id, None, &mut self.rng);
         self.metrics.on_compression(self.cache.compressions() - before);
         self.push_kv_gauges();
-        let prefill = t0.elapsed();
+        let prefill_end = Instant::now();
+        let prefill = prefill_end.saturating_duration_since(t0);
+        if tracing {
+            let computed = (n - skipped) as u64;
+            trace::span(SpanKind::Prefill, t0, prefill_end, req.id, computed, skipped as u64);
+        }
         let pos = req.tokens.len();
         let next_token = argmax(&logits) as u32;
         self.active.push(SeqState {
@@ -163,7 +194,10 @@ impl<B: ModelBackend> Scheduler<B> {
             next_token,
             pos,
             timing: RequestTiming { queue, prefill, ..Default::default() },
-            decode_started: Instant::now(),
+            // decode timing starts where the prefill span ended, so the
+            // traced lifecycle spans tile the request end to end
+            decode_started: prefill_end,
+            last_span_end: prefill_end,
         });
         None
     }
@@ -210,10 +244,29 @@ impl<B: ModelBackend> Scheduler<B> {
                 }
                 st.pos += 1;
                 st.next_token = argmax(&logits) as u32;
+                if trace::enabled() {
+                    // inter-token span: previous span end → this token
+                    // emitted, inclusive of batch-mate interference
+                    let now = Instant::now();
+                    let emitted = st.generated.len() as u64;
+                    trace::span(SpanKind::DecodeStep, st.last_span_end, now, st.req.id, emitted, 0);
+                    st.last_span_end = now;
+                }
                 i += 1;
             } else {
                 let mut st = self.active.swap_remove(i);
                 st.timing.decode = st.decode_started.elapsed();
+                if trace::enabled() {
+                    let now = Instant::now();
+                    trace::span(
+                        SpanKind::Retire,
+                        st.last_span_end,
+                        now,
+                        st.req.id,
+                        st.generated.len() as u64,
+                        st.timing.total().as_micros() as u64,
+                    );
+                }
                 self.metrics.on_complete(
                     st.timing.queue,
                     st.timing.prefill,

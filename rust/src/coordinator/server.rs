@@ -35,6 +35,10 @@ pub struct ServerConfig {
     pub pool: KvPoolConfig,
     /// Base RNG seed (replica `i` of a pool runs `seed + i`).
     pub seed: u64,
+    /// Replica index stamped onto every trace span this server's worker
+    /// records (`pid` in Chrome trace exports). The cluster's
+    /// `ReplicaPool` assigns it; stand-alone servers keep 0.
+    pub replica: u32,
 }
 
 impl Default for ServerConfig {
@@ -46,6 +50,7 @@ impl Default for ServerConfig {
             scheduler: SchedulerConfig::default(),
             pool: KvPoolConfig::default(),
             seed: 0,
+            replica: 0,
         }
     }
 }
@@ -160,6 +165,8 @@ impl Server {
                     }
                 }
                 let _close_guard = CloseOnExit(queue.clone());
+                // tag every span this worker records with its replica
+                crate::obs::trace::set_current_replica(cfg.replica);
                 let backend = make_backend();
                 let mut sched = Scheduler::with_pool(
                     backend,

@@ -16,9 +16,34 @@
 use super::metrics::PoolMetrics;
 use super::{compress_seq_impl, KvPoolConfig, PoolInner};
 use crate::kvcache::KvCompressor;
+use crate::obs::trace::{self, SpanKind, NO_REQ};
+use std::sync::atomic::Ordering;
+use std::time::Instant;
 
 /// Drive `used_floats` down toward `target_floats` (best effort).
 pub(crate) fn reclaim(
+    g: &mut PoolInner,
+    cfg: &KvPoolConfig,
+    compressor: &dyn KvCompressor,
+    metrics: &PoolMetrics,
+    target_floats: usize,
+) {
+    // traced as one `evict` span on the replica's maintenance lane,
+    // carrying how much each ladder tier reclaimed
+    let t0 = if trace::enabled() { Some(Instant::now()) } else { None };
+    let evicted0 = metrics.evicted_blocks.load(Ordering::Relaxed);
+    let tiers0 = metrics.tier_compressions.load(Ordering::Relaxed);
+    reclaim_inner(g, cfg, compressor, metrics, target_floats);
+    if let Some(t0) = t0 {
+        let evicted = metrics.evicted_blocks.load(Ordering::Relaxed) - evicted0;
+        let tiers = metrics.tier_compressions.load(Ordering::Relaxed) - tiers0;
+        if evicted + tiers > 0 {
+            trace::span(SpanKind::Evict, t0, Instant::now(), NO_REQ, evicted, tiers);
+        }
+    }
+}
+
+fn reclaim_inner(
     g: &mut PoolInner,
     cfg: &KvPoolConfig,
     compressor: &dyn KvCompressor,

@@ -72,6 +72,44 @@ impl PoolSnapshot {
         }
     }
 
+    /// Write the pool gauges into a Prometheus text-exposition builder,
+    /// attaching `labels` (e.g. `[("replica", "0")]`) to every sample.
+    pub fn prom_write(&self, b: &mut crate::obs::PromBuilder, labels: &[(&str, &str)]) {
+        b.declare("wildcat_kv_pool_bytes", "gauge", "KV pool ledger bytes (used and peak).");
+        for (state, v) in [("used", self.used_bytes()), ("peak", self.peak_bytes())] {
+            let mut ls = labels.to_vec();
+            ls.push(("state", state));
+            b.sample("wildcat_kv_pool_bytes", &ls, v as f64);
+        }
+        b.declare("wildcat_kv_pool_sequences", "gauge", "Sequences registered in the pool.");
+        b.sample("wildcat_kv_pool_sequences", labels, self.sequences as f64);
+        b.declare("wildcat_kv_pool_blocks", "gauge", "Live blocks in the pool slab.");
+        b.sample("wildcat_kv_pool_blocks", labels, self.blocks as f64);
+        b.declare("wildcat_kv_prefix_hit_rate", "gauge", "Prefix-sharing block hit rate.");
+        b.sample("wildcat_kv_prefix_hit_rate", labels, self.prefix_hit_rate());
+        let counters: [(&str, &str, u64); 3] = [
+            (
+                "wildcat_kv_tier_compressions_total",
+                "Compression-tier firings of the pressure ladder.",
+                self.tier_compressions,
+            ),
+            (
+                "wildcat_kv_evicted_blocks_total",
+                "Cached prefix blocks reclaimed by eviction.",
+                self.evicted_blocks,
+            ),
+            (
+                "wildcat_kv_admission_rejects_total",
+                "Prefill registrations rejected under pressure.",
+                self.admission_rejects,
+            ),
+        ];
+        for (name, help, v) in counters {
+            b.declare(name, "counter", help);
+            b.sample(name, labels, v as f64);
+        }
+    }
+
     /// Serialise as the `"kv"` block of the serving metrics documents.
     pub fn to_json(&self) -> Json {
         let mut o = BTreeMap::new();

@@ -754,7 +754,31 @@ pub(crate) fn gather_lh(store: &BlockStore, s: &SeqKv, lh: usize) -> (Matrix, Ma
 /// cache, run the compressor, and install the result as the new private
 /// tail. Releases the sequence's block references (the rows now live in
 /// the coreset). Under-budget layer-heads pass through unchanged.
+///
+/// Traced as a `compress` span on the sequence's request lane when any
+/// layer-head actually compressed (admission, decode high-water, and
+/// pressure-ladder compressions all funnel through here).
 pub(crate) fn compress_seq_impl(
+    g: &mut PoolInner,
+    compressor: &dyn KvCompressor,
+    seq: u64,
+    budget: usize,
+    obs_queries: Option<&Matrix>,
+    rng: &mut Rng,
+) -> usize {
+    use crate::obs::trace::{self, SpanKind};
+    let t0 = if trace::enabled() { Some(std::time::Instant::now()) } else { None };
+    let compressed = compress_seq_inner(g, compressor, seq, budget, obs_queries, rng);
+    if let Some(t0) = t0 {
+        if compressed > 0 {
+            let now = std::time::Instant::now();
+            trace::span(SpanKind::Compress, t0, now, seq, compressed as u64, 0);
+        }
+    }
+    compressed
+}
+
+fn compress_seq_inner(
     g: &mut PoolInner,
     compressor: &dyn KvCompressor,
     seq: u64,

@@ -9,8 +9,10 @@
 //!   with six compression policies over the block-paged [`kvpool`] memory
 //!   manager (global float budget, radix prefix sharing, compression-tier
 //!   eviction), scaled out by the [`cluster`] tier (replica pool +
-//!   pluggable routing), plus the complete numeric substrate (linear
-//!   algebra, RPNYS, attention algorithms, baselines).
+//!   pluggable routing), observed end-to-end by the [`obs`] subsystem
+//!   (lifecycle span tracing, time-series telemetry, Prometheus
+//!   exposition), plus the complete numeric substrate (linear algebra,
+//!   RPNYS, attention algorithms, baselines).
 //! * **Layer 2 (`python/compile/model.py`)** — the JAX compute graph of the
 //!   WildCat pipeline and a small transformer LM, AOT-lowered once to HLO
 //!   text artifacts.
@@ -54,6 +56,7 @@ pub mod model;
 pub mod runtime;
 pub mod coordinator;
 pub mod cluster;
+pub mod obs;
 pub mod workload;
 
 /// Crate-wide result alias.

@@ -10,7 +10,11 @@
 //! * `tasks`   — evaluate a KV compression policy on the 13-task suite
 //! * `bench`   — run the paper benches; `--smoke` runs the whole suite in
 //!               seconds and writes machine-readable `BENCH_*.json`
+//! * `obs`     — validate observability artifacts (`--trace-json` Chrome
+//!               traces, `--metrics-series` JSONL) written by the serving
+//!               commands; see docs/OBSERVABILITY.md
 
+use std::sync::Arc;
 use std::time::{Duration, Instant};
 use wildcat::attention::{exact_attention, wildcat_attention, WildcatParams};
 use wildcat::cluster::{
@@ -21,8 +25,10 @@ use wildcat::kvcache::compressor_by_name;
 use wildcat::kvpool::{budget_floats_from_mb, KvPoolConfig, PoolSnapshot};
 use wildcat::linalg::norms::max_abs_diff;
 use wildcat::model::{ModelConfig, Transformer};
+use wildcat::obs::{self, MetricsSampler};
 use wildcat::rng::Rng;
 use wildcat::util::cli::Args;
+use wildcat::util::json::Json;
 use wildcat::workload::{gaussian_qkv, poisson_trace, shaped_trace, task_suite, TraceShape};
 
 fn main() -> anyhow::Result<()> {
@@ -35,10 +41,11 @@ fn main() -> anyhow::Result<()> {
         "attn" => cmd_attn(&args),
         "tasks" => cmd_tasks(&args),
         "bench" => cmd_bench(&args),
+        "obs" => cmd_obs(&args),
         _ => {
             println!(
                 "wildcat — near-linear attention serving coordinator\n\
-                 usage: wildcat <info|serve|cluster|attn|tasks|bench> [--options]\n\
+                 usage: wildcat <info|serve|cluster|attn|tasks|bench|obs> [--options]\n\
                  see README.md for per-command options"
             );
             Ok(())
@@ -72,6 +79,97 @@ fn prefill_skip_from_args(args: &Args) -> anyhow::Result<bool> {
         "off" | "false" | "0" => false,
         other => anyhow::bail!("--prefill-skip: expected on/off, got {other:?}"),
     })
+}
+
+/// Shared `--trace-json PATH [--trace-capacity N]` setup for the serving
+/// commands: enables the process-wide tracer (clearing any stale ring)
+/// before the run starts. Returns the output path when tracing is on.
+fn trace_setup(args: &Args) -> Option<String> {
+    let path = args.get("trace-json")?.to_string();
+    let cap = args.get_parse::<usize>("trace-capacity", wildcat::obs::trace::DEFAULT_CAPACITY);
+    wildcat::obs::trace::global().enable_with_capacity(cap);
+    Some(path)
+}
+
+/// Drain the global tracer and write a Chrome trace-event JSON document
+/// (load it in Perfetto or chrome://tracing).
+fn trace_finish(path: &str) -> anyhow::Result<()> {
+    let tracer = wildcat::obs::trace::global();
+    tracer.set_enabled(false);
+    let buf = tracer.drain();
+    let doc = wildcat::obs::chrome_trace(&buf);
+    std::fs::write(path, doc.to_string_compact())?;
+    println!(
+        "trace written to {path}: {} event(s) retained, {} dropped \
+         (load in Perfetto / chrome://tracing)",
+        buf.events.len(),
+        buf.dropped
+    );
+    Ok(())
+}
+
+/// Shared `--metrics-series PATH [--metrics-interval-ms N]` setup: start
+/// the JSONL sampler over `snap`, or return `None` when not requested.
+fn sampler_setup<F>(args: &Args, run: &Json, snap: F) -> anyhow::Result<Option<MetricsSampler>>
+where
+    F: Fn() -> Json + Send + 'static,
+{
+    match args.get("metrics-series") {
+        Some(path) => {
+            let ms = args.get_parse::<u64>("metrics-interval-ms", 100);
+            let interval = Duration::from_millis(ms);
+            Ok(Some(MetricsSampler::start(path, run.clone(), interval, snap)?))
+        }
+        None => Ok(None),
+    }
+}
+
+/// Stop a running sampler (if any) and report where the series landed.
+fn sampler_finish(args: &Args, sampler: Option<MetricsSampler>) -> anyhow::Result<()> {
+    if let Some(s) = sampler {
+        let n = s.stop()?;
+        if let Some(path) = args.get("metrics-series") {
+            println!("metrics series written to {path} ({n} samples)");
+        }
+    }
+    Ok(())
+}
+
+/// `wildcat obs [--trace PATH] [--series PATH]`
+///
+/// Validate observability artifacts produced by `serve`/`cluster`:
+/// `--trace` checks a Chrome trace-event JSON file (schema, per-lane
+/// monotonicity, B/E pairing, span accounting against each request's
+/// recorded end-to-end latency), `--series` checks a JSONL metrics
+/// series (header schema + run metadata, consecutive indices,
+/// non-decreasing timestamps). Used by the CI cluster-smoke job.
+fn cmd_obs(args: &Args) -> anyhow::Result<()> {
+    let mut checked = 0;
+    if let Some(path) = args.get("trace") {
+        let text = std::fs::read_to_string(path)?;
+        let doc = wildcat::util::json::parse(&text).map_err(|e| anyhow::anyhow!("{path}: {e}"))?;
+        let s = wildcat::obs::validate_chrome_trace(&doc)
+            .map_err(|e| anyhow::anyhow!("{path}: {e}"))?;
+        println!(
+            "{path}: OK — {} event(s), {} span(s), {} lane(s), {} retired request(s), \
+             {} dropped, max accounting error {:.2}%",
+            s.events,
+            s.spans,
+            s.lanes,
+            s.retired,
+            s.dropped,
+            100.0 * s.max_account_err
+        );
+        checked += 1;
+    }
+    if let Some(path) = args.get("series") {
+        let text = std::fs::read_to_string(path)?;
+        let s = wildcat::obs::validate_series(&text).map_err(|e| anyhow::anyhow!("{path}: {e}"))?;
+        println!("{path}: OK — {} sample(s) at {} ms interval", s.samples, s.interval_ms);
+        checked += 1;
+    }
+    anyhow::ensure!(checked > 0, "nothing to validate: pass --trace PATH and/or --series PATH");
+    Ok(())
 }
 
 fn print_pool_line(prefix: &str, s: &PoolSnapshot) {
@@ -124,7 +222,9 @@ fn cmd_info(args: &Args) -> anyhow::Result<()> {
 
 /// `wildcat cluster --replicas N --policy P [--rate R --duration D]
 /// [--shape stationary|onoff|gamma] [--fast] [--metrics-json PATH]
-/// [--kv-budget-mb MB --prefix-sharing on|off --prefill-skip on|off]`
+/// [--kv-budget-mb MB --prefix-sharing on|off --prefill-skip on|off]
+/// [--trace-json PATH --trace-capacity N] [--metrics-series PATH
+/// --metrics-interval-ms N] [--prom PATH]`
 ///
 /// Spawns a replica pool behind the chosen routing policy and replays a
 /// synthetic trace against it — at wall-clock rate by default, or in
@@ -150,6 +250,27 @@ fn cmd_cluster(args: &Args) -> anyhow::Result<()> {
     cfg.pool = pool_config_from_args(args)?;
     cfg.seed = seed;
 
+    let run = obs::run_meta(
+        "cluster",
+        seed,
+        vec![
+            ("replicas", Json::Num(n_replicas as f64)),
+            ("policy", Json::Str(policy.name().to_string())),
+            ("rate", Json::Num(rate)),
+            ("duration_s", Json::Num(secs)),
+            ("shape", Json::Str(shape.name().to_string())),
+            ("fast", Json::Bool(fast)),
+            ("cache_budget", Json::Num(budget as f64)),
+            ("queue_cap", Json::Num(queue_cap as f64)),
+            ("kv_budget_mb", Json::Num(args.get_parse::<f64>("kv-budget-mb", 0.0))),
+            ("prefix_sharing", Json::Bool(cfg.pool.prefix_sharing)),
+            ("prefill_skip", Json::Bool(cfg.scheduler.prefill_skip)),
+            ("compressor", Json::Str(args.get_or("compressor", "compresskv"))),
+        ],
+    );
+    // enable tracing before the replicas spawn so startup spans land too
+    let trace_path = trace_setup(args);
+
     let model_cfg = ModelConfig::default();
     // the cluster CLI always works on a bare checkout: fall back (with
     // the underlying load error surfaced) to a seeded random model
@@ -160,7 +281,12 @@ fn cmd_cluster(args: &Args) -> anyhow::Result<()> {
         compressor,
         wildcat::bench::runners::replica_backend_factory(weights, model_cfg, seed),
     );
-    let router = Router::new(pool.clients(), RouterConfig { policy, ..Default::default() });
+    let router =
+        Arc::new(Router::new(pool.clients(), RouterConfig { policy, ..Default::default() }));
+    let sampler = {
+        let r = Arc::clone(&router);
+        sampler_setup(args, &run, move || r.metrics_json())?
+    };
 
     let mut rng = Rng::seed_from(seed);
     let trace = shaped_trace(&mut rng, rate, Duration::from_secs_f64(secs), &shape, 16, 96, 8);
@@ -194,15 +320,33 @@ fn cmd_cluster(args: &Args) -> anyhow::Result<()> {
         stats.p99_ms,
     );
     print_pool_line("", &router.pool_aggregate());
-    let snapshot = router.metrics_json();
+    // final series sample is written at stop, after every response has
+    // been received: its counters equal the --metrics-json snapshot
+    sampler_finish(args, sampler)?;
+    let mut snapshot = match router.metrics_json() {
+        Json::Obj(o) => o,
+        _ => unreachable!("cluster metrics snapshot is always an object"),
+    };
+    snapshot.insert("run".to_string(), run);
     if let Some(path) = args.get("metrics-json") {
-        std::fs::write(path, snapshot.to_string_compact())?;
+        std::fs::write(path, Json::Obj(snapshot).to_string_compact())?;
         println!("cluster metrics snapshot written to {path}");
     }
+    if let Some(path) = args.get("prom") {
+        std::fs::write(path, router.to_prometheus())?;
+        println!("prometheus exposition written to {path}");
+    }
     pool.shutdown();
+    if let Some(path) = trace_path {
+        trace_finish(&path)?;
+    }
     Ok(())
 }
 
+/// `wildcat serve [--rate R --secs S --budget B] [--pjrt]
+/// [--kv-budget-mb MB --prefix-sharing on|off --prefill-skip on|off]
+/// [--metrics-json PATH] [--trace-json PATH --trace-capacity N]
+/// [--metrics-series PATH --metrics-interval-ms N] [--prom PATH]`
 fn cmd_serve(args: &Args) -> anyhow::Result<()> {
     let seed = args.get_parse::<u64>("seed", 0);
     let rate = args.get_parse::<f64>("rate", 4.0);
@@ -218,6 +362,22 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
     cfg.pool = pool_config_from_args(args)?;
     cfg.seed = seed;
 
+    let run = obs::run_meta(
+        "serve",
+        seed,
+        vec![
+            ("rate", Json::Num(rate)),
+            ("duration_s", Json::Num(secs as f64)),
+            ("cache_budget", Json::Num(budget as f64)),
+            ("backend", Json::Str(if use_pjrt { "pjrt" } else { "native" }.to_string())),
+            ("kv_budget_mb", Json::Num(args.get_parse::<f64>("kv-budget-mb", 0.0))),
+            ("prefix_sharing", Json::Bool(cfg.pool.prefix_sharing)),
+            ("prefill_skip", Json::Bool(cfg.scheduler.prefill_skip)),
+            ("compressor", Json::Str(args.get_or("compressor", "compresskv"))),
+        ],
+    );
+    let trace_path = trace_setup(args);
+
     let handle = if use_pjrt {
         let dir = artifacts.clone();
         Server::spawn(cfg, compressor, move || {
@@ -230,6 +390,18 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
                 .expect("weights.bin (run `make artifacts`)");
             Transformer::from_weights(&w, ModelConfig::default()).expect("model")
         })
+    };
+
+    let sampler = {
+        let client = handle.client();
+        sampler_setup(args, &run, move || {
+            let mut o = match client.metrics().to_json() {
+                Json::Obj(o) => o,
+                _ => std::collections::BTreeMap::new(),
+            };
+            o.insert("kv_pool".to_string(), client.pool_snapshot().to_json());
+            Json::Obj(o)
+        })?
     };
 
     let mut rng = Rng::seed_from(seed);
@@ -253,18 +425,30 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
     }
     println!("{}", handle.metrics().report());
     print_pool_line("", &handle.client().pool_snapshot());
+    sampler_finish(args, sampler)?;
     if let Some(path) = args.get("metrics-json") {
         // serving metrics plus the pool gauges in one document
         let mut snap = match handle.metrics().to_json() {
-            wildcat::util::json::Json::Obj(o) => o,
+            Json::Obj(o) => o,
             _ => unreachable!("metrics snapshot is always an object"),
         };
         snap.insert("kv_pool".to_string(), handle.client().pool_snapshot().to_json());
-        let doc = wildcat::util::json::Json::Obj(snap);
+        snap.insert("run".to_string(), run);
+        let doc = Json::Obj(snap);
         std::fs::write(path, doc.to_string_compact())?;
         println!("metrics snapshot written to {path}");
     }
+    if let Some(path) = args.get("prom") {
+        let mut b = wildcat::obs::PromBuilder::new();
+        handle.metrics().prom_write(&mut b, &[]);
+        handle.client().pool_snapshot().prom_write(&mut b, &[]);
+        std::fs::write(path, b.finish())?;
+        println!("prometheus exposition written to {path}");
+    }
     handle.shutdown();
+    if let Some(path) = trace_path {
+        trace_finish(&path)?;
+    }
     Ok(())
 }
 

@@ -1,0 +1,489 @@
+//! Chrome trace-event JSON export and validation.
+//!
+//! [`chrome_trace`] converts a drained [`TraceBuffer`] into the Chrome
+//! trace-event format (the JSON flavour loaded by Perfetto and
+//! `chrome://tracing`): one process (`pid`) per replica plus a
+//! synthetic router process, one thread lane (`tid`) per request, and
+//! paired `B`/`E` duration events with microsecond timestamps.
+//!
+//! Lanes are emitted well-formed *by construction*: within a lane,
+//! spans are sorted by start time (ties broken longest-first so
+//! enclosing spans open before the zero-duration spans they contain),
+//! then replayed through a stack that closes every span before a
+//! later non-overlapping one opens and clamps children to their
+//! parent's end. The result always satisfies what
+//! [`validate_chrome_trace`] checks: monotone timestamps per lane and
+//! a matching `E` for every `B`.
+
+use std::collections::BTreeMap;
+
+use super::trace::{Event, SpanKind, TraceBuffer, NO_REQ, ROUTE_REJECTED};
+use crate::util::json::Json;
+
+/// Synthetic `pid` for the router process (real replicas use their
+/// index, so any value far above a plausible replica count works).
+pub const ROUTER_PID: u64 = 1_000_000;
+
+/// `tid` of the per-replica maintenance lane carrying `evict` spans and
+/// request-less `compress` spans. Request lanes use `req + 1`, so 0 is
+/// free.
+pub const MAINT_TID: u64 = 0;
+
+/// `tid` of the router lane that collects rejected submissions (they
+/// have no request id, hence no per-request lane).
+pub const REJECT_TID: u64 = 1;
+
+/// `(pid, tid)` lane for an event, per the mapping above.
+fn lane(ev: &Event) -> (u64, u64) {
+    match ev.kind {
+        SpanKind::Route => {
+            if ev.req == NO_REQ {
+                (ROUTER_PID, REJECT_TID)
+            } else {
+                // Router lanes are per (replica, request): ids are
+                // assigned per replica, so the pair is what is unique.
+                (ROUTER_PID, ((ev.replica as u64 + 1) << 32) | ev.req)
+            }
+        }
+        _ => {
+            if ev.req == NO_REQ {
+                (ev.replica as u64, MAINT_TID)
+            } else {
+                (ev.replica as u64, ev.req + 1)
+            }
+        }
+    }
+}
+
+/// Kind-specific `args` payload for one event.
+fn args_of(ev: &Event) -> Json {
+    let mut o = BTreeMap::new();
+    if ev.req != NO_REQ {
+        o.insert("req".to_string(), Json::Num(ev.req as f64));
+    }
+    match ev.kind {
+        SpanKind::Queue => {
+            o.insert("prompt_tokens".to_string(), Json::Num(ev.a as f64));
+        }
+        SpanKind::PrefixLookup => {
+            o.insert("matched_tokens".to_string(), Json::Num(ev.a as f64));
+            o.insert("hit".to_string(), Json::Bool(ev.b == 1));
+        }
+        SpanKind::Prefill => {
+            o.insert("computed_tokens".to_string(), Json::Num(ev.a as f64));
+            o.insert("skipped_tokens".to_string(), Json::Num(ev.b as f64));
+        }
+        SpanKind::DecodeStep => {
+            o.insert("token_index".to_string(), Json::Num(ev.a as f64));
+        }
+        SpanKind::Compress => {
+            o.insert("entries_compressed".to_string(), Json::Num(ev.a as f64));
+        }
+        SpanKind::Evict => {
+            o.insert("evicted_blocks".to_string(), Json::Num(ev.a as f64));
+            o.insert("tier_compressions".to_string(), Json::Num(ev.b as f64));
+        }
+        SpanKind::Route => {
+            o.insert("attempts".to_string(), Json::Num(ev.a as f64));
+            if ev.b == ROUTE_REJECTED {
+                o.insert("outcome".to_string(), Json::Str("rejected".to_string()));
+            } else {
+                o.insert("replica".to_string(), Json::Num(ev.b as f64));
+            }
+        }
+        SpanKind::Retire => {
+            o.insert("tokens_generated".to_string(), Json::Num(ev.a as f64));
+            o.insert("e2e_us".to_string(), Json::Num(ev.b as f64));
+        }
+    }
+    Json::Obj(o)
+}
+
+fn meta_event(pid: u64, name: &str, key: &str, value: &str) -> Json {
+    let mut args = BTreeMap::new();
+    args.insert(key.to_string(), Json::Str(value.to_string()));
+    let mut o = BTreeMap::new();
+    o.insert("name".to_string(), Json::Str(name.to_string()));
+    o.insert("ph".to_string(), Json::Str("M".to_string()));
+    o.insert("pid".to_string(), Json::Num(pid as f64));
+    o.insert("tid".to_string(), Json::Num(0.0));
+    o.insert("args".to_string(), Json::Obj(args));
+    Json::Obj(o)
+}
+
+fn phase_event(ev: &Event, ph: &str, ts: u64, pid: u64, tid: u64, with_args: bool) -> Json {
+    let mut o = BTreeMap::new();
+    o.insert("name".to_string(), Json::Str(ev.kind.name().to_string()));
+    o.insert("cat".to_string(), Json::Str("wildcat".to_string()));
+    o.insert("ph".to_string(), Json::Str(ph.to_string()));
+    o.insert("ts".to_string(), Json::Num(ts as f64));
+    o.insert("pid".to_string(), Json::Num(pid as f64));
+    o.insert("tid".to_string(), Json::Num(tid as f64));
+    if with_args {
+        o.insert("args".to_string(), args_of(ev));
+    }
+    Json::Obj(o)
+}
+
+/// Convert a drained trace into a Chrome trace-event JSON document:
+/// `{"traceEvents": [...], "displayTimeUnit": "ms", "otherData": {...}}`
+/// with `dropped_events`/`recorded_events` under `otherData`.
+pub fn chrome_trace(buf: &TraceBuffer) -> Json {
+    // Group spans by lane.
+    let mut lanes: BTreeMap<(u64, u64), Vec<&Event>> = BTreeMap::new();
+    for ev in &buf.events {
+        lanes.entry(lane(ev)).or_default().push(ev);
+    }
+
+    let mut out: Vec<Json> = Vec::with_capacity(buf.events.len() * 2 + 8);
+
+    // Process/thread naming metadata.
+    let mut named_pid = u64::MAX;
+    for &(pid, tid) in lanes.keys() {
+        if pid != named_pid {
+            named_pid = pid;
+            let pname =
+                if pid == ROUTER_PID { "router".to_string() } else { format!("replica {pid}") };
+            out.push(meta_event(pid, "process_name", "name", &pname));
+        }
+        if pid != ROUTER_PID && tid == MAINT_TID {
+            out.push(meta_event(pid, "thread_name", "name", "kv maintenance"));
+        }
+    }
+
+    // Per-lane stack-based B/E emission.
+    for spans in lanes.values_mut() {
+        spans.sort_by(|x, y| x.ts_us.cmp(&y.ts_us).then(y.dur_us.cmp(&x.dur_us)));
+        let (pid, tid) = lane(spans[0]);
+        // (event, clamped end) of currently-open spans, outermost first.
+        let mut open: Vec<(&Event, u64)> = Vec::new();
+        for &s in spans.iter() {
+            let start = s.ts_us;
+            while let Some(&(top, end)) = open.last() {
+                if end <= start {
+                    out.push(phase_event(top, "E", end, pid, tid, false));
+                    open.pop();
+                } else {
+                    break;
+                }
+            }
+            // Clamp to the enclosing span so lanes always nest cleanly
+            // even if instrumentation produced a straddling overlap.
+            let mut end = start.saturating_add(s.dur_us);
+            if let Some(&(_, parent_end)) = open.last() {
+                end = end.min(parent_end);
+            }
+            out.push(phase_event(s, "B", start, pid, tid, true));
+            open.push((s, end.max(start)));
+        }
+        while let Some((top, end)) = open.pop() {
+            out.push(phase_event(top, "E", end, pid, tid, false));
+        }
+    }
+
+    let mut other = BTreeMap::new();
+    other.insert("dropped_events".to_string(), Json::Num(buf.dropped as f64));
+    other.insert("recorded_events".to_string(), Json::Num(buf.recorded as f64));
+
+    let mut doc = BTreeMap::new();
+    doc.insert("traceEvents".to_string(), Json::Arr(out));
+    doc.insert("displayTimeUnit".to_string(), Json::Str("ms".to_string()));
+    doc.insert("otherData".to_string(), Json::Obj(other));
+    Json::Obj(doc)
+}
+
+/// Summary returned by [`validate_chrome_trace`].
+#[derive(Clone, Copy, Debug, Default)]
+pub struct TraceSummary {
+    /// Total trace events (including metadata events).
+    pub events: usize,
+    /// Completed B/E span pairs.
+    pub spans: usize,
+    /// Distinct `(pid, tid)` lanes.
+    pub lanes: usize,
+    /// Request lanes that carried a `retire` span.
+    pub retired: usize,
+    /// `otherData.dropped_events` from the document.
+    pub dropped: u64,
+    /// Worst relative error of `queue + prefill + Σ decode_step +
+    /// retire` against the retire span's recorded e2e, over completed
+    /// requests (0 when no request qualified or events were dropped).
+    pub max_account_err: f64,
+}
+
+/// Span-accounting tolerance: per completed request, the lane's
+/// lifecycle spans must sum to the recorded e2e within 5% (with a small
+/// absolute floor so microsecond jitter on sub-millisecond requests
+/// does not trip the relative check).
+pub const ACCOUNT_REL_TOL: f64 = 0.05;
+const ACCOUNT_ABS_FLOOR_US: f64 = 1000.0;
+
+#[derive(Default)]
+struct LaneCheck {
+    last_ts: f64,
+    // open span names, for B/E matching
+    stack: Vec<String>,
+    // summed durations per lifecycle kind (queue/prefill/decode/retire)
+    queue_us: f64,
+    prefill_us: f64,
+    decode_us: f64,
+    retire_us: f64,
+    retire_e2e_us: f64,
+    retire_tokens: f64,
+    retired: bool,
+    // ts of the currently open span per name (for duration on E)
+    open_ts: Vec<f64>,
+}
+
+fn num_field(ev: &BTreeMap<String, Json>, key: &str) -> Result<f64, String> {
+    ev.get(key)
+        .and_then(|v| v.as_f64())
+        .ok_or_else(|| format!("event missing numeric {key:?}: {:?}", ev.get("name")))
+}
+
+/// Structurally validate a Chrome trace document produced by
+/// [`chrome_trace`] (or any conforming tool): every event has
+/// `name`/`ph`/`ts`/`pid`/`tid`, per-lane timestamps are monotone
+/// non-decreasing, every `B` has a matching `E` (LIFO per lane), and —
+/// when no events were dropped — each completed request's lifecycle
+/// spans account for its recorded e2e latency within
+/// [`ACCOUNT_REL_TOL`].
+pub fn validate_chrome_trace(doc: &Json) -> Result<TraceSummary, String> {
+    let events = doc
+        .get("traceEvents")
+        .and_then(|v| v.as_arr())
+        .ok_or("missing traceEvents array")?;
+    let dropped = doc
+        .get("otherData")
+        .and_then(|o| o.get("dropped_events"))
+        .and_then(|v| v.as_f64())
+        .unwrap_or(0.0) as u64;
+
+    let mut lanes: BTreeMap<(u64, u64), LaneCheck> = BTreeMap::new();
+    let mut spans = 0usize;
+
+    for (i, ev) in events.iter().enumerate() {
+        let o = ev.as_obj().ok_or_else(|| format!("event {i} is not an object"))?;
+        let name = o
+            .get("name")
+            .and_then(|v| v.as_str())
+            .ok_or_else(|| format!("event {i} missing name"))?
+            .to_string();
+        let ph = o
+            .get("ph")
+            .and_then(|v| v.as_str())
+            .ok_or_else(|| format!("event {i} ({name}) missing ph"))?;
+        if ph == "M" {
+            continue;
+        }
+        let ts = num_field(o, "ts")?;
+        let pid = num_field(o, "pid")? as u64;
+        let tid = num_field(o, "tid")? as u64;
+        if ts < 0.0 {
+            return Err(format!("event {i} ({name}) has negative ts"));
+        }
+        let lane = lanes.entry((pid, tid)).or_default();
+        if ts < lane.last_ts {
+            return Err(format!(
+                "lane ({pid},{tid}): ts not monotone at event {i} ({name}): {ts} < {}",
+                lane.last_ts
+            ));
+        }
+        lane.last_ts = ts;
+        match ph {
+            "B" => {
+                lane.stack.push(name.clone());
+                lane.open_ts.push(ts);
+            }
+            "E" => {
+                let open = lane
+                    .stack
+                    .pop()
+                    .ok_or_else(|| format!("lane ({pid},{tid}): E without open B at event {i}"))?;
+                if open != name {
+                    return Err(format!(
+                        "lane ({pid},{tid}): E {name:?} closes open span {open:?} at event {i}"
+                    ));
+                }
+                let b_ts = lane.open_ts.pop().unwrap_or(ts);
+                let dur = ts - b_ts;
+                spans += 1;
+                match name.as_str() {
+                    "queue" => lane.queue_us += dur,
+                    "prefill" => lane.prefill_us += dur,
+                    "decode_step" => lane.decode_us += dur,
+                    "retire" => {
+                        lane.retire_us += dur;
+                        lane.retired = true;
+                    }
+                    _ => {}
+                }
+            }
+            other => {
+                return Err(format!("event {i} ({name}) has unsupported ph {other:?}"));
+            }
+        }
+        // Retire payload rides on the B event's args.
+        if ph == "B" && name == "retire" {
+            if let Some(args) = o.get("args") {
+                lane.retire_e2e_us = args.get("e2e_us").and_then(|v| v.as_f64()).unwrap_or(0.0);
+                lane.retire_tokens =
+                    args.get("tokens_generated").and_then(|v| v.as_f64()).unwrap_or(0.0);
+            }
+        }
+    }
+
+    let mut retired = 0usize;
+    let mut max_account_err = 0.0f64;
+    for ((pid, tid), lane) in &lanes {
+        if !lane.stack.is_empty() {
+            return Err(format!(
+                "lane ({pid},{tid}): {} B event(s) without matching E: {:?}",
+                lane.stack.len(),
+                lane.stack
+            ));
+        }
+        if !lane.retired {
+            continue;
+        }
+        retired += 1;
+        // Span accounting, only for completed (token-bearing) requests
+        // and only when the ring dropped nothing (a partial window
+        // cannot account for full lifecycles).
+        if dropped == 0 && lane.retire_tokens > 0.0 && lane.retire_e2e_us > 0.0 {
+            let sum = lane.queue_us + lane.prefill_us + lane.decode_us + lane.retire_us;
+            let err = (sum - lane.retire_e2e_us).abs();
+            if err > ACCOUNT_ABS_FLOOR_US.max(ACCOUNT_REL_TOL * lane.retire_e2e_us) {
+                return Err(format!(
+                    "lane ({pid},{tid}): lifecycle spans sum to {sum} us but retire recorded \
+                     e2e {} us (err {err:.0} us)",
+                    lane.retire_e2e_us
+                ));
+            }
+            if lane.retire_e2e_us > 0.0 {
+                max_account_err = max_account_err.max(err / lane.retire_e2e_us);
+            }
+        }
+    }
+
+    Ok(TraceSummary {
+        events: events.len(),
+        spans,
+        lanes: lanes.len(),
+        retired,
+        dropped,
+        max_account_err,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json;
+
+    fn span(kind: SpanKind, ts: u64, dur: u64, replica: u32, req: u64, a: u64, b: u64) -> Event {
+        Event { ts_us: ts, dur_us: dur, kind, replica, req, a, b }
+    }
+
+    fn buf(events: Vec<Event>) -> TraceBuffer {
+        let n = events.len() as u64;
+        TraceBuffer { events, dropped: 0, recorded: n }
+    }
+
+    #[test]
+    fn export_roundtrips_through_parser_and_validates() {
+        let b = buf(vec![
+            span(SpanKind::Queue, 0, 100, 0, 1, 16, 0),
+            span(SpanKind::PrefixLookup, 100, 5, 0, 1, 8, 1),
+            span(SpanKind::Prefill, 100, 900, 0, 1, 8, 8),
+            span(SpanKind::DecodeStep, 1000, 500, 0, 1, 1, 0),
+            span(SpanKind::DecodeStep, 1500, 450, 0, 1, 2, 0),
+            span(SpanKind::Retire, 1950, 50, 0, 1, 2, 2000),
+            span(SpanKind::Evict, 300, 40, 0, NO_REQ, 3, 1),
+            span(SpanKind::Route, 0, 30, 0, 1, 1, 0),
+        ]);
+        let doc = chrome_trace(&b);
+        let text = doc.to_string_compact();
+        let parsed = json::parse(&text).expect("chrome trace must parse with util::json");
+        let s = validate_chrome_trace(&parsed).expect("trace must validate");
+        assert_eq!(s.spans, 8);
+        assert_eq!(s.retired, 1);
+        assert_eq!(s.dropped, 0);
+        // queue 100 + prefill 900 + decode 950 + retire 50 == e2e 2000
+        assert!(s.max_account_err < 1e-9, "err={}", s.max_account_err);
+        // lanes: replica0 maintenance, replica0 req1, router (replica0,req1)
+        assert_eq!(s.lanes, 3);
+    }
+
+    #[test]
+    fn nested_and_zero_duration_spans_stay_well_formed() {
+        // prefix_lookup nested in prefill, zero-duration retire at the
+        // exact end of the last decode step.
+        let b = buf(vec![
+            span(SpanKind::Prefill, 100, 900, 0, 7, 10, 0),
+            span(SpanKind::PrefixLookup, 100, 0, 0, 7, 0, 0),
+            span(SpanKind::Compress, 500, 100, 0, 7, 4, 0),
+            span(SpanKind::DecodeStep, 1000, 200, 0, 7, 1, 0),
+            span(SpanKind::Retire, 1200, 0, 0, 7, 1, 0),
+        ]);
+        let doc = chrome_trace(&b);
+        let s = validate_chrome_trace(&doc).expect("nested spans must validate");
+        assert_eq!(s.spans, 5);
+    }
+
+    #[test]
+    fn straddling_overlap_is_clamped_not_broken() {
+        // A child that extends past its parent's end must be clamped.
+        let b = buf(vec![
+            span(SpanKind::Prefill, 0, 100, 0, 3, 1, 0),
+            span(SpanKind::Compress, 50, 500, 0, 3, 1, 0),
+        ]);
+        let doc = chrome_trace(&b);
+        validate_chrome_trace(&doc).expect("clamped overlap must validate");
+    }
+
+    #[test]
+    fn validator_rejects_tampered_traces() {
+        let b = buf(vec![
+            span(SpanKind::Queue, 0, 100, 0, 1, 4, 0),
+            span(SpanKind::Prefill, 100, 100, 0, 1, 4, 0),
+        ]);
+        let good = chrome_trace(&b).to_string_compact();
+        // drop one E event -> unbalanced stack
+        let tampered = good.replacen("\"ph\":\"E\"", "\"ph\":\"M\"", 1);
+        let doc = json::parse(&tampered).unwrap();
+        assert!(validate_chrome_trace(&doc).is_err(), "unbalanced B/E must be rejected");
+        // non-monotone ts
+        let b2 = json::parse(&good.replacen("\"ts\":100", "\"ts\":99999999", 1)).unwrap();
+        assert!(validate_chrome_trace(&b2).is_err(), "non-monotone ts must be rejected");
+    }
+
+    #[test]
+    fn accounting_mismatch_is_rejected() {
+        let b = buf(vec![
+            span(SpanKind::Queue, 0, 100, 0, 1, 4, 0),
+            span(SpanKind::Prefill, 100, 100, 0, 1, 4, 0),
+            span(SpanKind::DecodeStep, 200, 100, 0, 1, 1, 0),
+            // claims 100 ms e2e but spans only cover ~300 us
+            span(SpanKind::Retire, 300, 10, 0, 1, 1, 100_000),
+        ]);
+        let doc = chrome_trace(&b);
+        assert!(validate_chrome_trace(&doc).is_err());
+        // the same trace with dropped events is exempt (partial window)
+        let mut lossy = buf(b.events.clone());
+        lossy.dropped = 5;
+        let doc2 = chrome_trace(&lossy);
+        validate_chrome_trace(&doc2).expect("lossy traces skip accounting");
+    }
+
+    #[test]
+    fn rejected_route_goes_to_reject_lane() {
+        let b = buf(vec![span(SpanKind::Route, 10, 20, 0, NO_REQ, 2, ROUTE_REJECTED)]);
+        let doc = chrome_trace(&b);
+        let text = doc.to_string_compact();
+        assert!(text.contains("\"outcome\":\"rejected\""));
+        let s = validate_chrome_trace(&doc).unwrap();
+        assert_eq!(s.lanes, 1);
+        assert_eq!(s.retired, 0);
+    }
+}

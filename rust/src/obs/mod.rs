@@ -1,0 +1,94 @@
+//! Observability for the serving stack: request-lifecycle tracing,
+//! time-series telemetry, and Prometheus-style exposition.
+//!
+//! Always compiled, near-free when off: every instrumentation site in
+//! the coordinator/kvpool/cluster layers guards on
+//! [`trace::enabled`] (one relaxed atomic load) before taking a single
+//! timestamp, and the disabled overhead is pinned by the
+//! `tracer_record_off` record in the `micro` bench.
+//!
+//! Three coordinated pieces (formats documented in
+//! `docs/OBSERVABILITY.md`):
+//!
+//! * [`trace`] — a bounded-ring span tracer recording typed lifecycle
+//!   spans (`queue`, `prefix_lookup`, `prefill`, `decode_step`,
+//!   `compress`, `evict`, `route`, `retire`), enabled by
+//!   `--trace-json PATH` on `serve`/`cluster`.
+//! * [`chrome`] — export of a drained ring to Chrome trace-event JSON
+//!   (Perfetto-loadable; pid=replica, tid=request lane), plus the
+//!   [`validate_chrome_trace`] schema/monotonicity/span-accounting
+//!   checker used by tests, CI, and `wildcat obs`.
+//! * [`series`] — a periodic sampler writing cumulative
+//!   counters/gauges as JSONL (`--metrics-series PATH`,
+//!   `--metrics-interval-ms N`), with [`validate_series`]; and
+//!   [`prom`], the Prometheus text builder behind
+//!   `ServingMetrics::to_prometheus` / `Router::to_prometheus`
+//!   (`--prom PATH`).
+
+#![warn(missing_docs)]
+
+pub mod chrome;
+pub mod prom;
+pub mod series;
+pub mod trace;
+
+pub use chrome::{chrome_trace, validate_chrome_trace, TraceSummary};
+pub use prom::PromBuilder;
+pub use series::{validate_series, MetricsSampler, SeriesSummary};
+pub use trace::{SpanKind, TraceBuffer, Tracer};
+
+use crate::util::json::Json;
+use std::collections::BTreeMap;
+
+/// Self-describing run metadata stamped into the top of
+/// `--metrics-json` dumps and the JSONL series header: the command,
+/// seed, crate version, wall-clock start, and an echo of the
+/// performance-relevant config (`replicas`, `policy`, KV budget,
+/// prefill-skip, ...), so dumps are diffable across runs without the
+/// invoking command line.
+pub fn run_meta(command: &str, seed: u64, config: Vec<(&str, Json)>) -> Json {
+    let started_unix_s = std::time::SystemTime::now()
+        .duration_since(std::time::UNIX_EPOCH)
+        .map(|d| d.as_secs_f64())
+        .unwrap_or(0.0);
+    let mut cfg = BTreeMap::new();
+    for (k, v) in config {
+        cfg.insert(k.to_string(), v);
+    }
+    let mut o = BTreeMap::new();
+    o.insert("command".to_string(), Json::Str(command.to_string()));
+    o.insert("seed".to_string(), Json::Num(seed as f64));
+    o.insert(
+        "crate_version".to_string(),
+        Json::Str(env!("CARGO_PKG_VERSION").to_string()),
+    );
+    o.insert("started_unix_s".to_string(), Json::Num(started_unix_s));
+    o.insert("config".to_string(), Json::Obj(cfg));
+    Json::Obj(o)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn run_meta_is_self_describing() {
+        let m = run_meta(
+            "cluster",
+            7,
+            vec![
+                ("replicas", Json::Num(4.0)),
+                ("policy", Json::Str("jsq".to_string())),
+            ],
+        );
+        assert_eq!(m.get("command").and_then(|v| v.as_str()), Some("cluster"));
+        assert_eq!(m.get("seed").and_then(|v| v.as_f64()), Some(7.0));
+        assert!(!m.get("crate_version").and_then(|v| v.as_str()).unwrap().is_empty());
+        assert!(m.get("started_unix_s").and_then(|v| v.as_f64()).unwrap() > 0.0);
+        let cfg = m.get("config").unwrap();
+        assert_eq!(cfg.get("replicas").and_then(|v| v.as_f64()), Some(4.0));
+        // fixed point through our own parser
+        let text = m.to_string_compact();
+        assert_eq!(crate::util::json::parse(&text).unwrap(), m);
+    }
+}

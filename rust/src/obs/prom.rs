@@ -1,0 +1,106 @@
+//! Prometheus text-exposition builder (format version 0.0.4): the
+//! scrape-style counterpart of the JSON snapshots, so metrics dumps can
+//! be pointed at any Prometheus-compatible collector or diffed as
+//! plain text.
+//!
+//! [`PromBuilder`] accumulates `# HELP`/`# TYPE` headers (emitted once
+//! per metric, on first use) and labeled samples;
+//! [`crate::coordinator::ServingMetrics::prom_write`] and
+//! [`crate::cluster::Router::to_prometheus`] drive it.
+
+use std::collections::BTreeSet;
+use std::fmt::Write as _;
+
+/// Incremental builder for one Prometheus text exposition document.
+#[derive(Default)]
+pub struct PromBuilder {
+    out: String,
+    declared: BTreeSet<String>,
+}
+
+fn escape_label(v: &str) -> String {
+    let mut out = String::with_capacity(v.len());
+    for c in v.chars() {
+        match c {
+            '\\' => out.push_str("\\\\"),
+            '"' => out.push_str("\\\""),
+            '\n' => out.push_str("\\n"),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+impl PromBuilder {
+    /// An empty document.
+    pub fn new() -> Self {
+        PromBuilder::default()
+    }
+
+    /// Declare a metric's `# HELP` and `# TYPE` lines. Idempotent per
+    /// metric name, so per-replica loops can declare unconditionally.
+    pub fn declare(&mut self, name: &str, mtype: &str, help: &str) {
+        if self.declared.insert(name.to_string()) {
+            let _ = writeln!(self.out, "# HELP {name} {help}");
+            let _ = writeln!(self.out, "# TYPE {name} {mtype}");
+        }
+    }
+
+    /// Append one sample line: `name{labels} value`. Non-finite values
+    /// are clamped to 0 (empty-histogram quantiles), integral values
+    /// print without a fraction.
+    pub fn sample(&mut self, name: &str, labels: &[(&str, &str)], value: f64) {
+        self.out.push_str(name);
+        if !labels.is_empty() {
+            self.out.push('{');
+            for (i, (k, v)) in labels.iter().enumerate() {
+                if i > 0 {
+                    self.out.push(',');
+                }
+                let _ = write!(self.out, "{k}=\"{}\"", escape_label(v));
+            }
+            self.out.push('}');
+        }
+        let v = if value.is_finite() { value } else { 0.0 };
+        if v.fract() == 0.0 && v.abs() < 1e15 {
+            let _ = writeln!(self.out, " {}", v as i64);
+        } else {
+            let _ = writeln!(self.out, " {v}");
+        }
+    }
+
+    /// The finished exposition text.
+    pub fn finish(self) -> String {
+        self.out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn declares_once_and_formats_samples() {
+        let mut b = PromBuilder::new();
+        b.declare("wildcat_requests_total", "counter", "Requests routed.");
+        b.sample("wildcat_requests_total", &[("replica", "0")], 42.0);
+        b.declare("wildcat_requests_total", "counter", "Requests routed.");
+        b.sample("wildcat_requests_total", &[("replica", "1")], 7.0);
+        b.declare("wildcat_up", "gauge", "Liveness.");
+        b.sample("wildcat_up", &[], 1.5);
+        let text = b.finish();
+        assert_eq!(text.matches("# HELP wildcat_requests_total").count(), 1);
+        assert_eq!(text.matches("# TYPE wildcat_requests_total counter").count(), 1);
+        assert!(text.contains("wildcat_requests_total{replica=\"0\"} 42\n"));
+        assert!(text.contains("wildcat_requests_total{replica=\"1\"} 7\n"));
+        assert!(text.contains("wildcat_up 1.5\n"));
+    }
+
+    #[test]
+    fn escapes_and_clamps() {
+        let mut b = PromBuilder::new();
+        b.sample("m", &[("k", "a\"b\\c\nd")], f64::NAN);
+        let text = b.finish();
+        assert_eq!(text, "m{k=\"a\\\"b\\\\c\\nd\"} 0\n");
+    }
+}

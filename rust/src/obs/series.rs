@@ -1,0 +1,252 @@
+//! Periodic time-series sampler: snapshots a metrics closure onto JSONL
+//! at a fixed interval, replacing the dump-once-at-exit model.
+//!
+//! File format (`wildcat.series.v1`): the first line is a header object
+//! carrying `schema`, `interval_ms`, and the self-describing `run`
+//! metadata from [`crate::obs::run_meta`]; every following line is one
+//! sample — `{"i": <index>, "t_s": <seconds since start>, ...}` merged
+//! with whatever object the snapshot closure returned (cumulative
+//! counters, KV gauges, queue depths). A final sample is always written
+//! at [`MetricsSampler::stop`], so the last line's cumulative counters
+//! equal the end-of-run `--metrics-json` snapshot.
+
+use std::fs::File;
+use std::io::{BufWriter, Write as _};
+use std::path::Path;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::util::json::Json;
+
+/// Schema tag written into every series header.
+pub const SERIES_SCHEMA: &str = "wildcat.series.v1";
+
+/// Handle to a running sampler thread; call [`MetricsSampler::stop`] to
+/// flush the final sample and join.
+pub struct MetricsSampler {
+    stop: Arc<AtomicBool>,
+    worker: Option<JoinHandle<std::io::Result<u64>>>,
+}
+
+impl MetricsSampler {
+    /// Write the header line and start sampling `snap()` onto `path`
+    /// every `interval` until [`MetricsSampler::stop`]. The closure runs
+    /// on the sampler thread, so it must only touch shared handles
+    /// (metric structs are internally synchronized).
+    pub fn start<P, F>(path: P, run: Json, interval: Duration, snap: F) -> Result<MetricsSampler>
+    where
+        P: AsRef<Path>,
+        F: Fn() -> Json + Send + 'static,
+    {
+        let path = path.as_ref();
+        let file = File::create(path)
+            .with_context(|| format!("creating metrics series {}", path.display()))?;
+        let mut out = BufWriter::new(file);
+
+        let interval = interval.max(Duration::from_millis(1));
+        let mut header = std::collections::BTreeMap::new();
+        header.insert("schema".to_string(), Json::Str(SERIES_SCHEMA.to_string()));
+        header.insert("interval_ms".to_string(), Json::Num(interval.as_secs_f64() * 1e3));
+        header.insert("run".to_string(), run);
+        writeln!(out, "{}", Json::Obj(header).to_string_compact())
+            .with_context(|| format!("writing series header to {}", path.display()))?;
+
+        let stop = Arc::new(AtomicBool::new(false));
+        let stop_w = Arc::clone(&stop);
+        let worker = std::thread::Builder::new()
+            .name("wildcat-metrics-sampler".to_string())
+            .spawn(move || -> std::io::Result<u64> {
+                let epoch = Instant::now();
+                // Sleep in short slices so stop() returns promptly even
+                // with long sampling intervals.
+                let slice = Duration::from_millis(20).min(interval);
+                let mut i = 0u64;
+                loop {
+                    let mut waited = Duration::ZERO;
+                    while waited < interval && !stop_w.load(Ordering::Relaxed) {
+                        let nap = slice.min(interval - waited);
+                        std::thread::sleep(nap);
+                        waited += nap;
+                    }
+                    // On stop this is the final, end-of-run sample.
+                    let mut line = std::collections::BTreeMap::new();
+                    line.insert("i".to_string(), Json::Num(i as f64));
+                    line.insert(
+                        "t_s".to_string(),
+                        Json::Num(epoch.elapsed().as_secs_f64()),
+                    );
+                    match snap() {
+                        Json::Obj(o) => {
+                            for (k, v) in o {
+                                line.entry(k).or_insert(v);
+                            }
+                        }
+                        other => {
+                            line.insert("metrics".to_string(), other);
+                        }
+                    }
+                    writeln!(out, "{}", Json::Obj(line).to_string_compact())?;
+                    i += 1;
+                    if stop_w.load(Ordering::Relaxed) {
+                        break;
+                    }
+                }
+                out.flush()?;
+                Ok(i)
+            })
+            .context("spawning metrics sampler thread")?;
+
+        Ok(MetricsSampler { stop, worker: Some(worker) })
+    }
+
+    /// Signal the sampler, wait for it to write the final sample, and
+    /// return how many samples were written.
+    pub fn stop(mut self) -> Result<u64> {
+        self.stop.store(true, Ordering::Relaxed);
+        let worker = self.worker.take().expect("stop called once");
+        let n = worker
+            .join()
+            .map_err(|_| anyhow!("metrics sampler thread panicked"))?
+            .context("writing metrics series")?;
+        Ok(n)
+    }
+}
+
+impl Drop for MetricsSampler {
+    fn drop(&mut self) {
+        // If stop() was never called, still shut the thread down.
+        self.stop.store(true, Ordering::Relaxed);
+        if let Some(w) = self.worker.take() {
+            let _ = w.join();
+        }
+    }
+}
+
+/// Summary returned by [`validate_series`].
+#[derive(Clone, Copy, Debug)]
+pub struct SeriesSummary {
+    /// Number of sample lines (excluding the header).
+    pub samples: usize,
+    /// `interval_ms` from the header.
+    pub interval_ms: f64,
+}
+
+/// Validate a JSONL metrics series: a `wildcat.series.v1` header with
+/// `run` metadata, then ≥ 1 sample line, each a JSON object with a
+/// consecutive `i` index and non-decreasing `t_s`.
+pub fn validate_series(text: &str) -> Result<SeriesSummary, String> {
+    let mut lines = text.lines().filter(|l| !l.trim().is_empty());
+    let header_line = lines.next().ok_or("series is empty")?;
+    let header = crate::util::json::parse(header_line).map_err(|e| format!("header: {e}"))?;
+    let schema = header.get("schema").and_then(|v| v.as_str()).unwrap_or("");
+    if schema != SERIES_SCHEMA {
+        return Err(format!("header schema {schema:?}, want {SERIES_SCHEMA:?}"));
+    }
+    let interval_ms = header
+        .get("interval_ms")
+        .and_then(|v| v.as_f64())
+        .ok_or("header missing interval_ms")?;
+    let run = header.get("run").and_then(|v| v.as_obj()).ok_or("header missing run metadata")?;
+    for key in ["command", "seed", "crate_version", "started_unix_s", "config"] {
+        if !run.contains_key(key) {
+            return Err(format!("run metadata missing {key:?}"));
+        }
+    }
+
+    let mut samples = 0usize;
+    let mut last_t = f64::NEG_INFINITY;
+    for (n, line) in lines.enumerate() {
+        let v = crate::util::json::parse(line).map_err(|e| format!("sample {n}: {e}"))?;
+        let i = v
+            .get("i")
+            .and_then(|x| x.as_f64())
+            .ok_or_else(|| format!("sample {n} missing i"))?;
+        if i as usize != n {
+            return Err(format!("sample {n} has index {i}, want {n}"));
+        }
+        let t = v
+            .get("t_s")
+            .and_then(|x| x.as_f64())
+            .ok_or_else(|| format!("sample {n} missing t_s"))?;
+        if t < last_t {
+            return Err(format!("sample {n}: t_s {t} decreased (prev {last_t})"));
+        }
+        last_t = t;
+        samples += 1;
+    }
+    if samples == 0 {
+        return Err("series has a header but no samples".to_string());
+    }
+    Ok(SeriesSummary { samples, interval_ms })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::run_meta;
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn sampler_writes_header_and_final_sample() {
+        let dir = std::env::temp_dir().join("wildcat_obs_series_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("s.jsonl");
+        let counter = Arc::new(AtomicU64::new(0));
+        let c = Arc::clone(&counter);
+        let run = run_meta("test", 42, vec![("replicas", Json::Num(1.0))]);
+        let sampler = MetricsSampler::start(&path, run, Duration::from_millis(10), move || {
+            let mut o = std::collections::BTreeMap::new();
+            o.insert(
+                "completed".to_string(),
+                Json::Num(c.fetch_add(1, Ordering::Relaxed) as f64),
+            );
+            Json::Obj(o)
+        })
+        .unwrap();
+        std::thread::sleep(Duration::from_millis(60));
+        let n = sampler.stop().unwrap();
+        assert!(n >= 1, "at least the final sample must be written");
+
+        let text = std::fs::read_to_string(&path).unwrap();
+        let summary = validate_series(&text).expect("series must validate");
+        assert_eq!(summary.samples as u64, n);
+        assert!((summary.interval_ms - 10.0).abs() < 1e-9);
+
+        // final line carries the last snapshot value
+        let last = text.lines().filter(|l| !l.trim().is_empty()).last().unwrap();
+        let v = crate::util::json::parse(last).unwrap();
+        assert_eq!(v.get("completed").and_then(|x| x.as_f64()), Some((n - 1) as f64));
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn validator_rejects_bad_series() {
+        assert!(validate_series("").is_err());
+        assert!(validate_series("{\"schema\":\"nope\"}\n").is_err());
+        let hdr = format!(
+            "{}\n",
+            {
+                let mut h = std::collections::BTreeMap::new();
+                h.insert("schema".to_string(), Json::Str(SERIES_SCHEMA.to_string()));
+                h.insert("interval_ms".to_string(), Json::Num(50.0));
+                h.insert("run".to_string(), run_meta("t", 1, vec![]));
+                Json::Obj(h).to_string_compact()
+            }
+        );
+        // header but no samples
+        assert!(validate_series(&hdr).is_err());
+        // good single sample
+        let good = format!("{hdr}{{\"i\":0,\"t_s\":0.5}}\n");
+        assert!(validate_series(&good).is_ok());
+        // index gap
+        let gap = format!("{hdr}{{\"i\":1,\"t_s\":0.5}}\n");
+        assert!(validate_series(&gap).is_err());
+        // time going backwards
+        let back = format!("{hdr}{{\"i\":0,\"t_s\":2.0}}\n{{\"i\":1,\"t_s\":1.0}}\n");
+        assert!(validate_series(&back).is_err());
+    }
+}

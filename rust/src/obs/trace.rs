@@ -1,0 +1,391 @@
+//! The span/event tracer: a lock-cheap, bounded ring buffer of typed
+//! request-lifecycle spans.
+//!
+//! Recording is guarded by an atomic flag: when tracing is disabled
+//! (the default), [`Tracer::record`] is a single relaxed load and a
+//! branch, and every instrumentation site in the serving stack checks
+//! [`enabled`] *before* taking timestamps — the serving hot path pays
+//! one predictable branch per site. When enabled, recording takes a
+//! short mutex critical section (a copy into a preallocated ring); the
+//! model step it sits next to is milliseconds, so contention is
+//! negligible (same locking story as
+//! [`crate::coordinator::ServingMetrics`]).
+//!
+//! The ring is bounded: past capacity the oldest events are dropped
+//! first and counted, so a runaway trace degrades to "most recent
+//! window" instead of unbounded memory. Export to Chrome trace-event
+//! JSON lives in [`crate::obs::chrome`].
+
+use std::cell::Cell;
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Mutex, OnceLock};
+use std::time::Instant;
+
+/// Sentinel request id for events that belong to no request (pool
+/// maintenance, router-wide rejections). Mapped to a dedicated lane by
+/// the Chrome exporter.
+pub const NO_REQ: u64 = u64::MAX;
+
+/// Sentinel for [`SpanKind::Route`] events whose payload `b` (the
+/// accepting replica) has no value because every replica refused.
+pub const ROUTE_REJECTED: u64 = u64::MAX;
+
+/// The typed request-lifecycle span taxonomy (see
+/// `docs/OBSERVABILITY.md` for payload semantics per kind).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SpanKind {
+    /// Admission-queue wait: request arrival → prefill start.
+    Queue,
+    /// Radix prefix-tree match against the KV pool at admission.
+    PrefixLookup,
+    /// Prompt prefill (including admission-time cache compression).
+    Prefill,
+    /// One decode token for one sequence: previous token (or prefill
+    /// end) → this token emitted, i.e. inter-token latency inclusive of
+    /// scheduling interference from batch-mates.
+    DecodeStep,
+    /// A KV-cache compression of one sequence (admission, decode
+    /// high-water, or the pool pressure ladder's compression tier).
+    Compress,
+    /// One pass of the pool pressure ladder (`kvpool::evict::reclaim`).
+    Evict,
+    /// Router submission: candidate selection → a replica accepted (or
+    /// all refused).
+    Route,
+    /// Sequence retirement: last decode step → response handed back.
+    Retire,
+}
+
+impl SpanKind {
+    /// Every kind, in lifecycle order.
+    pub const ALL: [SpanKind; 8] = [
+        SpanKind::Queue,
+        SpanKind::PrefixLookup,
+        SpanKind::Prefill,
+        SpanKind::DecodeStep,
+        SpanKind::Compress,
+        SpanKind::Evict,
+        SpanKind::Route,
+        SpanKind::Retire,
+    ];
+
+    /// The canonical snake_case span name used in trace exports.
+    pub fn name(self) -> &'static str {
+        match self {
+            SpanKind::Queue => "queue",
+            SpanKind::PrefixLookup => "prefix_lookup",
+            SpanKind::Prefill => "prefill",
+            SpanKind::DecodeStep => "decode_step",
+            SpanKind::Compress => "compress",
+            SpanKind::Evict => "evict",
+            SpanKind::Route => "route",
+            SpanKind::Retire => "retire",
+        }
+    }
+}
+
+/// One recorded span: a fixed-size, `Copy` record so the ring buffer is
+/// a flat copy-in/copy-out structure with no per-event allocation.
+#[derive(Clone, Copy, Debug)]
+pub struct Event {
+    /// Start timestamp, microseconds since the tracer's epoch.
+    pub ts_us: u64,
+    /// Duration in microseconds (0 for instant events).
+    pub dur_us: u64,
+    /// The span's lifecycle kind.
+    pub kind: SpanKind,
+    /// Replica the event was recorded on (thread-local, see
+    /// [`set_current_replica`]); for [`SpanKind::Route`] the replica the
+    /// request was routed *to*.
+    pub replica: u32,
+    /// Request/sequence id, or [`NO_REQ`] for maintenance events.
+    pub req: u64,
+    /// Kind-specific payload (e.g. computed tokens for `prefill`,
+    /// matched tokens for `prefix_lookup`, attempts for `route`).
+    pub a: u64,
+    /// Second kind-specific payload (e.g. skipped tokens for `prefill`,
+    /// hit flag for `prefix_lookup`, e2e µs for `retire`).
+    pub b: u64,
+}
+
+struct Ring {
+    buf: VecDeque<Event>,
+    cap: usize,
+    dropped: u64,
+    recorded: u64,
+}
+
+/// A drained copy of the ring: events oldest-first plus the loss/volume
+/// counters needed to interpret them.
+#[derive(Clone, Debug)]
+pub struct TraceBuffer {
+    /// Retained events, oldest first.
+    pub events: Vec<Event>,
+    /// Events overwritten because the ring was at capacity (oldest
+    /// dropped first).
+    pub dropped: u64,
+    /// Total events recorded while enabled (`events.len() + dropped`).
+    pub recorded: u64,
+}
+
+/// The tracer: an enable flag, a shared time epoch, and the ring.
+pub struct Tracer {
+    enabled: AtomicBool,
+    epoch: Instant,
+    inner: Mutex<Ring>,
+}
+
+/// Default ring capacity (events) for [`global`] and the CLI
+/// `--trace-capacity` flag.
+pub const DEFAULT_CAPACITY: usize = 65_536;
+
+impl Tracer {
+    /// A fresh, *disabled* tracer with the given ring capacity and an
+    /// epoch of "now".
+    pub fn new(capacity: usize) -> Self {
+        Tracer {
+            enabled: AtomicBool::new(false),
+            epoch: Instant::now(),
+            inner: Mutex::new(Ring {
+                buf: VecDeque::with_capacity(capacity.max(1)),
+                cap: capacity.max(1),
+                dropped: 0,
+                recorded: 0,
+            }),
+        }
+    }
+
+    /// Whether recording is on. The disabled fast path of every
+    /// instrumentation site.
+    #[inline]
+    pub fn is_enabled(&self) -> bool {
+        self.enabled.load(Ordering::Relaxed)
+    }
+
+    /// Turn recording on or off without touching the ring contents.
+    pub fn set_enabled(&self, on: bool) {
+        self.enabled.store(on, Ordering::Relaxed);
+    }
+
+    /// Clear the ring, set its capacity, and enable recording.
+    pub fn enable_with_capacity(&self, capacity: usize) {
+        {
+            let mut g = self.inner.lock().unwrap();
+            g.buf.clear();
+            g.cap = capacity.max(1);
+            g.dropped = 0;
+            g.recorded = 0;
+        }
+        self.enabled.store(true, Ordering::Relaxed);
+    }
+
+    /// Microseconds between the tracer epoch and `t` (0 if `t` predates
+    /// the epoch, which only happens for timestamps taken before the
+    /// tracer was created).
+    pub fn us_of(&self, t: Instant) -> u64 {
+        t.checked_duration_since(self.epoch)
+            .map(|d| d.as_micros() as u64)
+            .unwrap_or(0)
+    }
+
+    /// Microseconds since the tracer epoch, now.
+    pub fn now_us(&self) -> u64 {
+        self.us_of(Instant::now())
+    }
+
+    /// Record one event. When disabled this is a relaxed load and a
+    /// branch; when enabled, a short lock + ring push (oldest event
+    /// dropped and counted at capacity).
+    #[inline]
+    pub fn record(&self, ev: Event) {
+        if !self.enabled.load(Ordering::Relaxed) {
+            return;
+        }
+        let mut g = self.inner.lock().unwrap();
+        if g.buf.len() >= g.cap {
+            g.buf.pop_front();
+            g.dropped += 1;
+        }
+        g.buf.push_back(ev);
+        g.recorded += 1;
+    }
+
+    /// Record a span from a start/end [`Instant`] pair (clamped to the
+    /// epoch; `end < start` records a zero-duration span).
+    pub fn record_span(
+        &self,
+        kind: SpanKind,
+        start: Instant,
+        end: Instant,
+        replica: u32,
+        req: u64,
+        a: u64,
+        b: u64,
+    ) {
+        if !self.is_enabled() {
+            return;
+        }
+        let ts_us = self.us_of(start);
+        let dur_us = self.us_of(end).saturating_sub(ts_us);
+        self.record(Event { ts_us, dur_us, kind, replica, req, a, b });
+    }
+
+    /// `(recorded, dropped)` totals since the last
+    /// [`Tracer::enable_with_capacity`]/[`Tracer::drain`].
+    pub fn counts(&self) -> (u64, u64) {
+        let g = self.inner.lock().unwrap();
+        (g.recorded, g.dropped)
+    }
+
+    /// Take every retained event out of the ring (oldest first),
+    /// resetting the counters. Recording may continue afterwards.
+    pub fn drain(&self) -> TraceBuffer {
+        let mut g = self.inner.lock().unwrap();
+        let events: Vec<Event> = g.buf.drain(..).collect();
+        let out = TraceBuffer { dropped: g.dropped, recorded: g.recorded, events };
+        g.dropped = 0;
+        g.recorded = 0;
+        out
+    }
+}
+
+thread_local! {
+    static CURRENT_REPLICA: Cell<u32> = const { Cell::new(0) };
+}
+
+/// Tag this thread with a replica index: every span recorded through
+/// [`span`] from this thread carries it. Called by each replica's server
+/// worker at startup.
+pub fn set_current_replica(replica: u32) {
+    CURRENT_REPLICA.with(|c| c.set(replica));
+}
+
+/// The replica index this thread records spans under (0 if never set).
+pub fn current_replica() -> u32 {
+    CURRENT_REPLICA.with(|c| c.get())
+}
+
+static GLOBAL: OnceLock<Tracer> = OnceLock::new();
+
+/// The process-wide tracer every instrumentation site records into.
+/// Created disabled with [`DEFAULT_CAPACITY`]; the serving CLIs enable
+/// it when `--trace-json` is given.
+pub fn global() -> &'static Tracer {
+    GLOBAL.get_or_init(|| Tracer::new(DEFAULT_CAPACITY))
+}
+
+/// Whether the global tracer is recording. Instrumentation sites check
+/// this before taking timestamps so the disabled path never calls
+/// `Instant::now()`.
+#[inline]
+pub fn enabled() -> bool {
+    global().is_enabled()
+}
+
+/// Record a span on the global tracer under this thread's replica tag.
+pub fn span(kind: SpanKind, start: Instant, end: Instant, req: u64, a: u64, b: u64) {
+    global().record_span(kind, start, end, current_replica(), req, a, b);
+}
+
+/// Record a span on the global tracer with an explicit replica (the
+/// router runs on caller threads, so its thread-local tag is wrong).
+pub fn span_on(
+    replica: u32,
+    kind: SpanKind,
+    start: Instant,
+    end: Instant,
+    req: u64,
+    a: u64,
+    b: u64,
+) {
+    global().record_span(kind, start, end, replica, req, a, b);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::Duration;
+
+    fn ev(ts: u64) -> Event {
+        Event {
+            ts_us: ts,
+            dur_us: 1,
+            kind: SpanKind::DecodeStep,
+            replica: 0,
+            req: 1,
+            a: 0,
+            b: 0,
+        }
+    }
+
+    #[test]
+    fn disabled_by_default_records_nothing() {
+        let t = Tracer::new(16);
+        t.record(ev(1));
+        let buf = t.drain();
+        assert!(buf.events.is_empty());
+        assert_eq!(buf.recorded, 0);
+        assert_eq!(buf.dropped, 0);
+    }
+
+    #[test]
+    fn wraparound_drops_oldest_first() {
+        let t = Tracer::new(4);
+        t.set_enabled(true);
+        for i in 0..10 {
+            t.record(ev(i));
+        }
+        let buf = t.drain();
+        assert_eq!(buf.events.len(), 4);
+        assert_eq!(buf.dropped, 6);
+        assert_eq!(buf.recorded, 10);
+        let ts: Vec<u64> = buf.events.iter().map(|e| e.ts_us).collect();
+        assert_eq!(ts, vec![6, 7, 8, 9], "oldest events must go first");
+    }
+
+    #[test]
+    fn span_timestamps_use_epoch_and_clamp() {
+        let t = Tracer::new(16);
+        t.set_enabled(true);
+        let a = Instant::now();
+        let b = a + Duration::from_micros(1500);
+        t.record_span(SpanKind::Prefill, a, b, 2, 7, 10, 3);
+        // end < start clamps to zero duration instead of panicking
+        t.record_span(SpanKind::Retire, b, a, 2, 7, 0, 0);
+        let buf = t.drain();
+        assert_eq!(buf.events.len(), 2);
+        let e = &buf.events[0];
+        assert_eq!(e.kind, SpanKind::Prefill);
+        assert_eq!(e.replica, 2);
+        assert_eq!(e.req, 7);
+        assert!(e.dur_us >= 1400 && e.dur_us <= 1600, "dur={}", e.dur_us);
+        assert_eq!(buf.events[1].dur_us, 0);
+    }
+
+    #[test]
+    fn enable_with_capacity_resets() {
+        let t = Tracer::new(2);
+        t.set_enabled(true);
+        for i in 0..5 {
+            t.record(ev(i));
+        }
+        t.enable_with_capacity(8);
+        assert!(t.is_enabled());
+        t.record(ev(42));
+        let buf = t.drain();
+        assert_eq!(buf.events.len(), 1);
+        assert_eq!(buf.dropped, 0, "enable_with_capacity must reset drop counts");
+        assert_eq!(buf.events[0].ts_us, 42);
+    }
+
+    #[test]
+    fn replica_tag_is_thread_local() {
+        set_current_replica(3);
+        assert_eq!(current_replica(), 3);
+        let h = std::thread::spawn(|| current_replica());
+        assert_eq!(h.join().unwrap(), 0, "fresh threads default to replica 0");
+        assert_eq!(current_replica(), 3);
+        set_current_replica(0);
+    }
+}

@@ -1,0 +1,205 @@
+//! Observability integration tests — the tracing/telemetry acceptance
+//! contract:
+//!
+//! * concurrent recording into the ring loses nothing under capacity;
+//! * a traced single-replica serve run exports a Chrome trace that
+//!   parses with our own JSON parser, validates (paired B/E spans,
+//!   per-lane monotone timestamps), carries one retired lane per
+//!   completed request, and accounts each request's end-to-end latency
+//!   within tolerance;
+//! * a traced 2-replica cluster run lands `route` spans on the router
+//!   process and lifecycle spans on both replica processes;
+//! * the JSONL metrics series validates and its final sample's
+//!   cumulative counters equal the end-of-run metrics snapshot.
+//!
+//! Tests touching the process-wide tracer serialize on a lock (this
+//! binary's tests run concurrently on threads).
+
+use std::sync::{Arc, Mutex, MutexGuard};
+use std::time::Duration;
+use wildcat::cluster::{ReplicaPool, Router, RouterConfig, RoutingPolicy};
+use wildcat::coordinator::{Server, ServerConfig, ServerHandle};
+use wildcat::kvcache::StreamingLlm;
+use wildcat::model::{ModelConfig, Transformer};
+use wildcat::obs::trace::{self, Event, SpanKind, Tracer};
+use wildcat::obs::{chrome_trace, validate_chrome_trace, validate_series, MetricsSampler};
+use wildcat::rng::Rng;
+use wildcat::util::json::Json;
+
+static GLOBAL_TRACER_LOCK: Mutex<()> = Mutex::new(());
+
+fn lock_global() -> MutexGuard<'static, ()> {
+    GLOBAL_TRACER_LOCK.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+fn tiny_model(seed: u64) -> Transformer {
+    let mcfg =
+        ModelConfig { vocab: 16, d_model: 16, n_layers: 2, n_heads: 2, d_ff: 32, max_len: 256 };
+    Transformer::random(mcfg, &mut Rng::seed_from(seed))
+}
+
+fn tiny_server() -> ServerHandle {
+    Server::spawn(ServerConfig::default(), Arc::new(StreamingLlm), || tiny_model(9))
+}
+
+#[test]
+fn concurrent_recording_loses_nothing_under_capacity() {
+    let t = Arc::new(Tracer::new(100_000));
+    t.set_enabled(true);
+    let mut hs = Vec::new();
+    for th in 0..8u64 {
+        let t = Arc::clone(&t);
+        hs.push(std::thread::spawn(move || {
+            for i in 0..500u64 {
+                t.record(Event {
+                    ts_us: th * 1000 + i,
+                    dur_us: 1,
+                    kind: SpanKind::DecodeStep,
+                    replica: th as u32,
+                    req: th,
+                    a: i,
+                    b: 0,
+                });
+            }
+        }));
+    }
+    for h in hs {
+        h.join().unwrap();
+    }
+    let buf = t.drain();
+    assert_eq!(buf.recorded, 4000);
+    assert_eq!(buf.dropped, 0, "no events may drop below capacity");
+    assert_eq!(buf.events.len(), 4000);
+    // each thread's events kept their per-thread order
+    for th in 0..8u64 {
+        let seq: Vec<u64> = buf.events.iter().filter(|e| e.req == th).map(|e| e.a).collect();
+        assert_eq!(seq.len(), 500, "thread {th} lost events");
+        assert!(seq.windows(2).all(|w| w[0] < w[1]), "thread {th} order scrambled");
+    }
+}
+
+#[test]
+fn serve_trace_exports_retired_lanes_that_account_e2e() {
+    let _g = lock_global();
+    let tracer = trace::global();
+    tracer.enable_with_capacity(65_536);
+
+    let handle = tiny_server();
+    let mut rxs = Vec::new();
+    for i in 0..6u32 {
+        let prompt: Vec<u32> = (0..8).map(|k| (k + i) % 12 + 2).collect();
+        let (_, rx) = handle.submit(prompt, 3).unwrap();
+        rxs.push(rx);
+    }
+    for rx in rxs {
+        assert!(rx.recv_timeout(Duration::from_secs(60)).is_ok());
+    }
+    let completed = handle.metrics().counters().completed;
+    handle.shutdown();
+
+    tracer.set_enabled(false);
+    let buf = tracer.drain();
+    assert_eq!(completed, 6);
+    assert!(buf.recorded > 0, "instrumentation recorded nothing");
+    assert_eq!(buf.dropped, 0);
+    // every lifecycle kind a single-replica serve run can produce
+    for kind in [SpanKind::Queue, SpanKind::Prefill, SpanKind::DecodeStep, SpanKind::Retire] {
+        assert!(
+            buf.events.iter().any(|e| e.kind == kind),
+            "no {} span recorded",
+            kind.name()
+        );
+    }
+
+    let doc = chrome_trace(&buf);
+    // fixed point through our own parser (what `wildcat obs` re-reads)
+    let text = doc.to_string_compact();
+    assert_eq!(wildcat::util::json::parse(&text).unwrap(), doc);
+    let s = validate_chrome_trace(&doc).expect("trace must validate");
+    assert_eq!(s.retired, 6, "one retired lane per completed request");
+    assert_eq!(s.dropped, 0);
+    assert!(s.spans > 0 && s.lanes > 0);
+}
+
+#[test]
+fn cluster_trace_covers_router_and_both_replicas() {
+    let _g = lock_global();
+    let tracer = trace::global();
+    tracer.enable_with_capacity(65_536);
+
+    let pool =
+        ReplicaPool::spawn(2, ServerConfig::default(), Arc::new(StreamingLlm), |i| {
+            tiny_model(21 + i as u64)
+        });
+    let router = Router::new(
+        pool.clients(),
+        RouterConfig { policy: RoutingPolicy::RoundRobin, ..Default::default() },
+    );
+    let mut pending = Vec::new();
+    for _ in 0..4 {
+        pending.push(router.submit(vec![1, 2, 3], 2, None).unwrap());
+    }
+    for p in pending {
+        assert!(p.wait(Duration::from_secs(60)).is_some());
+    }
+    pool.shutdown();
+
+    tracer.set_enabled(false);
+    let buf = tracer.drain();
+    let routes: Vec<&Event> = buf.events.iter().filter(|e| e.kind == SpanKind::Route).collect();
+    assert_eq!(routes.len(), 4, "one route span per submission");
+    // round_robin over 2 replicas: both must take traffic, and the
+    // accepting replica is echoed in the payload
+    for r in &routes {
+        assert_eq!(r.replica as u64, r.b, "route payload disagrees with lane replica");
+    }
+    assert!(routes.iter().any(|e| e.replica == 0) && routes.iter().any(|e| e.replica == 1));
+
+    let doc = chrome_trace(&buf);
+    let s = validate_chrome_trace(&doc).expect("cluster trace must validate");
+    assert_eq!(s.retired, 4);
+    let text = doc.to_string_compact();
+    assert!(text.contains("\"router\""), "router process missing from export");
+    assert!(text.contains("\"replica 0\"") && text.contains("\"replica 1\""));
+}
+
+#[test]
+fn series_final_sample_matches_end_of_run_counters() {
+    let dir = std::env::temp_dir().join(format!("wildcat_obs_it_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("series.jsonl");
+
+    let handle = tiny_server();
+    let client = handle.client();
+    let run = wildcat::obs::run_meta("test-serve", 0, vec![("replicas", Json::Num(1.0))]);
+    let sampler = MetricsSampler::start(&path, run, Duration::from_millis(20), move || {
+        client.metrics().to_json()
+    })
+    .unwrap();
+
+    let mut rxs = Vec::new();
+    for _ in 0..5 {
+        let (_, rx) = handle.submit(vec![2, 3, 4, 5], 2).unwrap();
+        rxs.push(rx);
+    }
+    for rx in rxs {
+        assert!(rx.recv_timeout(Duration::from_secs(60)).is_ok());
+    }
+    // all responses received: counters are final before the sampler stops
+    let n = sampler.stop().unwrap();
+    let end = handle.metrics().counters();
+    handle.shutdown();
+
+    let text = std::fs::read_to_string(&path).unwrap();
+    let summary = validate_series(&text).expect("series must validate");
+    assert_eq!(summary.samples as u64, n);
+    let last_line = text.lines().filter(|l| !l.trim().is_empty()).last().unwrap();
+    let last = wildcat::util::json::parse(last_line).unwrap();
+    assert_eq!(last.get("completed").and_then(Json::as_f64), Some(end.completed as f64));
+    assert_eq!(
+        last.get("tokens_generated").and_then(Json::as_f64),
+        Some(end.tokens_generated as f64)
+    );
+    assert_eq!(end.completed, 5);
+    let _ = std::fs::remove_dir_all(&dir);
+}
