@@ -995,6 +995,34 @@ pub fn run_micro(cfg: &RunCfg) -> Result<BenchReport> {
         report.push(BenchRecord::new(name, per_event).extra("events_per_s", 1.0 / per_event));
     }
 
+    // quality-audit overhead per decode-step site: rate 0 is the
+    // always-compiled gate alone (what every unaudited site pays), the
+    // sampled rates add the splitmix hash plus — on 1-in-N sites — the
+    // error-histogram observation. The reference recompute is excluded:
+    // it runs off the hot path and scales with the sampled KV, not with
+    // the per-site gate this record pins.
+    for (name, audit_rate) in [("audit_off", 0u32), ("audit_1in64", 64), ("audit_1in8", 8)] {
+        let audit = crate::obs::QualityAudit::new(crate::obs::QualityConfig {
+            rate: audit_rate,
+            slo_abs_err: 0.0,
+            seed,
+        });
+        let r = bench(name, opts, || {
+            for req in 0..batch as u64 {
+                if audit.audit_request(req) {
+                    audit.observe_decode(req, &[(0, 1.0e-6, 1.0e-6)]);
+                }
+            }
+        });
+        let per_event = r.median() / batch as f64;
+        table.add_row(vec![
+            format!("{name} x{batch}"),
+            format!("{:.3} ms", r.median() * 1e3),
+            format!("{:.1} ns/site", per_event * 1e9),
+        ]);
+        report.push(BenchRecord::new(name, per_event).extra("events_per_s", 1.0 / per_event));
+    }
+
     table.print();
     Ok(report)
 }

@@ -51,6 +51,18 @@ pub struct ClusterSnapshot {
     /// Admissions that prefilled cold, summed over replicas (same
     /// provenance as `prefill_tokens_computed`).
     pub prefix_misses: u64,
+    /// Approximation-quality audit samples (decode steps + compression
+    /// folds) summed over replicas — filled in by
+    /// [`crate::cluster::Router::snapshot`] from the per-replica quality
+    /// auditors; 0 for a bare `ClusterMetrics` snapshot and when
+    /// auditing is disabled (`--audit-rate 0`).
+    pub quality_audited_samples: u64,
+    /// Error-SLO degradation transitions summed over replicas (same
+    /// provenance as `quality_audited_samples`).
+    pub quality_slo_degradations: u64,
+    /// Replicas currently in the degraded state (same provenance as
+    /// `quality_audited_samples`).
+    pub quality_degraded_replicas: u64,
 }
 
 impl ClusterSnapshot {
@@ -149,6 +161,9 @@ impl ClusterMetrics {
             prefill_tokens_skipped: 0,
             prefix_hits: 0,
             prefix_misses: 0,
+            quality_audited_samples: 0,
+            quality_slo_degradations: 0,
+            quality_degraded_replicas: 0,
         }
     }
 

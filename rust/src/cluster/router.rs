@@ -165,6 +165,11 @@ impl Router {
             s.prefill_tokens_skipped += counters.prefill_tokens_skipped;
             s.prefix_hits += counters.prefix_hits;
             s.prefix_misses += counters.prefix_misses;
+            if let Some(q) = c.metrics().quality_snapshot() {
+                s.quality_audited_samples += q.audited_total();
+                s.quality_slo_degradations += q.degradations;
+                s.quality_degraded_replicas += u64::from(q.degraded);
+            }
         }
         s
     }
@@ -333,6 +338,27 @@ impl Router {
         o.insert("prefill_tokens_skipped".to_string(), Json::Num(skipped as f64));
         o.insert("prefix_hits".to_string(), Json::Num(hits as f64));
         o.insert("prefix_misses".to_string(), Json::Num(misses as f64));
+        // cluster-wide approximation-quality totals, flattened like the
+        // prefill totals above (absent when no replica runs an auditor,
+        // i.e. `--audit-rate 0`); the full per-replica quality blocks
+        // appear inside each replica snapshot below
+        let quality: Vec<_> =
+            self.clients.iter().filter_map(|c| c.metrics().quality_snapshot()).collect();
+        if !quality.is_empty() {
+            let audited: u64 = quality.iter().map(|s| s.audited_total()).sum();
+            let degradations: u64 = quality.iter().map(|s| s.degradations).sum();
+            let recoveries: u64 = quality.iter().map(|s| s.recoveries).sum();
+            let degraded: u64 = quality.iter().map(|s| u64::from(s.degraded)).sum();
+            let worst_p99 = quality.iter().map(|s| s.err_p99).fold(0.0f64, f64::max);
+            o.insert("quality_audited_samples".to_string(), Json::Num(audited as f64));
+            o.insert("quality_slo_degradations".to_string(), Json::Num(degradations as f64));
+            o.insert("quality_slo_recoveries".to_string(), Json::Num(recoveries as f64));
+            o.insert("quality_degraded_replicas".to_string(), Json::Num(degraded as f64));
+            o.insert(
+                "quality_worst_max_abs_err_p99".to_string(),
+                Json::Num(if worst_p99.is_finite() { worst_p99 } else { 0.0 }),
+            );
+        }
         let replicas: Vec<Json> = self
             .clients
             .iter()
@@ -503,6 +529,65 @@ mod tests {
     }
 
     #[test]
+    fn audited_cluster_aggregates_quality_across_replicas() {
+        use crate::obs::quality::QualityConfig;
+        let mut cfg = ServerConfig::default();
+        cfg.quality = QualityConfig { rate: 1, slo_abs_err: 0.0, seed: 7 };
+        let pool = ReplicaPool::spawn(2, cfg, Arc::new(StreamingLlm), |i| {
+            let mc = ModelConfig {
+                vocab: 16,
+                d_model: 16,
+                n_layers: 2,
+                n_heads: 2,
+                d_ff: 32,
+                max_len: 256,
+            };
+            Transformer::random(mc, &mut Rng::seed_from(90 + i as u64))
+        });
+        let router = Router::new(
+            pool.clients(),
+            RouterConfig { policy: RoutingPolicy::RoundRobin, ..Default::default() },
+        );
+        let mut pending = Vec::new();
+        for _ in 0..4 {
+            pending.push(router.submit(vec![1, 2, 3, 4], 3, None).unwrap());
+        }
+        for p in pending {
+            assert!(p.wait(Duration::from_secs(30)).is_some());
+        }
+        let s = router.snapshot();
+        assert!(s.quality_audited_samples > 0, "rate-1 audit must sample decode steps");
+        assert_eq!(s.quality_slo_degradations, 0, "SLO disabled: no degradations");
+        assert_eq!(s.quality_degraded_replicas, 0);
+        let j = router.metrics_json();
+        assert_eq!(
+            j.get("quality_audited_samples").and_then(Json::as_f64),
+            Some(s.quality_audited_samples as f64)
+        );
+        assert_eq!(j.get("quality_degraded_replicas").and_then(Json::as_f64), Some(0.0));
+        // the document still satisfies the obs --metrics validator: the
+        // per-replica quality blocks are the only "quality" objects
+        assert_eq!(crate::obs::validate_quality_json(&j), Ok(2));
+        // per-replica blocks each carry their own quality snapshot, and
+        // the cluster total is their sum
+        let reps = j.get("replicas").unwrap().as_arr().unwrap();
+        let per_replica: f64 = reps
+            .iter()
+            .map(|r| {
+                r.get("quality")
+                    .and_then(|q| q.get("audited_samples"))
+                    .and_then(Json::as_f64)
+                    .unwrap_or(0.0)
+            })
+            .sum();
+        assert_eq!(per_replica, s.quality_audited_samples as f64);
+        // the scrape surface carries the quality families per replica
+        let prom = router.to_prometheus();
+        assert!(prom.contains("wildcat_quality_audited_samples_total"), "prom:\n{prom}");
+        pool.shutdown();
+    }
+
+    #[test]
     fn policy_parsing() {
         assert_eq!(RoutingPolicy::parse("rr").unwrap(), RoutingPolicy::RoundRobin);
         assert_eq!(
@@ -554,6 +639,12 @@ mod tests {
         let hits = j.get("prefix_hits").and_then(Json::as_f64).unwrap();
         let misses = j.get("prefix_misses").and_then(Json::as_f64).unwrap();
         assert_eq!(hits + misses, 1.0, "one admission must be a hit or a miss");
+        // default config audits nothing: no cluster quality keys, zero totals
+        assert!(
+            j.get("quality_audited_samples").is_none(),
+            "quality totals must be absent at audit rate 0"
+        );
+        assert_eq!(router.snapshot().quality_audited_samples, 0);
         // Prometheus exposition carries the router counters per replica
         let prom = router.to_prometheus();
         assert!(prom.contains("wildcat_cluster_completed_total 1\n"), "prom:\n{prom}");

@@ -3,10 +3,11 @@
 //! step is milliseconds, so contention is negligible — re-examined in
 //! EXPERIMENTS.md §Perf).
 
+use crate::obs::quality::{QualityAudit, QualitySnapshot};
 use crate::util::json::Json;
 use crate::util::stats::{LogHistogram, Welford};
 use std::collections::BTreeMap;
-use std::sync::Mutex;
+use std::sync::{Arc, Mutex, OnceLock};
 use std::time::{Duration, Instant};
 
 /// Monotonic serving counters (one replica's totals since start).
@@ -51,6 +52,10 @@ struct Inner {
     queue_us: Welford,
     prefill_us: Welford,
     decode_per_token_us: Welford,
+    /// Per-completed-request mean decode latency per token, as a
+    /// histogram (exported as a Prometheus `histogram` family alongside
+    /// the Welford mean gauge).
+    decode_step_us: LogHistogram,
     e2e_us: LogHistogram,
     /// KV pool gauges pushed by the scheduler (current + peak bytes of
     /// the replica's pool ledger).
@@ -62,6 +67,9 @@ struct Inner {
 /// Thread-safe serving metrics sink.
 pub struct ServingMetrics {
     inner: Mutex<Inner>,
+    /// The replica's approximation-quality auditor, when auditing is
+    /// enabled — its snapshot renders into every export surface.
+    quality: OnceLock<Arc<QualityAudit>>,
 }
 
 impl Default for ServingMetrics {
@@ -79,12 +87,31 @@ impl ServingMetrics {
                 queue_us: Welford::new(),
                 prefill_us: Welford::new(),
                 decode_per_token_us: Welford::new(),
+                decode_step_us: LogHistogram::latency_us(),
                 e2e_us: LogHistogram::latency_us(),
                 kv_bytes_current: 0,
                 kv_bytes_peak: 0,
                 started: Instant::now(),
             }),
+            quality: OnceLock::new(),
         }
+    }
+
+    /// Attach the replica's quality auditor so audit statistics render
+    /// through this sink's JSON / Prometheus / report surfaces. A no-op
+    /// when auditing is disabled (`--audit-rate 0` keeps every
+    /// `wildcat_quality_*` metric and the `"quality"` JSON block absent).
+    pub fn attach_quality(&self, audit: Arc<QualityAudit>) {
+        if audit.enabled() {
+            let _ = self.quality.set(audit);
+        }
+    }
+
+    /// A consistent point-in-time snapshot of the attached auditor, or
+    /// `None` when auditing is off. All export surfaces render from one
+    /// snapshot, so they always agree on the audited values.
+    pub fn quality_snapshot(&self) -> Option<QualitySnapshot> {
+        self.quality.get().map(|a| a.snapshot())
     }
 
     /// Record a submission attempt.
@@ -113,8 +140,9 @@ impl ServingMetrics {
         g.queue_us.push(queue.as_secs_f64() * 1e6);
         g.prefill_us.push(prefill.as_secs_f64() * 1e6);
         if n_generated > 0 {
-            g.decode_per_token_us
-                .push(decode.as_secs_f64() * 1e6 / n_generated as f64);
+            let per_token_us = decode.as_secs_f64() * 1e6 / n_generated as f64;
+            g.decode_per_token_us.push(per_token_us);
+            g.decode_step_us.record(per_token_us);
         }
         g.e2e_us.record((queue + prefill + decode).as_secs_f64() * 1e6);
     }
@@ -211,6 +239,10 @@ impl ServingMetrics {
         o.insert("kv_bytes_current".to_string(), Json::Num(g.kv_bytes_current as f64));
         o.insert("kv_bytes_peak".to_string(), Json::Num(g.kv_bytes_peak as f64));
         o.insert("uptime_s".to_string(), num(g.started.elapsed().as_secs_f64()));
+        drop(g);
+        if let Some(q) = self.quality_snapshot() {
+            o.insert("quality".to_string(), q.to_json());
+        }
         Json::Obj(o)
     }
 
@@ -292,12 +324,26 @@ impl ServingMetrics {
             b.declare(name, "gauge", help);
             b.sample(name, labels, v);
         }
-        b.declare("wildcat_e2e_latency_ms", "gauge", "End-to-end request latency quantiles (ms).");
-        for (q, v) in [("0.5", g.e2e_us.quantile(0.5)), ("0.99", g.e2e_us.quantile(0.99))] {
-            let mut ls = labels.to_vec();
-            ls.push(("quantile", q));
-            b.sample("wildcat_e2e_latency_ms", &ls, v / 1e3);
-        }
+        // latency distributions as proper Prometheus histogram families
+        // (cumulative _bucket/_sum/_count), scaled from recorded µs to ms
+        b.histogram(
+            "wildcat_e2e_latency_ms",
+            "End-to-end request latency (ms).",
+            labels,
+            &g.e2e_us.cumulative_buckets(),
+            g.e2e_us.sum(),
+            g.e2e_us.total(),
+            1e-3,
+        );
+        b.histogram(
+            "wildcat_decode_step_latency_ms",
+            "Mean decode latency per generated token, per completed request (ms).",
+            labels,
+            &g.decode_step_us.cumulative_buckets(),
+            g.decode_step_us.sum(),
+            g.decode_step_us.total(),
+            1e-3,
+        );
         b.declare("wildcat_kv_bytes", "gauge", "KV pool ledger bytes (current and peak).");
         for (state, v) in [("current", g.kv_bytes_current), ("peak", g.kv_bytes_peak)] {
             let mut ls = labels.to_vec();
@@ -306,6 +352,10 @@ impl ServingMetrics {
         }
         b.declare("wildcat_uptime_seconds", "gauge", "Seconds since this metrics sink started.");
         b.sample("wildcat_uptime_seconds", labels, g.started.elapsed().as_secs_f64());
+        drop(g);
+        if let Some(q) = self.quality_snapshot() {
+            q.prom_write(b, labels);
+        }
     }
 
     /// Single-replica Prometheus text exposition (format 0.0.4); the
@@ -321,7 +371,7 @@ impl ServingMetrics {
         let g = self.inner.lock().unwrap();
         let c = g.counters;
         let dt = g.started.elapsed().as_secs_f64().max(1e-9);
-        format!(
+        let base = format!(
             "requests: submitted={} rejected={} completed={}\n\
              tokens:   prefill={} generated={} ({:.1} tok/s decode)\n\
              prefill skipping: computed={} skipped={} (prefix hits={} misses={})\n\
@@ -351,7 +401,25 @@ impl ServingMetrics {
             g.kv_bytes_current as f64 / (1024.0 * 1024.0),
             g.kv_bytes_peak as f64 / (1024.0 * 1024.0),
             c.compressions,
-        )
+        );
+        drop(g);
+        match self.quality_snapshot() {
+            Some(q) => format!(
+                "{base}\nquality:  audited={} (decode={} folds={}) \
+                 max_abs_err p50 {:.2e} p99 {:.2e} max {:.2e}\n\
+                 slo:      degraded={} transitions {} degrade / {} recover",
+                q.audited_total(),
+                q.audited_decode,
+                q.audited_folds,
+                q.err_p50,
+                q.err_p99,
+                q.err_max,
+                q.degraded,
+                q.degradations,
+                q.recoveries,
+            ),
+            None => base,
+        }
     }
 }
 
@@ -456,7 +524,14 @@ mod tests {
         assert!(text.contains("wildcat_prefix_requests_total{outcome=\"hit\"} 1\n"));
         assert!(text.contains("wildcat_prefix_requests_total{outcome=\"miss\"} 0\n"));
         assert!(text.contains("wildcat_kv_bytes{state=\"peak\"} 2048\n"));
-        assert!(text.contains("wildcat_e2e_latency_ms{quantile=\"0.5\"}"));
+        // latency families are proper Prometheus histograms
+        assert!(text.contains("# TYPE wildcat_e2e_latency_ms histogram"));
+        assert!(text.contains("wildcat_e2e_latency_ms_bucket{le=\"+Inf\"} 1\n"));
+        assert!(text.contains("wildcat_e2e_latency_ms_count 1\n"));
+        assert!(text.contains("# TYPE wildcat_decode_step_latency_ms histogram"));
+        assert!(text.contains("wildcat_decode_step_latency_ms_count 1\n"));
+        // no quality audit attached: no quality metrics
+        assert!(!text.contains("wildcat_quality_"));
         // labeled variant used by the cluster aggregation
         let mut b = crate::obs::PromBuilder::new();
         m.prom_write(&mut b, &[("replica", "3")]);
@@ -464,6 +539,32 @@ mod tests {
         assert!(labeled.contains("wildcat_requests_submitted_total{replica=\"3\"} 1\n"));
         let want = "wildcat_prefix_requests_total{replica=\"3\",outcome=\"hit\"} 1\n";
         assert!(labeled.contains(want));
+        assert!(labeled.contains("wildcat_e2e_latency_ms_bucket{replica=\"3\",le=\"+Inf\"} 1\n"));
+    }
+
+    #[test]
+    fn quality_surfaces_absent_until_enabled_audit_attached() {
+        use crate::obs::quality::{QualityAudit, QualityConfig};
+        let m = ServingMetrics::new();
+        // rate 0: attach is a no-op on every surface
+        m.attach_quality(Arc::new(QualityAudit::new(QualityConfig::default())));
+        assert!(m.to_json().get("quality").is_none());
+        assert!(!m.to_prometheus().contains("wildcat_quality_"));
+        assert!(!m.report().contains("quality:"));
+
+        let m2 = ServingMetrics::new();
+        let a = Arc::new(QualityAudit::new(QualityConfig { rate: 4, slo_abs_err: 0.0, seed: 3 }));
+        a.observe_decode(0, &[(0, 1e-4, 1e-3)]);
+        m2.attach_quality(a);
+        let j = m2.to_json();
+        let q = j.get("quality").expect("quality block present");
+        assert_eq!(q.get("audited_samples").and_then(Json::as_f64), Some(1.0));
+        let text = m2.to_prometheus();
+        assert!(text.contains("wildcat_quality_audited_samples_total{kind=\"decode\"} 1\n"));
+        assert!(text.contains("wildcat_quality_max_abs_err_hist_count 1\n"));
+        assert!(m2.report().contains("quality:  audited=1"));
+        // the JSON surface round-trips through our parser
+        assert_eq!(crate::util::json::parse(&j.to_string_compact()).unwrap(), j);
     }
 
     #[test]

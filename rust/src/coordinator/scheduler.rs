@@ -14,6 +14,7 @@ use crate::kvcache::{CacheManager, KvCompressor};
 use crate::kvpool::{KvPool, KvPoolConfig};
 use crate::linalg::Matrix;
 use crate::model::{generate::argmax, ModelBackend};
+use crate::obs::quality::{self, QualityAudit};
 use crate::obs::trace::{self, SpanKind};
 use crate::rng::Rng;
 use std::sync::Arc;
@@ -54,6 +55,11 @@ struct SeqState {
     // decode start to retirement with no gaps, so a request's lifecycle
     // spans sum to its recorded e2e latency.
     last_span_end: Instant,
+    // Audit shadow: the full *uncompressed* per-(layer, head) KV rows of
+    // a quality-sampled request. Exact attention over these is the
+    // ground truth each decode step's served (possibly compressed)
+    // attention is audited against. `None` for unsampled requests.
+    shadow: Option<Vec<(Matrix, Matrix)>>,
 }
 
 /// The scheduler: owns the backend and active sequence set.
@@ -65,6 +71,11 @@ pub struct Scheduler<B: ModelBackend> {
     active: Vec<SeqState>,
     metrics: Arc<ServingMetrics>,
     rng: Rng,
+    audit: Option<Arc<QualityAudit>>,
+    /// `cache_budget` as configured — restored when a degraded SLO
+    /// recovers (the degradation action doubles the live budget).
+    base_budget: usize,
+    degraded_applied: bool,
 }
 
 impl<B: ModelBackend> Scheduler<B> {
@@ -93,7 +104,37 @@ impl<B: ModelBackend> Scheduler<B> {
         let mut cache =
             CacheManager::with_pool(cfg.cache_budget, n_lh, model_cfg.beta() as f64, pool);
         cache.high_water = cfg.cache_budget + cfg.slack;
-        Scheduler { backend, cfg, cache, active: Vec::new(), metrics, rng: Rng::seed_from(seed) }
+        let base_budget = cfg.cache_budget;
+        Scheduler {
+            backend,
+            cfg,
+            cache,
+            active: Vec::new(),
+            metrics,
+            rng: Rng::seed_from(seed),
+            audit: None,
+            base_budget,
+            degraded_applied: false,
+        }
+    }
+
+    /// Attach the replica's approximation-quality auditor: sampled
+    /// requests keep a shadow uncompressed KV cache whose exact attention
+    /// is recomputed every decode step, and while the error SLO holds the
+    /// stack degraded the per-sequence coreset budget is doubled (a
+    /// larger coreset ⇒ lower approximation error). No-op when auditing
+    /// is disabled (`rate == 0`).
+    pub fn set_quality_audit(&mut self, audit: Arc<QualityAudit>) {
+        if audit.enabled() {
+            self.audit = Some(audit);
+        }
+    }
+
+    /// The per-sequence physical budget currently in force — the
+    /// configured `cache_budget`, or double that while the error SLO
+    /// holds the stack degraded.
+    pub fn effective_cache_budget(&self) -> usize {
+        self.cache.budget
     }
 
     /// Sequences currently decoding.
@@ -129,7 +170,11 @@ impl<B: ModelBackend> Scheduler<B> {
         let resume = self.cfg.prefill_skip
             && self.backend.supports_prefill_resume()
             && self.cache.pool().config().prefix_sharing;
-        let (logits, skipped, ingested) = if resume {
+        // Quality sampling is decided at admission: a sampled request
+        // keeps a shadow copy of its uncompressed prefill KV rows as the
+        // audit's exact reference.
+        let audit_this = self.audit.as_ref().is_some_and(|a| a.audit_request(req.id));
+        let (logits, skipped, ingested, shadow) = if resume {
             let lk0 = if tracing { Some(Instant::now()) } else { None };
             let handle = self.cache.lookup_prefix(&req.tokens);
             if let Some(lk0) = lk0 {
@@ -138,23 +183,52 @@ impl<B: ModelBackend> Scheduler<B> {
                 trace::span(SpanKind::PrefixLookup, lk0, Instant::now(), req.id, matched, hit);
             }
             let skipped = handle.matched_tokens();
+            // `ingest_resumed` consumes the handle; the shadow needs its
+            // uncompressed prefix rows, so clone them first.
+            let prefix = (audit_this && handle.is_hit())
+                .then(|| (handle.kv.keys.clone(), handle.kv.values.clone()));
             let out = if handle.is_hit() {
                 self.backend.prefill_from(&handle.kv, &req.tokens[skipped..])
             } else {
                 self.backend.prefill(&req.tokens)
             };
+            let shadow: Option<Vec<(Matrix, Matrix)>> = audit_this.then(|| match &prefix {
+                // resumed prefill returns tail-only caches: the shadow is
+                // prefix rows ++ tail rows (the full uncompressed prompt)
+                Some((pk, pv)) => pk
+                    .iter()
+                    .zip(pv)
+                    .zip(out.k_cache.iter().zip(&out.v_cache))
+                    .map(|((pk, pv), (tk, tv))| {
+                        (Matrix::vcat(&[pk, tk]), Matrix::vcat(&[pv, tv]))
+                    })
+                    .collect(),
+                None => out
+                    .k_cache
+                    .iter()
+                    .zip(&out.v_cache)
+                    .map(|(k, v)| (k.clone(), v.clone()))
+                    .collect(),
+            });
             let ok = self
                 .cache
                 .ingest_resumed(req.id, &req.tokens, handle, &out.k_cache, &out.v_cache)
                 .is_ok();
-            (out.logits, skipped, ok)
+            (out.logits, skipped, ok, shadow)
         } else {
             let out = self.backend.prefill(&req.tokens);
+            let shadow: Option<Vec<(Matrix, Matrix)>> = audit_this.then(|| {
+                out.k_cache
+                    .iter()
+                    .zip(&out.v_cache)
+                    .map(|(k, v)| (k.clone(), v.clone()))
+                    .collect()
+            });
             let ok = self
                 .cache
                 .ingest_prefill(req.id, &req.tokens, &out.k_cache, &out.v_cache)
                 .is_ok();
-            (out.logits, 0, ok)
+            (out.logits, 0, ok, shadow)
         };
         self.metrics.on_prefill(n - skipped, skipped);
         if !ingested {
@@ -198,6 +272,7 @@ impl<B: ModelBackend> Scheduler<B> {
             // traced lifecycle spans tile the request end to end
             decode_started: prefill_end,
             last_span_end: prefill_end,
+            shadow,
         });
         None
     }
@@ -205,11 +280,70 @@ impl<B: ModelBackend> Scheduler<B> {
     fn push_kv_gauges(&self) {
         let pool = self.cache.pool();
         self.metrics.set_kv_bytes(pool.used_bytes(), pool.peak_bytes());
+        if trace::enabled() {
+            let snap = pool.snapshot();
+            trace::gauge(SpanKind::GAUGE_BLOCKS_IN_USE, snap.blocks as u64);
+            trace::gauge(SpanKind::GAUGE_IN_FLIGHT, self.active.len() as u64);
+        }
+    }
+
+    /// Poll the SLO's degraded flag once per engine step and apply the
+    /// adaptive-degradation action: double the per-sequence coreset
+    /// budget (retaining more entries per layer-head lowers the
+    /// approximation error) while degraded, restore the configured
+    /// budget on recovery. The kvpool's pressure ladder reads the same
+    /// flag to pause its compression rung.
+    fn apply_slo_budget(&mut self) {
+        let Some(a) = &self.audit else { return };
+        let degraded = a.is_degraded();
+        if degraded == self.degraded_applied {
+            return;
+        }
+        self.degraded_applied = degraded;
+        let budget = if degraded { self.base_budget * 2 } else { self.base_budget };
+        self.cache.budget = budget;
+        self.cache.high_water = budget + self.cfg.slack;
+    }
+
+    /// Audit one sampled decode step: recompute exact attention over the
+    /// request's shadow uncompressed KV and feed the per-(layer, head)
+    /// errors to the audit sink. Runs after the served output of this
+    /// step is already decided — it never perturbs served tokens.
+    fn audit_decode_step(
+        audit: Option<&QualityAudit>,
+        backend: &mut B,
+        st: &SeqState,
+        token: u32,
+        pos: usize,
+        attn: &[Vec<f32>],
+    ) {
+        let Some(a) = audit else { return };
+        let Some(shadow) = st.shadow.as_ref() else { return };
+        let ws: Vec<Vec<f64>> = shadow.iter().map(|(k, _)| vec![1.0f64; k.rows()]).collect();
+        let refs: Vec<(&Matrix, &Matrix, &[f64])> = shadow
+            .iter()
+            .zip(&ws)
+            .map(|((k, v), w)| (k, v, w.as_slice()))
+            .collect();
+        let Some((_, _, _, reference)) = backend.decode_with_attn(token, pos, &refs) else {
+            return;
+        };
+        let errs: Vec<(usize, f64, f64)> = reference
+            .iter()
+            .zip(attn)
+            .enumerate()
+            .map(|(lh, (r, ap))| {
+                let (max_abs, rel) = quality::matrix_error(r, ap);
+                (lh, max_abs, rel)
+            })
+            .collect();
+        a.observe_decode(st.req.id, &errs);
     }
 
     /// One engine iteration: decode one token for every active sequence.
     /// Returns completed responses.
     pub fn step(&mut self) -> Vec<Response> {
+        self.apply_slo_budget();
         let model_cfg = self.backend.config();
         let n_lh = model_cfg.n_layers * model_cfg.n_heads;
         let max_pos = model_cfg.max_len - 1;
@@ -228,8 +362,34 @@ impl<B: ModelBackend> Scheduler<B> {
                 let caches = self.cache.gather(st.req.id).expect("active sequence in pool");
                 let refs: Vec<(&Matrix, &Matrix, &[f64])> =
                     caches.iter().map(|(k, v, w)| (k, v, w.as_slice())).collect();
-                let (logits, new_k, new_v) =
-                    self.backend.decode(st.next_token, st.pos.min(max_pos), &refs);
+                let token = st.next_token;
+                let pos = st.pos.min(max_pos);
+                let (logits, new_k, new_v) = if st.shadow.is_some() {
+                    // audited step: the capturing decode serves the
+                    // request (same code path, identical logits) and its
+                    // attention rows are compared to the shadow-exact
+                    // recompute
+                    match self.backend.decode_with_attn(token, pos, &refs) {
+                        Some((logits, new_k, new_v, attn)) => {
+                            Self::audit_decode_step(
+                                self.audit.as_deref(),
+                                &mut self.backend,
+                                st,
+                                token,
+                                pos,
+                                &attn,
+                            );
+                            (logits, new_k, new_v)
+                        }
+                        None => {
+                            // backend cannot capture per-head outputs
+                            st.shadow = None;
+                            self.backend.decode(token, pos, &refs)
+                        }
+                    }
+                } else {
+                    self.backend.decode(token, pos, &refs)
+                };
                 for lh in 0..n_lh {
                     // crossing budget + slack triggers sequence
                     // re-compression inside the manager
@@ -241,6 +401,14 @@ impl<B: ModelBackend> Scheduler<B> {
                         None,
                         &mut self.rng,
                     );
+                }
+                if let Some(shadow) = st.shadow.as_mut() {
+                    // the shadow grows by the same (exact) rows the pool
+                    // just appended
+                    for lh in 0..n_lh {
+                        shadow[lh].0.push_row(&new_k[lh]);
+                        shadow[lh].1.push_row(&new_v[lh]);
+                    }
                 }
                 st.pos += 1;
                 st.next_token = argmax(&logits) as u32;
@@ -455,6 +623,73 @@ mod tests {
         while s.active_count() > 0 {
             s.step();
         }
+    }
+
+    #[test]
+    fn audited_exact_path_reports_identically_zero_error() {
+        use crate::obs::quality::{QualityAudit, QualityConfig};
+        // budget far above every sequence length: no compression ever
+        // fires, so the served attention IS the exact attention and every
+        // audited error must be identically 0.0 (not merely small)
+        let mut s = mk_sched(1000);
+        let audit =
+            Arc::new(QualityAudit::new(QualityConfig { rate: 1, slo_abs_err: 0.0, seed: 9 }));
+        s.set_quality_audit(audit.clone());
+        s.pool().set_quality_audit(audit.clone());
+        let batcher = Batcher::new(BatcherConfig::default());
+        let rs = s.run_to_completion(reqs(4, 12, 5), &batcher);
+        assert_eq!(rs.len(), 4);
+        let snap = audit.snapshot();
+        assert!(snap.audited_decode > 0, "rate 1 must audit decode steps");
+        assert_eq!(snap.err_max, 0.0);
+        assert_eq!(snap.err_p99, 0.0);
+        assert_eq!(snap.rel_p99, 0.0);
+    }
+
+    #[test]
+    fn auditing_does_not_perturb_served_tokens() {
+        use crate::obs::quality::{QualityAudit, QualityConfig};
+        let run = |rate: u32| {
+            let mut s = mk_sched(24); // tight: decode re-compression fires
+            if rate > 0 {
+                let audit = Arc::new(QualityAudit::new(QualityConfig {
+                    rate,
+                    slo_abs_err: 0.0,
+                    seed: 1,
+                }));
+                s.set_quality_audit(audit.clone());
+                s.pool().set_quality_audit(audit);
+            }
+            let batcher = Batcher::new(BatcherConfig::default());
+            let mut rs = s.run_to_completion(reqs(3, 40, 6), &batcher);
+            rs.sort_by_key(|r| r.id);
+            rs.into_iter().map(|r| r.tokens).collect::<Vec<_>>()
+        };
+        assert_eq!(run(0), run(1), "audits must be invisible to served output");
+    }
+
+    #[test]
+    fn degraded_slo_doubles_coreset_budget_until_recovery() {
+        use crate::obs::quality::{slo, QualityAudit, QualityConfig};
+        let mut s = mk_sched(50);
+        let audit =
+            Arc::new(QualityAudit::new(QualityConfig { rate: 1, slo_abs_err: 1e-3, seed: 2 }));
+        s.set_quality_audit(audit.clone());
+        assert!(s.admit(Request::new(0, vec![1, 2, 3], 8)).is_none());
+        assert_eq!(s.effective_cache_budget(), 50);
+        // breach the SLO through the shared sink, as a kvpool fold would
+        for _ in 0..slo::WINDOW {
+            audit.observe_fold(0, 0, 5e-3, 1e-2);
+        }
+        s.step();
+        assert_eq!(s.effective_cache_budget(), 100, "degradation doubles the budget");
+        for _ in 0..2 * slo::WINDOW {
+            audit.observe_fold(0, 0, 1e-6, 1e-5);
+        }
+        s.step();
+        assert_eq!(s.effective_cache_budget(), 50, "recovery restores the budget");
+        let snap = audit.snapshot();
+        assert_eq!((snap.degradations, snap.recoveries), (1, 1));
     }
 
     #[test]

@@ -12,6 +12,7 @@ use super::scheduler::{Scheduler, SchedulerConfig};
 use crate::kvcache::KvCompressor;
 use crate::kvpool::{KvPool, KvPoolConfig, PoolSnapshot};
 use crate::model::ModelBackend;
+use crate::obs::quality::{QualityAudit, QualityConfig};
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
@@ -33,6 +34,10 @@ pub struct ServerConfig {
     /// sharing, pressure-ladder knobs (`--kv-budget-mb`,
     /// `--prefix-sharing` on the CLI). Default: unbounded, sharing on.
     pub pool: KvPoolConfig,
+    /// Approximation-quality auditing: sample rate, error SLO, and
+    /// sampler seed (`--audit-rate`, `--audit-slo-abs-err` on the CLI).
+    /// Default: rate 0, auditing off.
+    pub quality: QualityConfig,
     /// Base RNG seed (replica `i` of a pool runs `seed + i`).
     pub seed: u64,
     /// Replica index stamped onto every trace span this server's worker
@@ -49,6 +54,7 @@ impl Default for ServerConfig {
             batcher: BatcherConfig::default(),
             scheduler: SchedulerConfig::default(),
             pool: KvPoolConfig::default(),
+            quality: QualityConfig::default(),
             seed: 0,
             replica: 0,
         }
@@ -146,6 +152,15 @@ impl Server {
         // cluster router can read its gauges while the backend serves
         let pool = Arc::new(KvPool::new(cfg.pool.clone(), compressor));
         let stopping = Arc::new(AtomicBool::new(false));
+        // one quality auditor per replica, shared by the scheduler
+        // (decode-step audits, degraded budget), the pool (fold audits,
+        // ladder gating), and the metrics sink (export); all three
+        // attach points are no-ops when the audit rate is 0
+        let audit = Arc::new(QualityAudit::new(cfg.quality.clone()));
+        if audit.enabled() {
+            metrics.attach_quality(audit.clone());
+            pool.set_quality_audit(audit.clone());
+        }
 
         let worker = {
             let queue = queue.clone();
@@ -153,6 +168,7 @@ impl Server {
             let metrics = metrics.clone();
             let pool = pool.clone();
             let stopping = stopping.clone();
+            let audit = audit.clone();
             std::thread::spawn(move || {
                 // close the admission queue however this thread exits: a
                 // panicking backend factory must not leave a zombie queue
@@ -175,6 +191,7 @@ impl Server {
                     cfg.seed,
                     pool,
                 );
+                sched.set_quality_audit(audit);
                 let batcher = Batcher::new(cfg.batcher);
                 loop {
                     // Admission: poll the queue; block briefly only when idle.
@@ -374,6 +391,41 @@ mod tests {
         assert_eq!(c1.metrics().counters().completed, 2);
         assert_eq!(c2.in_flight(), 0);
         assert_eq!(c2.queue_depth(), 0);
+        server.shutdown();
+    }
+
+    #[test]
+    fn audited_server_exports_quality_metrics() {
+        let cfg = ServerConfig {
+            scheduler: SchedulerConfig { cache_budget: 1000, slack: 8, ..Default::default() },
+            quality: QualityConfig { rate: 1, slo_abs_err: 0.0, seed: 5 },
+            ..Default::default()
+        };
+        let server = Server::spawn(cfg, Arc::new(StreamingLlm), move || {
+            let mcfg = ModelConfig {
+                vocab: 16,
+                d_model: 16,
+                n_layers: 2,
+                n_heads: 2,
+                d_ff: 32,
+                max_len: 512,
+            };
+            Transformer::random(mcfg, &mut Rng::seed_from(42))
+        });
+        let mut rxs = Vec::new();
+        for i in 0..4u32 {
+            let prompt: Vec<u32> = (0..8).map(|j| ((i + j) % 16)).collect();
+            rxs.push(server.submit(prompt, 4).unwrap().1);
+        }
+        for rx in rxs {
+            rx.recv_timeout(Duration::from_secs(30)).unwrap();
+        }
+        let snap = server.metrics().quality_snapshot().expect("audit attached at rate 1");
+        assert!(snap.audited_decode > 0, "rate 1 must audit decode steps");
+        // budget far above sequence length: nothing compressed, so the
+        // served attention is exact and audits to identically zero
+        assert_eq!(snap.err_max, 0.0);
+        assert!(server.metrics().to_json().get("quality").is_some());
         server.shutdown();
     }
 

@@ -54,6 +54,13 @@ fn reclaim_inner(
     if g.store.used_floats() <= target_floats {
         return;
     }
+    // Error-SLO degradation pauses the lossy rung: while the audited
+    // windowed p99 is in breach, the ladder runs evict-only and the pool
+    // rides closer to its budget rather than compounding approximation
+    // error with further folds.
+    if g.audit.as_deref().is_some_and(|a| a.is_degraded()) {
+        return;
+    }
     // Compression tier: coldest first, one attempt per sequence per
     // reclaim call (compressing can transiently raise usage while the
     // freed blocks wait for eviction, so interleave the two tiers).

@@ -38,6 +38,7 @@ pub use metrics::{aggregate_snapshots, PoolMetrics, PoolSnapshot};
 use crate::kvcache::{CompressionCtx, KvCompressor};
 use crate::linalg::Matrix;
 use crate::model::CachedPrefix;
+use crate::obs::quality::{self, QualityAudit};
 use crate::rng::Rng;
 use allocator::BlockStore;
 use block::{Block, BlockId, BlockLayer};
@@ -220,6 +221,9 @@ pub(crate) struct SeqKv {
     pub blocks: Vec<BlockId>,
     pub tails: Vec<Tail>,
     pub last_touch: u64,
+    /// Compression folds applied to this sequence so far — the fold
+    /// index of the quality auditor's deterministic (seq, fold) sampler.
+    pub folds: u64,
 }
 
 impl SeqKv {
@@ -248,6 +252,7 @@ pub(crate) struct PoolInner {
     pub(crate) clock: u64,
     pub(crate) dims: Option<CompressDims>,
     pub(crate) rng: Rng,
+    pub(crate) audit: Option<Arc<QualityAudit>>,
 }
 
 /// The shared, thread-safe pool facade.
@@ -274,6 +279,7 @@ impl KvPool {
                 clock: 0,
                 dims: None,
                 rng,
+                audit: None,
             }),
         }
     }
@@ -294,6 +300,13 @@ impl KvPool {
         self.inner.lock().unwrap().dims = Some(dims);
     }
 
+    /// Attach the replica's approximation-quality auditor: sampled
+    /// compression folds recompute their ground-truth error here, and a
+    /// degraded SLO pauses the pressure ladder's compression rung.
+    pub fn set_quality_audit(&self, audit: Arc<QualityAudit>) {
+        self.inner.lock().unwrap().audit = Some(audit);
+    }
+
     /// Create (or reset) an empty sequence that will be fed by appends.
     pub fn create_sequence(&self, seq: u64, n_lh: usize, d_k: usize, d_v: usize) {
         let mut g = self.inner.lock().unwrap();
@@ -303,7 +316,7 @@ impl KvPool {
         let tails = (0..n_lh).map(|_| Tail::new(d_k, d_v)).collect();
         g.seqs.insert(
             seq,
-            SeqKv { n_lh, d_k, d_v, blocks: Vec::new(), tails, last_touch: now },
+            SeqKv { n_lh, d_k, d_v, blocks: Vec::new(), tails, last_touch: now, folds: 0 },
         );
     }
 
@@ -571,7 +584,7 @@ impl KvPool {
             .collect();
         let tail_floats: usize = tails.iter().map(Tail::floats).sum();
         g.store.charge(tail_floats);
-        g.seqs.insert(seq, SeqKv { n_lh, d_k, d_v, blocks, tails, last_touch: now });
+        g.seqs.insert(seq, SeqKv { n_lh, d_k, d_v, blocks, tails, last_touch: now, folds: 0 });
         Ok(RegisterOutcome { matched_tokens, matched_blocks, new_blocks })
     }
 
@@ -795,6 +808,7 @@ fn compress_seq_inner(
         .dims
         .unwrap_or(CompressDims { n_layers: s.n_lh, beta: 0.35 });
     let block_tokens = s.block_tokens(&g.store);
+    let audit = g.audit.clone();
     let mut compressed = 0;
     let mut new_tails = Vec::with_capacity(s.n_lh);
     for lh in 0..s.n_lh {
@@ -815,6 +829,19 @@ fn compress_seq_inner(
                 obs_queries,
             };
             let e = compressor.compress(&ctx, rng);
+            // Fold audit: the only point where the pre-fold rows and
+            // the compressed entry coexist. Off the served path (the
+            // fold result is already decided).
+            let fold = s.folds;
+            s.folds += 1;
+            if let Some(a) = audit.as_deref() {
+                if a.audit_fold(seq, fold) {
+                    let probe = quality::probe_queries(a.config().seed, seq, fold, s.d_k);
+                    let (max_abs, rel) =
+                        quality::fold_error(&probe, &k, &v, &w, &e, dims.beta as f32);
+                    a.observe_fold(seq, lh, max_abs, rel);
+                }
+            }
             new_tails.push(Tail { keys: e.keys, values: e.values, weights: e.weights, logical });
             compressed += 1;
         } else {

@@ -10,9 +10,9 @@
 //! * `tasks`   — evaluate a KV compression policy on the 13-task suite
 //! * `bench`   — run the paper benches; `--smoke` runs the whole suite in
 //!               seconds and writes machine-readable `BENCH_*.json`
-//! * `obs`     — validate observability artifacts (`--trace-json` Chrome
-//!               traces, `--metrics-series` JSONL) written by the serving
-//!               commands; see docs/OBSERVABILITY.md
+//! * `obs`     — validate observability artifacts written by the serving
+//!               commands (Chrome traces, metrics-series JSONL, metrics
+//!               snapshots with quality blocks); see docs/OBSERVABILITY.md
 
 use std::sync::Arc;
 use std::time::{Duration, Instant};
@@ -25,7 +25,7 @@ use wildcat::kvcache::compressor_by_name;
 use wildcat::kvpool::{budget_floats_from_mb, KvPoolConfig, PoolSnapshot};
 use wildcat::linalg::norms::max_abs_diff;
 use wildcat::model::{ModelConfig, Transformer};
-use wildcat::obs::{self, MetricsSampler};
+use wildcat::obs::{self, MetricsSampler, QualityConfig};
 use wildcat::rng::Rng;
 use wildcat::util::cli::Args;
 use wildcat::util::json::Json;
@@ -79,6 +79,21 @@ fn prefill_skip_from_args(args: &Args) -> anyhow::Result<bool> {
         "off" | "false" | "0" => false,
         other => anyhow::bail!("--prefill-skip: expected on/off, got {other:?}"),
     })
+}
+
+/// Shared `--audit-rate N` / `--audit-slo-abs-err E` parsing for the
+/// serving commands: the approximation-quality auditor samples 1-in-N
+/// decode steps / compression folds (0 = off, the default) and, when an
+/// SLO threshold is given, degrades gracefully (coreset budget raised,
+/// compression rung paused) while the windowed p99 audited error is in
+/// breach. Sites are sampled from the run seed, so a rerun audits the
+/// same work.
+fn quality_config_from_args(args: &Args, seed: u64) -> QualityConfig {
+    QualityConfig {
+        rate: args.get_parse::<u32>("audit-rate", 0),
+        slo_abs_err: args.get_parse::<f64>("audit-slo-abs-err", 0.0),
+        seed,
+    }
 }
 
 /// Shared `--trace-json PATH [--trace-capacity N]` setup for the serving
@@ -135,40 +150,78 @@ fn sampler_finish(args: &Args, sampler: Option<MetricsSampler>) -> anyhow::Resul
     Ok(())
 }
 
-/// `wildcat obs [--trace PATH] [--series PATH]`
+/// `wildcat obs [--trace PATH] [--series PATH] [--metrics PATH]`
 ///
 /// Validate observability artifacts produced by `serve`/`cluster`:
 /// `--trace` checks a Chrome trace-event JSON file (schema, per-lane
-/// monotonicity, B/E pairing, span accounting against each request's
-/// recorded end-to-end latency), `--series` checks a JSONL metrics
-/// series (header schema + run metadata, consecutive indices,
-/// non-decreasing timestamps). Used by the CI cluster-smoke job.
+/// monotonicity, B/E pairing, counter events, span accounting against
+/// each request's recorded end-to-end latency), `--series` checks a
+/// JSONL metrics series (header schema + run metadata, consecutive
+/// indices, non-decreasing timestamps), `--metrics` checks a metrics
+/// snapshot JSON (parseability plus the approximation-quality audit
+/// invariants of every `"quality"` block). All requested checks run —
+/// a failure doesn't short-circuit the rest — then each reports
+/// `PASS`/`FAIL` and the exit status is nonzero if any failed. Used by
+/// the CI cluster-smoke job.
 fn cmd_obs(args: &Args) -> anyhow::Result<()> {
-    let mut checked = 0;
-    if let Some(path) = args.get("trace") {
-        let text = std::fs::read_to_string(path)?;
-        let doc = wildcat::util::json::parse(&text).map_err(|e| anyhow::anyhow!("{path}: {e}"))?;
-        let s = wildcat::obs::validate_chrome_trace(&doc)
-            .map_err(|e| anyhow::anyhow!("{path}: {e}"))?;
-        println!(
-            "{path}: OK — {} event(s), {} span(s), {} lane(s), {} retired request(s), \
-             {} dropped, max accounting error {:.2}%",
+    let check_trace = |path: &str| -> Result<String, String> {
+        let text = std::fs::read_to_string(path).map_err(|e| e.to_string())?;
+        let doc = wildcat::util::json::parse(&text)?;
+        let s = wildcat::obs::validate_chrome_trace(&doc)?;
+        Ok(format!(
+            "{} event(s), {} span(s), {} counter sample(s), {} lane(s), \
+             {} retired request(s), {} dropped, max accounting error {:.2}%",
             s.events,
             s.spans,
+            s.counters,
             s.lanes,
             s.retired,
             s.dropped,
             100.0 * s.max_account_err
-        );
-        checked += 1;
+        ))
+    };
+    let check_series = |path: &str| -> Result<String, String> {
+        let text = std::fs::read_to_string(path).map_err(|e| e.to_string())?;
+        let s = wildcat::obs::validate_series(&text)?;
+        Ok(format!("{} sample(s) at {} ms interval", s.samples, s.interval_ms))
+    };
+    let check_metrics = |path: &str| -> Result<String, String> {
+        let text = std::fs::read_to_string(path).map_err(|e| e.to_string())?;
+        let doc = wildcat::util::json::parse(&text)?;
+        let n = wildcat::obs::validate_quality_json(&doc)?;
+        Ok(match n {
+            0 => "parses; no quality block (auditing off)".to_string(),
+            n => format!("parses; {n} quality block(s) satisfy the audit invariants"),
+        })
+    };
+    // run every requested check — a corrupt trace must not hide a
+    // truncated series from the report
+    let mut results: Vec<(&str, String, Result<String, String>)> = Vec::new();
+    if let Some(path) = args.get("trace") {
+        results.push(("trace", path.to_string(), check_trace(path)));
     }
     if let Some(path) = args.get("series") {
-        let text = std::fs::read_to_string(path)?;
-        let s = wildcat::obs::validate_series(&text).map_err(|e| anyhow::anyhow!("{path}: {e}"))?;
-        println!("{path}: OK — {} sample(s) at {} ms interval", s.samples, s.interval_ms);
-        checked += 1;
+        results.push(("series", path.to_string(), check_series(path)));
     }
-    anyhow::ensure!(checked > 0, "nothing to validate: pass --trace PATH and/or --series PATH");
+    if let Some(path) = args.get("metrics") {
+        results.push(("metrics", path.to_string(), check_metrics(path)));
+    }
+    anyhow::ensure!(
+        !results.is_empty(),
+        "nothing to validate: pass --trace, --series and/or --metrics"
+    );
+    let mut failed = 0;
+    for (kind, path, res) in &results {
+        match res {
+            Ok(detail) => println!("PASS {kind} {path}: {detail}"),
+            Err(e) => {
+                eprintln!("FAIL {kind} {path}: {e}");
+                failed += 1;
+            }
+        }
+    }
+    anyhow::ensure!(failed == 0, "{failed} of {} obs check(s) failed", results.len());
+    println!("obs: all {} check(s) passed", results.len());
     Ok(())
 }
 
@@ -223,6 +276,7 @@ fn cmd_info(args: &Args) -> anyhow::Result<()> {
 /// `wildcat cluster --replicas N --policy P [--rate R --duration D]
 /// [--shape stationary|onoff|gamma] [--fast] [--metrics-json PATH]
 /// [--kv-budget-mb MB --prefix-sharing on|off --prefill-skip on|off]
+/// [--audit-rate N --audit-slo-abs-err E]
 /// [--trace-json PATH --trace-capacity N] [--metrics-series PATH
 /// --metrics-interval-ms N] [--prom PATH]`
 ///
@@ -249,6 +303,7 @@ fn cmd_cluster(args: &Args) -> anyhow::Result<()> {
     cfg.scheduler.prefill_skip = prefill_skip_from_args(args)?;
     cfg.pool = pool_config_from_args(args)?;
     cfg.seed = seed;
+    cfg.quality = quality_config_from_args(args, seed);
 
     let run = obs::run_meta(
         "cluster",
@@ -266,6 +321,8 @@ fn cmd_cluster(args: &Args) -> anyhow::Result<()> {
             ("prefix_sharing", Json::Bool(cfg.pool.prefix_sharing)),
             ("prefill_skip", Json::Bool(cfg.scheduler.prefill_skip)),
             ("compressor", Json::Str(args.get_or("compressor", "compresskv"))),
+            ("audit_rate", Json::Num(cfg.quality.rate as f64)),
+            ("audit_slo_abs_err", Json::Num(cfg.quality.slo_abs_err)),
         ],
     );
     // enable tracing before the replicas spawn so startup spans land too
@@ -345,6 +402,7 @@ fn cmd_cluster(args: &Args) -> anyhow::Result<()> {
 
 /// `wildcat serve [--rate R --secs S --budget B] [--pjrt]
 /// [--kv-budget-mb MB --prefix-sharing on|off --prefill-skip on|off]
+/// [--audit-rate N --audit-slo-abs-err E]
 /// [--metrics-json PATH] [--trace-json PATH --trace-capacity N]
 /// [--metrics-series PATH --metrics-interval-ms N] [--prom PATH]`
 fn cmd_serve(args: &Args) -> anyhow::Result<()> {
@@ -361,6 +419,7 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
     cfg.scheduler.prefill_skip = prefill_skip_from_args(args)?;
     cfg.pool = pool_config_from_args(args)?;
     cfg.seed = seed;
+    cfg.quality = quality_config_from_args(args, seed);
 
     let run = obs::run_meta(
         "serve",
@@ -374,6 +433,8 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
             ("prefix_sharing", Json::Bool(cfg.pool.prefix_sharing)),
             ("prefill_skip", Json::Bool(cfg.scheduler.prefill_skip)),
             ("compressor", Json::Str(args.get_or("compressor", "compresskv"))),
+            ("audit_rate", Json::Num(cfg.quality.rate as f64)),
+            ("audit_slo_abs_err", Json::Num(cfg.quality.slo_abs_err)),
         ],
     );
     let trace_path = trace_setup(args);

@@ -58,6 +58,23 @@ pub trait ModelBackend {
         pos: usize,
         caches: &[(&Matrix, &Matrix, &[f64])],
     ) -> (Vec<f32>, Vec<Vec<f32>>, Vec<Vec<f32>>);
+
+    /// [`ModelBackend::decode`] that additionally returns each
+    /// (layer, head)'s attention output row (`attn[layer*H + head]`,
+    /// length `d_head`) — the quantity the approximation-quality auditor
+    /// compares against an exact-reference recompute. Backends that
+    /// cannot capture per-head outputs (the AOT PJRT artifacts) return
+    /// `None`; the auditor then skips the sampled step.
+    #[allow(clippy::type_complexity)]
+    fn decode_with_attn(
+        &mut self,
+        token: u32,
+        pos: usize,
+        caches: &[(&Matrix, &Matrix, &[f64])],
+    ) -> Option<(Vec<f32>, Vec<Vec<f32>>, Vec<Vec<f32>>, Vec<Vec<f32>>)> {
+        let _ = (token, pos, caches);
+        None
+    }
 }
 
 impl ModelBackend for Transformer {
@@ -84,5 +101,14 @@ impl ModelBackend for Transformer {
         caches: &[(&Matrix, &Matrix, &[f64])],
     ) -> (Vec<f32>, Vec<Vec<f32>>, Vec<Vec<f32>>) {
         Transformer::decode(self, token, pos, caches)
+    }
+
+    fn decode_with_attn(
+        &mut self,
+        token: u32,
+        pos: usize,
+        caches: &[(&Matrix, &Matrix, &[f64])],
+    ) -> Option<(Vec<f32>, Vec<Vec<f32>>, Vec<Vec<f32>>, Vec<Vec<f32>>)> {
+        Some(Transformer::decode_captured(self, token, pos, caches))
     }
 }

@@ -245,6 +245,33 @@ impl Transformer {
         pos: usize,
         caches: &[(&Matrix, &Matrix, &[f64])],
     ) -> (Vec<f32>, Vec<Vec<f32>>, Vec<Vec<f32>>) {
+        self.decode_inner(token, pos, caches, None)
+    }
+
+    /// [`Transformer::decode`] that additionally captures each
+    /// (layer, head)'s attention output row — the quantity the
+    /// approximation-quality auditor compares against an exact-reference
+    /// recompute. Identical logits/caches to `decode` (same code path).
+    #[allow(clippy::type_complexity)]
+    pub fn decode_captured(
+        &self,
+        token: u32,
+        pos: usize,
+        caches: &[(&Matrix, &Matrix, &[f64])],
+    ) -> (Vec<f32>, Vec<Vec<f32>>, Vec<Vec<f32>>, Vec<Vec<f32>>) {
+        let mut attn = Vec::with_capacity(caches.len());
+        let (logits, new_k, new_v) = self.decode_inner(token, pos, caches, Some(&mut attn));
+        (logits, new_k, new_v, attn)
+    }
+
+    #[allow(clippy::type_complexity)]
+    fn decode_inner(
+        &self,
+        token: u32,
+        pos: usize,
+        caches: &[(&Matrix, &Matrix, &[f64])],
+        mut capture: Option<&mut Vec<Vec<f32>>>,
+    ) -> (Vec<f32>, Vec<Vec<f32>>, Vec<Vec<f32>>) {
         let cfg = &self.cfg;
         assert_eq!(caches.len(), cfg.n_layers * cfg.n_heads);
         assert!(pos < cfg.max_len);
@@ -278,6 +305,9 @@ impl Transformer {
                 let clip = ClipRange::from_values(&vs);
                 let o = wtd_attention(&qh, &ks, &vs, &w, &clip, beta);
                 att[head * dh..(head + 1) * dh].copy_from_slice(o.row(0));
+                if let Some(cap) = capture.as_deref_mut() {
+                    cap.push(o.row(0).to_vec());
+                }
             }
             let proj = matvec_t(&lw.wo, &att);
             for (xi, pi) in x.iter_mut().zip(&proj) {
@@ -487,6 +517,33 @@ mod tests {
                 assert!((a - b).abs() < 1e-3);
             }
         }
+    }
+
+    #[test]
+    fn decode_captured_is_bit_identical_and_shapes_attn() {
+        let (t, cfg) = tiny();
+        let toks: Vec<u32> = vec![1, 5, 3, 7, 2, 9];
+        let part = t.prefill(&toks[..toks.len() - 1]);
+        let caches: Vec<(&Matrix, &Matrix, Vec<f64>)> = part
+            .k_cache
+            .iter()
+            .zip(&part.v_cache)
+            .map(|(k, v)| (k, v, vec![1.0f64; k.rows()]))
+            .collect();
+        let refs: Vec<(&Matrix, &Matrix, &[f64])> =
+            caches.iter().map(|(k, v, w)| (*k, *v, w.as_slice())).collect();
+        let (logits, new_k, new_v) =
+            t.decode(toks[toks.len() - 1], toks.len() - 1, &refs);
+        let (cl, ck, cv, attn) =
+            t.decode_captured(toks[toks.len() - 1], toks.len() - 1, &refs);
+        // same code path: bit-identical outputs, plus one attention row
+        // of d_head per (layer, head)
+        assert_eq!(logits, cl);
+        assert_eq!(new_k, ck);
+        assert_eq!(new_v, cv);
+        assert_eq!(attn.len(), cfg.n_layers * cfg.n_heads);
+        assert!(attn.iter().all(|r| r.len() == cfg.d_head()));
+        assert!(attn.iter().flatten().all(|x| x.is_finite()));
     }
 
     #[test]

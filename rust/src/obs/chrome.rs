@@ -33,6 +33,11 @@ pub const MAINT_TID: u64 = 0;
 /// have no request id, hence no per-request lane).
 pub const REJECT_TID: u64 = 1;
 
+/// `tid` of the per-replica counter ("C" phase) lane. Request lanes use
+/// `req + 1`, so a far-out sentinel keeps gauges clear of any plausible
+/// request id (a small constant like 2 would collide with request 1).
+pub const GAUGE_TID: u64 = 9_999_999;
+
 /// `(pid, tid)` lane for an event, per the mapping above.
 fn lane(ev: &Event) -> (u64, u64) {
     match ev.kind {
@@ -95,7 +100,38 @@ fn args_of(ev: &Event) -> Json {
             o.insert("tokens_generated".to_string(), Json::Num(ev.a as f64));
             o.insert("e2e_us".to_string(), Json::Num(ev.b as f64));
         }
+        SpanKind::Quality => {
+            o.insert("max_abs_err".to_string(), Json::Num(ev.a as f64 * 1e-9));
+            let kind = if ev.b >> 32 == 0 { "decode" } else { "fold" };
+            o.insert("sample".to_string(), Json::Str(kind.to_string()));
+            o.insert("lh".to_string(), Json::Num((ev.b & 0xffff_ffff) as f64));
+        }
+        SpanKind::SloTransition => {
+            let dir = if ev.a == 1 { "degrade" } else { "recover" };
+            o.insert("transition".to_string(), Json::Str(dir.to_string()));
+            o.insert("window_p99_err".to_string(), Json::Num(ev.b as f64 * 1e-9));
+        }
+        SpanKind::Gauge => {
+            o.insert("value".to_string(), Json::Num(ev.a as f64));
+        }
     }
+    Json::Obj(o)
+}
+
+/// A Chrome counter ("C" phase) event for one [`SpanKind::Gauge`]
+/// sample: named after the gauge id, on the replica's dedicated
+/// [`GAUGE_TID`] lane, with the sampled value under `args.value`.
+fn counter_event(ev: &Event) -> Json {
+    let mut args = BTreeMap::new();
+    args.insert("value".to_string(), Json::Num(ev.a as f64));
+    let mut o = BTreeMap::new();
+    o.insert("name".to_string(), Json::Str(SpanKind::gauge_name(ev.b).to_string()));
+    o.insert("cat".to_string(), Json::Str("wildcat".to_string()));
+    o.insert("ph".to_string(), Json::Str("C".to_string()));
+    o.insert("ts".to_string(), Json::Num(ev.ts_us as f64));
+    o.insert("pid".to_string(), Json::Num(ev.replica as f64));
+    o.insert("tid".to_string(), Json::Num(GAUGE_TID as f64));
+    o.insert("args".to_string(), Json::Obj(args));
     Json::Obj(o)
 }
 
@@ -129,10 +165,16 @@ fn phase_event(ev: &Event, ph: &str, ts: u64, pid: u64, tid: u64, with_args: boo
 /// `{"traceEvents": [...], "displayTimeUnit": "ms", "otherData": {...}}`
 /// with `dropped_events`/`recorded_events` under `otherData`.
 pub fn chrome_trace(buf: &TraceBuffer) -> Json {
-    // Group spans by lane.
+    // Group spans by lane; counter samples bypass the B/E machinery and
+    // get their own per-replica lane below.
     let mut lanes: BTreeMap<(u64, u64), Vec<&Event>> = BTreeMap::new();
+    let mut gauges: Vec<&Event> = Vec::new();
     for ev in &buf.events {
-        lanes.entry(lane(ev)).or_default().push(ev);
+        if ev.kind == SpanKind::Gauge {
+            gauges.push(ev);
+        } else {
+            lanes.entry(lane(ev)).or_default().push(ev);
+        }
     }
 
     let mut out: Vec<Json> = Vec::with_capacity(buf.events.len() * 2 + 8);
@@ -181,6 +223,12 @@ pub fn chrome_trace(buf: &TraceBuffer) -> Json {
         }
     }
 
+    // Counter ("C") samples, monotone per replica lane.
+    gauges.sort_by_key(|e| (e.replica, e.ts_us));
+    for ev in gauges {
+        out.push(counter_event(ev));
+    }
+
     let mut other = BTreeMap::new();
     other.insert("dropped_events".to_string(), Json::Num(buf.dropped as f64));
     other.insert("recorded_events".to_string(), Json::Num(buf.recorded as f64));
@@ -199,6 +247,8 @@ pub struct TraceSummary {
     pub events: usize,
     /// Completed B/E span pairs.
     pub spans: usize,
+    /// Counter ("C" phase) samples.
+    pub counters: usize,
     /// Distinct `(pid, tid)` lanes.
     pub lanes: usize,
     /// Request lanes that carried a `retire` span.
@@ -261,6 +311,7 @@ pub fn validate_chrome_trace(doc: &Json) -> Result<TraceSummary, String> {
 
     let mut lanes: BTreeMap<(u64, u64), LaneCheck> = BTreeMap::new();
     let mut spans = 0usize;
+    let mut counters = 0usize;
 
     for (i, ev) in events.iter().enumerate() {
         let o = ev.as_obj().ok_or_else(|| format!("event {i} is not an object"))?;
@@ -319,6 +370,18 @@ pub fn validate_chrome_trace(doc: &Json) -> Result<TraceSummary, String> {
                     _ => {}
                 }
             }
+            "C" => {
+                // Counter samples: no stack effect, no span accounting;
+                // the value must be present and numeric.
+                let args = o
+                    .get("args")
+                    .and_then(|v| v.as_obj())
+                    .ok_or_else(|| format!("counter event {i} ({name}) missing args"))?;
+                if args.get("value").and_then(|v| v.as_f64()).is_none() {
+                    return Err(format!("counter event {i} ({name}) missing numeric value"));
+                }
+                counters += 1;
+            }
             other => {
                 return Err(format!("event {i} ({name}) has unsupported ph {other:?}"));
             }
@@ -369,6 +432,7 @@ pub fn validate_chrome_trace(doc: &Json) -> Result<TraceSummary, String> {
     Ok(TraceSummary {
         events: events.len(),
         spans,
+        counters,
         lanes: lanes.len(),
         retired,
         dropped,
@@ -474,6 +538,41 @@ mod tests {
         lossy.dropped = 5;
         let doc2 = chrome_trace(&lossy);
         validate_chrome_trace(&doc2).expect("lossy traces skip accounting");
+    }
+
+    #[test]
+    fn counter_events_export_as_c_phase_and_validate() {
+        let b = buf(vec![
+            span(SpanKind::Queue, 0, 100, 0, 1, 16, 0),
+            span(SpanKind::Prefill, 100, 900, 0, 1, 16, 0),
+            span(SpanKind::Gauge, 200, 0, 0, NO_REQ, 5, SpanKind::GAUGE_BLOCKS_IN_USE),
+            span(SpanKind::Gauge, 200, 0, 0, NO_REQ, 2, SpanKind::GAUGE_IN_FLIGHT),
+            span(SpanKind::Gauge, 900, 0, 0, NO_REQ, 7, SpanKind::GAUGE_BLOCKS_IN_USE),
+        ]);
+        let doc = chrome_trace(&b);
+        let text = doc.to_string_compact();
+        assert!(text.contains("\"ph\":\"C\""));
+        assert!(text.contains("kvpool_blocks_in_use"));
+        assert!(text.contains("in_flight_requests"));
+        let parsed = json::parse(&text).unwrap();
+        let s = validate_chrome_trace(&parsed).expect("counters must validate");
+        assert_eq!(s.counters, 3);
+        assert_eq!(s.spans, 2);
+        // counters live on their own sentinel lane, clear of request ids
+        assert!(text.contains(&format!("\"tid\":{GAUGE_TID}")));
+    }
+
+    #[test]
+    fn quality_and_slo_spans_carry_error_payloads() {
+        let b = buf(vec![
+            span(SpanKind::Quality, 10, 0, 0, 3, 1_500_000, (1 << 32) | 2),
+            span(SpanKind::SloTransition, 20, 0, 0, NO_REQ, 1, 2_000_000),
+        ]);
+        let doc = chrome_trace(&b);
+        let text = doc.to_string_compact();
+        assert!(text.contains("\"sample\":\"fold\""));
+        assert!(text.contains("\"transition\":\"degrade\""));
+        validate_chrome_trace(&doc).expect("quality spans must validate");
     }
 
     #[test]

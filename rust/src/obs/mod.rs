@@ -12,28 +12,37 @@
 //!
 //! * [`trace`] — a bounded-ring span tracer recording typed lifecycle
 //!   spans (`queue`, `prefix_lookup`, `prefill`, `decode_step`,
-//!   `compress`, `evict`, `route`, `retire`), enabled by
+//!   `compress`, `evict`, `route`, `retire`, `quality`,
+//!   `slo_transition`, plus `gauge` counter samples), enabled by
 //!   `--trace-json PATH` on `serve`/`cluster`.
 //! * [`chrome`] — export of a drained ring to Chrome trace-event JSON
-//!   (Perfetto-loadable; pid=replica, tid=request lane), plus the
-//!   [`validate_chrome_trace`] schema/monotonicity/span-accounting
-//!   checker used by tests, CI, and `wildcat obs`.
+//!   (Perfetto-loadable; pid=replica, tid=request lane, counter samples
+//!   as "C" events), plus the [`validate_chrome_trace`]
+//!   schema/monotonicity/span-accounting checker used by tests, CI, and
+//!   `wildcat obs`.
 //! * [`series`] — a periodic sampler writing cumulative
 //!   counters/gauges as JSONL (`--metrics-series PATH`,
 //!   `--metrics-interval-ms N`), with [`validate_series`]; and
 //!   [`prom`], the Prometheus text builder behind
 //!   `ServingMetrics::to_prometheus` / `Router::to_prometheus`
 //!   (`--prom PATH`).
+//! * [`quality`] — the online approximation-quality auditor: seeded
+//!   1-in-N sampling of decode steps and compression folds, exact
+//!   reference recomputation, error histograms on every export surface,
+//!   and an error SLO with adaptive degradation
+//!   (`--audit-rate N`, `--audit-slo-abs-err E`).
 
 #![warn(missing_docs)]
 
 pub mod chrome;
 pub mod prom;
+pub mod quality;
 pub mod series;
 pub mod trace;
 
 pub use chrome::{chrome_trace, validate_chrome_trace, TraceSummary};
 pub use prom::PromBuilder;
+pub use quality::{validate_quality_json, QualityAudit, QualityConfig, QualitySnapshot};
 pub use series::{validate_series, MetricsSampler, SeriesSummary};
 pub use trace::{SpanKind, TraceBuffer, Tracer};
 

@@ -69,6 +69,39 @@ impl PromBuilder {
         }
     }
 
+    /// Emit one full Prometheus `histogram` family from cumulative
+    /// buckets: `name_bucket{le="..."}` lines (including the mandatory
+    /// `le="+Inf"` terminal bucket equal to the total count), `name_sum`
+    /// and `name_count`. `buckets` are `(upper_edge, cumulative_count)`
+    /// pairs as produced by
+    /// [`crate::util::stats::LogHistogram::cumulative_buckets`];
+    /// `scale` converts edges and the sum into the exported unit (e.g.
+    /// `1e-3` for µs → ms).
+    pub fn histogram(
+        &mut self,
+        name: &str,
+        help: &str,
+        labels: &[(&str, &str)],
+        buckets: &[(f64, u64)],
+        sum: f64,
+        count: u64,
+        scale: f64,
+    ) {
+        self.declare(name, "histogram", help);
+        let bucket_name = format!("{name}_bucket");
+        for &(edge, c) in buckets {
+            let mut ls = labels.to_vec();
+            let le = format!("{}", edge * scale);
+            ls.push(("le", &le));
+            self.sample(&bucket_name, &ls, c as f64);
+        }
+        let mut ls = labels.to_vec();
+        ls.push(("le", "+Inf"));
+        self.sample(&bucket_name, &ls, count as f64);
+        self.sample(&format!("{name}_sum"), labels, sum * scale);
+        self.sample(&format!("{name}_count"), labels, count as f64);
+    }
+
     /// The finished exposition text.
     pub fn finish(self) -> String {
         self.out
@@ -94,6 +127,20 @@ mod tests {
         assert!(text.contains("wildcat_requests_total{replica=\"0\"} 42\n"));
         assert!(text.contains("wildcat_requests_total{replica=\"1\"} 7\n"));
         assert!(text.contains("wildcat_up 1.5\n"));
+    }
+
+    #[test]
+    fn histogram_family_is_cumulative_with_inf_bucket() {
+        let mut b = PromBuilder::new();
+        let buckets = [(1000.0, 1), (2000.0, 3), (4000.0, 4)];
+        b.histogram("wildcat_lat_ms", "Latency.", &[], &buckets, 7000.0, 4, 1e-3);
+        let text = b.finish();
+        assert!(text.contains("# TYPE wildcat_lat_ms histogram"));
+        assert!(text.contains("wildcat_lat_ms_bucket{le=\"1\"} 1\n"));
+        assert!(text.contains("wildcat_lat_ms_bucket{le=\"2\"} 3\n"));
+        assert!(text.contains("wildcat_lat_ms_bucket{le=\"+Inf\"} 4\n"));
+        assert!(text.contains("wildcat_lat_ms_sum 7\n"));
+        assert!(text.contains("wildcat_lat_ms_count 4\n"));
     }
 
     #[test]

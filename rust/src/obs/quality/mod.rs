@@ -1,0 +1,655 @@
+//! Online approximation-quality auditing: seeded sampling of live work,
+//! exact-reference recomputation, error histograms, and an error SLO
+//! with adaptive degradation.
+//!
+//! WildCat's claim is *bounded* error, not just speed — this module
+//! makes the bound observable in production. A [`QualityAudit`] is
+//! shared (one per replica) between the scheduler, the KV pool, and the
+//! metrics sink:
+//!
+//! * **Sampling** is deterministic: a splitmix hash of `(seed, site)`
+//!   modulo `--audit-rate` picks 1-in-N requests (whose decode steps
+//!   are then audited against a shadow uncompressed KV cache) and
+//!   1-in-N compression folds (audited at fold time, where the
+//!   pre-fold rows still exist). Same seed ⇒ same sites ⇒ same errors.
+//! * **Errors** (`max_abs_err`, relative Frobenius) feed per-layer/head
+//!   and global [`LogHistogram`]s, exported through the Prometheus,
+//!   JSON-series, metrics-JSON, and Chrome-trace surfaces.
+//! * **The SLO** (`--audit-slo-abs-err`) watches the windowed p99 in
+//!   [`slo`]: on breach the serving stack degrades gracefully (the
+//!   scheduler raises its coreset budget, the kvpool pressure ladder
+//!   pauses its compression rung) and recovers with hysteresis; every
+//!   transition is a tracer span and a counter.
+//!
+//! All audit computation happens off the request's critical result path:
+//! sampled sites recompute references *after* the served output is
+//! already decided, so audits never perturb served tokens.
+
+pub mod slo;
+
+use crate::attention::{wtd_attention, ClipRange};
+use crate::kvcache::KvEntry;
+use crate::linalg::Matrix;
+use crate::rng::Rng;
+use crate::util::json::Json;
+use crate::util::stats::LogHistogram;
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Mutex;
+
+use super::trace::{self, Event, SpanKind, NO_REQ};
+
+/// Audit configuration (CLI surface: `--audit-rate`,
+/// `--audit-slo-abs-err`, and the run seed).
+#[derive(Clone, Debug, Default)]
+pub struct QualityConfig {
+    /// Sample 1-in-`rate` requests and compression folds; 0 disables
+    /// auditing entirely (no shadow state, no metrics).
+    pub rate: u32,
+    /// Degrade when the windowed p99 audited `max_abs_err` exceeds this;
+    /// `<= 0` disables the SLO (auditing still measures).
+    pub slo_abs_err: f64,
+    /// Seed for the deterministic site sampler and probe queries.
+    pub seed: u64,
+}
+
+/// Sample-site kind tag carried in [`SpanKind::Quality`] payloads.
+pub const SAMPLE_DECODE: u64 = 0;
+/// Sample-site kind tag for compression-fold audits.
+pub const SAMPLE_FOLD: u64 = 1;
+
+/// Number of deterministic probe queries a fold audit attends with.
+pub const FOLD_PROBES: usize = 4;
+
+fn splitmix64(mut x: u64) -> u64 {
+    x = x.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    x = (x ^ (x >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    x = (x ^ (x >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    x ^ (x >> 31)
+}
+
+fn err_fixed(err: f64) -> u64 {
+    let f = (err * 1e9).round();
+    if f >= u64::MAX as f64 {
+        u64::MAX
+    } else {
+        f.max(0.0) as u64
+    }
+}
+
+struct State {
+    audited_decode: u64,
+    audited_folds: u64,
+    degradations: u64,
+    recoveries: u64,
+    max_err_seen: f64,
+    err: LogHistogram,
+    rel: LogHistogram,
+    per_lh: BTreeMap<usize, LogHistogram>,
+    slo: slo::SloState,
+}
+
+fn err_histogram() -> LogHistogram {
+    // 1e-9 … ~1e10 in ×2 buckets: audited attention errors live well
+    // inside this span, and sub-nanoscale errors fold into underflow.
+    LogHistogram::new(1e-9, 2.0, 64)
+}
+
+/// The per-replica audit sink: deterministic samplers, error
+/// histograms, and the SLO state machine. Shared by the scheduler, the
+/// KV pool (fold audits + ladder gating), and the metrics sink
+/// (export).
+pub struct QualityAudit {
+    cfg: QualityConfig,
+    degraded: AtomicBool,
+    inner: Mutex<State>,
+}
+
+impl QualityAudit {
+    /// A fresh audit sink for one replica.
+    pub fn new(cfg: QualityConfig) -> Self {
+        let slo = slo::SloState::new(cfg.slo_abs_err);
+        QualityAudit {
+            cfg,
+            degraded: AtomicBool::new(false),
+            inner: Mutex::new(State {
+                audited_decode: 0,
+                audited_folds: 0,
+                degradations: 0,
+                recoveries: 0,
+                max_err_seen: 0.0,
+                err: err_histogram(),
+                rel: err_histogram(),
+                per_lh: BTreeMap::new(),
+                slo,
+            }),
+        }
+    }
+
+    /// The configuration this sink was built with.
+    pub fn config(&self) -> &QualityConfig {
+        &self.cfg
+    }
+
+    /// Whether auditing is on at all (`rate > 0`).
+    pub fn enabled(&self) -> bool {
+        self.cfg.rate > 0
+    }
+
+    /// Deterministic request sampler: `true` for 1-in-`rate` request
+    /// ids (every decode step of a sampled request is audited).
+    pub fn audit_request(&self, req: u64) -> bool {
+        self.cfg.rate > 0
+            && splitmix64(self.cfg.seed ^ req.wrapping_mul(0x9E37_79B9_7F4A_7C15))
+                % self.cfg.rate as u64
+                == 0
+    }
+
+    /// Deterministic fold sampler: `true` for 1-in-`rate`
+    /// (sequence, fold-index) compression sites.
+    pub fn audit_fold(&self, seq: u64, fold: u64) -> bool {
+        self.cfg.rate > 0
+            && splitmix64(
+                self.cfg.seed
+                    ^ seq.wrapping_mul(0x9E37_79B9_7F4A_7C15)
+                    ^ fold.wrapping_mul(0xBF58_476D_1CE4_E5B9),
+            ) % self.cfg.rate as u64
+                == 0
+    }
+
+    /// Whether the SLO state machine currently holds the stack degraded
+    /// (scheduler: raised coreset budget; kvpool ladder: compression
+    /// rung paused). A relaxed load — polled from hot paths.
+    #[inline]
+    pub fn is_degraded(&self) -> bool {
+        self.degraded.load(Ordering::Relaxed)
+    }
+
+    /// Record one audited decode step: per-(layer, head) error pairs
+    /// `(lh, max_abs_err, rel_fro_err)` against the shadow exact cache.
+    pub fn observe_decode(&self, req: u64, errs: &[(usize, f64, f64)]) {
+        let mut g = self.inner.lock().unwrap();
+        g.audited_decode += 1;
+        let (site_err, site_lh) = Self::record_errs(&mut g, errs);
+        drop(g);
+        self.emit_quality_span(req, site_err, SAMPLE_DECODE, site_lh);
+        self.run_slo(site_err);
+    }
+
+    /// Record one audited compression fold's error against the
+    /// uncompressed rows it replaced.
+    pub fn observe_fold(&self, seq: u64, lh: usize, max_abs: f64, rel: f64) {
+        let mut g = self.inner.lock().unwrap();
+        g.audited_folds += 1;
+        Self::record_errs(&mut g, &[(lh, max_abs, rel)]);
+        drop(g);
+        self.emit_quality_span(seq, max_abs, SAMPLE_FOLD, lh);
+        self.run_slo(max_abs);
+    }
+
+    /// Record error pairs into the histograms; returns the site-level
+    /// (max error, argmax layer-head).
+    fn record_errs(g: &mut State, errs: &[(usize, f64, f64)]) -> (f64, usize) {
+        let mut site_err = 0.0f64;
+        let mut site_rel = 0.0f64;
+        let mut site_lh = 0usize;
+        for &(lh, max_abs, rel) in errs {
+            g.per_lh.entry(lh).or_insert_with(err_histogram).record(max_abs);
+            if max_abs >= site_err {
+                site_err = max_abs;
+                site_lh = lh;
+            }
+            site_rel = site_rel.max(rel);
+        }
+        g.err.record(site_err);
+        g.rel.record(site_rel);
+        g.max_err_seen = g.max_err_seen.max(site_err);
+        (site_err, site_lh)
+    }
+
+    fn emit_quality_span(&self, req: u64, err: f64, kind_id: u64, lh: usize) {
+        let t = trace::global();
+        if !t.is_enabled() {
+            return;
+        }
+        t.record(Event {
+            ts_us: t.now_us(),
+            dur_us: 0,
+            kind: SpanKind::Quality,
+            replica: trace::current_replica(),
+            req,
+            a: err_fixed(err),
+            b: (kind_id << 32) | lh as u64,
+        });
+    }
+
+    /// Feed the SLO state machine and apply/record any transition.
+    fn run_slo(&self, err: f64) {
+        let mut g = self.inner.lock().unwrap();
+        let degraded = self.is_degraded();
+        let Some(t) = g.slo.observe(err, degraded) else { return };
+        let (to_degraded, p99) = match t {
+            slo::Transition::Degrade(p) => (true, p),
+            slo::Transition::Recover(p) => (false, p),
+        };
+        self.degraded.store(to_degraded, Ordering::Relaxed);
+        if to_degraded {
+            g.degradations += 1;
+        } else {
+            g.recoveries += 1;
+        }
+        drop(g);
+        let t = trace::global();
+        if t.is_enabled() {
+            t.record(Event {
+                ts_us: t.now_us(),
+                dur_us: 0,
+                kind: SpanKind::SloTransition,
+                replica: trace::current_replica(),
+                req: NO_REQ,
+                a: u64::from(to_degraded),
+                b: err_fixed(p99),
+            });
+        }
+    }
+
+    /// A consistent point-in-time copy of every exported audit statistic.
+    pub fn snapshot(&self) -> QualitySnapshot {
+        let g = self.inner.lock().unwrap();
+        let quantile = |h: &LogHistogram, q: f64| if h.total() == 0 { 0.0 } else { h.quantile(q) };
+        QualitySnapshot {
+            rate: self.cfg.rate,
+            slo_abs_err: self.cfg.slo_abs_err,
+            audited_decode: g.audited_decode,
+            audited_folds: g.audited_folds,
+            err_p50: if g.max_err_seen == 0.0 { 0.0 } else { quantile(&g.err, 0.5) },
+            err_p99: if g.max_err_seen == 0.0 { 0.0 } else { quantile(&g.err, 0.99) },
+            err_max: g.max_err_seen,
+            rel_p99: quantile(&g.rel, 0.99),
+            degraded: self.is_degraded(),
+            degradations: g.degradations,
+            recoveries: g.recoveries,
+            err_buckets: g.err.cumulative_buckets(),
+            err_sum: g.err.sum(),
+            err_count: g.err.total(),
+            per_lh_p99: g
+                .per_lh
+                .iter()
+                .map(|(&lh, h)| (lh, quantile(h, 0.99), h.total()))
+                .collect(),
+        }
+    }
+}
+
+/// Plain-number snapshot of a [`QualityAudit`], the unit every export
+/// surface (JSON, Prometheus, report text) renders from — so all
+/// surfaces show the same values.
+#[derive(Clone, Debug)]
+pub struct QualitySnapshot {
+    /// Configured 1-in-N sample rate.
+    pub rate: u32,
+    /// Configured SLO threshold (0 = off).
+    pub slo_abs_err: f64,
+    /// Audited decode-step samples.
+    pub audited_decode: u64,
+    /// Audited compression folds.
+    pub audited_folds: u64,
+    /// p50 of audited `max_abs_err` (0 when every sample was exact).
+    pub err_p50: f64,
+    /// p99 of audited `max_abs_err` (0 when every sample was exact).
+    pub err_p99: f64,
+    /// Largest audited `max_abs_err` seen (exact, not bucketed —
+    /// identically 0.0 on the exact path).
+    pub err_max: f64,
+    /// p99 of audited relative Frobenius error.
+    pub rel_p99: f64,
+    /// Whether the SLO currently holds the stack degraded.
+    pub degraded: bool,
+    /// SLO degrade transitions since start.
+    pub degradations: u64,
+    /// SLO recover transitions since start.
+    pub recoveries: u64,
+    /// Cumulative histogram buckets of audited `max_abs_err`.
+    pub err_buckets: Vec<(f64, u64)>,
+    /// Sum of audited `max_abs_err` (Prometheus histogram `_sum`).
+    pub err_sum: f64,
+    /// Audited sample count (Prometheus histogram `_count`).
+    pub err_count: u64,
+    /// Per-(layer, head) `(lh, p99 max_abs_err, samples)` rows.
+    pub per_lh_p99: Vec<(usize, f64, u64)>,
+}
+
+impl QualitySnapshot {
+    /// Total audited samples across site kinds.
+    pub fn audited_total(&self) -> u64 {
+        self.audited_decode + self.audited_folds
+    }
+
+    /// The JSON block exported under `"quality"` in metrics snapshots
+    /// (and therefore in every `--metrics-series` sample).
+    pub fn to_json(&self) -> Json {
+        let num = |x: f64| Json::Num(if x.is_finite() { x } else { 0.0 });
+        let mut o = BTreeMap::new();
+        o.insert("audit_rate".to_string(), Json::Num(self.rate as f64));
+        o.insert("slo_abs_err".to_string(), num(self.slo_abs_err));
+        o.insert("audited_decode_samples".to_string(), Json::Num(self.audited_decode as f64));
+        o.insert("audited_folds".to_string(), Json::Num(self.audited_folds as f64));
+        o.insert("audited_samples".to_string(), Json::Num(self.audited_total() as f64));
+        o.insert("max_abs_err_p50".to_string(), num(self.err_p50));
+        o.insert("max_abs_err_p99".to_string(), num(self.err_p99));
+        o.insert("max_abs_err_max".to_string(), num(self.err_max));
+        o.insert("rel_fro_err_p99".to_string(), num(self.rel_p99));
+        o.insert("degraded".to_string(), Json::Bool(self.degraded));
+        o.insert("slo_degradations".to_string(), Json::Num(self.degradations as f64));
+        o.insert("slo_recoveries".to_string(), Json::Num(self.recoveries as f64));
+        let mut lh = BTreeMap::new();
+        for &(i, p99, n) in &self.per_lh_p99 {
+            let mut row = BTreeMap::new();
+            row.insert("max_abs_err_p99".to_string(), num(p99));
+            row.insert("samples".to_string(), Json::Num(n as f64));
+            lh.insert(format!("lh{i}"), Json::Obj(row));
+        }
+        o.insert("per_lh".to_string(), Json::Obj(lh));
+        Json::Obj(o)
+    }
+
+    /// Write the Prometheus samples for this snapshot (the quality slice
+    /// of `ServingMetrics::prom_write`).
+    pub fn prom_write(&self, b: &mut super::PromBuilder, labels: &[(&str, &str)]) {
+        b.declare(
+            "wildcat_quality_audited_samples_total",
+            "counter",
+            "Approximation-quality audit samples by site kind.",
+        );
+        for (kind, v) in [("decode", self.audited_decode), ("fold", self.audited_folds)] {
+            let mut ls = labels.to_vec();
+            ls.push(("kind", kind));
+            b.sample("wildcat_quality_audited_samples_total", &ls, v as f64);
+        }
+        b.declare(
+            "wildcat_quality_max_abs_err",
+            "gauge",
+            "Audited max-abs attention error quantiles (vs exact reference).",
+        );
+        for (q, v) in [("0.5", self.err_p50), ("0.99", self.err_p99), ("max", self.err_max)] {
+            let mut ls = labels.to_vec();
+            ls.push(("quantile", q));
+            b.sample("wildcat_quality_max_abs_err", &ls, v);
+        }
+        b.declare(
+            "wildcat_quality_rel_fro_err",
+            "gauge",
+            "Audited relative Frobenius error quantiles (vs exact reference).",
+        );
+        {
+            let mut ls = labels.to_vec();
+            ls.push(("quantile", "0.99"));
+            b.sample("wildcat_quality_rel_fro_err", &ls, self.rel_p99);
+        }
+        b.histogram(
+            "wildcat_quality_max_abs_err_hist",
+            "Distribution of audited max-abs attention error.",
+            labels,
+            &self.err_buckets,
+            self.err_sum,
+            self.err_count,
+            1.0,
+        );
+        b.declare(
+            "wildcat_quality_slo_transitions_total",
+            "counter",
+            "Error-SLO state transitions.",
+        );
+        for (t, v) in [("degrade", self.degradations), ("recover", self.recoveries)] {
+            let mut ls = labels.to_vec();
+            ls.push(("transition", t));
+            b.sample("wildcat_quality_slo_transitions_total", &ls, v as f64);
+        }
+        b.declare(
+            "wildcat_quality_degraded",
+            "gauge",
+            "1 while the error SLO holds the stack degraded.",
+        );
+        b.sample("wildcat_quality_degraded", labels, f64::from(self.degraded));
+        b.declare(
+            "wildcat_quality_lh_max_abs_err_p99",
+            "gauge",
+            "Per-layer-head p99 of audited max-abs attention error.",
+        );
+        for &(lh, p99, _) in &self.per_lh_p99 {
+            let mut ls = labels.to_vec();
+            let lh = lh.to_string();
+            ls.push(("lh", &lh));
+            b.sample("wildcat_quality_lh_max_abs_err_p99", &ls, p99);
+        }
+    }
+}
+
+/// Deterministic probe queries for one fold-audit site: same
+/// `(seed, seq, fold)` ⇒ bit-identical probes ⇒ identical audited
+/// errors across runs.
+pub fn probe_queries(seed: u64, seq: u64, fold: u64, d_k: usize) -> Matrix {
+    let mut rng = Rng::seed_from(splitmix64(
+        seed ^ seq.wrapping_mul(0x9E37_79B9_7F4A_7C15) ^ fold.wrapping_mul(0xBF58_476D_1CE4_E5B9),
+    ));
+    Matrix::randn(&mut rng, FOLD_PROBES, d_k)
+}
+
+/// Ground-truth error of one compression fold: weighted attention from
+/// `probe` queries over the pre-fold rows versus over the compressed
+/// entry. Returns `(max_abs_err, rel_frobenius_err)`.
+pub fn fold_error(
+    probe: &Matrix,
+    pre_k: &Matrix,
+    pre_v: &Matrix,
+    pre_w: &[f64],
+    entry: &KvEntry,
+    beta: f32,
+) -> (f64, f64) {
+    let clip_ref = ClipRange::from_values(pre_v);
+    let clip_apx = ClipRange::from_values(&entry.values);
+    let reference = wtd_attention(probe, pre_k, pre_v, pre_w, &clip_ref, beta);
+    let approx = wtd_attention(probe, &entry.keys, &entry.values, &entry.weights, &clip_apx, beta);
+    matrix_error(reference.as_slice(), approx.as_slice())
+}
+
+/// `(max_abs_err, rel_frobenius_err)` of `approx` against `reference`
+/// over flat row-major slices of equal length.
+pub fn matrix_error(reference: &[f32], approx: &[f32]) -> (f64, f64) {
+    debug_assert_eq!(reference.len(), approx.len());
+    let mut max_abs = 0.0f64;
+    let mut diff_sq = 0.0f64;
+    let mut ref_sq = 0.0f64;
+    for (&r, &a) in reference.iter().zip(approx) {
+        let d = (r as f64 - a as f64).abs();
+        max_abs = max_abs.max(d);
+        diff_sq += d * d;
+        ref_sq += (r as f64) * (r as f64);
+    }
+    (max_abs, diff_sq.sqrt() / ref_sq.sqrt().max(1e-12))
+}
+
+/// Validate the quality block(s) of a metrics-JSON document (the
+/// `wildcat obs --metrics` check): every `"quality"` object found —
+/// top-level or per-replica — must satisfy the audit invariants.
+/// Returns the number of quality blocks checked (0 when auditing was
+/// off; that is not an error).
+pub fn validate_quality_json(doc: &Json) -> Result<usize, String> {
+    let mut checked = 0;
+    validate_quality_inner(doc, &mut checked)?;
+    Ok(checked)
+}
+
+fn validate_quality_inner(doc: &Json, checked: &mut usize) -> Result<(), String> {
+    if let Some(o) = doc.as_obj() {
+        for (k, v) in o {
+            if k == "quality" {
+                validate_quality_block(v)?;
+                *checked += 1;
+            } else {
+                validate_quality_inner(v, checked)?;
+            }
+        }
+    } else if let Some(a) = doc.as_arr() {
+        for v in a {
+            validate_quality_inner(v, checked)?;
+        }
+    }
+    Ok(())
+}
+
+fn validate_quality_block(q: &Json) -> Result<(), String> {
+    let num = |key: &str| {
+        q.get(key)
+            .and_then(Json::as_f64)
+            .ok_or_else(|| format!("quality block missing numeric {key:?}"))
+    };
+    let rate = num("audit_rate")?;
+    let samples = num("audited_samples")?;
+    let decode = num("audited_decode_samples")?;
+    let folds = num("audited_folds")?;
+    if decode + folds != samples {
+        return Err(format!("quality sample counts disagree: {decode} + {folds} != {samples}"));
+    }
+    if rate == 0.0 && samples > 0.0 {
+        return Err("quality block reports samples with auditing off".to_string());
+    }
+    let p50 = num("max_abs_err_p50")?;
+    let p99 = num("max_abs_err_p99")?;
+    let max = num("max_abs_err_max")?;
+    if p50 < 0.0 || p99 < p50 {
+        return Err(format!("quality quantiles not ordered: p50={p50} p99={p99}"));
+    }
+    if max < 0.0 {
+        return Err(format!("negative max_abs_err_max: {max}"));
+    }
+    let degr = num("slo_degradations")?;
+    let reco = num("slo_recoveries")?;
+    if reco > degr {
+        return Err(format!("more SLO recoveries ({reco}) than degradations ({degr})"));
+    }
+    match q.get("degraded") {
+        Some(Json::Bool(d)) => {
+            let expected = degr > reco;
+            if *d != expected {
+                return Err(format!(
+                    "degraded flag {d} inconsistent with transitions ({degr} degrade / {reco} recover)"
+                ));
+            }
+        }
+        _ => return Err("quality block missing boolean \"degraded\"".to_string()),
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sampling_is_deterministic_and_roughly_one_in_n() {
+        let a = QualityAudit::new(QualityConfig { rate: 8, slo_abs_err: 0.0, seed: 42 });
+        let b = QualityAudit::new(QualityConfig { rate: 8, slo_abs_err: 0.0, seed: 42 });
+        let hits: Vec<u64> = (0..10_000).filter(|&r| a.audit_request(r)).collect();
+        let hits_b: Vec<u64> = (0..10_000).filter(|&r| b.audit_request(r)).collect();
+        assert_eq!(hits, hits_b, "same seed must pick the same sites");
+        // 1-in-8 of 10k: generous 3-sigma-ish band
+        assert!(hits.len() > 900 && hits.len() < 1600, "hits={}", hits.len());
+        let c = QualityAudit::new(QualityConfig { rate: 8, slo_abs_err: 0.0, seed: 43 });
+        let hits_c: Vec<u64> = (0..10_000).filter(|&r| c.audit_request(r)).collect();
+        assert_ne!(hits, hits_c, "different seeds should pick different sites");
+        // rate 1 audits everything, rate 0 nothing
+        let all = QualityAudit::new(QualityConfig { rate: 1, slo_abs_err: 0.0, seed: 1 });
+        assert!((0..100).all(|r| all.audit_request(r) && all.audit_fold(r, 3)));
+        let off = QualityAudit::new(QualityConfig::default());
+        assert!(!off.enabled());
+        assert!((0..100).all(|r| !off.audit_request(r) && !off.audit_fold(r, 0)));
+    }
+
+    #[test]
+    fn observe_feeds_histograms_and_snapshot() {
+        let a = QualityAudit::new(QualityConfig { rate: 1, slo_abs_err: 0.0, seed: 7 });
+        a.observe_decode(3, &[(0, 1e-4, 1e-3), (1, 5e-4, 2e-3)]);
+        a.observe_fold(9, 1, 2e-3, 4e-3);
+        let s = a.snapshot();
+        assert_eq!(s.audited_decode, 1);
+        assert_eq!(s.audited_folds, 1);
+        assert_eq!(s.audited_total(), 2);
+        assert!((s.err_max - 2e-3).abs() < 1e-12, "max tracked exactly");
+        assert!(s.err_p99 >= s.err_p50 && s.err_p50 > 0.0);
+        assert!(s.rel_p99 > 0.0);
+        assert_eq!(s.per_lh_p99.len(), 2);
+        // lh 1 saw both the 5e-4 decode and the 2e-3 fold
+        let lh1 = s.per_lh_p99.iter().find(|r| r.0 == 1).unwrap();
+        assert_eq!(lh1.2, 2);
+        // json + prometheus render without panicking and agree on p99
+        let j = s.to_json();
+        assert_eq!(j.get("audited_samples").and_then(Json::as_f64), Some(2.0));
+        let mut b = crate::obs::PromBuilder::new();
+        s.prom_write(&mut b, &[]);
+        let text = b.finish();
+        assert!(text.contains("wildcat_quality_audited_samples_total{kind=\"fold\"} 1\n"));
+        assert!(text.contains("wildcat_quality_max_abs_err_hist_count 2\n"));
+        // the validator only counts blocks nested under a "quality" key
+        assert_eq!(validate_quality_json(&j).unwrap(), 0);
+        let mut wrap = BTreeMap::new();
+        wrap.insert("quality".to_string(), j);
+        assert_eq!(validate_quality_json(&Json::Obj(wrap)).unwrap(), 1);
+    }
+
+    #[test]
+    fn exact_samples_keep_err_identically_zero() {
+        let a = QualityAudit::new(QualityConfig { rate: 1, slo_abs_err: 0.0, seed: 7 });
+        for i in 0..50 {
+            a.observe_decode(i, &[(0, 0.0, 0.0), (1, 0.0, 0.0)]);
+        }
+        let s = a.snapshot();
+        assert_eq!(s.err_max, 0.0);
+        assert_eq!(s.err_p99, 0.0);
+        assert_eq!(s.err_p50, 0.0);
+    }
+
+    #[test]
+    fn slo_degrades_and_recovers_exactly_once() {
+        let a = QualityAudit::new(QualityConfig { rate: 1, slo_abs_err: 1e-3, seed: 7 });
+        assert!(!a.is_degraded());
+        for i in 0..slo::WINDOW as u64 {
+            a.observe_decode(i, &[(0, 5e-3, 1e-2)]);
+        }
+        assert!(a.is_degraded(), "windowed p99 breach must degrade");
+        for i in 0..2 * slo::WINDOW as u64 {
+            a.observe_decode(1000 + i, &[(0, 1e-6, 1e-5)]);
+        }
+        assert!(!a.is_degraded(), "low errors must recover with hysteresis");
+        let s = a.snapshot();
+        assert_eq!(s.degradations, 1, "exactly one degrade transition");
+        assert_eq!(s.recoveries, 1, "exactly one recovery");
+    }
+
+    #[test]
+    fn fold_error_is_deterministic_and_zero_for_identity() {
+        let mut rng = Rng::seed_from(5);
+        let k = Matrix::randn(&mut rng, 20, 8);
+        let v = Matrix::randn(&mut rng, 20, 8);
+        let w = vec![1.0f64; 20];
+        let probe = probe_queries(42, 3, 0, 8);
+        let probe2 = probe_queries(42, 3, 0, 8);
+        assert_eq!(probe.as_slice(), probe2.as_slice(), "probes must be deterministic");
+        // identity "fold": entry == original rows ⇒ error identically 0
+        let entry = KvEntry { keys: k.clone(), values: v.clone(), weights: w.clone(), source_len: 20 };
+        let (max_abs, rel) = fold_error(&probe, &k, &v, &w, &entry, 0.35);
+        assert_eq!(max_abs, 0.0);
+        assert_eq!(rel, 0.0);
+        // a genuinely lossy entry has nonzero, reproducible error
+        let lossy = KvEntry {
+            keys: Matrix::from_fn(4, 8, |i, j| k.get(i, j)),
+            values: Matrix::from_fn(4, 8, |i, j| v.get(i, j)),
+            weights: vec![5.0; 4],
+            source_len: 20,
+        };
+        let e1 = fold_error(&probe, &k, &v, &w, &lossy, 0.35);
+        let e2 = fold_error(&probe, &k, &v, &w, &lossy, 0.35);
+        assert_eq!(e1, e2);
+        assert!(e1.0 > 0.0 && e1.1 > 0.0);
+    }
+}

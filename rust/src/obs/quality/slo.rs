@@ -1,0 +1,140 @@
+//! The error-SLO state machine: a rolling window of audited errors,
+//! a degrade threshold on the windowed p99, and hysteresis on the way
+//! back (recovery requires the window p99 to fall well below the
+//! threshold, so the ladder does not flap at the boundary).
+
+use std::collections::VecDeque;
+
+/// Rolling window length (audited samples) the SLO p99 is computed over.
+pub const WINDOW: usize = 64;
+
+/// Minimum audited samples in the window before the SLO can trip —
+/// a p99 over a handful of samples is just the max.
+pub const MIN_SAMPLES: usize = 16;
+
+/// Recovery hysteresis: the windowed p99 must fall below
+/// `threshold * RECOVER_FRACTION` before the degraded state clears.
+pub const RECOVER_FRACTION: f64 = 0.5;
+
+/// A state transition decided by [`SloState::observe`], carrying the
+/// windowed p99 error that triggered it.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Transition {
+    /// The windowed p99 breached the SLO: degrade approximation depth.
+    Degrade(f64),
+    /// The windowed p99 fell below the hysteresis band: recover.
+    Recover(f64),
+}
+
+/// Rolling-window SLO evaluator. Pure state machine — the caller owns
+/// the degraded flag and the observable side effects (tracer span,
+/// counters, ladder gating).
+#[derive(Debug)]
+pub struct SloState {
+    threshold: f64,
+    window: VecDeque<f64>,
+}
+
+impl SloState {
+    /// A fresh evaluator; `threshold <= 0` disables the SLO entirely.
+    pub fn new(threshold: f64) -> Self {
+        SloState { threshold, window: VecDeque::with_capacity(WINDOW) }
+    }
+
+    /// Whether an SLO threshold is configured.
+    pub fn active(&self) -> bool {
+        self.threshold > 0.0
+    }
+
+    /// The windowed p99 (nearest-rank over the rolling window), or 0
+    /// when empty.
+    pub fn window_p99(&self) -> f64 {
+        if self.window.is_empty() {
+            return 0.0;
+        }
+        let mut v: Vec<f64> = self.window.iter().copied().collect();
+        v.sort_by(|a, b| a.partial_cmp(b).unwrap_or(std::cmp::Ordering::Equal));
+        let rank = ((0.99 * v.len() as f64).ceil() as usize).clamp(1, v.len());
+        v[rank - 1]
+    }
+
+    /// Feed one audited error; decide whether the caller must transition
+    /// given its current `degraded` state.
+    pub fn observe(&mut self, err: f64, degraded: bool) -> Option<Transition> {
+        if !self.active() {
+            return None;
+        }
+        if self.window.len() >= WINDOW {
+            self.window.pop_front();
+        }
+        self.window.push_back(err);
+        if self.window.len() < MIN_SAMPLES {
+            return None;
+        }
+        let p99 = self.window_p99();
+        if !degraded && p99 > self.threshold {
+            Some(Transition::Degrade(p99))
+        } else if degraded && p99 < self.threshold * RECOVER_FRACTION {
+            Some(Transition::Recover(p99))
+        } else {
+            None
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn inactive_threshold_never_transitions() {
+        let mut s = SloState::new(0.0);
+        for _ in 0..200 {
+            assert_eq!(s.observe(1e9, false), None);
+        }
+    }
+
+    #[test]
+    fn degrades_once_then_recovers_with_hysteresis() {
+        let mut s = SloState::new(1e-3);
+        let mut degraded = false;
+        let mut degrades = 0;
+        let mut recovers = 0;
+        // high errors: exactly one degrade despite many breaching samples
+        for _ in 0..100 {
+            match s.observe(5e-3, degraded) {
+                Some(Transition::Degrade(p)) => {
+                    assert!(p > 1e-3);
+                    degraded = true;
+                    degrades += 1;
+                }
+                Some(Transition::Recover(_)) => recovers += 1,
+                None => {}
+            }
+        }
+        assert_eq!((degrades, recovers), (1, 0));
+        // errors just below the threshold: hysteresis holds the degraded
+        // state (p99 must fall below threshold/2)
+        for _ in 0..WINDOW {
+            assert_eq!(s.observe(0.9e-3, degraded), None);
+        }
+        // genuinely low errors: one recovery once the window drains
+        for _ in 0..WINDOW {
+            if let Some(Transition::Recover(p)) = s.observe(1e-5, degraded) {
+                assert!(p < 0.5e-3);
+                degraded = false;
+                recovers += 1;
+            }
+        }
+        assert_eq!((degrades, recovers), (1, 1));
+    }
+
+    #[test]
+    fn needs_min_samples_before_tripping() {
+        let mut s = SloState::new(1e-6);
+        for i in 0..MIN_SAMPLES - 1 {
+            assert_eq!(s.observe(1.0, false), None, "tripped at sample {i}");
+        }
+        assert!(matches!(s.observe(1.0, false), Some(Transition::Degrade(_))));
+    }
+}

@@ -55,11 +55,23 @@ pub enum SpanKind {
     Route,
     /// Sequence retirement: last decode step → response handed back.
     Retire,
+    /// One approximation-quality audit sample (`a` = audited
+    /// `max_abs_err` in 1e-9 fixed point, `b` = `kind << 32 | lh` where
+    /// kind 0 = decode step, 1 = compression fold).
+    Quality,
+    /// An error-SLO state transition (`a` = 1 for degrade, 0 for
+    /// recover; `b` = the windowed p99 error in 1e-9 fixed point that
+    /// triggered it).
+    SloTransition,
+    /// An instant gauge sample, exported as a Chrome counter ("C")
+    /// event (`a` = gauge value, `b` = gauge id: 0 = kvpool blocks in
+    /// use, 1 = in-flight requests).
+    Gauge,
 }
 
 impl SpanKind {
     /// Every kind, in lifecycle order.
-    pub const ALL: [SpanKind; 8] = [
+    pub const ALL: [SpanKind; 11] = [
         SpanKind::Queue,
         SpanKind::PrefixLookup,
         SpanKind::Prefill,
@@ -68,6 +80,9 @@ impl SpanKind {
         SpanKind::Evict,
         SpanKind::Route,
         SpanKind::Retire,
+        SpanKind::Quality,
+        SpanKind::SloTransition,
+        SpanKind::Gauge,
     ];
 
     /// The canonical snake_case span name used in trace exports.
@@ -81,6 +96,24 @@ impl SpanKind {
             SpanKind::Evict => "evict",
             SpanKind::Route => "route",
             SpanKind::Retire => "retire",
+            SpanKind::Quality => "quality",
+            SpanKind::SloTransition => "slo_transition",
+            SpanKind::Gauge => "gauge",
+        }
+    }
+
+    /// Gauge id for [`SpanKind::Gauge`] events: KV-pool blocks in use.
+    pub const GAUGE_BLOCKS_IN_USE: u64 = 0;
+    /// Gauge id for [`SpanKind::Gauge`] events: in-flight requests.
+    pub const GAUGE_IN_FLIGHT: u64 = 1;
+
+    /// The exported counter name for a gauge id (see
+    /// [`SpanKind::Gauge`]).
+    pub fn gauge_name(id: u64) -> &'static str {
+        match id {
+            Self::GAUGE_BLOCKS_IN_USE => "kvpool_blocks_in_use",
+            Self::GAUGE_IN_FLIGHT => "in_flight_requests",
+            _ => "gauge",
         }
     }
 }
@@ -286,6 +319,25 @@ pub fn enabled() -> bool {
 /// Record a span on the global tracer under this thread's replica tag.
 pub fn span(kind: SpanKind, start: Instant, end: Instant, req: u64, a: u64, b: u64) {
     global().record_span(kind, start, end, current_replica(), req, a, b);
+}
+
+/// Record an instant [`SpanKind::Gauge`] sample on the global tracer
+/// under this thread's replica tag (`id` is one of the
+/// `SpanKind::GAUGE_*` constants, `value` the sampled gauge value).
+pub fn gauge(id: u64, value: u64) {
+    let t = global();
+    if !t.is_enabled() {
+        return;
+    }
+    t.record(Event {
+        ts_us: t.now_us(),
+        dur_us: 0,
+        kind: SpanKind::Gauge,
+        replica: current_replica(),
+        req: NO_REQ,
+        a: value,
+        b: id,
+    });
 }
 
 /// Record a span on the global tracer with an explicit replica (the

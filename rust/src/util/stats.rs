@@ -115,6 +115,7 @@ pub struct LogHistogram {
     counts: Vec<u64>,
     underflow: u64,
     total: u64,
+    sum: f64,
 }
 
 impl LogHistogram {
@@ -126,11 +127,12 @@ impl LogHistogram {
 
     pub fn new(base: f64, growth: f64, buckets: usize) -> Self {
         assert!(base > 0.0 && growth > 1.0 && buckets > 0);
-        LogHistogram { base, growth, counts: vec![0; buckets], underflow: 0, total: 0 }
+        LogHistogram { base, growth, counts: vec![0; buckets], underflow: 0, total: 0, sum: 0.0 }
     }
 
     pub fn record(&mut self, x: f64) {
         self.total += 1;
+        self.sum += x;
         if x < self.base {
             self.underflow += 1;
             return;
@@ -142,6 +144,28 @@ impl LogHistogram {
 
     pub fn total(&self) -> u64 {
         self.total
+    }
+
+    /// Sum of every recorded value (Prometheus histogram `_sum`).
+    pub fn sum(&self) -> f64 {
+        self.sum
+    }
+
+    /// Cumulative buckets as `(upper_edge, count_le)` pairs, suitable for
+    /// a Prometheus histogram exposition: the first bucket's upper edge
+    /// is `base` and absorbs underflow, each subsequent edge multiplies
+    /// by `growth`, and the final count equals [`LogHistogram::total`]
+    /// (the last bucket is clamped open-ended on record, so its edge
+    /// behaves as `+Inf` for counting purposes).
+    pub fn cumulative_buckets(&self) -> Vec<(f64, u64)> {
+        let mut out = Vec::with_capacity(self.counts.len() + 1);
+        let mut acc = self.underflow;
+        out.push((self.base, acc));
+        for (i, &c) in self.counts.iter().enumerate() {
+            acc += c;
+            out.push((self.base * self.growth.powi(i as i32 + 1), acc));
+        }
+        out
     }
 
     /// Approximate quantile from bucket boundaries (upper edge).
@@ -275,5 +299,27 @@ mod tests {
         h.record(1e9);
         assert_eq!(h.total(), 2);
         assert!(h.quantile(0.25) <= 10.0);
+    }
+
+    #[test]
+    fn histogram_sum_and_cumulative_buckets() {
+        let mut h = LogHistogram::new(10.0, 2.0, 4);
+        for x in [0.5, 15.0, 25.0, 1e9] {
+            h.record(x);
+        }
+        assert!((h.sum() - (0.5 + 15.0 + 25.0 + 1e9)).abs() < 1e-3);
+        let b = h.cumulative_buckets();
+        assert_eq!(b.len(), 5);
+        // edges: 10, 20, 40, 80, 160; underflow folds into the first
+        assert_eq!(b[0], (10.0, 1));
+        assert_eq!(b[1], (20.0, 2));
+        assert_eq!(b[2], (40.0, 3));
+        // the clamped overflow value lands in the last bucket
+        assert_eq!(b[4].1, h.total());
+        // cumulative counts are monotone non-decreasing
+        for w in b.windows(2) {
+            assert!(w[1].1 >= w[0].1);
+            assert!(w[1].0 > w[0].0);
+        }
     }
 }
