@@ -1023,6 +1023,58 @@ pub fn run_micro(cfg: &RunCfg) -> Result<BenchReport> {
         report.push(BenchRecord::new(name, per_event).extra("events_per_s", 1.0 / per_event));
     }
 
+    // fault-plane overhead per injection site: `off` is what every
+    // fault-free run pays (one Option discriminant check per engine
+    // step / admission), `armed` adds the per-replica atomics of an
+    // active plan whose thresholds never fire. CI gates `off` against
+    // the tracer's disabled gate so the fault plane stays free when
+    // chaos is not requested.
+    {
+        use crate::cluster::fault::{FaultConfig, FaultPlan};
+        let none: Option<std::sync::Arc<FaultPlan>> = None;
+        let r_off = bench("fault plane (off)", opts, || {
+            let mut hits = 0u64;
+            for _ in 0..batch {
+                // black_box: keep the discriminant check from being
+                // const-folded away (the real site reads a runtime field)
+                if let Some(f) = std::hint::black_box(&none) {
+                    if f.inject_admission_failure(0) {
+                        hits += 1;
+                    }
+                }
+            }
+            hits
+        });
+        // thresholds far above the loop count: the armed gate runs, no
+        // fault ever fires (isolates bookkeeping from injection)
+        let plan = FaultPlan::new(
+            FaultConfig { seed, reject_every: u64::MAX, ..Default::default() },
+            1,
+        )
+        .expect("armed plan");
+        let armed = Some(plan);
+        let r_armed = bench("fault plane (armed)", opts, || {
+            let mut hits = 0u64;
+            for _ in 0..batch {
+                if let Some(f) = std::hint::black_box(&armed) {
+                    if f.inject_admission_failure(0) {
+                        hits += 1;
+                    }
+                }
+            }
+            hits
+        });
+        for (name, r) in [("fault_plane_off", &r_off), ("fault_plane_armed", &r_armed)] {
+            let per_event = r.median() / batch as f64;
+            table.add_row(vec![
+                format!("{name} x{batch}"),
+                format!("{:.3} ms", r.median() * 1e3),
+                format!("{:.1} ns/site", per_event * 1e9),
+            ]);
+            report.push(BenchRecord::new(name, per_event).extra("events_per_s", 1.0 / per_event));
+        }
+    }
+
     table.print();
     Ok(report)
 }
@@ -1078,14 +1130,14 @@ pub fn run_serve(cfg: &RunCfg) -> Result<BenchReport> {
             scfg.queue_capacity = queue_cap;
             scfg.scheduler.cache_budget = budget;
             scfg.seed = seed;
-            let pool = ReplicaPool::spawn(
+            let pool = Arc::new(ReplicaPool::spawn(
                 n,
                 scfg,
                 Arc::new(StreamingLlm),
                 replica_backend_factory(weights.clone(), model_cfg, seed),
-            );
+            ));
             let router =
-                Router::new(pool.clients(), RouterConfig { policy, ..Default::default() });
+                Router::new(pool.clone(), RouterConfig { policy, ..Default::default() });
             // same fixed-seed trace and prompts for every configuration
             let mut trace_rng = Rng::seed_from(seed.wrapping_add(0xACE));
             let trace = shaped_trace(

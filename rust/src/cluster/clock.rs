@@ -1,0 +1,101 @@
+//! Virtual/wall clock abstraction for the routing tier.
+//!
+//! Deadlines, backoff sleeps and circuit-breaker windows all need a notion
+//! of "now". Coupling them to [`Instant::now`] makes every breaker test a
+//! wall-clock sleep and every chaos property test nondeterministic, so the
+//! router reads time through a [`Clock`] instead: `Clock::wall()` for
+//! production and `Clock::manual()` for tests, where time only moves when
+//! the test (or a polling waiter) advances it. The `--fast` loadgen path
+//! already replays arrivals in virtual time; this extends the same idea to
+//! timeouts and health windows.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// Microsecond clock: either the process monotonic clock or a manually
+/// advanced counter (for deterministic tests).
+#[derive(Debug)]
+pub enum Clock {
+    /// Monotonic wall time, measured from the clock's creation.
+    Wall {
+        /// Epoch all readings are relative to.
+        epoch: Instant,
+    },
+    /// Virtual time in microseconds; moves only via [`Clock::advance_us`].
+    Manual(AtomicU64),
+}
+
+impl Clock {
+    /// A wall clock starting at 0 µs now.
+    pub fn wall() -> Arc<Clock> {
+        Arc::new(Clock::Wall { epoch: Instant::now() })
+    }
+
+    /// A virtual clock starting at 0 µs; time moves only on `advance_us`.
+    pub fn manual() -> Arc<Clock> {
+        Arc::new(Clock::Manual(AtomicU64::new(0)))
+    }
+
+    /// True for manually advanced (virtual) clocks.
+    pub fn is_manual(&self) -> bool {
+        matches!(self, Clock::Manual(_))
+    }
+
+    /// Current time in microseconds since the clock's epoch.
+    pub fn now_us(&self) -> u64 {
+        match self {
+            Clock::Wall { epoch } => epoch.elapsed().as_micros() as u64,
+            Clock::Manual(us) => us.load(Ordering::Acquire),
+        }
+    }
+
+    /// Advance a manual clock by `us`. No-op on a wall clock (wall time
+    /// advances on its own).
+    pub fn advance_us(&self, us: u64) {
+        if let Clock::Manual(now) = self {
+            now.fetch_add(us, Ordering::AcqRel);
+        }
+    }
+
+    /// Sleep for `us`: a real [`std::thread::sleep`] on a wall clock, a
+    /// virtual advance plus a scheduler yield on a manual one (the yield
+    /// lets worker threads make wall-time progress inside virtual sleeps).
+    pub fn sleep_us(&self, us: u64) {
+        match self {
+            Clock::Wall { .. } => std::thread::sleep(Duration::from_micros(us)),
+            Clock::Manual(_) => {
+                self.advance_us(us);
+                std::thread::yield_now();
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn manual_clock_only_moves_when_advanced() {
+        let c = Clock::manual();
+        assert!(c.is_manual());
+        assert_eq!(c.now_us(), 0);
+        c.advance_us(250);
+        assert_eq!(c.now_us(), 250);
+        c.sleep_us(50);
+        assert_eq!(c.now_us(), 300);
+    }
+
+    #[test]
+    fn wall_clock_moves_forward() {
+        let c = Clock::wall();
+        assert!(!c.is_manual());
+        let t0 = c.now_us();
+        c.sleep_us(2_000);
+        assert!(c.now_us() >= t0 + 1_000);
+        // advance is a no-op on wall clocks
+        c.advance_us(1_000_000_000);
+        assert!(c.now_us() < 1_000_000_000);
+    }
+}

@@ -1,0 +1,293 @@
+//! Deterministic fault injection for the serving cluster.
+//!
+//! A [`FaultPlan`] schedules three failure modes against a replica pool,
+//! all seeded and reproducible:
+//!
+//! - **crashes** — the replica worker thread panics at a scheduled engine
+//!   step (the supervisor in [`crate::cluster::ReplicaPool`] detects the
+//!   dead worker, fails its in-flight requests back to the router, and
+//!   respawns the replica);
+//! - **stalls** — an injected per-decode-step latency, modelling a hung or
+//!   slow decode;
+//! - **transient admission failures** — every Nth submit to a replica is
+//!   rejected with [`crate::coordinator::RejectReason::Injected`],
+//!   exercising the router's retry/backoff path.
+//!
+//! The plan follows the same gate discipline as the tracer: servers hold
+//! an `Option<Arc<FaultPlan>>`, and when it is `None` (the default, i.e.
+//! no `--fault-*` flag was given) the entire plane is one branch per site
+//! — nothing is counted, scheduled or allocated. The plan outlives the
+//! server incarnations it kills: per-replica step counters keep running
+//! across respawns, so crashes repeat every `crash_every` steps until the
+//! plan is [`FaultPlan::disarm`]ed.
+
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+use crate::rng::splitmix64;
+use crate::util::json::Json;
+
+/// Which faults a [`FaultPlan`] injects, and where. A field of 0 disables
+/// that fault mode; a config with every mode disabled yields no plan at
+/// all ([`FaultPlan::new`] returns `None`).
+#[derive(Clone, Debug, Default)]
+pub struct FaultConfig {
+    /// Seed for the deterministic crash-point jitter.
+    pub seed: u64,
+    /// Crash each replica's worker roughly every N engine steps (the first
+    /// crash lands at a seeded point in `[1, N]`, then every N after).
+    pub crash_every: u64,
+    /// Stall every Nth engine step per replica.
+    pub stall_every: u64,
+    /// Duration of each injected stall, in milliseconds.
+    pub stall_ms: u64,
+    /// Reject every Nth submit per replica with a transient
+    /// [`crate::coordinator::RejectReason::Injected`] failure.
+    pub reject_every: u64,
+}
+
+impl FaultConfig {
+    /// True when at least one fault mode is enabled.
+    pub fn any_active(&self) -> bool {
+        self.crash_every > 0 || (self.stall_every > 0 && self.stall_ms > 0) || self.reject_every > 0
+    }
+}
+
+/// Per-replica fault bookkeeping. Counters are plan-scoped, not
+/// server-scoped: they survive replica respawns.
+#[derive(Debug)]
+struct ReplicaFaults {
+    /// Engine steps observed on this replica (across incarnations).
+    steps: AtomicU64,
+    /// Step number of the next scheduled crash (advances by `crash_every`
+    /// after each crash so the respawned worker dies again on schedule).
+    next_crash: AtomicU64,
+    /// Submits observed on this replica.
+    submits: AtomicU64,
+    /// Crashes injected into this replica.
+    crashes: AtomicU64,
+}
+
+/// A seeded, deterministic schedule of injected faults. Shared (via `Arc`)
+/// between the CLI/test driver, every server incarnation, and the metrics
+/// exporter.
+#[derive(Debug)]
+pub struct FaultPlan {
+    cfg: FaultConfig,
+    armed: AtomicBool,
+    replicas: Vec<ReplicaFaults>,
+    crashes: AtomicU64,
+    stalls: AtomicU64,
+    injected_rejects: AtomicU64,
+}
+
+impl FaultPlan {
+    /// Build a plan for `n_replicas`, or `None` when the config enables no
+    /// fault mode (so the disabled path stays a bare `Option` check).
+    pub fn new(cfg: FaultConfig, n_replicas: usize) -> Option<Arc<FaultPlan>> {
+        if !cfg.any_active() {
+            return None;
+        }
+        let replicas = (0..n_replicas.max(1))
+            .map(|i| {
+                // Seeded per-replica jitter: the first crash lands in
+                // [1, crash_every] so short runs still observe crashes.
+                let mut s = cfg.seed ^ (i as u64 + 1).wrapping_mul(0x9E3779B97F4A7C15);
+                let first = if cfg.crash_every > 0 {
+                    1 + splitmix64(&mut s) % cfg.crash_every
+                } else {
+                    u64::MAX
+                };
+                ReplicaFaults {
+                    steps: AtomicU64::new(0),
+                    next_crash: AtomicU64::new(first),
+                    submits: AtomicU64::new(0),
+                    crashes: AtomicU64::new(0),
+                }
+            })
+            .collect();
+        Some(Arc::new(FaultPlan {
+            cfg,
+            armed: AtomicBool::new(true),
+            replicas,
+            crashes: AtomicU64::new(0),
+            stalls: AtomicU64::new(0),
+            injected_rejects: AtomicU64::new(0),
+        }))
+    }
+
+    /// The config this plan was built from.
+    pub fn config(&self) -> &FaultConfig {
+        &self.cfg
+    }
+
+    /// Stop injecting faults (counters freeze; already-dead replicas still
+    /// need supervision). Used by tests to end the chaos phase and verify
+    /// the cluster recovers.
+    pub fn disarm(&self) {
+        self.armed.store(false, Ordering::Release);
+    }
+
+    /// True while the plan is still injecting faults.
+    pub fn armed(&self) -> bool {
+        self.armed.load(Ordering::Acquire)
+    }
+
+    /// Called by the server worker loop before each engine step. May sleep
+    /// (stall) or panic (crash) according to the schedule; the panic is
+    /// the injected fault — the pool supervisor turns it into a restart.
+    ///
+    /// # Panics
+    /// Panics on purpose at scheduled crash points.
+    pub fn before_step(&self, replica: usize) {
+        if !self.armed() {
+            return;
+        }
+        let Some(st) = self.replicas.get(replica) else { return };
+        let step = st.steps.fetch_add(1, Ordering::Relaxed) + 1;
+        if self.cfg.stall_every > 0 && self.cfg.stall_ms > 0 && step % self.cfg.stall_every == 0 {
+            self.stalls.fetch_add(1, Ordering::Relaxed);
+            std::thread::sleep(Duration::from_millis(self.cfg.stall_ms));
+        }
+        if self.cfg.crash_every > 0 && step >= st.next_crash.load(Ordering::Relaxed) {
+            st.next_crash.fetch_add(self.cfg.crash_every, Ordering::Relaxed);
+            st.crashes.fetch_add(1, Ordering::Relaxed);
+            self.crashes.fetch_add(1, Ordering::Relaxed);
+            panic!("fault injection: scheduled crash of replica {replica} at engine step {step}");
+        }
+    }
+
+    /// Called by `ServerClient::submit`: true when this submit should fail
+    /// with a transient injected rejection.
+    pub fn inject_admission_failure(&self, replica: usize) -> bool {
+        if !self.armed() || self.cfg.reject_every == 0 {
+            return false;
+        }
+        let Some(st) = self.replicas.get(replica) else {
+            return false;
+        };
+        let n = st.submits.fetch_add(1, Ordering::Relaxed) + 1;
+        if n % self.cfg.reject_every == 0 {
+            self.injected_rejects.fetch_add(1, Ordering::Relaxed);
+            true
+        } else {
+            false
+        }
+    }
+
+    /// Total crashes injected so far.
+    pub fn crashes(&self) -> u64 {
+        self.crashes.load(Ordering::Relaxed)
+    }
+
+    /// Total stalls injected so far.
+    pub fn stalls(&self) -> u64 {
+        self.stalls.load(Ordering::Relaxed)
+    }
+
+    /// Total transient admission failures injected so far.
+    pub fn injected_rejects(&self) -> u64 {
+        self.injected_rejects.load(Ordering::Relaxed)
+    }
+
+    /// JSON block for metrics dumps (`"faults"` in the cluster snapshot).
+    pub fn to_json(&self) -> Json {
+        let mut o = std::collections::BTreeMap::new();
+        o.insert("seed".to_string(), Json::Num(self.cfg.seed as f64));
+        o.insert("crash_every".to_string(), Json::Num(self.cfg.crash_every as f64));
+        o.insert("stall_every".to_string(), Json::Num(self.cfg.stall_every as f64));
+        o.insert("stall_ms".to_string(), Json::Num(self.cfg.stall_ms as f64));
+        o.insert("reject_every".to_string(), Json::Num(self.cfg.reject_every as f64));
+        o.insert("armed".to_string(), Json::Bool(self.armed()));
+        o.insert("crashes".to_string(), Json::Num(self.crashes() as f64));
+        o.insert("stalls".to_string(), Json::Num(self.stalls() as f64));
+        o.insert("injected_rejects".to_string(), Json::Num(self.injected_rejects() as f64));
+        o.insert(
+            "crashes_per_replica".to_string(),
+            Json::Arr(
+                self.replicas
+                    .iter()
+                    .map(|r| Json::Num(r.crashes.load(Ordering::Relaxed) as f64))
+                    .collect(),
+            ),
+        );
+        Json::Obj(o)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn inactive_config_yields_no_plan() {
+        assert!(FaultPlan::new(FaultConfig::default(), 4).is_none());
+        // stall_every without stall_ms is inert too
+        let cfg = FaultConfig { stall_every: 8, ..Default::default() };
+        assert!(FaultPlan::new(cfg, 4).is_none());
+    }
+
+    #[test]
+    fn crash_schedule_is_deterministic_and_repeats() {
+        let cfg = FaultConfig { seed: 42, crash_every: 5, ..Default::default() };
+        let steps_to_first = |seed| {
+            let plan =
+                FaultPlan::new(FaultConfig { seed, ..cfg.clone() }, 2).expect("active plan");
+            let mut n = 0u64;
+            loop {
+                n += 1;
+                if std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| plan.before_step(0)))
+                    .is_err()
+                {
+                    return (n, plan);
+                }
+                assert!(n < 100, "crash never fired");
+            }
+        };
+        let (a, plan_a) = steps_to_first(42);
+        let (b, _) = steps_to_first(42);
+        assert_eq!(a, b, "same seed, same crash point");
+        assert!((1..=5).contains(&a), "first crash in [1, crash_every], got {a}");
+        assert_eq!(plan_a.crashes(), 1);
+        // the next crash on the same plan comes crash_every steps later
+        let mut n = 0u64;
+        loop {
+            n += 1;
+            if std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| plan_a.before_step(0)))
+                .is_err()
+            {
+                break;
+            }
+            assert!(n < 100);
+        }
+        assert_eq!(n, 5, "second crash exactly crash_every steps after the first");
+        assert_eq!(plan_a.crashes(), 2);
+    }
+
+    #[test]
+    fn injected_rejects_fire_every_nth_submit_per_replica() {
+        let cfg = FaultConfig { reject_every: 3, ..Default::default() };
+        let plan = FaultPlan::new(cfg, 2).expect("active plan");
+        let fired: Vec<bool> = (0..6).map(|_| plan.inject_admission_failure(0)).collect();
+        assert_eq!(fired, vec![false, false, true, false, false, true]);
+        // replica 1 has its own counter
+        assert!(!plan.inject_admission_failure(1));
+        assert_eq!(plan.injected_rejects(), 2);
+    }
+
+    #[test]
+    fn disarm_stops_all_injection() {
+        let cfg = FaultConfig { crash_every: 1, reject_every: 1, ..Default::default() };
+        let plan = FaultPlan::new(cfg, 1).expect("active plan");
+        plan.disarm();
+        for _ in 0..10 {
+            plan.before_step(0); // would panic if armed
+            assert!(!plan.inject_admission_failure(0));
+        }
+        assert_eq!(plan.crashes() + plan.injected_rejects(), 0);
+        let j = plan.to_json();
+        assert_eq!(j.get("armed"), Some(&Json::Bool(false)));
+        assert_eq!(j.get("crashes").and_then(Json::as_f64), Some(0.0));
+    }
+}

@@ -1,20 +1,97 @@
-//! Per-replica health / backpressure state.
+//! Per-replica health: a closed → open → half-open circuit breaker.
 //!
-//! A replica whose admission queue rejects is *cooled down*: the router
-//! stops preferring it for a short window so queued work drains, and
-//! re-routes traffic to its siblings. Cooled replicas are still tried as
-//! a last resort — a request is only ever rejected when every replica
-//! has refused it, never dropped silently.
+//! PR 2's single cooldown window generalizes into a standard circuit
+//! breaker driven by the router's [`crate::cluster::Clock`] (so tests run
+//! on virtual time):
+//!
+//! - **Closed** — healthy; the replica is routed to normally.
+//! - **Open** — `failure_threshold` consecutive failures tripped the
+//!   breaker; the router deprioritizes the replica for `open_for_us`
+//!   (it is still tried as a last resort — a request is only rejected
+//!   when every replica has refused it, never dropped silently).
+//! - **HalfOpen** — the open window expired; the next request routed here
+//!   is a *probe*. Success closes the breaker, failure re-opens it, and
+//!   concurrent submitters treat a replica whose probe is already in
+//!   flight as still open so a recovering worker is not flooded.
+//!
+//! With the default `failure_threshold = 1` the closed→open→half-open
+//! cycle degenerates to exactly the old cooldown behaviour: one reject
+//! demotes the replica for one window.
+//!
+//! Locks here are poison-recovering ([`crate::util::sync::lock_recover`]):
+//! a crashed sibling must never wedge routing for the survivors.
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
-use std::time::{Duration, Instant};
 
-/// Health/backpressure bookkeeping for one replica.
+use crate::util::sync::lock_recover;
+
+/// Breaker tuning, derived from `RouterConfig` (`cooldown` is the open
+/// window; `failure_threshold` the consecutive-failure trip point).
+#[derive(Clone, Copy, Debug)]
+pub struct BreakerConfig {
+    /// Consecutive failures that trip the breaker open.
+    pub failure_threshold: u32,
+    /// How long the breaker stays open before allowing a probe, in µs.
+    pub open_for_us: u64,
+}
+
+impl Default for BreakerConfig {
+    fn default() -> Self {
+        // threshold 1 ≈ the original cooldown semantics; 50ms window
+        // matches the old RouterConfig::default().cooldown.
+        BreakerConfig { failure_threshold: 1, open_for_us: 50_000 }
+    }
+}
+
+/// Circuit-breaker state of one replica.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum BreakerState {
+    /// Healthy — route normally.
+    Closed,
+    /// Tripped — deprioritize until the open window expires.
+    Open,
+    /// Window expired — admit one probe request.
+    HalfOpen,
+}
+
+impl BreakerState {
+    /// Stable snake_case name (metrics/JSON).
+    pub fn name(&self) -> &'static str {
+        match self {
+            BreakerState::Closed => "closed",
+            BreakerState::Open => "open",
+            BreakerState::HalfOpen => "half_open",
+        }
+    }
+
+    /// Numeric code for Prometheus gauges and trace payloads
+    /// (0 closed, 1 open, 2 half-open).
+    pub fn code(&self) -> u64 {
+        match self {
+            BreakerState::Closed => 0,
+            BreakerState::Open => 1,
+            BreakerState::HalfOpen => 2,
+        }
+    }
+}
+
+#[derive(Debug)]
+struct Inner {
+    state: BreakerState,
+    consecutive_failures: u32,
+    opened_at_us: u64,
+    probing: bool,
+}
+
+/// Health/backpressure bookkeeping for one replica: breaker state plus
+/// monotone counters for metrics.
+#[derive(Debug)]
 pub struct ReplicaHealth {
-    cooled_until: Mutex<Option<Instant>>,
+    inner: Mutex<Inner>,
     rejects: AtomicU64,
-    cooldowns: AtomicU64,
+    opens: AtomicU64,
+    transitions: AtomicU64,
 }
 
 impl Default for ReplicaHealth {
@@ -24,51 +101,122 @@ impl Default for ReplicaHealth {
 }
 
 impl ReplicaHealth {
-    /// Healthy (not cooled) state with zeroed counters.
+    /// Healthy (closed) breaker with zeroed counters.
     pub fn new() -> Self {
         ReplicaHealth {
-            cooled_until: Mutex::new(None),
+            inner: Mutex::new(Inner {
+                state: BreakerState::Closed,
+                consecutive_failures: 0,
+                opened_at_us: 0,
+                probing: false,
+            }),
             rejects: AtomicU64::new(0),
-            cooldowns: AtomicU64::new(0),
+            opens: AtomicU64::new(0),
+            transitions: AtomicU64::new(0),
         }
     }
 
-    /// Is this replica inside a cooldown window?
-    pub fn is_cooled(&self, now: Instant) -> bool {
-        match *self.cooled_until.lock().unwrap() {
-            Some(until) => now < until,
-            None => false,
+    /// Lazily move Open → HalfOpen once the open window has expired.
+    fn refresh(&self, inner: &mut Inner, now_us: u64, cfg: &BreakerConfig) {
+        if inner.state == BreakerState::Open
+            && now_us >= inner.opened_at_us.saturating_add(cfg.open_for_us)
+        {
+            inner.state = BreakerState::HalfOpen;
+            inner.probing = false;
+            self.transitions.fetch_add(1, Ordering::Relaxed);
         }
     }
 
-    /// Record a backpressure rejection and start (or extend) a cooldown.
-    pub fn on_reject(&self, now: Instant, cooldown: Duration) {
+    /// Current breaker state at `now_us`.
+    pub fn state(&self, now_us: u64, cfg: &BreakerConfig) -> BreakerState {
+        let mut g = lock_recover(&self.inner);
+        self.refresh(&mut g, now_us, cfg);
+        g.state
+    }
+
+    /// Routing preference rank: closed (0) before half-open with a free
+    /// probe slot (1) before open / probe-in-flight (2). Lower is better;
+    /// the router sorts candidates by this but still tries every replica
+    /// before rejecting a request.
+    pub fn rank(&self, now_us: u64, cfg: &BreakerConfig) -> u8 {
+        let mut g = lock_recover(&self.inner);
+        self.refresh(&mut g, now_us, cfg);
+        match (g.state, g.probing) {
+            (BreakerState::Closed, _) => 0,
+            (BreakerState::HalfOpen, false) => 1,
+            _ => 2,
+        }
+    }
+
+    /// Mark that a request is being sent to this replica; a half-open
+    /// breaker records it as the in-flight probe.
+    pub fn begin_probe(&self, now_us: u64, cfg: &BreakerConfig) {
+        let mut g = lock_recover(&self.inner);
+        self.refresh(&mut g, now_us, cfg);
+        if g.state == BreakerState::HalfOpen {
+            g.probing = true;
+        }
+    }
+
+    /// Record a failed interaction (admission reject, injected fault, or a
+    /// failover off a dead worker). Returns `true` when this failure
+    /// tripped the breaker open (callers trace/count the transition).
+    pub fn on_failure(&self, now_us: u64, cfg: &BreakerConfig) -> bool {
         self.rejects.fetch_add(1, Ordering::Relaxed);
-        let mut g = self.cooled_until.lock().unwrap();
-        let was_cooled = g.map(|u| now < u).unwrap_or(false);
-        if !was_cooled {
-            self.cooldowns.fetch_add(1, Ordering::Relaxed);
+        let mut g = lock_recover(&self.inner);
+        self.refresh(&mut g, now_us, cfg);
+        g.consecutive_failures = g.consecutive_failures.saturating_add(1);
+        g.probing = false;
+        let trip = match g.state {
+            // a failed probe re-opens immediately
+            BreakerState::HalfOpen => true,
+            BreakerState::Closed => g.consecutive_failures >= cfg.failure_threshold.max(1),
+            // already open: refresh the window so a failing last-resort
+            // attempt keeps the replica demoted
+            BreakerState::Open => {
+                g.opened_at_us = now_us;
+                false
+            }
+        };
+        if trip {
+            g.state = BreakerState::Open;
+            g.opened_at_us = now_us;
+            self.opens.fetch_add(1, Ordering::Relaxed);
+            self.transitions.fetch_add(1, Ordering::Relaxed);
         }
-        let until = now + cooldown;
-        if g.map(|u| u < until).unwrap_or(true) {
-            *g = Some(until);
+        trip
+    }
+
+    /// Record a successful interaction: resets the failure streak and
+    /// closes the breaker from any state. Returns `true` when this closed
+    /// a non-closed breaker (a successful probe).
+    pub fn on_success(&self) -> bool {
+        let mut g = lock_recover(&self.inner);
+        g.consecutive_failures = 0;
+        g.probing = false;
+        if g.state != BreakerState::Closed {
+            g.state = BreakerState::Closed;
+            self.transitions.fetch_add(1, Ordering::Relaxed);
+            true
+        } else {
+            false
         }
     }
 
-    /// A successful submission ends any cooldown early: the queue
-    /// evidently has room again.
-    pub fn on_accept(&self) {
-        *self.cooled_until.lock().unwrap() = None;
-    }
-
-    /// Total backpressure rejections observed at this replica.
+    /// Total failed interactions observed at this replica.
     pub fn rejects(&self) -> u64 {
         self.rejects.load(Ordering::Relaxed)
     }
 
-    /// Distinct cooldown windows entered.
-    pub fn cooldowns(&self) -> u64 {
-        self.cooldowns.load(Ordering::Relaxed)
+    /// Distinct times the breaker tripped open (the metric PR 2 called
+    /// "cooldowns" — the JSON key is kept for continuity).
+    pub fn opens(&self) -> u64 {
+        self.opens.load(Ordering::Relaxed)
+    }
+
+    /// Total breaker state transitions (open, half-open, close).
+    pub fn transitions(&self) -> u64 {
+        self.transitions.load(Ordering::Relaxed)
     }
 }
 
@@ -76,37 +224,67 @@ impl ReplicaHealth {
 mod tests {
     use super::*;
 
+    const CFG: BreakerConfig = BreakerConfig { failure_threshold: 1, open_for_us: 50_000 };
+
     #[test]
-    fn cooldown_lifecycle() {
+    fn breaker_lifecycle_closed_open_halfopen_closed() {
         let h = ReplicaHealth::new();
-        let t0 = Instant::now();
-        assert!(!h.is_cooled(t0));
-        h.on_reject(t0, Duration::from_millis(50));
-        assert!(h.is_cooled(t0));
-        assert!(h.is_cooled(t0 + Duration::from_millis(49)));
-        assert!(!h.is_cooled(t0 + Duration::from_millis(51)));
+        assert_eq!(h.state(0, &CFG), BreakerState::Closed);
+        assert!(h.on_failure(0, &CFG), "threshold 1: first failure trips");
+        assert_eq!(h.state(0, &CFG), BreakerState::Open);
+        assert_eq!(h.state(49_999, &CFG), BreakerState::Open);
+        assert_eq!(h.state(50_000, &CFG), BreakerState::HalfOpen);
+        assert!(h.on_success(), "successful probe closes");
+        assert_eq!(h.state(50_000, &CFG), BreakerState::Closed);
         assert_eq!(h.rejects(), 1);
-        assert_eq!(h.cooldowns(), 1);
+        assert_eq!(h.opens(), 1);
+        // open, half-open, closed
+        assert_eq!(h.transitions(), 3);
     }
 
     #[test]
-    fn accept_clears_cooldown() {
+    fn failed_probe_reopens() {
         let h = ReplicaHealth::new();
-        let t0 = Instant::now();
-        h.on_reject(t0, Duration::from_secs(60));
-        assert!(h.is_cooled(t0));
-        h.on_accept();
-        assert!(!h.is_cooled(t0));
+        h.on_failure(0, &CFG);
+        assert_eq!(h.state(60_000, &CFG), BreakerState::HalfOpen);
+        assert!(h.on_failure(60_000, &CFG), "failed probe re-opens");
+        assert_eq!(h.state(60_000, &CFG), BreakerState::Open);
+        assert_eq!(h.state(110_000, &CFG), BreakerState::HalfOpen);
+        assert_eq!(h.opens(), 2);
     }
 
     #[test]
-    fn repeated_rejects_extend_one_window() {
+    fn threshold_requires_consecutive_failures() {
+        let cfg = BreakerConfig { failure_threshold: 3, open_for_us: 50_000 };
         let h = ReplicaHealth::new();
-        let t0 = Instant::now();
-        h.on_reject(t0, Duration::from_millis(50));
-        h.on_reject(t0 + Duration::from_millis(10), Duration::from_millis(50));
-        assert_eq!(h.rejects(), 2);
-        assert_eq!(h.cooldowns(), 1, "second reject extends the same window");
-        assert!(h.is_cooled(t0 + Duration::from_millis(55)));
+        assert!(!h.on_failure(0, &cfg));
+        assert!(!h.on_failure(1, &cfg));
+        h.on_success(); // streak reset
+        assert!(!h.on_failure(2, &cfg));
+        assert!(!h.on_failure(3, &cfg));
+        assert!(h.on_failure(4, &cfg), "third consecutive failure trips");
+        assert_eq!(h.state(4, &cfg), BreakerState::Open);
+    }
+
+    #[test]
+    fn probe_slot_limits_concurrency() {
+        let h = ReplicaHealth::new();
+        h.on_failure(0, &CFG);
+        assert_eq!(h.rank(50_000, &CFG), 1, "half-open with free probe slot");
+        h.begin_probe(50_000, &CFG);
+        assert_eq!(h.rank(50_000, &CFG), 2, "probe in flight: treated as open");
+        assert!(h.on_success());
+        assert_eq!(h.rank(50_000, &CFG), 0);
+    }
+
+    #[test]
+    fn open_failure_extends_window() {
+        let h = ReplicaHealth::new();
+        h.on_failure(0, &CFG);
+        // a failing last-resort attempt at t=40ms re-bases the window
+        assert!(!h.on_failure(40_000, &CFG));
+        assert_eq!(h.state(60_000, &CFG), BreakerState::Open, "window extended");
+        assert_eq!(h.state(90_000, &CFG), BreakerState::HalfOpen);
+        assert_eq!(h.opens(), 1, "extension is not a new open");
     }
 }

@@ -6,7 +6,7 @@
 //! back-to-back — the CI/`--fast` mode, which turns the same trace into
 //! a saturation test that finishes in seconds).
 
-use super::router::Router;
+use super::router::{Outcome, Router};
 use crate::rng::Rng;
 use crate::workload::trace::Arrival;
 use std::time::{Duration, Instant};
@@ -50,11 +50,17 @@ impl Default for ReplayConfig {
 pub struct ReplayStats {
     /// Trace arrivals submitted to the router.
     pub submitted: usize,
-    /// Arrivals rejected after every replica refused.
+    /// Arrivals rejected after every replica refused (terminal).
     pub rejected: usize,
     /// Responses received within the drain-phase timeout.
     pub completed: usize,
-    /// Accepted requests whose response was not awaited in time.
+    /// Arrivals that hit their deadline (router `request_timeout` or the
+    /// drain-phase wait cap) before a response — a terminal outcome.
+    pub deadline_exceeded: usize,
+    /// Legacy alias bucket: always 0 since PR 9 — the router's
+    /// deadline/failover machinery guarantees a terminal outcome instead
+    /// of an indeterminate timeout. Kept so downstream report schemas
+    /// stay stable.
     pub timed_out: usize,
     /// Decode tokens across completed responses.
     pub tokens_generated: usize,
@@ -88,6 +94,7 @@ pub fn replay(
     let start = Instant::now();
     let mut pending = Vec::new();
     let mut rejected = 0usize;
+    let mut deadline_exceeded = 0usize;
     for (idx, a) in trace.iter().enumerate() {
         if cfg.pacing == Pacing::WallClock {
             let now = start.elapsed();
@@ -100,19 +107,20 @@ pub fn replay(
         let session = (idx % cfg.n_sessions) as u64;
         match router.submit(prompt, a.max_new, Some(session)) {
             Ok(r) => pending.push(r),
+            Err(Outcome::DeadlineExceeded) => deadline_exceeded += 1,
             Err(_) => rejected += 1,
         }
     }
     let mut completed = 0usize;
-    let mut timed_out = 0usize;
     let mut tokens = 0usize;
     for r in pending {
-        match r.wait(cfg.timeout) {
-            Some(resp) => {
+        match router.await_outcome(r, cfg.timeout) {
+            Outcome::Completed(resp) => {
                 completed += 1;
                 tokens += resp.tokens.len();
             }
-            None => timed_out += 1,
+            Outcome::Rejected(_) => rejected += 1,
+            Outcome::DeadlineExceeded => deadline_exceeded += 1,
         }
     }
     let elapsed = start.elapsed();
@@ -122,7 +130,8 @@ pub fn replay(
         submitted: trace.len(),
         rejected,
         completed,
-        timed_out,
+        deadline_exceeded,
+        timed_out: 0,
         tokens_generated: tokens,
         elapsed,
         throughput_rps: completed as f64 / secs,
@@ -147,18 +156,19 @@ mod tests {
 
     #[test]
     fn virtual_replay_accounts_for_every_arrival() {
-        let pool = ReplicaPool::spawn(2, ServerConfig::default(), Arc::new(StreamingLlm), |i| {
-            let cfg = ModelConfig {
-                vocab: 16,
-                d_model: 16,
-                n_layers: 2,
-                n_heads: 2,
-                d_ff: 32,
-                max_len: 256,
-            };
-            Transformer::random(cfg, &mut Rng::seed_from(i as u64))
-        });
-        let router = Router::new(pool.clients(), RouterConfig::default());
+        let pool =
+            Arc::new(ReplicaPool::spawn(2, ServerConfig::default(), Arc::new(StreamingLlm), |i| {
+                let cfg = ModelConfig {
+                    vocab: 16,
+                    d_model: 16,
+                    n_layers: 2,
+                    n_heads: 2,
+                    d_ff: 32,
+                    max_len: 256,
+                };
+                Transformer::random(cfg, &mut Rng::seed_from(i as u64))
+            }));
+        let router = Router::new(pool.clone(), RouterConfig::default());
         let mut rng = Rng::seed_from(3);
         let trace = poisson_trace(&mut rng, 40.0, Duration::from_secs(1), 4, 16, 3);
         assert!(!trace.is_empty());
@@ -166,9 +176,9 @@ mod tests {
         let stats = replay(&router, &trace, &cfg, &mut rng);
         assert_eq!(stats.submitted, trace.len());
         assert_eq!(
-            stats.completed + stats.rejected + stats.timed_out,
+            stats.completed + stats.rejected + stats.deadline_exceeded,
             stats.submitted,
-            "arrivals must be answered, rejected, or timed out — never lost"
+            "arrivals must reach exactly one terminal outcome — never lost"
         );
         assert_eq!(stats.timed_out, 0);
         assert!(stats.completed > 0);

@@ -4,8 +4,10 @@
 //! [`crate::coordinator::ServingMetrics`] snapshots are aggregated next
 //! to it in one JSON document by [`crate::cluster::Router::metrics_json`].
 
+use crate::coordinator::admission::RejectReason;
 use crate::util::json::Json;
 use crate::util::stats::LogHistogram;
+use crate::util::sync::lock_recover;
 use std::collections::BTreeMap;
 use std::sync::Mutex;
 use std::time::{Duration, Instant};
@@ -13,7 +15,12 @@ use std::time::{Duration, Instant};
 /// Plain-number snapshot for benches and tests.
 #[derive(Clone, Debug)]
 pub struct ClusterSnapshot {
-    /// Requests accepted by some replica.
+    /// Requests submitted to the router. Terminal-outcome invariant:
+    /// `completed + rejected + deadline_exceeded == requests` once every
+    /// submission has been driven to its outcome.
+    pub requests: u64,
+    /// Requests accepted by some replica (failover resubmissions land
+    /// here again, so `routed` can exceed `requests` under faults).
     pub routed: u64,
     /// Requests rejected by *every* replica (surface to the caller).
     pub rejected: u64,
@@ -21,6 +28,18 @@ pub struct ClusterSnapshot {
     pub rerouted: u64,
     /// Responses received by awaiting callers.
     pub completed: u64,
+    /// Requests whose deadline expired before a response (terminal).
+    pub deadline_exceeded: u64,
+    /// In-flight requests failed over off a dead replica and resubmitted.
+    pub failovers: u64,
+    /// Full-cluster retry rounds after every replica refused.
+    pub retries: u64,
+    /// Replica workers respawned after a crash — filled in by
+    /// [`crate::cluster::Router::snapshot`] from the pool supervisor; 0
+    /// for a bare `ClusterMetrics` snapshot.
+    pub restarts: u64,
+    /// Cluster-wide rejections keyed by [`RejectReason::name`].
+    pub rejected_by_reason: BTreeMap<&'static str, u64>,
     /// Decode tokens across completed responses.
     pub tokens_generated: u64,
     /// Cluster end-to-end latency median, in milliseconds.
@@ -71,6 +90,13 @@ impl ClusterSnapshot {
         self.routed + self.rejected
     }
 
+    /// Requests that reached a terminal outcome so far. Equals
+    /// `requests` once every submission has been driven to completion,
+    /// under any fault schedule.
+    pub fn terminal(&self) -> u64 {
+        self.completed + self.rejected + self.deadline_exceeded
+    }
+
     /// Fraction of submissions rejected cluster-wide.
     pub fn reject_rate(&self) -> f64 {
         if self.submitted() == 0 {
@@ -82,9 +108,14 @@ impl ClusterSnapshot {
 }
 
 struct Inner {
+    requests: u64,
     routed_per_replica: Vec<u64>,
     rerouted: u64,
     rejected: u64,
+    rejected_by_reason: BTreeMap<&'static str, u64>,
+    deadline_exceeded: u64,
+    failovers: u64,
+    retries: u64,
     completed: u64,
     tokens_generated: u64,
     e2e_us: LogHistogram,
@@ -102,9 +133,14 @@ impl ClusterMetrics {
     pub fn new(n_replicas: usize) -> Self {
         ClusterMetrics {
             inner: Mutex::new(Inner {
+                requests: 0,
                 routed_per_replica: vec![0; n_replicas],
                 rerouted: 0,
                 rejected: 0,
+                rejected_by_reason: BTreeMap::new(),
+                deadline_exceeded: 0,
+                failovers: 0,
+                retries: 0,
                 completed: 0,
                 tokens_generated: 0,
                 e2e_us: LogHistogram::latency_us(),
@@ -113,24 +149,47 @@ impl ClusterMetrics {
         }
     }
 
+    /// Record a request entering the router (before routing).
+    pub fn on_request(&self) {
+        lock_recover(&self.inner).requests += 1;
+    }
+
     /// Record an accepted submission landing on `replica`.
     pub fn on_routed(&self, replica: usize) {
-        self.inner.lock().unwrap().routed_per_replica[replica] += 1;
+        lock_recover(&self.inner).routed_per_replica[replica] += 1;
     }
 
-    /// Record a retry on another replica after a refusal.
+    /// Record a re-route attempt on another replica after a refusal.
     pub fn on_reroute(&self) {
-        self.inner.lock().unwrap().rerouted += 1;
+        lock_recover(&self.inner).rerouted += 1;
     }
 
-    /// Record a cluster-wide rejection (every replica refused).
-    pub fn on_reject(&self) {
-        self.inner.lock().unwrap().rejected += 1;
+    /// Record a full-cluster retry round (every replica refused once;
+    /// the router backs off and sweeps them again).
+    pub fn on_retry(&self) {
+        lock_recover(&self.inner).retries += 1;
+    }
+
+    /// Record an in-flight request failed over off a dead replica.
+    pub fn on_failover(&self) {
+        lock_recover(&self.inner).failovers += 1;
+    }
+
+    /// Record a terminal cluster-wide rejection, keyed by reason.
+    pub fn on_reject(&self, reason: RejectReason) {
+        let mut g = lock_recover(&self.inner);
+        g.rejected += 1;
+        *g.rejected_by_reason.entry(reason.name()).or_insert(0) += 1;
+    }
+
+    /// Record a terminal deadline expiry.
+    pub fn on_deadline_exceeded(&self) {
+        lock_recover(&self.inner).deadline_exceeded += 1;
     }
 
     /// Record a response receipt with its end-to-end latency.
     pub fn on_complete(&self, e2e: Duration, tokens: usize) {
-        let mut g = self.inner.lock().unwrap();
+        let mut g = lock_recover(&self.inner);
         g.completed += 1;
         g.tokens_generated += tokens as u64;
         g.e2e_us.record(e2e.as_secs_f64() * 1e6);
@@ -138,19 +197,25 @@ impl ClusterMetrics {
 
     /// Requests routed to one replica so far.
     pub fn routed_to(&self, replica: usize) -> u64 {
-        self.inner.lock().unwrap().routed_per_replica[replica]
+        lock_recover(&self.inner).routed_per_replica[replica]
     }
 
     /// Plain-number snapshot of the router-side counters. The KV and
     /// prefill-skipping fields are zero here — [`crate::cluster::Router::snapshot`]
     /// fills them from the per-replica clients.
     pub fn snapshot(&self) -> ClusterSnapshot {
-        let g = self.inner.lock().unwrap();
+        let g = lock_recover(&self.inner);
         ClusterSnapshot {
+            requests: g.requests,
             routed: g.routed_per_replica.iter().sum(),
             rejected: g.rejected,
             rerouted: g.rerouted,
             completed: g.completed,
+            deadline_exceeded: g.deadline_exceeded,
+            failovers: g.failovers,
+            retries: g.retries,
+            restarts: 0,
+            rejected_by_reason: g.rejected_by_reason.clone(),
             tokens_generated: g.tokens_generated,
             p50_ms: g.e2e_us.quantile(0.5) / 1e3,
             p95_ms: g.e2e_us.quantile(0.95) / 1e3,
@@ -169,14 +234,27 @@ impl ClusterMetrics {
 
     /// The aggregate block of the cluster JSON snapshot.
     pub fn to_json(&self) -> Json {
-        let g = self.inner.lock().unwrap();
+        let g = lock_recover(&self.inner);
         let num = |x: f64| Json::Num(if x.is_finite() { x } else { 0.0 });
         let routed: u64 = g.routed_per_replica.iter().sum();
         let submitted = routed + g.rejected;
         let mut o = BTreeMap::new();
+        o.insert("requests".to_string(), Json::Num(g.requests as f64));
         o.insert("submitted".to_string(), Json::Num(submitted as f64));
         o.insert("routed".to_string(), Json::Num(routed as f64));
         o.insert("rejected".to_string(), Json::Num(g.rejected as f64));
+        o.insert(
+            "rejected_by_reason".to_string(),
+            Json::Obj(
+                g.rejected_by_reason
+                    .iter()
+                    .map(|(k, v)| (k.to_string(), Json::Num(*v as f64)))
+                    .collect(),
+            ),
+        );
+        o.insert("deadline_exceeded".to_string(), Json::Num(g.deadline_exceeded as f64));
+        o.insert("failovers".to_string(), Json::Num(g.failovers as f64));
+        o.insert("retries".to_string(), Json::Num(g.retries as f64));
         o.insert("rerouted".to_string(), Json::Num(g.rerouted as f64));
         o.insert("completed".to_string(), Json::Num(g.completed as f64));
         o.insert("tokens_generated".to_string(), Json::Num(g.tokens_generated as f64));
@@ -199,18 +277,30 @@ mod tests {
     #[test]
     fn counters_and_snapshot() {
         let m = ClusterMetrics::new(2);
+        for _ in 0..4 {
+            m.on_request();
+        }
         m.on_routed(0);
         m.on_routed(1);
         m.on_routed(1);
         m.on_reroute();
-        m.on_reject();
+        m.on_retry();
+        m.on_failover();
+        m.on_reject(RejectReason::QueueFull);
         m.on_complete(Duration::from_millis(12), 4);
         m.on_complete(Duration::from_millis(30), 2);
+        m.on_deadline_exceeded();
         let s = m.snapshot();
+        assert_eq!(s.requests, 4);
         assert_eq!(s.routed, 3);
         assert_eq!(s.rejected, 1);
+        assert_eq!(s.rejected_by_reason.get("queue_full"), Some(&1));
         assert_eq!(s.rerouted, 1);
+        assert_eq!(s.retries, 1);
+        assert_eq!(s.failovers, 1);
         assert_eq!(s.completed, 2);
+        assert_eq!(s.deadline_exceeded, 1);
+        assert_eq!(s.terminal(), 4, "every request reached one terminal outcome");
         assert_eq!(s.tokens_generated, 6);
         assert_eq!(s.submitted(), 4);
         assert!((s.reject_rate() - 0.25).abs() < 1e-12);
@@ -224,12 +314,20 @@ mod tests {
         // empty metrics must still serialise with finite fields
         let j0 = m.to_json();
         assert_eq!(j0.get("completed").and_then(Json::as_f64), Some(0.0));
+        assert_eq!(j0.get("deadline_exceeded").and_then(Json::as_f64), Some(0.0));
+        m.on_request();
         m.on_routed(0);
         m.on_complete(Duration::from_millis(5), 3);
+        m.on_reject(RejectReason::Injected);
         let j = m.to_json();
         let text = j.to_string_compact();
         assert_eq!(crate::util::json::parse(&text).unwrap(), j);
+        assert_eq!(j.get("requests").and_then(Json::as_f64), Some(1.0));
         assert_eq!(j.get("routed").and_then(Json::as_f64), Some(1.0));
+        assert_eq!(
+            j.get("rejected_by_reason").and_then(|r| r.get("injected")).and_then(Json::as_f64),
+            Some(1.0)
+        );
         assert!(j.get("e2e_ms_p50").and_then(Json::as_f64).unwrap() > 0.0);
     }
 }

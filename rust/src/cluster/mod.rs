@@ -4,35 +4,52 @@
 //! module shards load across N of them:
 //!
 //! * [`pool`] — [`ReplicaPool`]: N independent servers, each owning its
-//!   backend on its own worker thread, seeded deterministically.
+//!   backend on its own worker thread, seeded deterministically; since
+//!   PR 9 also the **supervisor** that detects crashed workers, fails
+//!   their in-flight requests back to the router, and respawns them.
 //! * [`router`] — [`Router`] with pluggable [`RoutingPolicy`]s
 //!   (`round_robin`, `join_shortest_queue` over the per-replica
 //!   in-flight/queue-depth gauges, `affinity` session hashing for warm
-//!   KV-cache reuse).
-//! * [`health`] — per-replica cooldown on backpressure; refused traffic
-//!   is re-routed, and only rejected once every replica has refused.
-//! * [`metrics`] — [`ClusterMetrics`]: router-side counters and
-//!   end-to-end latency, aggregated with per-replica
-//!   [`crate::coordinator::ServingMetrics`] into one JSON snapshot.
+//!   KV-cache reuse), hardened with per-request deadlines, bounded
+//!   retries with backoff, and failover off dead replicas.
+//! * [`health`] — [`ReplicaHealth`]: per-replica closed → open →
+//!   half-open circuit breaker; tripped replicas are demoted to
+//!   last-resort candidates and probed after the open window.
+//! * [`fault`] — [`FaultPlan`]: seeded deterministic fault injection
+//!   (crashes, stalls, transient rejects) for chaos testing; `None` on
+//!   every hot path when unconfigured.
+//! * [`clock`] — [`Clock`]: wall or manual virtual time, so deadline /
+//!   backoff / breaker tests run instant and deterministic.
+//! * [`metrics`] — [`ClusterMetrics`]: router-side counters (terminal
+//!   outcomes, retries, failovers) and end-to-end latency, aggregated
+//!   with per-replica [`crate::coordinator::ServingMetrics`] into one
+//!   JSON snapshot.
 //! * [`loadgen`] — trace-driven load generator: replays
 //!   [`crate::workload::trace`] arrivals at wall-clock rate, or in
 //!   virtual time (`--fast`) for CI.
 //!
-//! Invariants (property-tested in `rust/tests/coordinator_props.rs`):
-//! every request submitted to the router is answered or rejected exactly
-//! once across replicas, for any replica count and policy; a rejection
-//! implies every replica refused.
+//! Invariants (property-tested in `rust/tests/coordinator_props.rs` and
+//! `rust/tests/chaos_props.rs`): every request submitted to the router
+//! reaches **exactly one terminal outcome** — completed, rejected with a
+//! reason, or deadline exceeded — for any replica count, policy, and
+//! fault schedule; a rejection implies every replica refused (or the
+//! request was malformed / out of failover budget). See
+//! `docs/ROBUSTNESS.md` for the failure model.
 
 #![warn(missing_docs)]
 
+pub mod clock;
+pub mod fault;
 pub mod health;
 pub mod loadgen;
 pub mod metrics;
 pub mod pool;
 pub mod router;
 
-pub use health::ReplicaHealth;
+pub use clock::Clock;
+pub use fault::{FaultConfig, FaultPlan};
+pub use health::{BreakerConfig, BreakerState, ReplicaHealth};
 pub use loadgen::{replay, Pacing, ReplayConfig, ReplayStats};
 pub use metrics::{ClusterMetrics, ClusterSnapshot};
 pub use pool::ReplicaPool;
-pub use router::{RoutedRequest, Router, RouterConfig, RoutingPolicy};
+pub use router::{Outcome, RoutedRequest, Router, RouterConfig, RoutingPolicy};

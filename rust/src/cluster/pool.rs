@@ -2,24 +2,56 @@
 //! own backend (constructed on its own worker thread — `!Send` backends
 //! like PJRT work unchanged) and seeded deterministically from a base
 //! seed, so a fixed-seed cluster run is reproducible replica-by-replica.
+//!
+//! Since PR 9 the pool is also a **supervisor**: it keeps the spawn
+//! recipe for every replica, detects a dead/panicked worker
+//! ([`crate::coordinator::ServerHandle::worker_died`]), fails that
+//! replica's in-flight requests back to the router (their response
+//! channels disconnect, which the router turns into failovers), and
+//! respawns the replica with its original deterministic seed and a fresh
+//! KV pool. Restarts are counted per replica and traced as
+//! [`crate::obs::trace::SpanKind::Restart`] spans.
 
 use crate::coordinator::{Server, ServerClient, ServerConfig, ServerHandle, ServingMetrics};
 use crate::kvcache::KvCompressor;
 use crate::kvpool::PoolSnapshot;
 use crate::model::ModelBackend;
-use std::sync::Arc;
+use crate::obs::trace::{self, SpanKind, NO_REQ};
+use crate::util::sync::lock_recover;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
 
-/// A pool of identical serving replicas. Owns shutdown; clients go
-/// through [`ReplicaPool::clients`] (and usually a
+/// Each restart incarnation gets its own request-id range so a respawned
+/// replica never reuses ids from its previous life (waiter keys and trace
+/// lanes stay unique; well below the 2^32 packing limit of the Chrome
+/// exporter's router lanes).
+const ID_EPOCH: u64 = 10_000_000;
+
+/// One supervised replica slot. The cached client stays valid after its
+/// server dies (submits then fail with `ShuttingDown`), so routing never
+/// observes a torn slot.
+struct Slot {
+    /// `None` only after [`ReplicaPool::shutdown`].
+    handle: Option<ServerHandle>,
+    client: ServerClient,
+    restarts: u64,
+}
+
+/// A pool of identical serving replicas with crash supervision. Owns
+/// shutdown; clients go through [`ReplicaPool::client`] (and usually a
 /// [`crate::cluster::Router`] on top).
 pub struct ReplicaPool {
-    handles: Vec<ServerHandle>,
+    slots: Vec<Mutex<Slot>>,
+    respawn: Box<dyn Fn(usize, u64) -> ServerHandle + Send + Sync>,
+    restarts_total: AtomicU64,
 }
 
 impl ReplicaPool {
     /// Spawn `n_replicas` servers. Replica `i` runs `cfg` with seed
     /// `cfg.seed + i` (independent deterministic streams) and a backend
-    /// built by `make_backend(i)` on the replica's worker thread.
+    /// built by `make_backend(i)` on the replica's worker thread. The
+    /// same recipe is kept for respawning crashed replicas.
     pub fn spawn<B, F>(
         n_replicas: usize,
         cfg: ServerConfig,
@@ -31,50 +63,133 @@ impl ReplicaPool {
         F: Fn(usize) -> B + Send + Sync + 'static,
     {
         let factory = Arc::new(make_backend);
-        let handles = (0..n_replicas.max(1))
+        let base = cfg.clone();
+        let respawn = Box::new(move |i: usize, incarnation: u64| {
+            let mut rcfg = base.clone();
+            rcfg.seed = base.seed.wrapping_add(i as u64);
+            rcfg.replica = i as u32;
+            rcfg.first_request_id = 1 + incarnation * ID_EPOCH;
+            let f = factory.clone();
+            Server::spawn(rcfg, compressor.clone(), move || (*f)(i))
+        });
+        let slots = (0..n_replicas.max(1))
             .map(|i| {
-                let mut rcfg = cfg.clone();
-                rcfg.seed = cfg.seed.wrapping_add(i as u64);
-                rcfg.replica = i as u32;
-                let f = factory.clone();
-                Server::spawn(rcfg, compressor.clone(), move || (*f)(i))
+                let h = respawn(i, 0);
+                Mutex::new(Slot { client: h.client(), handle: Some(h), restarts: 0 })
             })
             .collect();
-        ReplicaPool { handles }
+        ReplicaPool { slots, respawn, restarts_total: AtomicU64::new(0) }
     }
 
     /// Number of replicas in the pool.
     pub fn len(&self) -> usize {
-        self.handles.len()
+        self.slots.len()
     }
 
     /// Whether the pool holds no replicas (never true after `spawn`).
     pub fn is_empty(&self) -> bool {
-        self.handles.is_empty()
+        self.slots.is_empty()
+    }
+
+    /// The current submit-side client of one replica. Fetched per use —
+    /// never cache it across calls, a respawn replaces it.
+    pub fn client(&self, replica: usize) -> ServerClient {
+        lock_recover(&self.slots[replica]).client.clone()
     }
 
     /// One clone-able submit-side client per replica, in replica order.
+    /// Snapshot of the *current* incarnations; prefer
+    /// [`ReplicaPool::client`] per submission under supervision.
     pub fn clients(&self) -> Vec<ServerClient> {
-        self.handles.iter().map(|h| h.client()).collect()
+        (0..self.len()).map(|i| self.client(i)).collect()
     }
 
-    /// One replica's serving metrics.
-    pub fn metrics(&self, replica: usize) -> &ServingMetrics {
-        self.handles[replica].metrics()
+    /// One replica's serving metrics (current incarnation — a respawn
+    /// starts fresh; cumulative truth lives in the router's
+    /// [`crate::cluster::ClusterMetrics`]).
+    pub fn metrics(&self, replica: usize) -> Arc<ServingMetrics> {
+        lock_recover(&self.slots[replica]).client.metrics_arc()
     }
 
     /// Per-replica KV pool gauges, in replica order. Every replica owns
     /// a *private* pool sized by `ServerConfig::pool` (prefix sharing is
     /// within-replica; cross-replica dedup is a ROADMAP follow-up).
     pub fn pool_snapshots(&self) -> Vec<PoolSnapshot> {
-        self.handles.iter().map(|h| h.client().pool_snapshot()).collect()
+        (0..self.len()).map(|i| self.client(i).pool_snapshot()).collect()
+    }
+
+    /// True when the replica's worker thread has panicked (and the slot
+    /// has not been respawned yet).
+    pub fn worker_died(&self, replica: usize) -> bool {
+        lock_recover(&self.slots[replica])
+            .handle
+            .as_ref()
+            .is_some_and(ServerHandle::worker_died)
+    }
+
+    /// Supervision step for one replica: if its worker died, fail all
+    /// in-flight requests back to their waiters (the router observes
+    /// disconnects and fails them over) and respawn the replica with its
+    /// original seed and a fresh KV pool. Returns `true` when a restart
+    /// happened. Safe to call concurrently — the slot lock serializes,
+    /// and losers see a healthy respawned worker.
+    pub fn restart_if_dead(&self, replica: usize) -> bool {
+        let mut slot = lock_recover(&self.slots[replica]);
+        let died = slot.handle.as_ref().is_some_and(ServerHandle::worker_died);
+        if !died {
+            return false;
+        }
+        let t0 = Instant::now();
+        let old = slot.handle.take();
+        // fail in-flight work first: dropping the senders disconnects the
+        // waiters, which the router counts as failovers
+        let failed_over = slot.client.fail_pending();
+        drop(old); // joins the panicked thread (Drop tolerates the panic)
+        slot.restarts += 1;
+        let incarnation = slot.restarts;
+        let h = (self.respawn)(replica, incarnation);
+        slot.client = h.client();
+        slot.handle = Some(h);
+        self.restarts_total.fetch_add(1, Ordering::Relaxed);
+        if trace::enabled() {
+            trace::span_on(
+                replica as u32,
+                SpanKind::Restart,
+                t0,
+                Instant::now(),
+                NO_REQ,
+                incarnation,
+                failed_over as u64,
+            );
+        }
+        true
+    }
+
+    /// Run [`ReplicaPool::restart_if_dead`] across every replica;
+    /// returns how many were restarted.
+    pub fn supervise(&self) -> usize {
+        (0..self.len()).filter(|&i| self.restart_if_dead(i)).count()
+    }
+
+    /// Times this replica has been respawned after a crash.
+    pub fn restarts(&self, replica: usize) -> u64 {
+        lock_recover(&self.slots[replica]).restarts
+    }
+
+    /// Total replica restarts across the pool.
+    pub fn restarts_total(&self) -> u64 {
+        self.restarts_total.load(Ordering::Relaxed)
     }
 
     /// Graceful shutdown: each replica stops admissions, finishes its
-    /// in-flight work, and joins.
-    pub fn shutdown(self) {
-        for h in self.handles {
-            h.shutdown();
+    /// in-flight work, and joins. Idempotent; slots stay readable (their
+    /// cached clients answer `ShuttingDown`).
+    pub fn shutdown(&self) {
+        for slot in &self.slots {
+            let handle = lock_recover(slot).handle.take();
+            if let Some(h) = handle {
+                h.shutdown();
+            }
         }
     }
 }
@@ -82,6 +197,7 @@ impl ReplicaPool {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::cluster::fault::{FaultConfig, FaultPlan};
     use crate::kvcache::StreamingLlm;
     use crate::model::{ModelConfig, Transformer};
     use crate::rng::Rng;
@@ -126,6 +242,44 @@ mod tests {
             Transformer::random(tiny_cfg(), &mut Rng::seed_from(1))
         });
         assert_eq!(pool.len(), 1);
+        pool.shutdown();
+    }
+
+    #[test]
+    fn crashed_replica_is_respawned_and_serves_again() {
+        // crash replica 0 on its very first engine step
+        let plan = FaultPlan::new(FaultConfig { seed: 9, crash_every: 1, ..Default::default() }, 1)
+            .expect("active plan");
+        let cfg = ServerConfig { faults: Some(plan.clone()), ..Default::default() };
+        let pool = ReplicaPool::spawn(1, cfg, Arc::new(StreamingLlm), |_| {
+            Transformer::random(tiny_cfg(), &mut Rng::seed_from(7))
+        });
+        let (_, rx) = pool.client(0).submit(vec![1, 2, 3], 2).unwrap();
+        // wait for the injected crash to kill the worker
+        let mut died = false;
+        for _ in 0..1000 {
+            if pool.worker_died(0) {
+                died = true;
+                break;
+            }
+            std::thread::sleep(Duration::from_millis(2));
+        }
+        assert!(died, "injected crash never killed the worker");
+        plan.disarm();
+        assert!(pool.restart_if_dead(0), "supervisor must restart the dead replica");
+        assert!(!pool.restart_if_dead(0), "respawned worker is healthy");
+        assert_eq!(pool.restarts(0), 1);
+        assert_eq!(pool.restarts_total(), 1);
+        // the in-flight request was failed back (sender dropped)
+        assert!(matches!(
+            rx.recv_timeout(Duration::from_secs(5)),
+            Err(std::sync::mpsc::RecvTimeoutError::Disconnected)
+        ));
+        // and the fresh incarnation serves; ids come from a new epoch
+        let (id, rx2) = pool.client(0).submit(vec![4, 5, 6], 2).unwrap();
+        assert!(id >= super::ID_EPOCH, "respawn must not reuse the old id space");
+        let resp = rx2.recv_timeout(Duration::from_secs(30)).unwrap();
+        assert_eq!(resp.tokens.len(), 2);
         pool.shutdown();
     }
 }

@@ -1,4 +1,5 @@
-//! The cluster router: pluggable load-balancing over a replica pool.
+//! The cluster router: pluggable load-balancing over a replica pool,
+//! hardened with deadlines, bounded retries and circuit breakers.
 //!
 //! Policies:
 //! * `round_robin` — rotate the first-choice replica per request.
@@ -9,26 +10,49 @@
 //!   requests of one session land on the same warm KV cache; falls back
 //!   to least-loaded siblings under backpressure.
 //!
-//! Backpressure: a replica that refuses a request is cooled down
-//! ([`ReplicaHealth`]) and the request is re-routed to the next
-//! candidate. Every replica (cooled ones last) is tried before the
-//! router surfaces a rejection — requests are answered or rejected,
-//! never dropped silently.
+//! Robustness (see `docs/ROBUSTNESS.md`):
+//! * every submitted request reaches **exactly one terminal
+//!   [`Outcome`]** — completed, rejected(reason), or deadline exceeded —
+//!   under any fault schedule; never dropped silently;
+//! * a replica that refuses or fails trips a per-replica closed → open →
+//!   half-open **circuit breaker** ([`ReplicaHealth`]); open replicas are
+//!   demoted (still tried last-resort), half-open ones admit one probe;
+//! * full-cluster refusals are **retried** up to `max_retries` rounds
+//!   with exponential backoff and deterministic jitter;
+//! * a request in flight on a replica whose worker dies is **failed
+//!   over**: the pool supervisor respawns the replica, the router
+//!   resubmits the prompt to a survivor ([`Router::await_outcome`]);
+//! * optional per-request **deadlines** (`request_timeout`) bound the
+//!   total time to a terminal outcome.
+//!
+//! Time is read through a [`Clock`], so deadline/backoff/breaker tests
+//! run deterministic and instant on virtual time.
 
-use super::health::ReplicaHealth;
+use super::clock::Clock;
+use super::health::{BreakerConfig, BreakerState, ReplicaHealth};
 use super::metrics::{ClusterMetrics, ClusterSnapshot};
+use super::pool::ReplicaPool;
 use crate::coordinator::admission::RejectReason;
 use crate::coordinator::request::{RequestId, Response};
-use crate::coordinator::ServerClient;
 use crate::kvpool::{aggregate_snapshots, PoolSnapshot};
 use crate::obs::trace::{self, SpanKind, NO_REQ, ROUTE_REJECTED};
 use crate::rng::splitmix64;
 use crate::util::json::Json;
 use std::collections::BTreeMap;
-use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::mpsc::Receiver;
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::mpsc::{Receiver, RecvTimeoutError};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
+
+/// Wall-clock slice between liveness checks while awaiting a response.
+const WALL_POLL_SLICE: Duration = Duration::from_millis(5);
+/// Wall-clock slice per poll on a manual clock (lets worker threads make
+/// real progress inside virtual waits).
+const MANUAL_WAIT_SLICE: Duration = Duration::from_micros(500);
+/// Virtual microseconds a manual clock advances per empty poll, bounding
+/// virtual-time waits (a hung request exhausts its deadline in
+/// `deadline / MANUAL_TICK_US` polls).
+const MANUAL_TICK_US: u64 = 1_000;
 
 /// A pluggable load-balancing policy.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -70,12 +94,32 @@ impl RoutingPolicy {
 }
 
 /// Router tuning knobs.
-#[derive(Clone, Copy, Debug)]
+#[derive(Clone, Debug)]
 pub struct RouterConfig {
     /// The load-balancing policy.
     pub policy: RoutingPolicy,
-    /// How long a replica that refused a request is de-preferred.
+    /// The circuit breaker's open window: how long a tripped replica is
+    /// demoted before a probe is allowed (PR 2 called this the cooldown).
     pub cooldown: Duration,
+    /// Consecutive failures that trip a replica's breaker open. The
+    /// default 1 preserves the original one-reject-demotes behaviour.
+    pub failure_threshold: u32,
+    /// Per-request deadline: the request reaches
+    /// [`Outcome::DeadlineExceeded`] if no terminal outcome arrived in
+    /// time. [`Duration::ZERO`] (the default) disables deadlines.
+    pub request_timeout: Duration,
+    /// Extra full-cluster submission rounds after the first refusal
+    /// (each preceded by backoff), and the failover-resubmission budget.
+    pub max_retries: u32,
+    /// Base backoff before retry round 1 (doubles per round).
+    pub backoff_base: Duration,
+    /// Upper bound on any single backoff sleep.
+    pub backoff_cap: Duration,
+    /// Seed for the deterministic backoff jitter.
+    pub seed: u64,
+    /// Time source for deadlines, backoff and breaker windows. Tests
+    /// inject [`Clock::manual`] for instant, deterministic timing.
+    pub clock: Arc<Clock>,
 }
 
 impl Default for RouterConfig {
@@ -83,26 +127,77 @@ impl Default for RouterConfig {
         RouterConfig {
             policy: RoutingPolicy::JoinShortestQueue,
             cooldown: Duration::from_millis(50),
+            failure_threshold: 1,
+            request_timeout: Duration::ZERO,
+            max_retries: 2,
+            backoff_base: Duration::from_millis(2),
+            backoff_cap: Duration::from_millis(50),
+            seed: 0,
+            clock: Clock::wall(),
         }
     }
 }
 
-/// An accepted, routed request: await the response with
-/// [`RoutedRequest::wait`], which also records cluster-level end-to-end
-/// latency at receipt.
+/// The exactly-one-terminal-outcome taxonomy: every submitted request
+/// ends in precisely one of these, under any fault schedule.
+#[derive(Debug)]
+pub enum Outcome {
+    /// The response arrived.
+    Completed(Response),
+    /// Every replica refused (or the request is malformed, or its
+    /// failover budget ran out while replicas kept dying).
+    Rejected(RejectReason),
+    /// The per-request deadline expired before a response.
+    DeadlineExceeded,
+}
+
+impl Outcome {
+    /// Stable snake_case name for reporting.
+    pub fn name(&self) -> &'static str {
+        match self {
+            Outcome::Completed(_) => "completed",
+            Outcome::Rejected(_) => "rejected",
+            Outcome::DeadlineExceeded => "deadline_exceeded",
+        }
+    }
+
+    /// True for [`Outcome::Completed`].
+    pub fn is_completed(&self) -> bool {
+        matches!(self, Outcome::Completed(_))
+    }
+
+    /// The response, if completed.
+    pub fn response(self) -> Option<Response> {
+        match self {
+            Outcome::Completed(resp) => Some(resp),
+            _ => None,
+        }
+    }
+}
+
+/// An accepted, routed request. Await it with [`Router::await_outcome`]
+/// (deadline-aware, fails over off dead replicas) or the simpler
+/// [`RoutedRequest::wait`].
 pub struct RoutedRequest {
-    /// Replica index the request landed on.
+    /// Replica index the request currently lives on (failover updates it).
     pub replica: usize,
-    /// Per-replica request id.
+    /// Per-replica request id (failover re-assigns it).
     pub id: RequestId,
     rx: Receiver<Response>,
     submitted_at: Instant,
     metrics: Arc<ClusterMetrics>,
+    prompt: Vec<u32>,
+    max_new: usize,
+    session: Option<u64>,
+    deadline_us: Option<u64>,
+    failovers: u32,
 }
 
 impl RoutedRequest {
-    /// Block for the response up to `timeout`. `None` on timeout (the
-    /// replica keeps working; the response is simply no longer awaited).
+    /// Block for the response up to `timeout`. `None` on timeout or a
+    /// dead replica (no failover — use [`Router::await_outcome`] for the
+    /// fault-tolerant path). Records cluster end-to-end latency at
+    /// receipt.
     pub fn wait(self, timeout: Duration) -> Option<Response> {
         match self.rx.recv_timeout(timeout) {
             Ok(resp) => {
@@ -114,32 +209,63 @@ impl RoutedRequest {
     }
 }
 
+/// Internal: how a routing pass ended without acceptance.
+enum RouteFail {
+    Rejected(RejectReason),
+    Deadline,
+}
+
+/// Internal: a successful routing pass.
+struct Accepted {
+    replica: usize,
+    id: RequestId,
+    rx: Receiver<Response>,
+}
+
+/// Internal: one wait step while awaiting a response.
+enum Waited {
+    Response(Response),
+    Deadline,
+    /// The serving replica died — the supervisor dropped our sender.
+    Lost,
+}
+
 /// The router: submit-side front door of a replica pool.
 pub struct Router {
-    clients: Vec<ServerClient>,
+    pool: Arc<ReplicaPool>,
     cfg: RouterConfig,
+    breaker: BreakerConfig,
     health: Vec<ReplicaHealth>,
     rr: AtomicUsize,
+    jitter_seq: AtomicU64,
     metrics: Arc<ClusterMetrics>,
 }
 
 impl Router {
-    /// Build a router over one client per replica (panics on zero).
-    pub fn new(clients: Vec<ServerClient>, cfg: RouterConfig) -> Self {
-        assert!(!clients.is_empty(), "router needs at least one replica");
-        let n = clients.len();
+    /// Build a router over a (supervised) replica pool. The router
+    /// fetches clients from the pool per submission, so respawned
+    /// replicas are reachable without rebuilding anything.
+    pub fn new(pool: Arc<ReplicaPool>, cfg: RouterConfig) -> Self {
+        assert!(!pool.is_empty(), "router needs at least one replica");
+        let n = pool.len();
+        let breaker = BreakerConfig {
+            failure_threshold: cfg.failure_threshold.max(1),
+            open_for_us: cfg.cooldown.as_micros() as u64,
+        };
         Router {
-            clients,
+            pool,
             cfg,
+            breaker,
             health: (0..n).map(|_| ReplicaHealth::new()).collect(),
             rr: AtomicUsize::new(0),
+            jitter_seq: AtomicU64::new(0),
             metrics: Arc::new(ClusterMetrics::new(n)),
         }
     }
 
     /// Number of replicas routed over.
     pub fn n_replicas(&self) -> usize {
-        self.clients.len()
+        self.pool.len()
     }
 
     /// The configured routing policy.
@@ -152,14 +278,21 @@ impl Router {
         &self.metrics
     }
 
-    /// Cluster snapshot with the KV and prefill-skipping totals filled
-    /// in from the per-replica clients.
+    /// The supervised pool this router submits into.
+    pub fn pool(&self) -> &Arc<ReplicaPool> {
+        &self.pool
+    }
+
+    /// Cluster snapshot with the KV, prefill-skipping and restart totals
+    /// filled in from the per-replica clients and the pool supervisor.
     pub fn snapshot(&self) -> ClusterSnapshot {
         let mut s = self.metrics.snapshot();
         let kv = self.pool_aggregate();
         s.kv_bytes_used = kv.used_bytes();
         s.kv_bytes_peak = kv.peak_bytes();
-        for c in &self.clients {
+        s.restarts = self.pool.restarts_total();
+        for i in 0..self.pool.len() {
+            let c = self.pool.client(i);
             let counters = c.metrics().counters();
             s.prefill_tokens_computed += counters.prefill_tokens_computed;
             s.prefill_tokens_skipped += counters.prefill_tokens_skipped;
@@ -176,7 +309,7 @@ impl Router {
 
     /// Per-replica KV pool snapshots, in replica order.
     pub fn pool_snapshots(&self) -> Vec<PoolSnapshot> {
-        self.clients.iter().map(|c| c.pool_snapshot()).collect()
+        self.pool.pool_snapshots()
     }
 
     /// The replicas' pool gauges summed into one cluster-level view.
@@ -184,90 +317,291 @@ impl Router {
         aggregate_snapshots(&self.pool_snapshots())
     }
 
-    /// Submit a request, re-routing around backpressure. `session` keys
-    /// the `affinity` policy; other policies ignore it. On success the
-    /// replica's health resets; a rejection here means *every* replica
-    /// refused (or the request is malformed, e.g. over-long prompt).
+    /// Submit a request, re-routing around backpressure and retrying
+    /// full-cluster refusals with backoff. `session` keys the `affinity`
+    /// policy; other policies ignore it. `Err` carries the request's
+    /// terminal outcome (already counted); `Ok` must be driven to its
+    /// terminal outcome with [`Router::await_outcome`] (or the legacy
+    /// [`RoutedRequest::wait`]).
     pub fn submit(
         &self,
         tokens: Vec<u32>,
         max_new: usize,
         session: Option<u64>,
-    ) -> Result<RoutedRequest, RejectReason> {
-        let order = self.candidate_order(session);
-        let mut last = RejectReason::QueueFull;
-        let mut tokens = Some(tokens);
-        // route span: decision start → accept/reject, tagged with the
-        // attempt count and the landing replica (or ROUTE_REJECTED)
-        let t0 = if trace::enabled() { Some(Instant::now()) } else { None };
-        for (attempt, &i) in order.iter().enumerate() {
-            if attempt > 0 {
-                self.metrics.on_reroute();
-            }
-            // clone only while re-route targets remain; the last
-            // candidate consumes the prompt without copying
-            let attempt_tokens = if attempt + 1 == order.len() {
-                tokens.take().expect("prompt consumed before last attempt")
-            } else {
-                tokens.as_ref().expect("prompt missing").clone()
-            };
-            match self.clients[i].submit(attempt_tokens, max_new) {
-                Ok((id, rx)) => {
-                    self.health[i].on_accept();
-                    self.metrics.on_routed(i);
-                    if let Some(t0) = t0 {
-                        let attempts = attempt as u64 + 1;
-                        let now = Instant::now();
-                        trace::span_on(i as u32, SpanKind::Route, t0, now, id, attempts, i as u64);
-                    }
-                    return Ok(RoutedRequest {
-                        replica: i,
-                        id,
-                        rx,
-                        submitted_at: Instant::now(),
-                        metrics: self.metrics.clone(),
-                    });
+    ) -> Result<RoutedRequest, Outcome> {
+        self.metrics.on_request();
+        let deadline_us = if self.cfg.request_timeout.is_zero() {
+            None
+        } else {
+            Some(
+                self.cfg
+                    .clock
+                    .now_us()
+                    .saturating_add(self.cfg.request_timeout.as_micros() as u64),
+            )
+        };
+        match self.route(&tokens, max_new, session, deadline_us) {
+            Ok(acc) => Ok(RoutedRequest {
+                replica: acc.replica,
+                id: acc.id,
+                rx: acc.rx,
+                submitted_at: Instant::now(),
+                metrics: self.metrics.clone(),
+                prompt: tokens,
+                max_new,
+                session,
+                deadline_us,
+                failovers: 0,
+            }),
+            Err(fail) => Err(self.terminal(fail)),
+        }
+    }
+
+    /// Drive a routed request to its terminal outcome: wait for the
+    /// response, observing the deadline, and fail over to a surviving
+    /// replica (resubmitting the prompt) if the serving replica's worker
+    /// dies. `wait_cap` bounds total wall-clock blocking when no deadline
+    /// is configured (its expiry counts as a deadline exceeded).
+    pub fn await_outcome(&self, mut r: RoutedRequest, wait_cap: Duration) -> Outcome {
+        let wait_started = Instant::now();
+        loop {
+            match self.wait_response(&r, wait_started, wait_cap) {
+                Waited::Response(resp) => {
+                    self.metrics.on_complete(r.submitted_at.elapsed(), resp.tokens.len());
+                    return Outcome::Completed(resp);
                 }
-                Err(reason @ RejectReason::PromptTooLong { .. }) => {
-                    // deterministic across identically-configured
-                    // replicas: re-routing cannot help
-                    self.metrics.on_reject();
-                    if let Some(t0) = t0 {
-                        let attempts = attempt as u64 + 1;
+                Waited::Deadline => return self.terminal(RouteFail::Deadline),
+                Waited::Lost => {
+                    r.failovers += 1;
+                    self.metrics.on_failover();
+                    if trace::enabled() {
                         let now = Instant::now();
                         trace::span_on(
-                            0,
-                            SpanKind::Route,
-                            t0,
+                            r.replica as u32,
+                            SpanKind::Failover,
                             now,
-                            NO_REQ,
-                            attempts,
-                            ROUTE_REJECTED,
+                            now,
+                            r.id,
+                            r.failovers as u64,
+                            r.replica as u64,
                         );
                     }
-                    return Err(reason);
-                }
-                Err(reason) => {
-                    self.health[i].on_reject(Instant::now(), self.cfg.cooldown);
-                    last = reason;
+                    let now_us = self.cfg.clock.now_us();
+                    if self.health[r.replica].on_failure(now_us, &self.breaker) {
+                        self.trace_breaker(r.replica, BreakerState::Open);
+                    }
+                    self.pool.restart_if_dead(r.replica);
+                    // bounded failovers: a request cannot chase dying
+                    // replicas forever
+                    if r.failovers > self.cfg.max_retries.saturating_add(1) {
+                        return self.terminal(RouteFail::Rejected(RejectReason::ShuttingDown));
+                    }
+                    if !self.backoff(r.failovers, r.deadline_us) {
+                        return self.terminal(RouteFail::Deadline);
+                    }
+                    match self.route(&r.prompt, r.max_new, r.session, r.deadline_us) {
+                        Ok(acc) => {
+                            r.replica = acc.replica;
+                            r.id = acc.id;
+                            r.rx = acc.rx;
+                        }
+                        Err(fail) => return self.terminal(fail),
+                    }
                 }
             }
         }
-        self.metrics.on_reject();
-        if let Some(t0) = t0 {
-            let attempts = order.len() as u64;
-            let now = Instant::now();
-            trace::span_on(0, SpanKind::Route, t0, now, NO_REQ, attempts, ROUTE_REJECTED);
+    }
+
+    /// Count and build the terminal outcome for a failed request.
+    fn terminal(&self, fail: RouteFail) -> Outcome {
+        match fail {
+            RouteFail::Rejected(reason) => {
+                self.metrics.on_reject(reason);
+                Outcome::Rejected(reason)
+            }
+            RouteFail::Deadline => {
+                self.metrics.on_deadline_exceeded();
+                Outcome::DeadlineExceeded
+            }
         }
-        Err(last)
+    }
+
+    /// One wait step: poll the response channel in short slices so a
+    /// dead worker is detected (and its waiters freed) even when every
+    /// caller is blocked awaiting it.
+    fn wait_response(&self, r: &RoutedRequest, wait_started: Instant, wait_cap: Duration) -> Waited {
+        let manual = self.cfg.clock.is_manual();
+        loop {
+            if let Some(d) = r.deadline_us {
+                if self.cfg.clock.now_us() >= d {
+                    return Waited::Deadline;
+                }
+            }
+            if wait_started.elapsed() >= wait_cap {
+                return Waited::Deadline;
+            }
+            let slice = if manual { MANUAL_WAIT_SLICE } else { WALL_POLL_SLICE };
+            match r.rx.recv_timeout(slice) {
+                Ok(resp) => return Waited::Response(resp),
+                Err(RecvTimeoutError::Timeout) => {
+                    if manual {
+                        self.cfg.clock.advance_us(MANUAL_TICK_US);
+                    }
+                    // liveness: a panicked worker never answers its
+                    // waiters; supervising here fails them over (our own
+                    // sender drops → Lost on the next poll) and respawns
+                    self.pool.restart_if_dead(r.replica);
+                }
+                Err(RecvTimeoutError::Disconnected) => return Waited::Lost,
+            }
+        }
+    }
+
+    /// Routing passes with retry rounds: round 0 plus up to `max_retries`
+    /// backoff-separated rounds, each trying every replica in breaker-
+    /// aware preference order.
+    fn route(
+        &self,
+        tokens: &[u32],
+        max_new: usize,
+        session: Option<u64>,
+        deadline_us: Option<u64>,
+    ) -> Result<Accepted, RouteFail> {
+        let t0 = if trace::enabled() { Some(Instant::now()) } else { None };
+        let mut last = RejectReason::QueueFull;
+        let mut total_attempts = 0u64;
+        for round in 0..=self.cfg.max_retries {
+            if round > 0 {
+                self.metrics.on_retry();
+                if !self.backoff(round, deadline_us) {
+                    return Err(RouteFail::Deadline);
+                }
+            }
+            if let Some(d) = deadline_us {
+                if self.cfg.clock.now_us() >= d {
+                    return Err(RouteFail::Deadline);
+                }
+            }
+            for (attempt, &i) in self.candidate_order(session).iter().enumerate() {
+                if attempt > 0 {
+                    self.metrics.on_reroute();
+                }
+                total_attempts += 1;
+                let now_us = self.cfg.clock.now_us();
+                self.health[i].begin_probe(now_us, &self.breaker);
+                match self.pool.client(i).submit(tokens.to_vec(), max_new) {
+                    Ok((id, rx)) => {
+                        if self.health[i].on_success() {
+                            self.trace_breaker(i, BreakerState::Closed);
+                        }
+                        self.metrics.on_routed(i);
+                        if let Some(t0) = t0 {
+                            let now = Instant::now();
+                            trace::span_on(
+                                i as u32,
+                                SpanKind::Route,
+                                t0,
+                                now,
+                                id,
+                                total_attempts,
+                                i as u64,
+                            );
+                        }
+                        return Ok(Accepted { replica: i, id, rx });
+                    }
+                    Err(reason @ RejectReason::PromptTooLong { .. }) => {
+                        // deterministic across identically-configured
+                        // replicas: re-routing/retrying cannot help
+                        if let Some(t0) = t0 {
+                            let now = Instant::now();
+                            trace::span_on(
+                                0,
+                                SpanKind::Route,
+                                t0,
+                                now,
+                                NO_REQ,
+                                total_attempts,
+                                ROUTE_REJECTED,
+                            );
+                        }
+                        return Err(RouteFail::Rejected(reason));
+                    }
+                    Err(reason) => {
+                        // a ShuttingDown verdict may mean the worker
+                        // crashed (its exit guard closed the queue):
+                        // supervise so a later round reaches the respawn
+                        if reason == RejectReason::ShuttingDown {
+                            self.pool.restart_if_dead(i);
+                        }
+                        if self.health[i].on_failure(self.cfg.clock.now_us(), &self.breaker) {
+                            self.trace_breaker(i, BreakerState::Open);
+                        }
+                        last = reason;
+                    }
+                }
+            }
+        }
+        if let Some(t0) = t0 {
+            let now = Instant::now();
+            trace::span_on(0, SpanKind::Route, t0, now, NO_REQ, total_attempts, ROUTE_REJECTED);
+        }
+        Err(RouteFail::Rejected(last))
+    }
+
+    /// Sleep the backoff for retry/failover round `round` (≥ 1):
+    /// exponential in the round, capped, with deterministic jitter, and
+    /// clamped to never sleep past the deadline. Returns `false` when the
+    /// deadline is (or would be) exhausted.
+    fn backoff(&self, round: u32, deadline_us: Option<u64>) -> bool {
+        let base = self.cfg.backoff_base.as_micros() as u64;
+        let cap = (self.cfg.backoff_cap.as_micros() as u64).max(1);
+        let exp = base.saturating_mul(1u64 << (round.saturating_sub(1)).min(16)).min(cap);
+        // deterministic jitter in [0, exp/2]: seeded by config, streamed
+        // by a per-router sequence so concurrent submitters decorrelate
+        let mut s = self
+            .cfg
+            .seed
+            .wrapping_add(self.jitter_seq.fetch_add(1, Ordering::Relaxed).wrapping_mul(0x9E37));
+        let jitter = if exp == 0 { 0 } else { splitmix64(&mut s) % (exp / 2 + 1) };
+        let mut sleep = exp + jitter;
+        if let Some(d) = deadline_us {
+            let now = self.cfg.clock.now_us();
+            if now >= d {
+                return false;
+            }
+            sleep = sleep.min(d - now);
+        }
+        self.cfg.clock.sleep_us(sleep);
+        if let Some(d) = deadline_us {
+            if self.cfg.clock.now_us() >= d {
+                return false;
+            }
+        }
+        true
+    }
+
+    /// Record a breaker transition span for replica `i`.
+    fn trace_breaker(&self, i: usize, state: BreakerState) {
+        if trace::enabled() {
+            let now = Instant::now();
+            trace::span_on(
+                i as u32,
+                SpanKind::Breaker,
+                now,
+                now,
+                NO_REQ,
+                state.code(),
+                self.health[i].rejects(),
+            );
+        }
     }
 
     /// Replica indices in preference order: the policy's choice first,
     /// then the remaining replicas least-loaded-first as re-route
-    /// targets; cooled-down replicas are demoted to the tail (still
-    /// tried, as the last resort before rejecting).
+    /// targets; breaker state demotes tripped replicas to the tail
+    /// (still tried, as the last resort before rejecting).
     fn candidate_order(&self, session: Option<u64>) -> Vec<usize> {
-        let n = self.clients.len();
+        let n = self.pool.len();
         let mut order: Vec<usize> = match self.cfg.policy {
             RoutingPolicy::RoundRobin => {
                 let start = self.rr.fetch_add(1, Ordering::Relaxed) % n;
@@ -288,12 +622,13 @@ impl Router {
                 std::iter::once(home).chain(rest).collect()
             }
         };
-        // stable partition: healthy replicas first, cooled ones last
-        // (snapshot health before sorting — the gauges are live and a
-        // key that changes mid-sort is an inconsistent comparator)
-        let now = Instant::now();
-        let cooled: Vec<bool> = (0..n).map(|i| self.health[i].is_cooled(now)).collect();
-        order.sort_by_key(|&i| cooled[i]);
+        // stable partition by breaker rank: closed first, half-open
+        // (probe available) next, open / probe-in-flight last (snapshot
+        // ranks before sorting — breaker state is live and a key that
+        // changes mid-sort is an inconsistent comparator)
+        let now_us = self.cfg.clock.now_us();
+        let rank: Vec<u8> = (0..n).map(|i| self.health[i].rank(now_us, &self.breaker)).collect();
+        order.sort_by_key(|&i| rank[i]);
         order
     }
 
@@ -303,11 +638,11 @@ impl Router {
     /// live key would be an inconsistent comparator (and take the metrics
     /// lock O(n log n) times).
     fn least_loaded(&self) -> Vec<usize> {
-        let mut loads: Vec<(u64, usize, usize)> = self
-            .clients
-            .iter()
-            .enumerate()
-            .map(|(i, c)| (c.in_flight(), c.queue_depth(), i))
+        let mut loads: Vec<(u64, usize, usize)> = (0..self.pool.len())
+            .map(|i| {
+                let c = self.pool.client(i);
+                (c.in_flight(), c.queue_depth(), i)
+            })
             .collect();
         loads.sort_unstable();
         loads.into_iter().map(|(_, _, i)| i).collect()
@@ -319,15 +654,17 @@ impl Router {
     pub fn metrics_json(&self) -> Json {
         let mut o = BTreeMap::new();
         o.insert("policy".to_string(), Json::Str(self.cfg.policy.name().to_string()));
-        o.insert("n_replicas".to_string(), Json::Num(self.clients.len() as f64));
+        o.insert("n_replicas".to_string(), Json::Num(self.pool.len() as f64));
+        o.insert("restarts".to_string(), Json::Num(self.pool.restarts_total() as f64));
         o.insert("aggregate".to_string(), self.metrics.to_json());
         o.insert("kv".to_string(), self.pool_aggregate().to_json());
         // cluster-wide prefill-skipping totals (summed per-replica
         // serving counters; per-replica values appear in each replica
         // block below)
+        let clients: Vec<_> = (0..self.pool.len()).map(|i| self.pool.client(i)).collect();
         let (mut computed, mut skipped) = (0u64, 0u64);
         let (mut hits, mut misses) = (0u64, 0u64);
-        for c in &self.clients {
+        for c in &clients {
             let counters = c.metrics().counters();
             computed += counters.prefill_tokens_computed;
             skipped += counters.prefill_tokens_skipped;
@@ -342,8 +679,7 @@ impl Router {
         // prefill totals above (absent when no replica runs an auditor,
         // i.e. `--audit-rate 0`); the full per-replica quality blocks
         // appear inside each replica snapshot below
-        let quality: Vec<_> =
-            self.clients.iter().filter_map(|c| c.metrics().quality_snapshot()).collect();
+        let quality: Vec<_> = clients.iter().filter_map(|c| c.metrics().quality_snapshot()).collect();
         if !quality.is_empty() {
             let audited: u64 = quality.iter().map(|s| s.audited_total()).sum();
             let degradations: u64 = quality.iter().map(|s| s.degradations).sum();
@@ -359,8 +695,8 @@ impl Router {
                 Json::Num(if worst_p99.is_finite() { worst_p99 } else { 0.0 }),
             );
         }
-        let replicas: Vec<Json> = self
-            .clients
+        let now_us = self.cfg.clock.now_us();
+        let replicas: Vec<Json> = clients
             .iter()
             .enumerate()
             .map(|(i, c)| {
@@ -372,7 +708,16 @@ impl Router {
                 r.insert("routed".to_string(), Json::Num(self.metrics.routed_to(i) as f64));
                 r.insert("queue_depth".to_string(), Json::Num(c.queue_depth() as f64));
                 r.insert("router_rejects".to_string(), Json::Num(self.health[i].rejects() as f64));
-                r.insert("cooldowns".to_string(), Json::Num(self.health[i].cooldowns() as f64));
+                r.insert("cooldowns".to_string(), Json::Num(self.health[i].opens() as f64));
+                r.insert(
+                    "breaker_state".to_string(),
+                    Json::Str(self.health[i].state(now_us, &self.breaker).name().to_string()),
+                );
+                r.insert(
+                    "breaker_transitions".to_string(),
+                    Json::Num(self.health[i].transitions() as f64),
+                );
+                r.insert("restarts".to_string(), Json::Num(self.pool.restarts(i) as f64));
                 r.insert("kv_pool".to_string(), c.pool_snapshot().to_json());
                 Json::Obj(r)
             })
@@ -393,7 +738,7 @@ impl Router {
             "counter",
             "Requests accepted by a replica, by landing replica.",
         );
-        for i in 0..self.clients.len() {
+        for i in 0..self.pool.len() {
             let label = i.to_string();
             b.sample(
                 "wildcat_cluster_routed_total",
@@ -401,7 +746,12 @@ impl Router {
                 self.metrics.routed_to(i) as f64,
             );
         }
-        let totals: [(&str, &str, u64); 3] = [
+        let totals: [(&str, &str, u64); 8] = [
+            (
+                "wildcat_cluster_requests_total",
+                "Requests submitted to the router (each reaches one terminal outcome).",
+                s.requests,
+            ),
             (
                 "wildcat_cluster_rejected_total",
                 "Requests rejected by every replica.",
@@ -417,6 +767,26 @@ impl Router {
                 "Responses received by awaiting callers.",
                 s.completed,
             ),
+            (
+                "wildcat_cluster_deadline_exceeded_total",
+                "Requests that hit their deadline before a response.",
+                s.deadline_exceeded,
+            ),
+            (
+                "wildcat_cluster_failovers_total",
+                "In-flight requests failed over off a dead replica.",
+                s.failovers,
+            ),
+            (
+                "wildcat_cluster_retries_total",
+                "Full-cluster retry rounds after a refusal.",
+                s.retries,
+            ),
+            (
+                "wildcat_cluster_restarts_total",
+                "Replica workers respawned after a crash.",
+                s.restarts,
+            ),
         ];
         for (name, help, v) in totals {
             b.declare(name, "counter", help);
@@ -430,13 +800,31 @@ impl Router {
         for (q, v) in [("0.5", s.p50_ms), ("0.95", s.p95_ms), ("0.99", s.p99_ms)] {
             b.sample("wildcat_cluster_e2e_latency_ms", &[("quantile", q)], v);
         }
-        for (i, c) in self.clients.iter().enumerate() {
+        let now_us = self.cfg.clock.now_us();
+        for i in 0..self.pool.len() {
+            let c = self.pool.client(i);
             let label = i.to_string();
             let labels = [("replica", label.as_str())];
             c.metrics().prom_write(&mut b, &labels);
             c.pool_snapshot().prom_write(&mut b, &labels);
             b.declare("wildcat_queue_depth", "gauge", "Requests waiting in the replica queue.");
             b.sample("wildcat_queue_depth", &labels, c.queue_depth() as f64);
+            b.declare(
+                "wildcat_breaker_state",
+                "gauge",
+                "Replica circuit-breaker state (0 closed, 1 open, 2 half-open).",
+            );
+            b.sample(
+                "wildcat_breaker_state",
+                &labels,
+                self.health[i].state(now_us, &self.breaker).code() as f64,
+            );
+            b.declare(
+                "wildcat_replica_restarts_total",
+                "counter",
+                "Times this replica was respawned after a crash.",
+            );
+            b.sample("wildcat_replica_restarts_total", &labels, self.pool.restarts(i) as f64);
         }
         b.finish()
     }
@@ -445,14 +833,15 @@ impl Router {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::cluster::fault::{FaultConfig, FaultPlan};
     use crate::cluster::pool::ReplicaPool;
     use crate::coordinator::ServerConfig;
     use crate::kvcache::StreamingLlm;
     use crate::model::{ModelConfig, Transformer};
     use crate::rng::Rng;
 
-    fn tiny_pool(n: usize) -> ReplicaPool {
-        ReplicaPool::spawn(n, ServerConfig::default(), Arc::new(StreamingLlm), |i| {
+    fn tiny_pool_cfg(n: usize, cfg: ServerConfig) -> Arc<ReplicaPool> {
+        Arc::new(ReplicaPool::spawn(n, cfg, Arc::new(StreamingLlm), |i| {
             let cfg = ModelConfig {
                 vocab: 16,
                 d_model: 16,
@@ -462,14 +851,18 @@ mod tests {
                 max_len: 256,
             };
             Transformer::random(cfg, &mut Rng::seed_from(50 + i as u64))
-        })
+        }))
+    }
+
+    fn tiny_pool(n: usize) -> Arc<ReplicaPool> {
+        tiny_pool_cfg(n, ServerConfig::default())
     }
 
     #[test]
     fn round_robin_spreads_requests() {
         let pool = tiny_pool(3);
         let router = Router::new(
-            pool.clients(),
+            pool.clone(),
             RouterConfig { policy: RoutingPolicy::RoundRobin, ..Default::default() },
         );
         let mut pending = Vec::new();
@@ -483,8 +876,10 @@ mod tests {
             assert_eq!(router.metrics().routed_to(i), 3, "replica {i} share");
         }
         let s = router.snapshot();
+        assert_eq!(s.requests, 9);
         assert_eq!(s.completed, 9);
         assert_eq!(s.rejected, 0);
+        assert_eq!(s.deadline_exceeded, 0);
         pool.shutdown();
     }
 
@@ -492,7 +887,7 @@ mod tests {
     fn affinity_pins_sessions() {
         let pool = tiny_pool(4);
         let router = Router::new(
-            pool.clients(),
+            pool.clone(),
             RouterConfig { policy: RoutingPolicy::Affinity, ..Default::default() },
         );
         let mut homes = std::collections::BTreeMap::new();
@@ -517,14 +912,101 @@ mod tests {
     }
 
     #[test]
-    fn overlong_prompt_rejects_without_reroute() {
+    fn overlong_prompt_rejects_without_reroute_or_retry() {
         let pool = tiny_pool(2);
-        let router = Router::new(pool.clients(), RouterConfig::default());
-        let err = router.submit(vec![0; 5000], 1, None).unwrap_err();
-        assert!(matches!(err, RejectReason::PromptTooLong { .. }));
+        let router = Router::new(pool.clone(), RouterConfig::default());
+        let outcome = router.submit(vec![0; 5000], 1, None).unwrap_err();
+        assert!(matches!(outcome, Outcome::Rejected(RejectReason::PromptTooLong { .. })));
         let s = router.snapshot();
+        assert_eq!(s.requests, 1);
         assert_eq!(s.rejected, 1);
         assert_eq!(s.rerouted, 0, "malformed requests must not be re-routed");
+        assert_eq!(s.retries, 0, "malformed requests must not be retried");
+        pool.shutdown();
+    }
+
+    #[test]
+    fn injected_rejects_are_retried_to_completion() {
+        // every 2nd submit to the single replica fails transiently; with
+        // retry rounds every request still completes
+        let plan =
+            FaultPlan::new(FaultConfig { reject_every: 2, ..Default::default() }, 1).unwrap();
+        let pool = tiny_pool_cfg(1, ServerConfig { faults: Some(plan), ..Default::default() });
+        let router = Router::new(
+            pool.clone(),
+            RouterConfig { policy: RoutingPolicy::RoundRobin, max_retries: 3, ..Default::default() },
+        );
+        let mut pending = Vec::new();
+        for _ in 0..6 {
+            pending.push(router.submit(vec![1, 2, 3], 1, None).unwrap());
+        }
+        for p in pending {
+            assert!(
+                router.await_outcome(p, Duration::from_secs(60)).is_completed(),
+                "transient injected rejects must be retried to completion"
+            );
+        }
+        let s = router.snapshot();
+        assert_eq!(s.requests, 6);
+        assert_eq!(s.completed, 6);
+        assert!(s.retries > 0, "injected failures must surface as retries: {s:?}");
+        pool.shutdown();
+    }
+
+    #[test]
+    fn breaker_opens_on_virtual_clock_and_reports_state() {
+        // reject every submit; manual clock so the open window never
+        // expires during the test
+        let plan =
+            FaultPlan::new(FaultConfig { reject_every: 1, ..Default::default() }, 1).unwrap();
+        let pool = tiny_pool_cfg(1, ServerConfig { faults: Some(plan), ..Default::default() });
+        let clock = Clock::manual();
+        let router = Router::new(
+            pool.clone(),
+            RouterConfig {
+                policy: RoutingPolicy::RoundRobin,
+                max_retries: 0,
+                clock,
+                ..Default::default()
+            },
+        );
+        let outcome = router.submit(vec![1, 2, 3], 1, None).unwrap_err();
+        assert!(matches!(outcome, Outcome::Rejected(RejectReason::Injected)));
+        let j = router.metrics_json();
+        let rep = &j.get("replicas").unwrap().as_arr().unwrap()[0];
+        assert_eq!(rep.get("breaker_state").and_then(Json::as_str), Some("open"));
+        assert!(rep.get("breaker_transitions").and_then(Json::as_f64).unwrap() >= 1.0);
+        let agg = j.get("aggregate").unwrap();
+        let by_reason = agg.get("rejected_by_reason").expect("outcome-reason accounting");
+        assert_eq!(by_reason.get("injected").and_then(Json::as_f64), Some(1.0));
+        pool.shutdown();
+    }
+
+    #[test]
+    fn deadline_exceeded_is_terminal_and_counted() {
+        // stall every engine step far past the deadline budget
+        let plan = FaultPlan::new(
+            FaultConfig { stall_every: 1, stall_ms: 200, ..Default::default() },
+            1,
+        )
+        .unwrap();
+        let pool = tiny_pool_cfg(1, ServerConfig { faults: Some(plan), ..Default::default() });
+        let router = Router::new(
+            pool.clone(),
+            RouterConfig {
+                policy: RoutingPolicy::RoundRobin,
+                request_timeout: Duration::from_millis(40),
+                max_retries: 0,
+                ..Default::default()
+            },
+        );
+        let r = router.submit(vec![1, 2, 3], 4, None).unwrap();
+        let outcome = router.await_outcome(r, Duration::from_secs(30));
+        assert!(matches!(outcome, Outcome::DeadlineExceeded), "got {}", outcome.name());
+        let s = router.snapshot();
+        assert_eq!(s.requests, 1);
+        assert_eq!(s.deadline_exceeded, 1);
+        assert_eq!(s.completed + s.rejected + s.deadline_exceeded, s.requests);
         pool.shutdown();
     }
 
@@ -533,7 +1015,7 @@ mod tests {
         use crate::obs::quality::QualityConfig;
         let mut cfg = ServerConfig::default();
         cfg.quality = QualityConfig { rate: 1, slo_abs_err: 0.0, seed: 7 };
-        let pool = ReplicaPool::spawn(2, cfg, Arc::new(StreamingLlm), |i| {
+        let pool = Arc::new(ReplicaPool::spawn(2, cfg, Arc::new(StreamingLlm), |i| {
             let mc = ModelConfig {
                 vocab: 16,
                 d_model: 16,
@@ -543,9 +1025,9 @@ mod tests {
                 max_len: 256,
             };
             Transformer::random(mc, &mut Rng::seed_from(90 + i as u64))
-        });
+        }));
         let router = Router::new(
-            pool.clients(),
+            pool.clone(),
             RouterConfig { policy: RoutingPolicy::RoundRobin, ..Default::default() },
         );
         let mut pending = Vec::new();
@@ -604,19 +1086,29 @@ mod tests {
     #[test]
     fn metrics_json_has_aggregate_and_replicas() {
         let pool = tiny_pool(2);
-        let router = Router::new(pool.clients(), RouterConfig::default());
+        let router = Router::new(pool.clone(), RouterConfig::default());
         let r = router.submit(vec![1, 2, 3], 1, None).unwrap();
         assert!(r.wait(Duration::from_secs(30)).is_some());
         let j = router.metrics_json();
         assert_eq!(j.get("policy").and_then(Json::as_str), Some("join_shortest_queue"));
         assert_eq!(j.get("n_replicas").and_then(Json::as_f64), Some(2.0));
+        assert_eq!(j.get("restarts").and_then(Json::as_f64), Some(0.0));
         let agg = j.get("aggregate").unwrap();
         assert_eq!(agg.get("completed").and_then(Json::as_f64), Some(1.0));
+        assert_eq!(agg.get("requests").and_then(Json::as_f64), Some(1.0));
+        assert_eq!(agg.get("deadline_exceeded").and_then(Json::as_f64), Some(0.0));
+        assert_eq!(agg.get("failovers").and_then(Json::as_f64), Some(0.0));
+        assert_eq!(agg.get("retries").and_then(Json::as_f64), Some(0.0));
         let reps = j.get("replicas").unwrap().as_arr().unwrap();
         assert_eq!(reps.len(), 2);
         let routed_sum: f64 =
             reps.iter().map(|r| r.get("routed").and_then(Json::as_f64).unwrap()).sum();
         assert_eq!(routed_sum, 1.0);
+        // every replica block reports a healthy breaker and no restarts
+        for r in reps {
+            assert_eq!(r.get("breaker_state").and_then(Json::as_str), Some("closed"));
+            assert_eq!(r.get("restarts").and_then(Json::as_f64), Some(0.0));
+        }
         // every replica block carries its pool gauges; the one request
         // landed on exactly one replica, whose pool saw KV bytes
         let peaks: Vec<f64> = reps
@@ -648,7 +1140,10 @@ mod tests {
         // Prometheus exposition carries the router counters per replica
         let prom = router.to_prometheus();
         assert!(prom.contains("wildcat_cluster_completed_total 1\n"), "prom:\n{prom}");
+        assert!(prom.contains("wildcat_cluster_requests_total 1\n"), "prom:\n{prom}");
+        assert!(prom.contains("wildcat_cluster_deadline_exceeded_total 0\n"), "prom:\n{prom}");
         assert!(prom.contains("wildcat_cluster_routed_total{replica=\"0\"}"), "prom:\n{prom}");
+        assert!(prom.contains("wildcat_breaker_state{replica=\"0\"} 0\n"), "prom:\n{prom}");
         assert!(prom.contains("wildcat_kv_pool_bytes{replica=\"1\",state=\"peak\"}"));
         pool.shutdown();
     }

@@ -3,6 +3,7 @@
 //! full — the serving-system contract that keeps tail latencies bounded.
 
 use super::request::Request;
+use crate::util::sync::{lock_recover, wait_timeout_recover};
 use std::collections::VecDeque;
 use std::sync::{Condvar, Mutex};
 
@@ -18,6 +19,21 @@ pub enum RejectReason {
     },
     /// The server is draining and no longer accepts work.
     ShuttingDown,
+    /// A transient failure injected by an active
+    /// [`crate::cluster::FaultPlan`] (retryable).
+    Injected,
+}
+
+impl RejectReason {
+    /// Stable snake_case name for outcome-reason accounting.
+    pub fn name(&self) -> &'static str {
+        match self {
+            RejectReason::QueueFull => "queue_full",
+            RejectReason::PromptTooLong { .. } => "prompt_too_long",
+            RejectReason::ShuttingDown => "shutting_down",
+            RejectReason::Injected => "injected",
+        }
+    }
 }
 
 struct Inner {
@@ -51,7 +67,7 @@ impl AdmissionQueue {
         if req.tokens.len() > self.max_prompt {
             return Err(RejectReason::PromptTooLong { max: self.max_prompt });
         }
-        let mut g = self.inner.lock().unwrap();
+        let mut g = lock_recover(&self.inner);
         if g.closed {
             return Err(RejectReason::ShuttingDown);
         }
@@ -66,10 +82,9 @@ impl AdmissionQueue {
     /// Pop up to `max` requests; blocks up to `timeout` when empty.
     /// Returns an empty vec on timeout, `None` once closed and drained.
     pub fn pop_batch(&self, max: usize, timeout: std::time::Duration) -> Option<Vec<Request>> {
-        let mut g = self.inner.lock().unwrap();
+        let mut g = lock_recover(&self.inner);
         if g.queue.is_empty() && !g.closed {
-            let (guard, _res) = self.notify.wait_timeout(g, timeout).unwrap();
-            g = guard;
+            g = wait_timeout_recover(&self.notify, g, timeout);
         }
         if g.queue.is_empty() {
             return if g.closed { None } else { Some(Vec::new()) };
@@ -80,7 +95,7 @@ impl AdmissionQueue {
 
     /// Requests currently queued.
     pub fn len(&self) -> usize {
-        self.inner.lock().unwrap().queue.len()
+        lock_recover(&self.inner).queue.len()
     }
 
     /// Whether the queue is empty.
@@ -90,7 +105,7 @@ impl AdmissionQueue {
 
     /// Stop admissions; queued requests remain poppable until drained.
     pub fn close(&self) {
-        self.inner.lock().unwrap().closed = true;
+        lock_recover(&self.inner).closed = true;
         self.notify.notify_all();
     }
 }

@@ -9,10 +9,12 @@ use super::batcher::{Batcher, BatcherConfig};
 use super::metrics::ServingMetrics;
 use super::request::{Request, RequestId, Response};
 use super::scheduler::{Scheduler, SchedulerConfig};
+use crate::cluster::fault::FaultPlan;
 use crate::kvcache::KvCompressor;
 use crate::kvpool::{KvPool, KvPoolConfig, PoolSnapshot};
 use crate::model::ModelBackend;
 use crate::obs::quality::{QualityAudit, QualityConfig};
+use crate::util::sync::lock_recover;
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
@@ -44,6 +46,14 @@ pub struct ServerConfig {
     /// records (`pid` in Chrome trace exports). The cluster's
     /// `ReplicaPool` assigns it; stand-alone servers keep 0.
     pub replica: u32,
+    /// Active fault-injection plan (`None` by default: the whole fault
+    /// plane is then a single branch per site, same gate discipline as
+    /// the tracer). Shared across replicas and respawns.
+    pub faults: Option<Arc<FaultPlan>>,
+    /// First request id this server hands out. The pool supervisor bumps
+    /// it on respawn so a restarted replica never reuses ids from its
+    /// previous incarnation (trace lanes and waiter keys stay unique).
+    pub first_request_id: u64,
 }
 
 impl Default for ServerConfig {
@@ -57,6 +67,8 @@ impl Default for ServerConfig {
             quality: QualityConfig::default(),
             seed: 0,
             replica: 0,
+            faults: None,
+            first_request_id: 1,
         }
     }
 }
@@ -75,6 +87,8 @@ pub struct ServerClient {
     metrics: Arc<ServingMetrics>,
     pool: Arc<KvPool>,
     next_id: Arc<AtomicU64>,
+    replica: u32,
+    faults: Option<Arc<FaultPlan>>,
 }
 
 impl ServerClient {
@@ -85,14 +99,21 @@ impl ServerClient {
         tokens: Vec<u32>,
         max_new: usize,
     ) -> Result<(RequestId, Receiver<Response>), RejectReason> {
+        if let Some(f) = &self.faults {
+            if f.inject_admission_failure(self.replica as usize) {
+                self.metrics.on_submit();
+                self.metrics.on_reject();
+                return Err(RejectReason::Injected);
+            }
+        }
         let id = self.next_id.fetch_add(1, Ordering::Relaxed);
         let (tx, rx) = channel();
-        self.waiters.lock().unwrap().insert(id, tx);
+        lock_recover(&self.waiters).insert(id, tx);
         self.metrics.on_submit();
         match self.queue.submit(Request::new(id, tokens, max_new)) {
             Ok(()) => Ok((id, rx)),
             Err(reason) => {
-                self.waiters.lock().unwrap().remove(&id);
+                lock_recover(&self.waiters).remove(&id);
                 self.metrics.on_reject();
                 Err(reason)
             }
@@ -102,6 +123,25 @@ impl ServerClient {
     /// The replica's serving metrics (shared with its scheduler).
     pub fn metrics(&self) -> &ServingMetrics {
         &self.metrics
+    }
+
+    /// Shared handle to the replica's serving metrics (the supervised
+    /// pool hands these out because its slots are behind a lock and a
+    /// plain reference cannot escape the guard).
+    pub fn metrics_arc(&self) -> Arc<ServingMetrics> {
+        self.metrics.clone()
+    }
+
+    /// Fail every registered waiter by dropping its response sender —
+    /// receivers observe `Disconnected` and the router fails the request
+    /// over to a surviving replica. The pool supervisor calls this after
+    /// detecting a dead worker. Returns how many in-flight requests were
+    /// failed back.
+    pub fn fail_pending(&self) -> usize {
+        let mut g = lock_recover(&self.waiters);
+        let n = g.len();
+        g.clear();
+        n
     }
 
     /// The replica's KV memory pool (shared with its scheduler).
@@ -161,6 +201,9 @@ impl Server {
             metrics.attach_quality(audit.clone());
             pool.set_quality_audit(audit.clone());
         }
+        let replica = cfg.replica;
+        let faults = cfg.faults.clone();
+        let first_request_id = cfg.first_request_id.max(1);
 
         let worker = {
             let queue = queue.clone();
@@ -214,7 +257,7 @@ impl Server {
                                 // a pool-rejected admission is answered
                                 // immediately (zero tokens), never dropped
                                 if let Some(rejected) = sched.admit(req) {
-                                    let tx = waiters.lock().unwrap().remove(&rejected.id);
+                                    let tx = lock_recover(&waiters).remove(&rejected.id);
                                     if let Some(tx) = tx {
                                         let _ = tx.send(rejected);
                                     }
@@ -228,8 +271,15 @@ impl Server {
                     if sched.active_count() == 0 {
                         continue;
                     }
+                    // fault-injection point: an armed plan may stall this
+                    // step or panic the worker here (the panic is the
+                    // injected crash; CloseOnExit + the pool supervisor
+                    // turn it into ShuttingDown rejects and a respawn)
+                    if let Some(f) = &cfg.faults {
+                        f.before_step(cfg.replica as usize);
+                    }
                     for resp in sched.step() {
-                        let tx = waiters.lock().unwrap().remove(&resp.id);
+                        let tx = lock_recover(&waiters).remove(&resp.id);
                         if let Some(tx) = tx {
                             let _ = tx.send(resp);
                         }
@@ -244,7 +294,9 @@ impl Server {
                 waiters,
                 metrics,
                 pool,
-                next_id: Arc::new(AtomicU64::new(1)),
+                next_id: Arc::new(AtomicU64::new(first_request_id)),
+                replica,
+                faults,
             },
             stopping,
             worker: Some(worker),
@@ -276,6 +328,16 @@ impl ServerHandle {
     /// Requests sitting in the admission queue.
     pub fn queue_len(&self) -> usize {
         self.client.queue_depth()
+    }
+
+    /// True when the worker thread exited without being asked to stop —
+    /// i.e. it panicked (a crashed backend or an injected fault). The
+    /// admission queue is already closed by then (`CloseOnExit`), so new
+    /// submits see `ShuttingDown`; the pool supervisor uses this to decide
+    /// to fail in-flight work over and respawn the replica.
+    pub fn worker_died(&self) -> bool {
+        !self.stopping.load(Ordering::Relaxed)
+            && self.worker.as_ref().map_or(true, |w| w.is_finished())
     }
 
     /// Graceful shutdown: stop admissions, finish in-flight work, join.

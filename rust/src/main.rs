@@ -18,7 +18,8 @@ use std::sync::Arc;
 use std::time::{Duration, Instant};
 use wildcat::attention::{exact_attention, wildcat_attention, WildcatParams};
 use wildcat::cluster::{
-    replay, Pacing, ReplayConfig, ReplicaPool, Router, RouterConfig, RoutingPolicy,
+    replay, FaultConfig, FaultPlan, Pacing, ReplayConfig, ReplicaPool, Router, RouterConfig,
+    RoutingPolicy,
 };
 use wildcat::coordinator::{Server, ServerConfig};
 use wildcat::kvcache::compressor_by_name;
@@ -277,6 +278,9 @@ fn cmd_info(args: &Args) -> anyhow::Result<()> {
 /// [--shape stationary|onoff|gamma] [--fast] [--metrics-json PATH]
 /// [--kv-budget-mb MB --prefix-sharing on|off --prefill-skip on|off]
 /// [--audit-rate N --audit-slo-abs-err E]
+/// [--request-timeout-ms N --max-retries N]
+/// [--fault-seed S --fault-crash-every N --fault-stall-every N
+/// --fault-stall-ms MS --fault-reject-every N]
 /// [--trace-json PATH --trace-capacity N] [--metrics-series PATH
 /// --metrics-interval-ms N] [--prom PATH]`
 ///
@@ -285,6 +289,11 @@ fn cmd_info(args: &Args) -> anyhow::Result<()> {
 /// virtual time with `--fast` (the CI smoke path). Uses the trained
 /// model when `artifacts/weights.bin` exists, else a seeded random model
 /// so the command works on a bare checkout.
+///
+/// The `--fault-*` flags arm a deterministic [`FaultPlan`] (crashes,
+/// stalls, transient rejects) for chaos runs; all default to 0 = off, and
+/// a fault-free run carries no fault plumbing on the hot path (see
+/// docs/ROBUSTNESS.md).
 fn cmd_cluster(args: &Args) -> anyhow::Result<()> {
     let seed = args.get_parse::<u64>("seed", 0);
     let n_replicas = args.get_parse::<usize>("replicas", 4);
@@ -296,6 +305,17 @@ fn cmd_cluster(args: &Args) -> anyhow::Result<()> {
     let fast = args.flag("fast");
     let shape = TraceShape::parse(&args.get_or("shape", "stationary"))?;
     let compressor = compressor_by_name(&args.get_or("compressor", "compresskv"))?;
+    let request_timeout_ms = args.get_parse::<u64>("request-timeout-ms", 0);
+    let max_retries = args.get_parse::<u32>("max-retries", 2);
+    let fault_cfg = FaultConfig {
+        seed: args.get_parse::<u64>("fault-seed", seed),
+        crash_every: args.get_parse::<u64>("fault-crash-every", 0),
+        stall_every: args.get_parse::<u64>("fault-stall-every", 0),
+        stall_ms: args.get_parse::<u64>("fault-stall-ms", 0),
+        reject_every: args.get_parse::<u64>("fault-reject-every", 0),
+    };
+    // None when every knob is 0: fault-free runs carry no plan at all
+    let faults = FaultPlan::new(fault_cfg, n_replicas.max(1));
 
     let mut cfg = ServerConfig::default();
     cfg.queue_capacity = queue_cap;
@@ -304,6 +324,7 @@ fn cmd_cluster(args: &Args) -> anyhow::Result<()> {
     cfg.pool = pool_config_from_args(args)?;
     cfg.seed = seed;
     cfg.quality = quality_config_from_args(args, seed);
+    cfg.faults = faults.clone();
 
     let run = obs::run_meta(
         "cluster",
@@ -323,6 +344,9 @@ fn cmd_cluster(args: &Args) -> anyhow::Result<()> {
             ("compressor", Json::Str(args.get_or("compressor", "compresskv"))),
             ("audit_rate", Json::Num(cfg.quality.rate as f64)),
             ("audit_slo_abs_err", Json::Num(cfg.quality.slo_abs_err)),
+            ("request_timeout_ms", Json::Num(request_timeout_ms as f64)),
+            ("max_retries", Json::Num(max_retries as f64)),
+            ("faults_armed", Json::Bool(faults.is_some())),
         ],
     );
     // enable tracing before the replicas spawn so startup spans land too
@@ -332,14 +356,22 @@ fn cmd_cluster(args: &Args) -> anyhow::Result<()> {
     // the cluster CLI always works on a bare checkout: fall back (with
     // the underlying load error surfaced) to a seeded random model
     let weights = wildcat::bench::runners::load_weights(args, true, "cluster")?;
-    let pool = ReplicaPool::spawn(
+    let pool = Arc::new(ReplicaPool::spawn(
         n_replicas,
         cfg,
         compressor,
         wildcat::bench::runners::replica_backend_factory(weights, model_cfg, seed),
-    );
-    let router =
-        Arc::new(Router::new(pool.clients(), RouterConfig { policy, ..Default::default() }));
+    ));
+    let router = Arc::new(Router::new(
+        pool.clone(),
+        RouterConfig {
+            policy,
+            request_timeout: Duration::from_millis(request_timeout_ms),
+            max_retries,
+            seed,
+            ..Default::default()
+        },
+    ));
     let sampler = {
         let r = Arc::clone(&router);
         sampler_setup(args, &run, move || r.metrics_json())?
@@ -362,13 +394,13 @@ fn cmd_cluster(args: &Args) -> anyhow::Result<()> {
     };
     let stats = replay(&router, &trace, &rcfg, &mut rng);
     println!(
-        "requests: submitted={} completed={} rejected={} timed-out={} (reject rate {:.1}%)\n\
+        "requests: submitted={} completed={} rejected={} deadline-exceeded={} (reject rate {:.1}%)\n\
          throughput: {:.1} req/s, {:.1} tok/s\n\
          e2e latency: p50 {:.2} ms  p95 {:.2} ms  p99 {:.2} ms",
         stats.submitted,
         stats.completed,
         stats.rejected,
-        stats.timed_out,
+        stats.deadline_exceeded,
         100.0 * stats.reject_rate,
         stats.throughput_rps,
         stats.tokens_per_s,
@@ -376,6 +408,18 @@ fn cmd_cluster(args: &Args) -> anyhow::Result<()> {
         stats.p95_ms,
         stats.p99_ms,
     );
+    let snap = router.snapshot();
+    if let Some(plan) = &faults {
+        println!(
+            "chaos: crashes={} stalls={} injected-rejects={} restarts={} failovers={} retries={}",
+            plan.crashes(),
+            plan.stalls(),
+            plan.injected_rejects(),
+            snap.restarts,
+            snap.failovers,
+            snap.retries,
+        );
+    }
     print_pool_line("", &router.pool_aggregate());
     // final series sample is written at stop, after every response has
     // been received: its counters equal the --metrics-json snapshot
@@ -385,6 +429,11 @@ fn cmd_cluster(args: &Args) -> anyhow::Result<()> {
         _ => unreachable!("cluster metrics snapshot is always an object"),
     };
     snapshot.insert("run".to_string(), run);
+    // only armed runs carry a fault block: a fault-free snapshot is
+    // bit-identical to one from a build without the fault plane
+    if let Some(plan) = &faults {
+        snapshot.insert("faults".to_string(), plan.to_json());
+    }
     if let Some(path) = args.get("metrics-json") {
         std::fs::write(path, Json::Obj(snapshot).to_string_compact())?;
         println!("cluster metrics snapshot written to {path}");

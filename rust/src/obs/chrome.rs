@@ -114,6 +114,23 @@ fn args_of(ev: &Event) -> Json {
         SpanKind::Gauge => {
             o.insert("value".to_string(), Json::Num(ev.a as f64));
         }
+        SpanKind::Failover => {
+            o.insert("failover".to_string(), Json::Num(ev.a as f64));
+            o.insert("lost_replica".to_string(), Json::Num(ev.b as f64));
+        }
+        SpanKind::Restart => {
+            o.insert("incarnation".to_string(), Json::Num(ev.a as f64));
+            o.insert("failed_over_requests".to_string(), Json::Num(ev.b as f64));
+        }
+        SpanKind::Breaker => {
+            let state = match ev.a {
+                0 => "closed",
+                1 => "open",
+                _ => "half_open",
+            };
+            o.insert("state".to_string(), Json::Str(state.to_string()));
+            o.insert("failures".to_string(), Json::Num(ev.b as f64));
+        }
     }
     Json::Obj(o)
 }

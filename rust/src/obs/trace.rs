@@ -67,11 +67,23 @@ pub enum SpanKind {
     /// event (`a` = gauge value, `b` = gauge id: 0 = kvpool blocks in
     /// use, 1 = in-flight requests).
     Gauge,
+    /// A request failed over off a dead replica: disconnect observed →
+    /// resubmission attempted (`a` = the request's failover ordinal,
+    /// `b` = the replica that died; `replica` is the dead replica).
+    Failover,
+    /// A crashed replica respawned by the pool supervisor (`a` = the
+    /// replica's restart ordinal, `b` = in-flight requests failed back
+    /// to their waiters).
+    Restart,
+    /// A circuit-breaker transition on one replica (`a` = the new
+    /// state's code: 0 closed, 1 open, 2 half-open; `b` = total failures
+    /// observed at that replica so far).
+    Breaker,
 }
 
 impl SpanKind {
     /// Every kind, in lifecycle order.
-    pub const ALL: [SpanKind; 11] = [
+    pub const ALL: [SpanKind; 14] = [
         SpanKind::Queue,
         SpanKind::PrefixLookup,
         SpanKind::Prefill,
@@ -83,6 +95,9 @@ impl SpanKind {
         SpanKind::Quality,
         SpanKind::SloTransition,
         SpanKind::Gauge,
+        SpanKind::Failover,
+        SpanKind::Restart,
+        SpanKind::Breaker,
     ];
 
     /// The canonical snake_case span name used in trace exports.
@@ -99,6 +114,9 @@ impl SpanKind {
             SpanKind::Quality => "quality",
             SpanKind::SloTransition => "slo_transition",
             SpanKind::Gauge => "gauge",
+            SpanKind::Failover => "failover",
+            SpanKind::Restart => "restart",
+            SpanKind::Breaker => "breaker",
         }
     }
 
@@ -204,7 +222,7 @@ impl Tracer {
     /// Clear the ring, set its capacity, and enable recording.
     pub fn enable_with_capacity(&self, capacity: usize) {
         {
-            let mut g = self.inner.lock().unwrap();
+            let mut g = crate::util::sync::lock_recover(&self.inner);
             g.buf.clear();
             g.cap = capacity.max(1);
             g.dropped = 0;
@@ -235,7 +253,7 @@ impl Tracer {
         if !self.enabled.load(Ordering::Relaxed) {
             return;
         }
-        let mut g = self.inner.lock().unwrap();
+        let mut g = crate::util::sync::lock_recover(&self.inner);
         if g.buf.len() >= g.cap {
             g.buf.pop_front();
             g.dropped += 1;
@@ -267,14 +285,14 @@ impl Tracer {
     /// `(recorded, dropped)` totals since the last
     /// [`Tracer::enable_with_capacity`]/[`Tracer::drain`].
     pub fn counts(&self) -> (u64, u64) {
-        let g = self.inner.lock().unwrap();
+        let g = crate::util::sync::lock_recover(&self.inner);
         (g.recorded, g.dropped)
     }
 
     /// Take every retained event out of the ring (oldest first),
     /// resetting the counters. Recording may continue afterwards.
     pub fn drain(&self) -> TraceBuffer {
-        let mut g = self.inner.lock().unwrap();
+        let mut g = crate::util::sync::lock_recover(&self.inner);
         let events: Vec<Event> = g.buf.drain(..).collect();
         let out = TraceBuffer { dropped: g.dropped, recorded: g.recorded, events };
         g.dropped = 0;

@@ -1,0 +1,63 @@
+//! Poison-recovering synchronization helpers.
+//!
+//! A panicking thread poisons every `Mutex` it holds, and the default
+//! `.lock().unwrap()` idiom then cascades that panic into every sibling
+//! that touches the same state. In a supervised cluster a replica worker
+//! is *allowed* to die (fault injection crashes them on purpose); the
+//! shared health/router/metrics state it may have been touching must stay
+//! usable for the survivors. These helpers recover the guard from a
+//! poisoned lock instead of propagating the panic — safe here because all
+//! protected state in this crate is counters, maps and ring buffers whose
+//! invariants hold after every individual store.
+
+use std::sync::{Condvar, Mutex, MutexGuard, PoisonError};
+use std::time::Duration;
+
+/// Lock a mutex, recovering the guard if a previous holder panicked.
+#[inline]
+pub fn lock_recover<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(PoisonError::into_inner)
+}
+
+/// `Condvar::wait_timeout` that recovers from poisoning and discards the
+/// timeout flag (callers re-check their predicate and the clock anyway).
+#[inline]
+pub fn wait_timeout_recover<'a, T>(
+    cv: &Condvar,
+    guard: MutexGuard<'a, T>,
+    timeout: Duration,
+) -> MutexGuard<'a, T> {
+    match cv.wait_timeout(guard, timeout) {
+        Ok((g, _)) => g,
+        Err(poisoned) => poisoned.into_inner().0,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::{Arc, Mutex};
+
+    #[test]
+    fn lock_recover_survives_poison() {
+        let m = Arc::new(Mutex::new(0u64));
+        let m2 = m.clone();
+        let _ = std::thread::spawn(move || {
+            let _g = m2.lock().unwrap();
+            panic!("poison the lock");
+        })
+        .join();
+        assert!(m.is_poisoned());
+        *lock_recover(&m) += 1;
+        assert_eq!(*lock_recover(&m), 1);
+    }
+
+    #[test]
+    fn wait_timeout_recover_returns_guard() {
+        let m = Mutex::new(3u32);
+        let cv = Condvar::new();
+        let g = lock_recover(&m);
+        let g = wait_timeout_recover(&cv, g, Duration::from_millis(1));
+        assert_eq!(*g, 3);
+    }
+}

@@ -1,0 +1,266 @@
+//! Chaos acceptance tests — the PR-9 robustness contract:
+//!
+//! * under randomized deterministic fault schedules (worker crashes,
+//!   decode stalls, transient admission failures) against random replica
+//!   counts and routing policies, **every submitted request reaches
+//!   exactly one terminal [`Outcome`]** — completed, rejected(reason) or
+//!   deadline exceeded — and nothing hangs;
+//! * crashed replicas are respawned by the pool supervisor and serve
+//!   again once the fault plan is disarmed;
+//! * a wall-clock chaos soak with forced crashes, stalls and injected
+//!   rejects records restarts and failovers in the router's snapshot and
+//!   metrics JSON while conserving outcomes;
+//! * a fault-free run's deterministic counters and token streams are
+//!   bit-identical whether the fault plane is absent (`faults: None`) or
+//!   present but disarmed — the plane is zero-cost when off.
+
+use std::sync::Arc;
+use std::time::Duration;
+use wildcat::cluster::{
+    FaultConfig, FaultPlan, Outcome, ReplicaPool, Router, RouterConfig, RoutingPolicy,
+};
+use wildcat::coordinator::{SchedulerConfig, ServerConfig};
+use wildcat::kvcache::StreamingLlm;
+use wildcat::model::{ModelConfig, Transformer};
+use wildcat::rng::Rng;
+use wildcat::util::json::Json;
+use wildcat::util::prop::Cases;
+
+fn tiny_model(seed: u64) -> Transformer {
+    let mcfg =
+        ModelConfig { vocab: 16, d_model: 16, n_layers: 2, n_heads: 2, d_ff: 32, max_len: 256 };
+    Transformer::random(mcfg, &mut Rng::seed_from(seed))
+}
+
+fn chaos_server_cfg(queue_capacity: usize, faults: Option<Arc<FaultPlan>>) -> ServerConfig {
+    ServerConfig {
+        queue_capacity,
+        max_prompt: 128,
+        scheduler: SchedulerConfig { cache_budget: 96, slack: 8, ..Default::default() },
+        faults,
+        ..Default::default()
+    }
+}
+
+/// The core property: for random fault schedules, replica counts and
+/// routing policies, every request submitted to the router reaches
+/// exactly one terminal outcome (none lost, none double-counted), and
+/// after the chaos phase ends the respawned replicas serve again.
+#[test]
+fn prop_every_request_reaches_exactly_one_terminal_outcome_under_chaos() {
+    Cases::new(3).run(|rng| {
+        let n_replicas = 1 + rng.below(3);
+        let policy = RoutingPolicy::ALL[rng.below(RoutingPolicy::ALL.len())];
+        let fcfg = FaultConfig {
+            seed: rng.next_u64(),
+            crash_every: (4 + rng.below(8)) as u64,
+            stall_every: (5 + rng.below(6)) as u64,
+            stall_ms: 1,
+            reject_every: (3 + rng.below(5)) as u64,
+        };
+        let plan = FaultPlan::new(fcfg, n_replicas).expect("active plan");
+        let cfg = chaos_server_cfg(4 + rng.below(8), Some(plan.clone()));
+        let pool = Arc::new(ReplicaPool::spawn(n_replicas, cfg, Arc::new(StreamingLlm), |i| {
+            tiny_model(60 + i as u64)
+        }));
+        let router = Router::new(
+            pool.clone(),
+            RouterConfig {
+                policy,
+                cooldown: Duration::from_millis(5),
+                max_retries: 2,
+                backoff_base: Duration::from_millis(1),
+                backoff_cap: Duration::from_millis(5),
+                seed: rng.next_u64(),
+                ..Default::default()
+            },
+        );
+        let n_req = 12 + rng.below(12);
+        let (mut completed, mut rejected, mut deadline) = (0usize, 0usize, 0usize);
+        for k in 0..n_req {
+            let len = 4 + rng.below(24);
+            let prompt: Vec<u32> = (0..len).map(|j| ((j + k) % 16) as u32).collect();
+            let max_new = 1 + rng.below(3);
+            let outcome = match router.submit(prompt, max_new, Some((k % 4) as u64)) {
+                Ok(r) => router.await_outcome(r, Duration::from_secs(120)),
+                Err(o) => o,
+            };
+            match outcome {
+                Outcome::Completed(_) => completed += 1,
+                Outcome::Rejected(_) => rejected += 1,
+                Outcome::DeadlineExceeded => deadline += 1,
+            }
+        }
+        assert_eq!(completed + rejected + deadline, n_req, "an outcome per request");
+        let s = router.snapshot();
+        assert_eq!(s.requests as usize, n_req, "submission count drift");
+        assert_eq!(s.terminal(), s.requests, "terminal-outcome conservation: {s:?}");
+        assert_eq!(s.completed as usize, completed, "completion drift");
+        assert_eq!(s.rejected as usize, rejected, "rejection drift");
+        assert_eq!(s.deadline_exceeded as usize, deadline, "deadline drift");
+
+        // end the chaos phase: every replica must serve again afterwards
+        plan.disarm();
+        pool.supervise();
+        for k in 0..(2 * n_replicas) {
+            let r = router
+                .submit(vec![1, 2, 3, (k % 16) as u32], 2, Some(k as u64))
+                .expect("recovered cluster must accept requests");
+            let o = router.await_outcome(r, Duration::from_secs(60));
+            assert!(o.is_completed(), "recovered cluster must serve, got {}", o.name());
+        }
+        let s2 = router.snapshot();
+        assert_eq!(s2.terminal(), s2.requests, "conservation after recovery: {s2:?}");
+        pool.shutdown();
+    });
+}
+
+/// A fixed-seed wall-clock soak: forced crashes, stalls and injected
+/// rejects against a 2-replica round-robin cluster. Every request must
+/// reach one terminal outcome while the router records the chaos —
+/// restarts, failovers and breaker state all land in the snapshot, the
+/// metrics JSON and the Prometheus exposition.
+#[test]
+fn chaos_soak_records_restarts_and_failovers_while_conserving_outcomes() {
+    let plan = FaultPlan::new(
+        FaultConfig { seed: 4242, crash_every: 6, stall_every: 9, stall_ms: 2, reject_every: 7 },
+        2,
+    )
+    .expect("active plan");
+    let pool = Arc::new(ReplicaPool::spawn(
+        2,
+        chaos_server_cfg(16, Some(plan.clone())),
+        Arc::new(StreamingLlm),
+        |i| tiny_model(70 + i as u64),
+    ));
+    let router = Router::new(
+        pool.clone(),
+        RouterConfig {
+            policy: RoutingPolicy::RoundRobin,
+            request_timeout: Duration::from_secs(5),
+            max_retries: 3,
+            backoff_base: Duration::from_millis(1),
+            backoff_cap: Duration::from_millis(10),
+            seed: 7,
+            ..Default::default()
+        },
+    );
+    let n_req = 48usize;
+    let (mut completed, mut rejected, mut deadline) = (0usize, 0usize, 0usize);
+    for k in 0..n_req {
+        let prompt: Vec<u32> = (0..8).map(|j| ((j + k) % 16) as u32).collect();
+        let outcome = match router.submit(prompt, 3, None) {
+            Ok(r) => router.await_outcome(r, Duration::from_secs(60)),
+            Err(o) => o,
+        };
+        match outcome {
+            Outcome::Completed(_) => completed += 1,
+            Outcome::Rejected(_) => rejected += 1,
+            Outcome::DeadlineExceeded => deadline += 1,
+        }
+    }
+    assert_eq!(completed + rejected + deadline, n_req, "outcome conservation");
+    assert!(completed > 0, "chaos must not starve the cluster entirely");
+    assert!(plan.crashes() >= 2, "soak must force >= 2 crashes, got {}", plan.crashes());
+    let s = router.snapshot();
+    assert_eq!(s.requests as usize, n_req);
+    assert_eq!(s.terminal(), s.requests, "terminal-outcome conservation: {s:?}");
+    assert!(s.restarts >= 1, "crashed replicas must be restarted: {s:?}");
+    assert!(s.failovers >= 1, "in-flight requests on crashed replicas must fail over: {s:?}");
+
+    let j = router.metrics_json();
+    assert!(
+        j.get("restarts").and_then(Json::as_f64).unwrap() >= 1.0,
+        "metrics JSON must surface restarts"
+    );
+    let agg = j.get("aggregate").expect("aggregate block");
+    assert_eq!(agg.get("requests").and_then(Json::as_f64), Some(n_req as f64));
+    assert_eq!(
+        agg.get("failovers").and_then(Json::as_f64),
+        Some(s.failovers as f64),
+        "aggregate failovers drift"
+    );
+    let reps = j.get("replicas").unwrap().as_arr().unwrap();
+    let restarts_sum: f64 =
+        reps.iter().map(|r| r.get("restarts").and_then(Json::as_f64).unwrap()).sum();
+    assert_eq!(restarts_sum, s.restarts as f64, "per-replica restarts must sum to the total");
+    for r in reps {
+        assert!(r.get("breaker_state").and_then(Json::as_str).is_some(), "breaker state missing");
+    }
+    let prom = router.to_prometheus();
+    assert!(prom.contains("wildcat_cluster_failovers_total"), "prom:\n{prom}");
+    assert!(prom.contains("wildcat_cluster_restarts_total"), "prom:\n{prom}");
+    assert!(prom.contains("wildcat_replica_restarts_total"), "prom:\n{prom}");
+
+    // disarm and verify the respawned replicas keep serving
+    plan.disarm();
+    pool.supervise();
+    for _ in 0..4 {
+        let r = router.submit(vec![1, 2, 3, 4], 2, None).expect("recovered cluster accepts");
+        assert!(router.await_outcome(r, Duration::from_secs(60)).is_completed());
+    }
+    let s2 = router.snapshot();
+    assert_eq!(s2.terminal(), s2.requests, "conservation after recovery: {s2:?}");
+    pool.shutdown();
+}
+
+/// Run a fixed single-replica workload and return its token streams plus
+/// the deterministic router counters.
+fn run_fixed_workload(faults: Option<Arc<FaultPlan>>) -> (Vec<Vec<u32>>, Vec<u64>) {
+    let pool = Arc::new(ReplicaPool::spawn(
+        1,
+        chaos_server_cfg(32, faults),
+        Arc::new(StreamingLlm),
+        |_| tiny_model(33),
+    ));
+    let router = Router::new(
+        pool.clone(),
+        RouterConfig { policy: RoutingPolicy::RoundRobin, seed: 5, ..Default::default() },
+    );
+    let mut outputs = Vec::new();
+    for k in 0..10usize {
+        let prompt: Vec<u32> = (0..6).map(|j| ((j * 3 + k) % 16) as u32).collect();
+        let r = router.submit(prompt, 2, None).expect("fault-free run must accept");
+        match router.await_outcome(r, Duration::from_secs(60)) {
+            Outcome::Completed(resp) => outputs.push(resp.tokens),
+            other => panic!("fault-free request must complete, got {}", other.name()),
+        }
+    }
+    let s = router.snapshot();
+    let counters = vec![
+        s.requests,
+        s.routed,
+        s.completed,
+        s.rejected,
+        s.rerouted,
+        s.deadline_exceeded,
+        s.failovers,
+        s.retries,
+        s.restarts,
+        s.tokens_generated,
+    ];
+    pool.shutdown();
+    (outputs, counters)
+}
+
+/// The zero-cost-when-off guarantee: a fault-free run produces
+/// bit-identical token streams and deterministic counters whether the
+/// fault plane is absent entirely or present but disarmed.
+#[test]
+fn fault_free_run_is_bit_identical_with_and_without_the_fault_plane() {
+    let (out_none, counters_none) = run_fixed_workload(None);
+    let plan = FaultPlan::new(
+        FaultConfig { seed: 1, crash_every: 5, stall_every: 3, stall_ms: 1, reject_every: 2 },
+        1,
+    )
+    .expect("active plan");
+    plan.disarm(); // the plane sits in the hot path but injects nothing
+    let (out_plan, counters_plan) = run_fixed_workload(Some(plan.clone()));
+    assert_eq!(out_none, out_plan, "token streams must be bit-identical");
+    assert_eq!(counters_none, counters_plan, "deterministic counters must be bit-identical");
+    assert_eq!(
+        plan.crashes() + plan.stalls() + plan.injected_rejects(),
+        0,
+        "a disarmed plan must count nothing"
+    );
+}

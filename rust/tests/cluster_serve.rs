@@ -27,7 +27,7 @@ fn run_cluster(n_replicas: usize, policy: RoutingPolicy, seed: u64) -> ReplaySta
         scheduler: SchedulerConfig { cache_budget: 96, slack: 8, ..Default::default() },
         ..Default::default()
     };
-    let pool = ReplicaPool::spawn(n_replicas, cfg, Arc::new(StreamingLlm), |i| {
+    let pool = Arc::new(ReplicaPool::spawn(n_replicas, cfg, Arc::new(StreamingLlm), |i| {
         let mcfg = ModelConfig {
             vocab: 16,
             d_model: 16,
@@ -37,8 +37,8 @@ fn run_cluster(n_replicas: usize, policy: RoutingPolicy, seed: u64) -> ReplaySta
             max_len: 256,
         };
         Transformer::random(mcfg, &mut Rng::seed_from(7 + i as u64))
-    });
-    let router = Router::new(pool.clients(), RouterConfig { policy, ..Default::default() });
+    }));
+    let router = Router::new(pool.clone(), RouterConfig { policy, ..Default::default() });
     // the same fixed-seed bursty trace for every configuration
     let mut trace_rng = Rng::seed_from(seed);
     let shape = TraceShape::OnOff { period: Duration::from_millis(200), duty: 0.3, burst: 3.0 };
@@ -90,7 +90,7 @@ fn four_jsq_replicas_beat_one_on_the_same_trace() {
 fn rerouting_never_drops_requests_under_overload() {
     let stats = run_cluster(2, RoutingPolicy::RoundRobin, 11);
     assert_eq!(
-        stats.completed + stats.rejected + stats.timed_out,
+        stats.completed + stats.rejected + stats.deadline_exceeded,
         stats.submitted,
         "arrivals lost: {stats:?}"
     );

@@ -178,12 +178,12 @@ fn prop_cluster_router_answers_or_rejects_exactly_once() {
             scheduler: SchedulerConfig { cache_budget: 96, slack: 8, ..Default::default() },
             ..Default::default()
         };
-        let pool = ReplicaPool::spawn(n_replicas, cfg, Arc::new(StreamingLlm), |i| {
+        let pool = Arc::new(ReplicaPool::spawn(n_replicas, cfg, Arc::new(StreamingLlm), |i| {
             tiny_model(30 + i as u64)
-        });
+        }));
         let router = Router::new(
-            pool.clients(),
-            RouterConfig { policy, cooldown: Duration::from_millis(5) },
+            pool.clone(),
+            RouterConfig { policy, cooldown: Duration::from_millis(5), ..Default::default() },
         );
         let n_req = 10 + rng.below(30);
         let mut accepted = Vec::new();

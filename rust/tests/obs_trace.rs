@@ -128,11 +128,11 @@ fn cluster_trace_covers_router_and_both_replicas() {
     tracer.enable_with_capacity(65_536);
 
     let pool =
-        ReplicaPool::spawn(2, ServerConfig::default(), Arc::new(StreamingLlm), |i| {
+        Arc::new(ReplicaPool::spawn(2, ServerConfig::default(), Arc::new(StreamingLlm), |i| {
             tiny_model(21 + i as u64)
-        });
+        }));
     let router = Router::new(
-        pool.clients(),
+        pool.clone(),
         RouterConfig { policy: RoutingPolicy::RoundRobin, ..Default::default() },
     );
     let mut pending = Vec::new();
