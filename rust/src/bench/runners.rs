@@ -1,6 +1,6 @@
 //! Shared runners for the seven paper benches plus the `serve` cluster
-//! serving bench, the `kvpool` memory-manager bench and the `prefill`
-//! prefix-resume bench.
+//! serving bench, the `kvpool` memory-manager bench, the `prefill`
+//! prefix-resume bench and the `spill` cold-tier bench.
 //!
 //! Every `rust/benches/bench_*.rs` binary is a thin wrapper around one of
 //! the `run_*` functions here, and `wildcat bench` drives the same
@@ -31,7 +31,7 @@ use crate::kvcache::{
     compressor_by_name, BalanceKv, CompressKvPolicy, CompressionCtx, KvCompressor, PyramidKv,
     SnapKv, StreamingLlm, UniformKv,
 };
-use crate::kvpool::{KvPool, KvPoolConfig, PoolSnapshot};
+use crate::kvpool::{spill_budget_bytes_from_mb, KvPool, KvPoolConfig, PoolSnapshot, SpillParams};
 use crate::linalg::gemm;
 use crate::linalg::norms::max_abs_diff;
 use crate::linalg::Matrix;
@@ -1234,7 +1234,12 @@ impl KvPoolRunStats {
 }
 
 /// Replay one fixed-seed shared-prefix-tree trace through a scheduler
-/// over a fresh pool with the given sharing/budget settings.
+/// over a fresh pool with the given pool configuration. `max_active`
+/// bounds batching concurrency: `prompts.len()` replays the whole set
+/// concurrently (shared prefixes coexist in memory — the `kvpool` /
+/// `prefill` shape), `1` replays sequentially (each request retires
+/// before the next admits, so cached prefixes face eviction pressure
+/// between reuses — the `spill` shape).
 #[allow(clippy::too_many_arguments)]
 fn kvpool_run(
     weights: &Option<Arc<WeightFile>>,
@@ -1242,19 +1247,11 @@ fn kvpool_run(
     compressor: &Arc<dyn KvCompressor>,
     prompts: &[Vec<u32>],
     max_new: usize,
-    sharing: bool,
+    pool_cfg: KvPoolConfig,
     prefill_skip: bool,
-    budget_floats: usize,
-    compress_budget: usize,
+    max_active: usize,
     seed: u64,
 ) -> KvPoolRunStats {
-    let pool_cfg = KvPoolConfig {
-        budget_floats,
-        prefix_sharing: sharing,
-        compress_budget,
-        block_tokens: 16,
-        ..Default::default()
-    };
     let pool = Arc::new(KvPool::new(pool_cfg, compressor.clone()));
     let backend = replica_backend_factory(weights.clone(), model_cfg, seed)(0);
     let metrics = Arc::new(ServingMetrics::new());
@@ -1267,9 +1264,7 @@ fn kvpool_run(
         seed,
         pool.clone(),
     );
-    // admit aggressively so the full request set decodes concurrently —
-    // that is when shared prefixes actually coexist in memory
-    let n = prompts.len();
+    let n = max_active.max(1);
     let batcher = Batcher::new(BatcherConfig {
         max_active: n,
         max_admit_per_step: n,
@@ -1368,18 +1363,15 @@ pub fn run_kvpool(cfg: &RunCfg) -> Result<BenchReport> {
     );
 
     let run = |sharing: bool, budget: usize| {
-        kvpool_run(
-            &weights,
-            model_cfg,
-            &compressor,
-            &prompts,
-            max_new,
-            sharing,
-            true,
-            budget,
+        let pool_cfg = KvPoolConfig {
+            budget_floats: budget,
+            prefix_sharing: sharing,
             compress_budget,
-            seed,
-        )
+            block_tokens: 16,
+            ..Default::default()
+        };
+        // whole set concurrent: shared prefixes coexist in memory
+        kvpool_run(&weights, model_cfg, &compressor, &prompts, max_new, pool_cfg, true, prompts.len(), seed)
     };
     let loose_on = run(true, 0);
     let loose_off = run(false, 0);
@@ -1508,7 +1500,14 @@ pub fn run_prefill(cfg: &RunCfg) -> Result<BenchReport> {
     );
 
     let run = |sharing: bool, skip: bool| {
-        kvpool_run(&weights, model_cfg, &compressor, &prompts, 1, sharing, skip, 0, 16, seed)
+        let pool_cfg = KvPoolConfig {
+            budget_floats: 0,
+            prefix_sharing: sharing,
+            compress_budget: 16,
+            block_tokens: 16,
+            ..Default::default()
+        };
+        kvpool_run(&weights, model_cfg, &compressor, &prompts, 1, pool_cfg, skip, prompts.len(), seed)
     };
     let resume_on = run(true, true);
     let resume_off = run(true, false);
@@ -1557,12 +1556,149 @@ pub fn run_prefill(cfg: &RunCfg) -> Result<BenchReport> {
 }
 
 // ---------------------------------------------------------------------
+// spill — the spill-to-disk tier: page-back vs recompute under pressure
+// ---------------------------------------------------------------------
+
+/// The `spill` bench: the kvpool shared-prefix trace replayed
+/// *sequentially* (`max_active = 1`, `max_new = 1`) under a KV budget
+/// tight enough that cached root prefixes are evicted between reuses.
+/// Without the spill tier every root reuse recomputes the root's prefill
+/// from scratch; with it the evicted blocks are paged back from the cold
+/// store and prefill resumes past them. Reports computed/skipped prompt
+/// tokens, spills, page-ins and rejects per configuration.
+///
+/// Acceptance shape (pinned by `rust/tests/kvpool_spill.rs`): spill-on
+/// computes ≥ 30% fewer prompt tokens than spill-off on this trace, with
+/// zero admission rejections and `page_ins > 0`.
+pub fn run_spill(cfg: &RunCfg) -> Result<BenchReport> {
+    let args = cfg.args;
+    let seed = cfg.seed;
+    let (n_roots, root_len, suffix_len, n_req) =
+        if cfg.smoke { (4, 64, 24, 24) } else { (4, 96, 48, 64) };
+    let n_req = args.get_parse::<usize>("requests", n_req);
+    let compressor = compressor_by_name(&args.get_or("compressor", "streaming"))?;
+    let model_cfg = ModelConfig::default();
+    let weights = load_weights(args, true, "spill")?;
+
+    // identical trace construction to run_kvpool (same seed derivation)
+    let mut trace_rng = Rng::seed_from(seed ^ 0x5EED);
+    let vocab = model_cfg.vocab as u32;
+    let roots: Vec<Vec<u32>> = (0..n_roots)
+        .map(|_| (0..root_len).map(|_| trace_rng.below(vocab as usize) as u32).collect())
+        .collect();
+    let prompts: Vec<Vec<u32>> = (0..n_req)
+        .map(|i| {
+            let mut p = roots[i % n_roots].clone();
+            p.extend((0..suffix_len).map(|_| trace_rng.below(vocab as usize) as u32));
+            p
+        })
+        .collect();
+
+    let spill_dir =
+        std::env::temp_dir().join(format!("wildcat_bench_spill_{}", std::process::id()));
+    let run = |budget: usize, spill: bool| {
+        // fresh cold store per configuration
+        let _ = std::fs::remove_dir_all(&spill_dir);
+        let pool_cfg = KvPoolConfig {
+            budget_floats: budget,
+            prefix_sharing: true,
+            compress_budget: 16,
+            block_tokens: 16,
+            spill: spill.then(|| SpillParams {
+                dir: spill_dir.clone(),
+                budget_bytes: spill_budget_bytes_from_mb(64.0),
+                replica: 0,
+            }),
+            ..Default::default()
+        };
+        // sequential replay: each request retires before the next admits,
+        // so the tight budget evicts cached roots between reuses
+        kvpool_run(&weights, model_cfg, &compressor, &prompts, 1, pool_cfg, true, 1, seed)
+    };
+
+    // Measure the fully-cached working set, then squeeze to a quarter of
+    // it: comfortably above one active sequence (the ladder never has to
+    // reject) but well below the root set (roots cannot all stay cached).
+    let loose = run(0, false);
+    let tight_budget = loose.snap.peak_floats / 4;
+    let tight_off = run(tight_budget, false);
+    let tight_on = run(tight_budget, true);
+    let _ = std::fs::remove_dir_all(&spill_dir);
+
+    let title = "spill — spill-to-disk tier: page-back vs recompute under pressure";
+    let mut report = BenchReport::new("spill", title, cfg.smoke, seed);
+    let mut table = Table::new(
+        title,
+        &["config", "computed", "skipped", "spills", "page-ins", "evicted", "rejects"],
+    );
+    let configs: [(&str, &KvPoolRunStats); 3] = [
+        ("spill=off budget=loose", &loose),
+        ("spill=off budget=tight", &tight_off),
+        ("spill=on budget=tight", &tight_on),
+    ];
+    for (name, s) in configs {
+        let sp = s.snap.spill.unwrap_or_default();
+        table.add_row(vec![
+            name.into(),
+            s.prefill_tokens_computed.to_string(),
+            s.prefill_tokens_skipped.to_string(),
+            sp.spills.to_string(),
+            sp.page_ins.to_string(),
+            s.snap.evicted_blocks.to_string(),
+            s.snap.admission_rejects.to_string(),
+        ]);
+        report.push(
+            BenchRecord::new(name, s.prefill_s_total)
+                .extra("prefill_tokens_computed", s.prefill_tokens_computed as f64)
+                .extra("prefill_tokens_skipped", s.prefill_tokens_skipped as f64)
+                .extra("evicted_blocks", s.snap.evicted_blocks as f64)
+                .extra("admission_rejects", s.snap.admission_rejects as f64)
+                .extra("rejected_responses", s.rejected_responses as f64)
+                .extra("completed", s.completed as f64)
+                .extra("spills", sp.spills as f64)
+                .extra("spill_bytes", sp.spill_bytes as f64)
+                .extra("spill_evictions", sp.spill_evictions as f64)
+                .extra("page_ins", sp.page_ins as f64)
+                .extra("pagein_tokens", sp.pagein_tokens as f64)
+                .extra("spill_corrupt", sp.spill_corrupt as f64),
+        );
+    }
+    table.print();
+    println!("\n(markdown)\n{}", table.render_markdown());
+
+    // headline checks — the spill-tier acceptance shape
+    let computed_cut = 1.0
+        - tight_on.prefill_tokens_computed as f64 / tight_off.prefill_tokens_computed.max(1) as f64;
+    println!(
+        "[spill] page-back cuts computed prefill tokens by {:.1}% vs spill-off (target >= 30%): {}",
+        100.0 * computed_cut,
+        if computed_cut >= 0.30 { "YES" } else { "NO" }
+    );
+    let sp = tight_on.snap.spill.unwrap_or_default();
+    let absorbed = tight_on.snap.admission_rejects == 0
+        && tight_on.rejected_responses == 0
+        && tight_on.completed == n_req
+        && sp.spills > 0
+        && sp.page_ins > 0;
+    println!(
+        "[spill] tight budget ({:.2} MiB) absorbed with the cold tier ({} spills, {} page-ins, {} rejects): {}",
+        (tight_budget * 4) as f64 / (1024.0 * 1024.0),
+        sp.spills,
+        sp.page_ins,
+        tight_on.snap.admission_rejects,
+        if absorbed { "YES" } else { "NO" }
+    );
+    Ok(report)
+}
+
+// ---------------------------------------------------------------------
 // The unified entry point behind `wildcat bench`
 // ---------------------------------------------------------------------
 
 /// All bench ids in canonical order.
-pub const BENCH_IDS: [&str; 10] = [
+pub const BENCH_IDS: [&str; 11] = [
     "fig3", "table2", "table3", "table4", "table5", "figm1", "micro", "serve", "kvpool", "prefill",
+    "spill",
 ];
 
 /// Run the selected benches (all by default, or a comma-separated subset
@@ -1604,6 +1740,7 @@ pub fn run_all(cfg: &RunCfg, out_dir: &Path, only: Option<&str>) -> Result<Vec<P
             "serve" => run_serve(cfg)?,
             "kvpool" => run_kvpool(cfg)?,
             "prefill" => run_prefill(cfg)?,
+            "spill" => run_spill(cfg)?,
             _ => unreachable!(),
         };
         let path = report.write(out_dir)?;

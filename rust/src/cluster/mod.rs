@@ -7,6 +7,8 @@
 //!   backend on its own worker thread, seeded deterministically; since
 //!   PR 9 also the **supervisor** that detects crashed workers, fails
 //!   their in-flight requests back to the router, and respawns them.
+//!   [`Supervisor`] runs that sweep on a dedicated clock-driven thread
+//!   so crashes are caught even on idle replicas.
 //! * [`router`] — [`Router`] with pluggable [`RoutingPolicy`]s
 //!   (`round_robin`, `join_shortest_queue` over the per-replica
 //!   in-flight/queue-depth gauges, `affinity` session hashing for warm
@@ -51,5 +53,5 @@ pub use fault::{FaultConfig, FaultPlan};
 pub use health::{BreakerConfig, BreakerState, ReplicaHealth};
 pub use loadgen::{replay, Pacing, ReplayConfig, ReplayStats};
 pub use metrics::{ClusterMetrics, ClusterSnapshot};
-pub use pool::ReplicaPool;
+pub use pool::{ReplicaPool, Supervisor};
 pub use router::{Outcome, RoutedRequest, Router, RouterConfig, RoutingPolicy};

@@ -12,15 +12,16 @@
 //! KV pool. Restarts are counted per replica and traced as
 //! [`crate::obs::trace::SpanKind::Restart`] spans.
 
+use super::clock::Clock;
 use crate::coordinator::{Server, ServerClient, ServerConfig, ServerHandle, ServingMetrics};
 use crate::kvcache::KvCompressor;
 use crate::kvpool::PoolSnapshot;
 use crate::model::ModelBackend;
 use crate::obs::trace::{self, SpanKind, NO_REQ};
 use crate::util::sync::lock_recover;
-use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 /// Each restart incarnation gets its own request-id range so a respawned
 /// replica never reuses ids from its previous life (waiter keys and trace
@@ -194,6 +195,84 @@ impl ReplicaPool {
     }
 }
 
+/// How often the supervisor thread polls for a crossed tick boundary.
+/// Short enough that a crashed replica is respawned within about a
+/// millisecond of the tick, long enough that an idle supervisor costs
+/// nothing measurable.
+const SUPERVISOR_SLICE_US: u64 = 500;
+
+/// A dedicated supervision thread: ticks [`ReplicaPool::supervise`] once
+/// per `interval` of *clock* time, so crashed replicas are respawned even
+/// when no request traffic reaches them (the router only supervises the
+/// replicas it happens to touch). Driven by a [`Clock`] — under a manual
+/// clock, ticks fire as the test (or the virtual-time replay driver)
+/// advances time, which keeps supervision deterministic in chaos tests.
+///
+/// Stopped and joined by [`Supervisor::stop`] (or drop).
+pub struct Supervisor {
+    stop: Arc<AtomicBool>,
+    ticks: Arc<AtomicU64>,
+    worker: Option<std::thread::JoinHandle<()>>,
+}
+
+impl Supervisor {
+    /// Spawn the supervision thread over `pool`, ticking once per
+    /// `interval` of `clock` time.
+    pub fn start(pool: Arc<ReplicaPool>, clock: Arc<Clock>, interval: Duration) -> Supervisor {
+        let stop = Arc::new(AtomicBool::new(false));
+        let ticks = Arc::new(AtomicU64::new(0));
+        let interval_us = (interval.as_micros() as u64).max(1);
+        let worker = {
+            let stop = stop.clone();
+            let ticks = ticks.clone();
+            std::thread::Builder::new()
+                .name("wildcat-supervisor".into())
+                .spawn(move || {
+                    let mut next = clock.now_us().saturating_add(interval_us);
+                    while !stop.load(Ordering::Relaxed) {
+                        if clock.now_us() >= next {
+                            pool.supervise();
+                            ticks.fetch_add(1, Ordering::Relaxed);
+                            next = clock.now_us().saturating_add(interval_us);
+                        } else {
+                            // Poll in short wall-time slices rather than
+                            // `clock.sleep_us`: on a manual clock a sleep
+                            // *advances* virtual time, and time is owned
+                            // by the replay driver — the supervisor must
+                            // only ever observe it.
+                            std::thread::sleep(Duration::from_micros(SUPERVISOR_SLICE_US));
+                        }
+                    }
+                })
+                .expect("spawning the supervisor thread")
+        };
+        Supervisor { stop, ticks, worker: Some(worker) }
+    }
+
+    /// Completed supervision ticks so far.
+    pub fn ticks(&self) -> u64 {
+        self.ticks.load(Ordering::Relaxed)
+    }
+
+    /// Stop and join the supervision thread.
+    pub fn stop(mut self) {
+        self.stop_and_join();
+    }
+
+    fn stop_and_join(&mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        if let Some(w) = self.worker.take() {
+            let _ = w.join();
+        }
+    }
+}
+
+impl Drop for Supervisor {
+    fn drop(&mut self) {
+        self.stop_and_join();
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -280,6 +359,50 @@ mod tests {
         assert!(id >= super::ID_EPOCH, "respawn must not reuse the old id space");
         let resp = rx2.recv_timeout(Duration::from_secs(30)).unwrap();
         assert_eq!(resp.tokens.len(), 2);
+        pool.shutdown();
+    }
+
+    #[test]
+    fn supervisor_thread_respawns_crashed_replica_on_clock_tick() {
+        // crash replica 0 on its first engine step; nobody calls
+        // supervise() by hand — the dedicated thread must catch it
+        let plan = FaultPlan::new(FaultConfig { seed: 9, crash_every: 1, ..Default::default() }, 1)
+            .expect("active plan");
+        let cfg = ServerConfig { faults: Some(plan.clone()), ..Default::default() };
+        let pool = Arc::new(ReplicaPool::spawn(1, cfg, Arc::new(StreamingLlm), |_| {
+            Transformer::random(tiny_cfg(), &mut Rng::seed_from(7))
+        }));
+        let clock = Clock::manual();
+        let sup = Supervisor::start(pool.clone(), clock.clone(), Duration::from_millis(1));
+        let (_, _rx) = pool.client(0).submit(vec![1, 2, 3], 2).unwrap();
+        let mut died = false;
+        for _ in 0..1000 {
+            if pool.worker_died(0) {
+                died = true;
+                break;
+            }
+            std::thread::sleep(Duration::from_millis(2));
+        }
+        assert!(died, "injected crash never killed the worker");
+        plan.disarm();
+        // virtual time has not moved: the supervisor must not have ticked
+        assert_eq!(pool.restarts_total(), 0, "supervisor ticked before its interval elapsed");
+        // cross one tick boundary and give the thread wall time to see it
+        clock.advance_us(1_500);
+        let mut restarted = false;
+        for _ in 0..1000 {
+            if pool.restarts_total() == 1 {
+                restarted = true;
+                break;
+            }
+            std::thread::sleep(Duration::from_millis(2));
+        }
+        assert!(restarted, "supervisor thread never respawned the dead replica");
+        assert!(sup.ticks() >= 1);
+        sup.stop();
+        // the respawned incarnation serves
+        let (_, rx) = pool.client(0).submit(vec![4, 5], 1).unwrap();
+        assert_eq!(rx.recv_timeout(Duration::from_secs(30)).unwrap().tokens.len(), 1);
         pool.shutdown();
     }
 }

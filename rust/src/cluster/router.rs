@@ -21,7 +21,10 @@
 //!   with exponential backoff and deterministic jitter;
 //! * a request in flight on a replica whose worker dies is **failed
 //!   over**: the pool supervisor respawns the replica, the router
-//!   resubmits the prompt to a survivor ([`Router::await_outcome`]);
+//!   resubmits the prompt to a survivor ([`Router::await_outcome`]),
+//!   and under the `affinity` policy the session is **re-pinned** to
+//!   that survivor (its warm KV state now lives there, not on the
+//!   freshly respawned home);
 //! * optional per-request **deadlines** (`request_timeout`) bound the
 //!   total time to a terminal outcome.
 //!
@@ -38,10 +41,11 @@ use crate::kvpool::{aggregate_snapshots, PoolSnapshot};
 use crate::obs::trace::{self, SpanKind, NO_REQ, ROUTE_REJECTED};
 use crate::rng::splitmix64;
 use crate::util::json::Json;
-use std::collections::BTreeMap;
+use crate::util::sync::lock_recover;
+use std::collections::{BTreeMap, HashMap};
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::mpsc::{Receiver, RecvTimeoutError};
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
 /// Wall-clock slice between liveness checks while awaiting a response.
@@ -239,6 +243,13 @@ pub struct Router {
     rr: AtomicUsize,
     jitter_seq: AtomicU64,
     metrics: Arc<ClusterMetrics>,
+    /// Crash-failover affinity overrides: session key → the replica a
+    /// failed-over request of that session completed its re-route on.
+    /// Consulted before the hash in the `affinity` policy, so a session
+    /// whose home replica died keeps landing on the survivor that now
+    /// holds its warm KV state instead of bouncing back to the freshly
+    /// respawned (cold) home.
+    pins: Mutex<HashMap<u64, usize>>,
 }
 
 impl Router {
@@ -260,7 +271,16 @@ impl Router {
             rr: AtomicUsize::new(0),
             jitter_seq: AtomicU64::new(0),
             metrics: Arc::new(ClusterMetrics::new(n)),
+            pins: Mutex::new(HashMap::new()),
         }
+    }
+
+    /// Where an affinity session is currently pinned: `Some(replica)`
+    /// after a crash-failover moved the session off its hash-derived home
+    /// (the pin is the survivor that served the failed-over request),
+    /// `None` while the session still follows the hash.
+    pub fn pinned_replica(&self, session: u64) -> Option<usize> {
+        lock_recover(&self.pins).get(&session).copied()
     }
 
     /// Number of replicas routed over.
@@ -404,6 +424,16 @@ impl Router {
                             r.replica = acc.replica;
                             r.id = acc.id;
                             r.rx = acc.rx;
+                            // re-pin the session to the survivor: the
+                            // failed-over request is rebuilding warm KV
+                            // state there, so later requests of the same
+                            // session must follow it rather than return
+                            // to the respawned (cold) home replica
+                            if self.cfg.policy == RoutingPolicy::Affinity {
+                                if let Some(key) = r.session {
+                                    lock_recover(&self.pins).insert(key, acc.replica);
+                                }
+                            }
                         }
                         Err(fail) => return self.terminal(fail),
                     }
@@ -610,10 +640,12 @@ impl Router {
             RoutingPolicy::JoinShortestQueue => self.least_loaded(),
             RoutingPolicy::Affinity => {
                 let home = match session {
-                    Some(key) => {
+                    // a crash-failover pin overrides the hash-derived
+                    // home (the session's warm KV lives on the survivor)
+                    Some(key) => self.pinned_replica(key).unwrap_or_else(|| {
                         let mut s = key;
                         (splitmix64(&mut s) % n as u64) as usize
-                    }
+                    }),
                     // sessionless requests rotate like round_robin
                     None => self.rr.fetch_add(1, Ordering::Relaxed) % n,
                 };

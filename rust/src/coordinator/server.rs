@@ -190,7 +190,15 @@ impl Server {
         let metrics = Arc::new(ServingMetrics::new());
         // the pool is created here (not on the worker) so clients and the
         // cluster router can read its gauges while the backend serves
-        let pool = Arc::new(KvPool::new(cfg.pool.clone(), compressor));
+        let mut pool_cfg = cfg.pool.clone();
+        if let Some(sp) = pool_cfg.spill.as_mut() {
+            // replicas run different weights (seed + i), so spilled KV
+            // rows are only valid for the replica that wrote them: give
+            // each replica its own subdirectory and span tag
+            sp.replica = cfg.replica;
+            sp.dir = sp.dir.join(format!("replica-{}", cfg.replica));
+        }
+        let pool = Arc::new(KvPool::new(pool_cfg, compressor));
         let stopping = Arc::new(AtomicBool::new(false));
         // one quality auditor per replica, shared by the scheduler
         // (decode-step audits, degraded budget), the pool (fold audits,

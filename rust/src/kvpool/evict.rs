@@ -87,7 +87,15 @@ fn reclaim_inner(
 /// Evict LRU unreferenced leaf blocks until the target is met or nothing
 /// evictable remains. Removing a leaf can expose its parent as the next
 /// candidate, so the scan repeats until a pass finds nothing.
+///
+/// With a spill tier configured the evicted block is not destroyed: it
+/// is *moved* (zero-copy) into the cold store keyed by its full
+/// root-to-block token prefix, so a later lookup of the same prefix
+/// pages it back instead of recomputing the rows. The disk write happens
+/// on the spill store's background thread — this path only hands the
+/// block over.
 fn evict_blocks(g: &mut PoolInner, metrics: &PoolMetrics, target_floats: usize) {
+    let spill = g.spill.clone();
     while g.store.used_floats() > target_floats {
         let victim = g
             .radix
@@ -97,9 +105,18 @@ fn evict_blocks(g: &mut PoolInner, metrics: &PoolMetrics, target_floats: usize) 
             .min_by_key(|&idx| g.store.get(g.radix.node_block(idx)).last_touch);
         match victim {
             Some(idx) => {
-                let block = g.radix.remove_leaf(idx);
-                g.store.remove(block);
+                // the key must be read before the leaf is unlinked
+                let key = spill.as_ref().map(|_| g.radix.path_tokens(idx));
+                let id = g.radix.remove_leaf(idx);
+                let block = g.store.remove(id);
                 PoolMetrics::add(&metrics.evicted_blocks, 1);
+                if let (Some(s), Some(key)) = (spill.as_deref(), key) {
+                    if let Some(out) = s.offer(key, block) {
+                        PoolMetrics::add(&metrics.spills, 1);
+                        PoolMetrics::add(&metrics.spill_bytes, out.bytes);
+                        PoolMetrics::add(&metrics.spill_evictions, out.evicted);
+                    }
+                }
             }
             None => break,
         }

@@ -15,6 +15,13 @@ pub struct PoolMetrics {
     pub(crate) tier_compressions: AtomicU64,
     pub(crate) evicted_blocks: AtomicU64,
     pub(crate) admission_rejects: AtomicU64,
+    // spill-tier counters: only ever touched when the tier is configured
+    pub(crate) spills: AtomicU64,
+    pub(crate) spill_bytes: AtomicU64,
+    pub(crate) spill_evictions: AtomicU64,
+    pub(crate) page_ins: AtomicU64,
+    pub(crate) pagein_tokens: AtomicU64,
+    pub(crate) spill_corrupt: AtomicU64,
 }
 
 impl PoolMetrics {
@@ -50,6 +57,33 @@ pub struct PoolSnapshot {
     pub evicted_blocks: u64,
     /// Prefill registrations rejected after both reclaim tiers came up short.
     pub admission_rejects: u64,
+    /// Spill-tier gauges and counters; `None` when the tier is off, in
+    /// which case no spill keys appear in any export (bit-identity with
+    /// a spill-less build).
+    pub spill: Option<SpillSnapshot>,
+}
+
+/// Point-in-time view of the spill tier of one pool.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct SpillSnapshot {
+    /// Configured cold-index byte budget.
+    pub budget_bytes: usize,
+    /// Bytes currently charged to the cold index.
+    pub used_bytes: usize,
+    /// Entries currently in the cold index.
+    pub entries: usize,
+    /// Evicted blocks accepted by the cold store.
+    pub spills: u64,
+    /// Record bytes written (cumulative) by accepted spills.
+    pub spill_bytes: u64,
+    /// Cold-index entries dropped LRU-first to hold the byte budget.
+    pub spill_evictions: u64,
+    /// Spilled blocks rematerialised into the pool on prefix lookups.
+    pub page_ins: u64,
+    /// Prompt tokens those page-ins covered (prefill work saved).
+    pub pagein_tokens: u64,
+    /// Records that failed integrity verification (served as misses).
+    pub spill_corrupt: u64,
 }
 
 impl PoolSnapshot {
@@ -108,6 +142,46 @@ impl PoolSnapshot {
             b.declare(name, "counter", help);
             b.sample(name, labels, v as f64);
         }
+        // spill families exist only when the tier is configured, so a
+        // spill-less run's exposition is byte-identical to pre-spill builds
+        if let Some(sp) = &self.spill {
+            b.declare("wildcat_spill_bytes", "gauge", "Spill cold-index bytes (used and budget).");
+            for (state, v) in [("used", sp.used_bytes), ("budget", sp.budget_bytes)] {
+                let mut ls = labels.to_vec();
+                ls.push(("state", state));
+                b.sample("wildcat_spill_bytes", &ls, v as f64);
+            }
+            b.declare("wildcat_spill_entries", "gauge", "Entries in the spill cold index.");
+            b.sample("wildcat_spill_entries", labels, sp.entries as f64);
+            let spill_counters: [(&str, &str, u64); 6] = [
+                ("wildcat_spill_blocks_total", "Evicted blocks accepted by the spill tier.", sp.spills),
+                ("wildcat_spill_written_bytes_total", "Record bytes written by the spill tier.", sp.spill_bytes),
+                (
+                    "wildcat_spill_evictions_total",
+                    "Cold-index entries dropped to hold the spill budget.",
+                    sp.spill_evictions,
+                ),
+                (
+                    "wildcat_spill_page_ins_total",
+                    "Spilled blocks rematerialised on prefix lookups.",
+                    sp.page_ins,
+                ),
+                (
+                    "wildcat_spill_pagein_tokens_total",
+                    "Prompt tokens served from paged-in blocks.",
+                    sp.pagein_tokens,
+                ),
+                (
+                    "wildcat_spill_corrupt_total",
+                    "Spill records that failed integrity verification.",
+                    sp.spill_corrupt,
+                ),
+            ];
+            for (name, help, v) in spill_counters {
+                b.declare(name, "counter", help);
+                b.sample(name, labels, v as f64);
+            }
+        }
     }
 
     /// Serialise as the `"kv"` block of the serving metrics documents.
@@ -126,6 +200,19 @@ impl PoolSnapshot {
         o.insert("tier_compressions".into(), Json::Num(self.tier_compressions as f64));
         o.insert("evicted_blocks".into(), Json::Num(self.evicted_blocks as f64));
         o.insert("admission_rejects".into(), Json::Num(self.admission_rejects as f64));
+        if let Some(sp) = &self.spill {
+            let mut s = BTreeMap::new();
+            s.insert("budget_bytes".into(), Json::Num(sp.budget_bytes as f64));
+            s.insert("used_bytes".into(), Json::Num(sp.used_bytes as f64));
+            s.insert("entries".into(), Json::Num(sp.entries as f64));
+            s.insert("spills".into(), Json::Num(sp.spills as f64));
+            s.insert("spill_bytes".into(), Json::Num(sp.spill_bytes as f64));
+            s.insert("spill_evictions".into(), Json::Num(sp.spill_evictions as f64));
+            s.insert("page_ins".into(), Json::Num(sp.page_ins as f64));
+            s.insert("pagein_tokens".into(), Json::Num(sp.pagein_tokens as f64));
+            s.insert("spill_corrupt".into(), Json::Num(sp.spill_corrupt as f64));
+            o.insert("spill".into(), Json::Obj(s));
+        }
         Json::Obj(o)
     }
 }
@@ -149,6 +236,19 @@ pub fn aggregate_snapshots(snaps: &[PoolSnapshot]) -> PoolSnapshot {
         agg.tier_compressions += s.tier_compressions;
         agg.evicted_blocks += s.evicted_blocks;
         agg.admission_rejects += s.admission_rejects;
+        // the aggregate reports spill gauges iff any replica runs the tier
+        if let Some(sp) = &s.spill {
+            let a = agg.spill.get_or_insert_with(SpillSnapshot::default);
+            a.budget_bytes += sp.budget_bytes;
+            a.used_bytes += sp.used_bytes;
+            a.entries += sp.entries;
+            a.spills += sp.spills;
+            a.spill_bytes += sp.spill_bytes;
+            a.spill_evictions += sp.spill_evictions;
+            a.page_ins += sp.page_ins;
+            a.pagein_tokens += sp.pagein_tokens;
+            a.spill_corrupt += sp.spill_corrupt;
+        }
     }
     agg
 }
@@ -172,6 +272,7 @@ mod tests {
             tier_compressions: 2,
             evicted_blocks: 1,
             admission_rejects: 0,
+            spill: None,
         };
         assert_eq!(s.used_bytes(), 2400);
         assert!((s.prefix_hit_rate() - 0.4).abs() < 1e-12);
@@ -179,6 +280,46 @@ mod tests {
         let text = j.to_string_compact();
         assert_eq!(crate::util::json::parse(&text).unwrap(), j);
         assert_eq!(j.get("peak_bytes").and_then(Json::as_f64), Some(3600.0));
+        assert!(j.get("spill").is_none(), "spill off must add no JSON keys");
+
+        // spill on: a nested block appears and parses back
+        let with = PoolSnapshot {
+            spill: Some(SpillSnapshot {
+                budget_bytes: 4096,
+                used_bytes: 1024,
+                entries: 2,
+                spills: 5,
+                spill_bytes: 2048,
+                spill_evictions: 1,
+                page_ins: 3,
+                pagein_tokens: 48,
+                spill_corrupt: 1,
+            }),
+            ..s
+        };
+        let j = with.to_json();
+        assert_eq!(crate::util::json::parse(&j.to_string_compact()).unwrap(), j);
+        let sp = j.get("spill").expect("spill block present when the tier is on");
+        assert_eq!(sp.get("page_ins").and_then(Json::as_f64), Some(3.0));
+        assert_eq!(sp.get("spill_corrupt").and_then(Json::as_f64), Some(1.0));
+    }
+
+    #[test]
+    fn prom_spill_families_gated_on_tier() {
+        let off = PoolSnapshot::default();
+        let mut b = crate::obs::PromBuilder::new();
+        off.prom_write(&mut b, &[("replica", "0")]);
+        assert!(!b.finish().contains("wildcat_spill_"), "spill off must add no prom families");
+
+        let on = PoolSnapshot {
+            spill: Some(SpillSnapshot { spills: 7, ..Default::default() }),
+            ..Default::default()
+        };
+        let mut b = crate::obs::PromBuilder::new();
+        on.prom_write(&mut b, &[("replica", "0")]);
+        let text = b.finish();
+        assert!(text.contains("wildcat_spill_blocks_total{replica=\"0\"} 7"));
+        assert!(text.contains("wildcat_spill_corrupt_total"));
     }
 
     #[test]
@@ -189,7 +330,18 @@ mod tests {
         assert_eq!(agg.used_floats, 40);
         assert_eq!(agg.prefix_queries, 4);
         assert!((agg.prefix_hit_rate() - 0.5).abs() < 1e-12);
+        assert!(agg.spill.is_none(), "no replica spills => no aggregate spill block");
         // zero-query aggregate divides safely
         assert_eq!(aggregate_snapshots(&[]).prefix_hit_rate(), 0.0);
+
+        // a mixed fleet still aggregates the spilling replicas
+        let c = PoolSnapshot {
+            spill: Some(SpillSnapshot { spills: 2, page_ins: 1, ..Default::default() }),
+            ..Default::default()
+        };
+        let agg = aggregate_snapshots(&[a, c, c]);
+        let sp = agg.spill.expect("any spilling replica => aggregate spill block");
+        assert_eq!(sp.spills, 4);
+        assert_eq!(sp.page_ins, 2);
     }
 }

@@ -32,13 +32,16 @@ pub mod block;
 pub mod evict;
 pub mod metrics;
 pub mod radix;
+pub mod spill;
 
-pub use metrics::{aggregate_snapshots, PoolMetrics, PoolSnapshot};
+pub use metrics::{aggregate_snapshots, PoolMetrics, PoolSnapshot, SpillSnapshot};
+pub use spill::{spill_budget_bytes_from_mb, SpillParams, SpillStore};
 
 use crate::kvcache::{CompressionCtx, KvCompressor};
 use crate::linalg::Matrix;
 use crate::model::CachedPrefix;
 use crate::obs::quality::{self, QualityAudit};
+use crate::obs::trace;
 use crate::rng::Rng;
 use allocator::BlockStore;
 use block::{Block, BlockId, BlockLayer};
@@ -65,6 +68,11 @@ pub struct KvPoolConfig {
     /// Seed of the pool's private RNG (ladder compressions fork from it,
     /// keeping fixed-seed runs reproducible).
     pub seed: u64,
+    /// Spill-to-disk tier between evict and reject (`--spill-budget-mb`,
+    /// `--spill-dir`). `None` (the default) is bit-identical to a
+    /// spill-less build: no threads, no counters, no extra branches
+    /// taken on the serving path.
+    pub spill: Option<SpillParams>,
 }
 
 impl Default for KvPoolConfig {
@@ -76,6 +84,7 @@ impl Default for KvPoolConfig {
             prefix_sharing: true,
             compress_budget: 64,
             seed: 0x9E3779B9,
+            spill: None,
         }
     }
 }
@@ -253,6 +262,7 @@ pub(crate) struct PoolInner {
     pub(crate) dims: Option<CompressDims>,
     pub(crate) rng: Rng,
     pub(crate) audit: Option<Arc<QualityAudit>>,
+    pub(crate) spill: Option<Arc<SpillStore>>,
 }
 
 /// The shared, thread-safe pool facade.
@@ -268,6 +278,9 @@ impl KvPool {
     /// and the compressor its pressure ladder will shrink sequences with.
     pub fn new(cfg: KvPoolConfig, compressor: Arc<dyn KvCompressor>) -> Self {
         let rng = Rng::seed_from(cfg.seed);
+        let spill = cfg.spill.as_ref().map(|params| {
+            Arc::new(SpillStore::new(params).expect("creating spill store directory"))
+        });
         KvPool {
             cfg,
             compressor,
@@ -280,6 +293,7 @@ impl KvPool {
                 dims: None,
                 rng,
                 audit: None,
+                spill,
             }),
         }
     }
@@ -402,6 +416,55 @@ impl KvPool {
         }
         PoolMetrics::add(&self.metrics.prefix_queries, 1);
         let mut path = g.radix.lookup(tokens, bt);
+        // Spill page-in: where the radix match runs out, consult the
+        // cold index for the prompt's next chunks and rematerialise any
+        // spilled blocks — re-charged to the ledger, re-linked into the
+        // tree — so admission resumes prefill past them instead of
+        // recomputing. Every paged chunk is prompt prefix this prompt
+        // would otherwise store anyway (as tail or sealed blocks), so
+        // paging in never increases the admission footprint.
+        if let Some(spill) = g.spill.clone() {
+            let t0 = if trace::enabled() { Some(std::time::Instant::now()) } else { None };
+            let mut paged_blocks = 0u64;
+            loop {
+                let matched = path.len() * bt;
+                if matched + bt > tokens.len() {
+                    break;
+                }
+                match spill.fetch(&tokens[..matched + bt]) {
+                    spill::Fetch::Hit(mut block) => {
+                        block.last_touch = now;
+                        block.in_tree = true;
+                        let parent = path.last().map(|&(node, _)| node);
+                        let id = g.store.insert(block);
+                        let node =
+                            g.radix.insert(parent, tokens[matched..matched + bt].to_vec(), id);
+                        path.push((node, id));
+                        paged_blocks += 1;
+                    }
+                    spill::Fetch::Corrupt => {
+                        PoolMetrics::add(&self.metrics.spill_corrupt, 1);
+                        break;
+                    }
+                    spill::Fetch::Miss => break,
+                }
+            }
+            if paged_blocks > 0 {
+                let paged_tokens = paged_blocks * bt as u64;
+                PoolMetrics::add(&self.metrics.page_ins, paged_blocks);
+                PoolMetrics::add(&self.metrics.pagein_tokens, paged_tokens);
+                if let Some(t0) = t0 {
+                    trace::span(
+                        trace::SpanKind::PageIn,
+                        t0,
+                        std::time::Instant::now(),
+                        trace::NO_REQ,
+                        paged_blocks,
+                        paged_tokens,
+                    );
+                }
+            }
+        }
         // always leave >= 1 unmatched token: prefill needs a position to
         // produce next-token logits from, so a whole-prompt match resumes
         // from all but its last block
@@ -690,10 +753,28 @@ impl KvPool {
         Some(st)
     }
 
+    /// The spill tier's cold store, when configured — test/bench hook
+    /// for flushing the writeback queue and locating record files.
+    pub fn spill_store(&self) -> Option<Arc<SpillStore>> {
+        self.inner.lock().unwrap().spill.clone()
+    }
+
     /// Consistent point-in-time view of the ledger gauges and counters.
     pub fn snapshot(&self) -> PoolSnapshot {
         let g = self.inner.lock().unwrap();
+        let spill = g.spill.as_ref().map(|s| SpillSnapshot {
+            budget_bytes: s.budget_bytes(),
+            used_bytes: s.indexed_bytes(),
+            entries: s.entries(),
+            spills: self.metrics.spills.load(Ordering::Relaxed),
+            spill_bytes: self.metrics.spill_bytes.load(Ordering::Relaxed),
+            spill_evictions: self.metrics.spill_evictions.load(Ordering::Relaxed),
+            page_ins: self.metrics.page_ins.load(Ordering::Relaxed),
+            pagein_tokens: self.metrics.pagein_tokens.load(Ordering::Relaxed),
+            spill_corrupt: self.metrics.spill_corrupt.load(Ordering::Relaxed),
+        });
         PoolSnapshot {
+            spill,
             budget_floats: self.cfg.budget_floats,
             used_floats: g.store.used_floats(),
             peak_floats: g.store.peak_floats(),
@@ -1179,6 +1260,69 @@ mod tests {
         let snap = p.snapshot();
         assert!(snap.evicted_blocks > 0, "eviction tier never fired");
         assert_eq!(snap.admission_rejects, 0);
+    }
+
+    fn spill_cfg(tag: &str, budget_floats: usize, spill_mb: f64) -> KvPoolConfig {
+        let dir = std::env::temp_dir().join(format!("wildcat_pool_{tag}_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        KvPoolConfig {
+            budget_floats,
+            block_tokens: 8,
+            spill: Some(SpillParams {
+                dir,
+                budget_bytes: spill_budget_bytes_from_mb(spill_mb),
+                replica: 0,
+            }),
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn evicted_blocks_spill_and_page_back_with_identical_rows() {
+        // Budget fits exactly one prompt's storage: admitting B evicts
+        // (and spills) A's cached blocks; a new lookup of A pages them
+        // back from disk.
+        let n = 32;
+        let floats_per_seq = n * 2 * (4 + 4 + 1);
+        let cfg = spill_cfg("roundtrip", floats_per_seq, 4.0);
+        let p = pool(cfg.clone());
+        let a: Vec<u32> = (0..n as u32).collect();
+        let b: Vec<u32> = (0..n as u32).map(|t| t + 10_000).collect();
+        let (ka, va) = tagged_prefill(&a, 2, 4);
+        let (kb, vb) = tagged_prefill(&b, 2, 4);
+        p.register_prefill(1, &a, &ka, &va).unwrap();
+        p.drop_sequence(1);
+        p.register_prefill(2, &b, &kb, &vb).unwrap();
+        p.drop_sequence(2);
+        p.register_prefill(3, &b, &kb, &vb).unwrap(); // keep B hot
+        let snap = p.snapshot();
+        let sp = snap.spill.expect("spill tier configured");
+        assert!(sp.spills > 0, "pressure must have spilled A's evicted blocks");
+        assert_eq!(snap.admission_rejects, 0);
+
+        // A's prefix now misses the radix but hits the cold index: the
+        // lookup pages the blocks back with the exact original rows.
+        let h = p.lookup_prefix(&a);
+        assert!(h.is_hit(), "page-in must surface the spilled prefix");
+        let matched = h.matched_tokens();
+        assert!(matched >= 8);
+        assert_eq!(h.kv.keys[0], ka[0].slice_rows(0, matched));
+        assert_eq!(h.kv.values[1], va[1].slice_rows(0, matched));
+        let sp = p.snapshot().spill.unwrap();
+        assert!(sp.page_ins > 0);
+        assert_eq!(sp.pagein_tokens % 8, 0);
+        assert_eq!(sp.spill_corrupt, 0);
+        p.release_prefix(h);
+        if let Some(params) = &cfg.spill {
+            std::fs::remove_dir_all(&params.dir).ok();
+        }
+    }
+
+    #[test]
+    fn spill_off_snapshot_has_no_spill_block() {
+        let p = pool(KvPoolConfig::default());
+        assert!(p.snapshot().spill.is_none());
+        assert!(p.spill_store().is_none());
     }
 
     #[test]

@@ -116,6 +116,23 @@ impl RadixIndex {
         children.get(chunk).copied()
     }
 
+    /// The full root-to-node token prefix a node spells out — the spill
+    /// tier's cold-index key, read *before* the node is unlinked.
+    pub fn path_tokens(&self, idx: usize) -> Vec<u32> {
+        let mut chunks: Vec<&[u32]> = Vec::new();
+        let mut cur = Some(idx);
+        while let Some(i) = cur {
+            let n = self.node(i);
+            chunks.push(&n.chunk);
+            cur = n.parent;
+        }
+        let mut out = Vec::with_capacity(chunks.iter().map(|c| c.len()).sum());
+        for c in chunks.iter().rev() {
+            out.extend_from_slice(c);
+        }
+        out
+    }
+
     /// Indices of all leaf nodes (no children) — the only evictable ones.
     pub fn leaves(&self) -> Vec<usize> {
         self.nodes

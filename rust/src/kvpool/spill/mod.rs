@@ -1,0 +1,455 @@
+//! Spill-to-disk tier: the rung between *evict* and *reject* on the
+//! pressure ladder.
+//!
+//! When the eviction tier reclaims an unreferenced cached-prefix block,
+//! the pool used to destroy it — the rows were "pure cache", recomputable
+//! by a future prefill. That recompute is exactly the quadratic work the
+//! serving stack exists to avoid, so with a [`SpillStore`] configured the
+//! evicted block is *offered* to a byte-budgeted cold index instead and
+//! written to disk off the decode path; a later prefix lookup that runs
+//! past the radix index consults the cold index and pages the block back
+//! into the pool ([`super::KvPool::lookup_prefix`]), so admission resumes
+//! prefill past it.
+//!
+//! Design points:
+//!
+//! * **Writeback is asynchronous.** [`SpillStore::offer`] moves the
+//!   evicted block into a `Pending` cold-index entry and enqueues the
+//!   serialisation + file write onto a dedicated background thread, so
+//!   the decode path never waits on disk. A page-in that arrives before
+//!   the write lands is served from the pending in-memory block —
+//!   deterministically identical to reading the file back.
+//! * **Budgeted, LRU.** The index tracks the exact encoded byte size of
+//!   every entry against `--spill-budget-mb`; inserting past the budget
+//!   drops least-recently-touched entries (their files are deleted by
+//!   the writeback thread, ordered after any pending write).
+//! * **Integrity over availability.** Records are checksummed
+//!   ([`record`]); a torn, truncated, or bit-rotted record decodes to
+//!   `None` and is treated as a miss — the pool falls back to cold
+//!   prefill and the bad entry/file is dropped. Corrupt KV is never
+//!   served.
+//!
+//! The cold index is keyed by the *full root-to-block token prefix*, so
+//! a hit can be re-linked into the radix tree at exactly the position it
+//! was evicted from. The index lives in memory only: spill files are
+//! per-run scratch, not a persistence layer.
+
+use super::block::Block;
+use crate::obs::trace::{self, SpanKind, NO_REQ};
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::mpsc::{self, Receiver, Sender};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+pub mod record;
+
+/// Spill-tier configuration (CLI surface: `--spill-budget-mb`,
+/// `--spill-dir`). Present on [`super::KvPoolConfig::spill`] only when
+/// the tier is enabled — `None` is bit-identical to a spill-less build.
+#[derive(Clone, Debug)]
+pub struct SpillParams {
+    /// Directory the block records are written under. Each replica must
+    /// use its own directory (replicas serve distinct model instances).
+    pub dir: PathBuf,
+    /// Cold-index byte budget; entries past it are dropped LRU-first.
+    pub budget_bytes: usize,
+    /// Replica tag the writeback thread stamps on its trace spans.
+    pub replica: u32,
+}
+
+/// Convert a `--spill-budget-mb` operator value to bytes.
+pub fn spill_budget_bytes_from_mb(mb: f64) -> usize {
+    if mb <= 0.0 {
+        0
+    } else {
+        (mb * 1024.0 * 1024.0).round() as usize
+    }
+}
+
+/// What [`SpillStore::offer`] did with an evicted block.
+#[derive(Clone, Copy, Debug)]
+pub struct OfferOutcome {
+    /// Encoded record size now charged to the cold index.
+    pub bytes: u64,
+    /// Cold entries dropped (LRU) to make room.
+    pub evicted: u64,
+}
+
+/// Result of a cold-index probe.
+pub enum Fetch {
+    /// The block was rematerialised (from the pending in-memory copy or
+    /// a verified on-disk record).
+    Hit(Block),
+    /// The entry existed but its record failed verification; the entry
+    /// and file have been dropped. Callers count `spill_corrupt` and
+    /// fall back to cold prefill.
+    Corrupt,
+    /// No entry under this key.
+    Miss,
+}
+
+enum EntryState {
+    /// Write still queued/in-flight; page-ins serve this copy.
+    Pending(Arc<Block>),
+    /// The record landed on disk; page-ins read and verify it.
+    OnDisk,
+}
+
+struct Entry {
+    state: EntryState,
+    bytes: usize,
+    last_touch: u64,
+    file: PathBuf,
+}
+
+struct Index {
+    map: HashMap<Vec<u32>, Entry>,
+    bytes: usize,
+    tick: u64,
+    next_file: u64,
+}
+
+enum Job {
+    Write { key: Vec<u32>, path: PathBuf, block: Arc<Block> },
+    Remove { path: PathBuf },
+    Flush(Sender<()>),
+}
+
+/// The byte-budgeted cold store: an in-memory LRU index over
+/// checksummed per-block record files, written by a dedicated
+/// background thread. Metrics-free by design — callers (the kvpool
+/// eviction and page-in paths) count outcomes on [`super::PoolMetrics`].
+pub struct SpillStore {
+    dir: PathBuf,
+    budget_bytes: usize,
+    index: Arc<Mutex<Index>>,
+    tx: Option<Sender<Job>>,
+    worker: Option<JoinHandle<()>>,
+}
+
+impl SpillStore {
+    /// Create the spill directory and start the writeback thread.
+    pub fn new(params: &SpillParams) -> std::io::Result<SpillStore> {
+        std::fs::create_dir_all(&params.dir)?;
+        let index = Arc::new(Mutex::new(Index {
+            map: HashMap::new(),
+            bytes: 0,
+            tick: 0,
+            next_file: 0,
+        }));
+        let (tx, rx) = mpsc::channel();
+        let worker_index = Arc::clone(&index);
+        let replica = params.replica;
+        let worker = std::thread::Builder::new()
+            .name("wildcat-spill-writeback".to_string())
+            .spawn(move || run_writeback(rx, worker_index, replica))?;
+        Ok(SpillStore {
+            dir: params.dir.clone(),
+            budget_bytes: params.budget_bytes,
+            index,
+            tx: Some(tx),
+            worker: Some(worker),
+        })
+    }
+
+    fn send(&self, job: Job) -> bool {
+        self.tx.as_ref().map(|t| t.send(job).is_ok()).unwrap_or(false)
+    }
+
+    /// Offer an evicted block to the cold tier, keyed by its full
+    /// root-to-block token prefix. Takes ownership (zero-copy off the
+    /// eviction path); the disk write happens on the writeback thread.
+    /// Returns `None` when the key is already indexed (touch only — the
+    /// existing record still serves) or the record cannot fit the budget
+    /// at all; `Some` reports the bytes newly charged and how many LRU
+    /// entries were dropped to make room.
+    pub fn offer(&self, key: Vec<u32>, block: Block) -> Option<OfferOutcome> {
+        let (d_k, d_v) = block
+            .layers
+            .first()
+            .map(|l| (l.keys.cols(), l.values.cols()))
+            .unwrap_or((0, 0));
+        let bytes = record::encoded_len(block.tokens.len(), block.layers.len(), d_k, d_v);
+        if bytes > self.budget_bytes {
+            return None;
+        }
+        let mut g = self.index.lock().unwrap();
+        g.tick += 1;
+        let tick = g.tick;
+        if let Some(e) = g.map.get_mut(&key) {
+            e.last_touch = tick;
+            return None;
+        }
+        let mut evicted = 0u64;
+        while g.bytes + bytes > self.budget_bytes {
+            let victim = g
+                .map
+                .iter()
+                .min_by_key(|(_, e)| e.last_touch)
+                .map(|(k, _)| k.clone());
+            let Some(vk) = victim else { break };
+            let e = g.map.remove(&vk).expect("victim vanished under lock");
+            g.bytes -= e.bytes;
+            evicted += 1;
+            self.send(Job::Remove { path: e.file });
+        }
+        // Files are named by a monotonic id, not the key: a re-spill
+        // after an LRU drop gets a fresh file, so a stale queued Remove
+        // can never delete a newer record.
+        let file = self.dir.join(format!("rec-{:08}.wcsp", g.next_file));
+        g.next_file += 1;
+        let block = Arc::new(block);
+        g.map.insert(
+            key.clone(),
+            Entry {
+                state: EntryState::Pending(Arc::clone(&block)),
+                bytes,
+                last_touch: tick,
+                file: file.clone(),
+            },
+        );
+        g.bytes += bytes;
+        self.send(Job::Write { key, path: file, block });
+        Some(OfferOutcome { bytes: bytes as u64, evicted })
+    }
+
+    /// Probe the cold index for a spilled block. A hit stays indexed
+    /// (page-in is a read, not a move), so re-evicting the same prefix
+    /// later is a free touch instead of a rewrite.
+    pub fn fetch(&self, key: &[u32]) -> Fetch {
+        let mut g = self.index.lock().unwrap();
+        g.tick += 1;
+        let tick = g.tick;
+        let Some(e) = g.map.get_mut(key) else { return Fetch::Miss };
+        e.last_touch = tick;
+        match &e.state {
+            EntryState::Pending(b) => Fetch::Hit(Block::clone(b)),
+            EntryState::OnDisk => {
+                let path = e.file.clone();
+                let decoded = std::fs::read(&path).ok().and_then(|bytes| record::decode(&bytes));
+                match decoded {
+                    // the record must spell the key's own tail chunk —
+                    // anything else (however it got there) is corruption
+                    Some(block) if key.ends_with(&block.tokens) => Fetch::Hit(block),
+                    _ => {
+                        let e = g.map.remove(key).expect("entry vanished under lock");
+                        g.bytes -= e.bytes;
+                        self.send(Job::Remove { path: e.file });
+                        Fetch::Corrupt
+                    }
+                }
+            }
+        }
+    }
+
+    /// Block until every queued write/remove has been applied. Tests and
+    /// benches use this to observe on-disk state; the serving path never
+    /// calls it.
+    pub fn flush(&self) {
+        let (ack_tx, ack_rx) = mpsc::channel();
+        if self.send(Job::Flush(ack_tx)) {
+            let _ = ack_rx.recv();
+        }
+    }
+
+    /// Configured cold-index byte budget.
+    pub fn budget_bytes(&self) -> usize {
+        self.budget_bytes
+    }
+
+    /// Bytes currently charged to the cold index.
+    pub fn indexed_bytes(&self) -> usize {
+        self.index.lock().unwrap().bytes
+    }
+
+    /// Entries currently in the cold index.
+    pub fn entries(&self) -> usize {
+        self.index.lock().unwrap().map.len()
+    }
+
+    /// On-disk path a key's record lives at, if the key is indexed —
+    /// test hook for crash-consistency scenarios (truncating/corrupting
+    /// a live record).
+    pub fn record_path(&self, key: &[u32]) -> Option<PathBuf> {
+        self.index.lock().unwrap().map.get(key).map(|e| e.file.clone())
+    }
+}
+
+impl Drop for SpillStore {
+    fn drop(&mut self) {
+        drop(self.tx.take());
+        if let Some(w) = self.worker.take() {
+            let _ = w.join();
+        }
+    }
+}
+
+fn run_writeback(rx: Receiver<Job>, index: Arc<Mutex<Index>>, replica: u32) {
+    trace::set_current_replica(replica);
+    while let Ok(job) = rx.recv() {
+        match job {
+            Job::Write { key, path, block } => {
+                let t0 = if trace::enabled() { Some(Instant::now()) } else { None };
+                let bytes = record::encode(&block);
+                let n = bytes.len() as u64;
+                // write-then-rename so a crash mid-write leaves no
+                // half-record under the live name (the checksum would
+                // catch one anyway; this keeps the common case clean)
+                let tmp = path.with_extension("wcsp.tmp");
+                let ok = std::fs::write(&tmp, &bytes)
+                    .and_then(|()| std::fs::rename(&tmp, &path))
+                    .is_ok();
+                let mut g = index.lock().unwrap();
+                if let Some(e) = g.map.get_mut(&key) {
+                    // flip only our own entry: a drop + re-offer in the
+                    // meantime owns a different file
+                    if e.file == path {
+                        if ok {
+                            e.state = EntryState::OnDisk;
+                        } else {
+                            let e = g.map.remove(&key).expect("entry vanished under lock");
+                            g.bytes -= e.bytes;
+                        }
+                    }
+                }
+                drop(g);
+                if let Some(t0) = t0 {
+                    trace::span(SpanKind::Spill, t0, Instant::now(), NO_REQ, 1, n);
+                }
+            }
+            Job::Remove { path } => {
+                let _ = std::fs::remove_file(&path);
+            }
+            Job::Flush(ack) => {
+                let _ = ack.send(());
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kvpool::block::BlockLayer;
+    use crate::linalg::Matrix;
+
+    fn tmp_dir(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir()
+            .join(format!("wildcat_spill_{tag}_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&d);
+        d
+    }
+
+    fn store(dir: &Path, budget: usize) -> SpillStore {
+        SpillStore::new(&SpillParams {
+            dir: dir.to_path_buf(),
+            budget_bytes: budget,
+            replica: 0,
+        })
+        .unwrap()
+    }
+
+    fn block(tokens: &[u32]) -> Block {
+        Block {
+            tokens: tokens.to_vec(),
+            layers: (0..2)
+                .map(|lh| BlockLayer {
+                    keys: Matrix::from_fn(tokens.len(), 4, |i, j| {
+                        tokens[i] as f32 + (lh * 100 + j) as f32
+                    }),
+                    values: Matrix::from_fn(tokens.len(), 4, |i, j| {
+                        -(tokens[i] as f32) - (lh * 100 + j) as f32
+                    }),
+                })
+                .collect(),
+            refs: 0,
+            in_tree: false,
+            last_touch: 0,
+        }
+    }
+
+    #[test]
+    fn offer_then_fetch_roundtrips_pending_and_on_disk() {
+        let dir = tmp_dir("roundtrip");
+        let s = store(&dir, 1 << 20);
+        let key: Vec<u32> = (0..16).collect();
+        let b = block(&key[8..]);
+        let out = s.offer(key.clone(), b.clone()).expect("first offer indexes");
+        assert!(out.bytes > 0);
+        // before flush the pending copy serves; after flush the file does
+        for stage in ["pending", "flushed"] {
+            match s.fetch(&key) {
+                Fetch::Hit(got) => {
+                    assert_eq!(got.tokens, b.tokens, "{stage}");
+                    assert_eq!(got.layers[1].keys, b.layers[1].keys, "{stage}");
+                }
+                _ => panic!("{stage}: expected a hit"),
+            }
+            s.flush();
+        }
+        assert_eq!(s.entries(), 1);
+        assert_eq!(s.indexed_bytes(), out.bytes as usize);
+        // re-offer of an indexed key is a touch, not a rewrite
+        assert!(s.offer(key.clone(), b).is_none());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn budget_drops_lru_entries_and_their_files() {
+        let dir = tmp_dir("budget");
+        let one = {
+            let b = block(&[0; 8]);
+            let (d_k, d_v) = (4, 4);
+            record::encoded_len(8, b.layers.len(), d_k, d_v)
+        };
+        let s = store(&dir, 2 * one + one / 2); // fits two records
+        for i in 0..3u32 {
+            let key: Vec<u32> = (i * 8..i * 8 + 8).collect();
+            let out = s.offer(key, block(&[i; 8])).expect("offer indexes");
+            if i == 2 {
+                assert_eq!(out.evicted, 1, "third insert must drop the LRU entry");
+            }
+        }
+        s.flush();
+        assert_eq!(s.entries(), 2);
+        // the oldest key is gone, the two newest serve
+        assert!(matches!(s.fetch(&(0..8).collect::<Vec<_>>()), Fetch::Miss));
+        assert!(matches!(s.fetch(&(8..16).collect::<Vec<_>>()), Fetch::Hit(_)));
+        assert!(matches!(s.fetch(&(16..24).collect::<Vec<_>>()), Fetch::Hit(_)));
+        // exactly two record files remain on disk
+        let files = std::fs::read_dir(&dir).unwrap().count();
+        assert_eq!(files, 2);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn corrupt_record_is_a_dropped_miss_never_served() {
+        let dir = tmp_dir("corrupt");
+        let s = store(&dir, 1 << 20);
+        let key: Vec<u32> = (0..8).collect();
+        s.offer(key.clone(), block(&key)).unwrap();
+        s.flush();
+        let path = s.record_path(&key).unwrap();
+        // truncate the record mid-payload (a torn write)
+        let bytes = std::fs::read(&path).unwrap();
+        std::fs::write(&path, &bytes[..bytes.len() / 2]).unwrap();
+        assert!(matches!(s.fetch(&key), Fetch::Corrupt));
+        // the entry and file are gone; the next probe is a plain miss
+        assert!(matches!(s.fetch(&key), Fetch::Miss));
+        s.flush();
+        assert!(!path.exists(), "corrupt record file must be deleted");
+        assert_eq!(s.indexed_bytes(), 0);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn oversized_record_is_refused() {
+        let dir = tmp_dir("oversize");
+        let s = store(&dir, 64);
+        assert!(s.offer((0..8).collect(), block(&[1; 8])).is_none());
+        assert_eq!(s.entries(), 0);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -1,0 +1,206 @@
+//! The checksummed, versioned on-disk block record.
+//!
+//! One file per spilled block, little-endian throughout:
+//!
+//! ```text
+//! magic    b"WCSP"                      4 bytes
+//! version  u32                          4 bytes (= 1)
+//! n_tokens u32 | n_lh u32 | d_k u32 | d_v u32
+//! tokens   n_tokens x u32
+//! layers   n_lh x { keys n_tokens*d_k f32, values n_tokens*d_v f32 }
+//! check    u64 — integrity word over every preceding byte
+//! ```
+//!
+//! The integrity word is a splitmix64-fed xxhash-style fold: the byte
+//! stream is consumed as 8-byte words (zero-padded tail), each XORed
+//! into a running state that is re-mixed through the splitmix64
+//! finaliser. Not cryptographic — it exists to catch torn writes,
+//! truncation, and bit rot, any of which must read as a *miss* (cold
+//! prefill recomputes the rows) rather than ever serving corrupt KV.
+//!
+//! [`decode`] is therefore total: any structural defect — short buffer,
+//! wrong magic/version, inconsistent dims, trailing garbage, checksum
+//! mismatch — returns `None`.
+
+use crate::kvpool::block::{Block, BlockLayer};
+use crate::linalg::Matrix;
+
+/// File magic: "WCSP" (WildCat SPill).
+pub const MAGIC: [u8; 4] = *b"WCSP";
+
+/// Current record version. Decoders reject anything else.
+pub const VERSION: u32 = 1;
+
+const HEADER_LEN: usize = 4 + 4 + 4 * 4;
+const CHECK_LEN: usize = 8;
+
+/// Exact encoded size of a record with the given shape — lets the cold
+/// index account for a record's disk footprint before the background
+/// write lands.
+pub fn encoded_len(n_tokens: usize, n_lh: usize, d_k: usize, d_v: usize) -> usize {
+    HEADER_LEN + n_tokens * 4 + n_lh * n_tokens * (d_k + d_v) * 4 + CHECK_LEN
+}
+
+/// Integrity word: fold the byte stream as zero-padded 8-byte words
+/// through the splitmix64 finaliser.
+fn integrity_word(bytes: &[u8]) -> u64 {
+    let mut h = 0x57_43_53_50_u64 ^ (bytes.len() as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15);
+    for chunk in bytes.chunks(8) {
+        let mut word = [0u8; 8];
+        word[..chunk.len()].copy_from_slice(chunk);
+        h ^= u64::from_le_bytes(word);
+        // splitmix64 finaliser
+        h = (h ^ (h >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+        h = (h ^ (h >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+        h ^= h >> 31;
+    }
+    h
+}
+
+/// Serialise a block into a self-contained record.
+pub fn encode(block: &Block) -> Vec<u8> {
+    let n_tokens = block.tokens.len();
+    let n_lh = block.layers.len();
+    let (d_k, d_v) = block
+        .layers
+        .first()
+        .map(|l| (l.keys.cols(), l.values.cols()))
+        .unwrap_or((0, 0));
+    let mut out = Vec::with_capacity(encoded_len(n_tokens, n_lh, d_k, d_v));
+    out.extend_from_slice(&MAGIC);
+    out.extend_from_slice(&VERSION.to_le_bytes());
+    for dim in [n_tokens, n_lh, d_k, d_v] {
+        out.extend_from_slice(&(dim as u32).to_le_bytes());
+    }
+    for &t in &block.tokens {
+        out.extend_from_slice(&t.to_le_bytes());
+    }
+    for layer in &block.layers {
+        for &x in layer.keys.as_slice() {
+            out.extend_from_slice(&x.to_le_bytes());
+        }
+        for &x in layer.values.as_slice() {
+            out.extend_from_slice(&x.to_le_bytes());
+        }
+    }
+    let check = integrity_word(&out);
+    out.extend_from_slice(&check.to_le_bytes());
+    out
+}
+
+fn read_u32(bytes: &[u8], at: usize) -> u32 {
+    u32::from_le_bytes(bytes[at..at + 4].try_into().unwrap())
+}
+
+/// Deserialise a record back into a block (`refs = 0`, `in_tree = false`,
+/// `last_touch = 0` — the page-in path re-links it). Returns `None` on
+/// *any* defect; a corrupt record is a cache miss, never served KV.
+pub fn decode(bytes: &[u8]) -> Option<Block> {
+    if bytes.len() < HEADER_LEN + CHECK_LEN {
+        return None;
+    }
+    if bytes[..4] != MAGIC || read_u32(bytes, 4) != VERSION {
+        return None;
+    }
+    let n_tokens = read_u32(bytes, 8) as usize;
+    let n_lh = read_u32(bytes, 12) as usize;
+    let d_k = read_u32(bytes, 16) as usize;
+    let d_v = read_u32(bytes, 20) as usize;
+    if bytes.len() != encoded_len(n_tokens, n_lh, d_k, d_v) {
+        return None;
+    }
+    let payload_end = bytes.len() - CHECK_LEN;
+    let stored = u64::from_le_bytes(bytes[payload_end..].try_into().unwrap());
+    if integrity_word(&bytes[..payload_end]) != stored {
+        return None;
+    }
+    let mut at = HEADER_LEN;
+    let mut tokens = Vec::with_capacity(n_tokens);
+    for _ in 0..n_tokens {
+        tokens.push(read_u32(bytes, at));
+        at += 4;
+    }
+    let read_mat = |at: &mut usize, rows: usize, cols: usize| {
+        let mut data = Vec::with_capacity(rows * cols);
+        for _ in 0..rows * cols {
+            data.push(f32::from_le_bytes(bytes[*at..*at + 4].try_into().unwrap()));
+            *at += 4;
+        }
+        Matrix::from_vec(data, rows, cols)
+    };
+    let mut layers = Vec::with_capacity(n_lh);
+    for _ in 0..n_lh {
+        let keys = read_mat(&mut at, n_tokens, d_k);
+        let values = read_mat(&mut at, n_tokens, d_v);
+        layers.push(BlockLayer { keys, values });
+    }
+    Some(Block { tokens, layers, refs: 0, in_tree: false, last_touch: 0 })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn block(n: usize, n_lh: usize, d: usize) -> Block {
+        Block {
+            tokens: (0..n as u32).map(|t| t * 7 + 3).collect(),
+            layers: (0..n_lh)
+                .map(|lh| BlockLayer {
+                    keys: Matrix::from_fn(n, d, |i, j| (lh * 100 + i * 10 + j) as f32 * 0.5),
+                    values: Matrix::from_fn(n, d, |i, j| -((lh * 100 + i * 10 + j) as f32)),
+                })
+                .collect(),
+            refs: 2,
+            in_tree: true,
+            last_touch: 99,
+        }
+    }
+
+    #[test]
+    fn roundtrip_preserves_tokens_and_rows() {
+        let b = block(16, 3, 4);
+        let bytes = encode(&b);
+        assert_eq!(bytes.len(), encoded_len(16, 3, 4, 4));
+        let d = decode(&bytes).expect("clean record must decode");
+        assert_eq!(d.tokens, b.tokens);
+        assert_eq!(d.layers.len(), 3);
+        for lh in 0..3 {
+            assert_eq!(d.layers[lh].keys, b.layers[lh].keys);
+            assert_eq!(d.layers[lh].values, b.layers[lh].values);
+        }
+        // bookkeeping fields reset for re-linking
+        assert_eq!((d.refs, d.in_tree, d.last_touch), (0, false, 0));
+    }
+
+    #[test]
+    fn corruption_truncation_and_garbage_all_miss() {
+        let bytes = encode(&block(8, 2, 4));
+        // flip one payload bit
+        for &at in &[0usize, 5, HEADER_LEN + 2, bytes.len() - 1] {
+            let mut bad = bytes.clone();
+            bad[at] ^= 0x40;
+            assert!(decode(&bad).is_none(), "flipped byte {at} must not decode");
+        }
+        // torn write: every strict prefix misses
+        for cut in [0, 3, HEADER_LEN, bytes.len() / 2, bytes.len() - 1] {
+            assert!(decode(&bytes[..cut]).is_none(), "truncation at {cut} must miss");
+        }
+        // trailing garbage
+        let mut long = bytes.clone();
+        long.push(0);
+        assert!(decode(&long).is_none());
+        // version bump
+        let mut vers = bytes.clone();
+        vers[4] = 2;
+        assert!(decode(&vers).is_none());
+    }
+
+    #[test]
+    fn integrity_word_is_stable_and_length_sensitive() {
+        // checksum must distinguish zero-padded tails from real zeros
+        let a = integrity_word(&[1, 2, 3]);
+        let b = integrity_word(&[1, 2, 3, 0]);
+        assert_ne!(a, b);
+        assert_eq!(a, integrity_word(&[1, 2, 3]));
+    }
+}

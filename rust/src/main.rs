@@ -18,12 +18,14 @@ use std::sync::Arc;
 use std::time::{Duration, Instant};
 use wildcat::attention::{exact_attention, wildcat_attention, WildcatParams};
 use wildcat::cluster::{
-    replay, FaultConfig, FaultPlan, Pacing, ReplayConfig, ReplicaPool, Router, RouterConfig,
-    RoutingPolicy,
+    replay, Clock, FaultConfig, FaultPlan, Pacing, ReplayConfig, ReplicaPool, Router,
+    RouterConfig, RoutingPolicy, Supervisor,
 };
 use wildcat::coordinator::{Server, ServerConfig};
 use wildcat::kvcache::compressor_by_name;
-use wildcat::kvpool::{budget_floats_from_mb, KvPoolConfig, PoolSnapshot};
+use wildcat::kvpool::{
+    budget_floats_from_mb, spill_budget_bytes_from_mb, KvPoolConfig, PoolSnapshot, SpillParams,
+};
 use wildcat::linalg::norms::max_abs_diff;
 use wildcat::model::{ModelConfig, Transformer};
 use wildcat::obs::{self, MetricsSampler, QualityConfig};
@@ -57,6 +59,12 @@ fn main() -> anyhow::Result<()> {
 /// Shared `--kv-budget-mb` / `--prefix-sharing` parsing for the serving
 /// commands: the per-replica KV pool budget (0 / absent = unbounded) and
 /// whether prompts are deduplicated through the pool's radix prefix index.
+///
+/// `--spill-budget-mb MB` (with optional `--spill-dir PATH`, default
+/// `wildcat-spill/`) arms the spill-to-disk tier: evicted prefix blocks
+/// are written to a byte-budgeted cold store instead of being destroyed,
+/// and paged back on later prefix hits. 0 / absent = off, and an off run
+/// is bit-identical to a build without the tier.
 fn pool_config_from_args(args: &Args) -> anyhow::Result<KvPoolConfig> {
     let mut pool = KvPoolConfig::default();
     pool.budget_floats = budget_floats_from_mb(args.get_parse::<f64>("kv-budget-mb", 0.0));
@@ -66,6 +74,18 @@ fn pool_config_from_args(args: &Args) -> anyhow::Result<KvPoolConfig> {
         other => anyhow::bail!("--prefix-sharing: expected on/off, got {other:?}"),
     };
     pool.compress_budget = args.get_parse::<usize>("kv-compress-budget", pool.compress_budget);
+    let spill_mb = args.get_parse::<f64>("spill-budget-mb", 0.0);
+    if spill_mb > 0.0 {
+        anyhow::ensure!(
+            pool.prefix_sharing,
+            "--spill-budget-mb requires --prefix-sharing on (spill caches radix prefix blocks)"
+        );
+        pool.spill = Some(SpillParams {
+            dir: std::path::PathBuf::from(args.get_or("spill-dir", "wildcat-spill")),
+            budget_bytes: spill_budget_bytes_from_mb(spill_mb),
+            replica: 0,
+        });
+    }
     Ok(pool)
 }
 
@@ -237,6 +257,19 @@ fn print_pool_line(prefix: &str, s: &PoolSnapshot) {
         s.evicted_blocks,
         s.admission_rejects,
     );
+    // only spill-armed runs print a spill line (bit-identical output off)
+    if let Some(sp) = &s.spill {
+        println!(
+            "{prefix}spill: {} block(s) spilled ({:.2} MiB written), {} page-in(s) \
+             ({} tokens), {} cold eviction(s), {} corrupt record(s)",
+            sp.spills,
+            sp.spill_bytes as f64 / (1024.0 * 1024.0),
+            sp.page_ins,
+            sp.pagein_tokens,
+            sp.spill_evictions,
+            sp.spill_corrupt,
+        );
+    }
 }
 
 /// `wildcat bench [--smoke] [--out DIR] [--only fig3,table4,...] [--seed N]`
@@ -277,8 +310,9 @@ fn cmd_info(args: &Args) -> anyhow::Result<()> {
 /// `wildcat cluster --replicas N --policy P [--rate R --duration D]
 /// [--shape stationary|onoff|gamma] [--fast] [--metrics-json PATH]
 /// [--kv-budget-mb MB --prefix-sharing on|off --prefill-skip on|off]
+/// [--spill-budget-mb MB --spill-dir PATH]
 /// [--audit-rate N --audit-slo-abs-err E]
-/// [--request-timeout-ms N --max-retries N]
+/// [--request-timeout-ms N --max-retries N --supervise-interval-ms N]
 /// [--fault-seed S --fault-crash-every N --fault-stall-every N
 /// --fault-stall-ms MS --fault-reject-every N]
 /// [--trace-json PATH --trace-capacity N] [--metrics-series PATH
@@ -339,6 +373,7 @@ fn cmd_cluster(args: &Args) -> anyhow::Result<()> {
             ("cache_budget", Json::Num(budget as f64)),
             ("queue_cap", Json::Num(queue_cap as f64)),
             ("kv_budget_mb", Json::Num(args.get_parse::<f64>("kv-budget-mb", 0.0))),
+            ("spill_budget_mb", Json::Num(args.get_parse::<f64>("spill-budget-mb", 0.0))),
             ("prefix_sharing", Json::Bool(cfg.pool.prefix_sharing)),
             ("prefill_skip", Json::Bool(cfg.scheduler.prefill_skip)),
             ("compressor", Json::Str(args.get_or("compressor", "compresskv"))),
@@ -372,6 +407,12 @@ fn cmd_cluster(args: &Args) -> anyhow::Result<()> {
             ..Default::default()
         },
     ));
+    // dedicated supervision thread: crashed replicas are respawned even
+    // when no traffic routes to them (the router only supervises the
+    // replicas a request happens to touch)
+    let supervise_ms = args.get_parse::<u64>("supervise-interval-ms", 5);
+    let supervisor =
+        Supervisor::start(pool.clone(), Clock::wall(), Duration::from_millis(supervise_ms.max(1)));
     let sampler = {
         let r = Arc::clone(&router);
         sampler_setup(args, &run, move || r.metrics_json())?
@@ -442,6 +483,9 @@ fn cmd_cluster(args: &Args) -> anyhow::Result<()> {
         std::fs::write(path, router.to_prometheus())?;
         println!("prometheus exposition written to {path}");
     }
+    // stop supervision before the replicas are torn down so a mid-shutdown
+    // sweep can't race a slot whose handle is being taken
+    supervisor.stop();
     pool.shutdown();
     if let Some(path) = trace_path {
         trace_finish(&path)?;
@@ -451,6 +495,7 @@ fn cmd_cluster(args: &Args) -> anyhow::Result<()> {
 
 /// `wildcat serve [--rate R --secs S --budget B] [--pjrt]
 /// [--kv-budget-mb MB --prefix-sharing on|off --prefill-skip on|off]
+/// [--spill-budget-mb MB --spill-dir PATH]
 /// [--audit-rate N --audit-slo-abs-err E]
 /// [--metrics-json PATH] [--trace-json PATH --trace-capacity N]
 /// [--metrics-series PATH --metrics-interval-ms N] [--prom PATH]`
@@ -479,6 +524,7 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
             ("cache_budget", Json::Num(budget as f64)),
             ("backend", Json::Str(if use_pjrt { "pjrt" } else { "native" }.to_string())),
             ("kv_budget_mb", Json::Num(args.get_parse::<f64>("kv-budget-mb", 0.0))),
+            ("spill_budget_mb", Json::Num(args.get_parse::<f64>("spill-budget-mb", 0.0))),
             ("prefix_sharing", Json::Bool(cfg.pool.prefix_sharing)),
             ("prefill_skip", Json::Bool(cfg.scheduler.prefill_skip)),
             ("compressor", Json::Str(args.get_or("compressor", "compresskv"))),

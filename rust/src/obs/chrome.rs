@@ -131,6 +131,14 @@ fn args_of(ev: &Event) -> Json {
             o.insert("state".to_string(), Json::Str(state.to_string()));
             o.insert("failures".to_string(), Json::Num(ev.b as f64));
         }
+        SpanKind::Spill => {
+            o.insert("spilled_blocks".to_string(), Json::Num(ev.a as f64));
+            o.insert("record_bytes".to_string(), Json::Num(ev.b as f64));
+        }
+        SpanKind::PageIn => {
+            o.insert("paged_blocks".to_string(), Json::Num(ev.a as f64));
+            o.insert("paged_tokens".to_string(), Json::Num(ev.b as f64));
+        }
     }
     Json::Obj(o)
 }

@@ -79,11 +79,17 @@ pub enum SpanKind {
     /// state's code: 0 closed, 1 open, 2 half-open; `b` = total failures
     /// observed at that replica so far).
     Breaker,
+    /// One evicted block written to the spill tier's cold store by the
+    /// writeback thread (`a` = blocks written, `b` = record bytes).
+    Spill,
+    /// Spilled blocks rematerialised into the pool on a prefix lookup
+    /// (`a` = blocks paged in, `b` = tokens they cover).
+    PageIn,
 }
 
 impl SpanKind {
     /// Every kind, in lifecycle order.
-    pub const ALL: [SpanKind; 14] = [
+    pub const ALL: [SpanKind; 16] = [
         SpanKind::Queue,
         SpanKind::PrefixLookup,
         SpanKind::Prefill,
@@ -98,6 +104,8 @@ impl SpanKind {
         SpanKind::Failover,
         SpanKind::Restart,
         SpanKind::Breaker,
+        SpanKind::Spill,
+        SpanKind::PageIn,
     ];
 
     /// The canonical snake_case span name used in trace exports.
@@ -117,6 +125,8 @@ impl SpanKind {
             SpanKind::Failover => "failover",
             SpanKind::Restart => "restart",
             SpanKind::Breaker => "breaker",
+            SpanKind::Spill => "spill",
+            SpanKind::PageIn => "pagein",
         }
     }
 

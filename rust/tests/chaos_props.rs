@@ -204,6 +204,69 @@ fn chaos_soak_records_restarts_and_failovers_while_conserving_outcomes() {
     pool.shutdown();
 }
 
+/// Failover affinity re-pin: when an affinity session's home replica
+/// crashes mid-request, the failed-over request lands on a survivor and
+/// the session is re-pinned there — subsequent requests of the same
+/// session follow the warm KV state to the survivor instead of bouncing
+/// back to the freshly respawned (cold) home.
+#[test]
+fn failover_repins_affinity_session_to_surviving_replica() {
+    // crash each replica's worker on its very first engine step; only
+    // the session's home ever receives work while the plan is armed
+    let plan = FaultPlan::new(FaultConfig { seed: 3, crash_every: 1, ..Default::default() }, 2)
+        .expect("active plan");
+    let pool = Arc::new(ReplicaPool::spawn(
+        2,
+        chaos_server_cfg(16, Some(plan.clone())),
+        Arc::new(StreamingLlm),
+        |i| tiny_model(80 + i as u64),
+    ));
+    let router = Router::new(
+        pool.clone(),
+        RouterConfig {
+            policy: RoutingPolicy::Affinity,
+            max_retries: 2,
+            backoff_base: Duration::from_millis(1),
+            backoff_cap: Duration::from_millis(5),
+            seed: 11,
+            ..Default::default()
+        },
+    );
+    let session = 42u64;
+    assert_eq!(router.pinned_replica(session), None, "no pin before any failover");
+    let r = router.submit(vec![1, 2, 3, 4], 2, Some(session)).expect("healthy cluster accepts");
+    let home = r.replica;
+    // the injected crash kills the home worker at its first engine step
+    let mut died = false;
+    for _ in 0..1000 {
+        if pool.worker_died(home) {
+            died = true;
+            break;
+        }
+        std::thread::sleep(Duration::from_millis(2));
+    }
+    assert!(died, "injected crash never killed the home replica");
+    // end the chaos phase before driving the failover so the survivor
+    // (which has not stepped yet) does not crash on the re-routed work
+    plan.disarm();
+    let outcome = router.await_outcome(r, Duration::from_secs(60));
+    assert!(outcome.is_completed(), "failed-over request must complete, got {}", outcome.name());
+    let pinned = router.pinned_replica(session).expect("failover must record a pin");
+    assert_ne!(pinned, home, "the pin must point at the survivor, not the crashed home");
+    // later requests of the session follow the pin to the survivor
+    for _ in 0..3 {
+        let r2 = router.submit(vec![5, 6, 7], 1, Some(session)).expect("survivor accepts");
+        assert_eq!(r2.replica, pinned, "session must stay on its re-pinned replica");
+        assert!(router.await_outcome(r2, Duration::from_secs(60)).is_completed());
+    }
+    // a different session still follows its hash (no global re-pin)
+    assert_eq!(router.pinned_replica(session + 1), None);
+    let s = router.snapshot();
+    assert!(s.failovers >= 1, "the crash must surface as a failover: {s:?}");
+    assert_eq!(s.terminal(), s.requests, "outcome conservation: {s:?}");
+    pool.shutdown();
+}
+
 /// Run a fixed single-replica workload and return its token streams plus
 /// the deterministic router counters.
 fn run_fixed_workload(faults: Option<Arc<FaultPlan>>) -> (Vec<Vec<u32>>, Vec<u64>) {

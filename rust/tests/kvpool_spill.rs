@@ -1,0 +1,198 @@
+//! Integration tests for the `kvpool::spill` disk tier — the PR-10
+//! acceptance contract:
+//!
+//! * with spill **off** (`spill: None`, the default) the pool snapshot
+//!   carries no spill block and a fixed workload produces exactly the
+//!   token streams of a spill-less build;
+//! * with spill **on** under a tight float budget, the same workload
+//!   completes with **zero** rejections, the evict tier spills cold
+//!   prefix blocks to disk, repeat prompts page them back
+//!   (`page_ins > 0`), and the served tokens are bit-identical to the
+//!   spill-off run — the disk tier trades I/O for recompute, never
+//!   accuracy;
+//! * corrupt or torn on-disk records are detected by the integrity
+//!   word, counted in `spill_corrupt`, and served as **misses**: the
+//!   caller falls back to cold prefill and the pool ends up with the
+//!   exact original rows, never garbage.
+
+use std::sync::Arc;
+use std::time::Duration;
+use wildcat::coordinator::{SchedulerConfig, Server, ServerConfig};
+use wildcat::kvcache::StreamingLlm;
+use wildcat::kvpool::{spill_budget_bytes_from_mb, KvPool, KvPoolConfig, SpillParams};
+use wildcat::linalg::Matrix;
+use wildcat::model::{ModelConfig, Transformer};
+use wildcat::rng::Rng;
+
+fn tiny_model_cfg() -> ModelConfig {
+    ModelConfig { vocab: 16, d_model: 16, n_layers: 2, n_heads: 2, d_ff: 32, max_len: 256 }
+}
+
+/// Run the fixed shared-root workload sequentially (submit, wait, next)
+/// so the admission/eviction interleaving is deterministic. Returns the
+/// per-request token streams plus the final pool snapshot.
+///
+/// Three rounds over four 40-token roots with a unique 8-token suffix
+/// per request: round 1 populates the radix, the tight budget evicts
+/// cold roots while other roots are active, and rounds 2-3 re-touch
+/// every root after its eviction.
+fn run_shared_root_workload(
+    pool_cfg: KvPoolConfig,
+) -> (Vec<Vec<u32>>, wildcat::kvpool::PoolSnapshot) {
+    let cfg = ServerConfig {
+        scheduler: SchedulerConfig { cache_budget: 1000, slack: 8, ..Default::default() },
+        pool: pool_cfg,
+        ..Default::default()
+    };
+    let mcfg = tiny_model_cfg();
+    let server =
+        Server::spawn(cfg, Arc::new(StreamingLlm), move || {
+            Transformer::random(mcfg, &mut Rng::seed_from(7))
+        });
+    let mut streams = Vec::new();
+    for round in 0..3u32 {
+        for root in 0..4u32 {
+            let mut prompt: Vec<u32> = (0..40).map(|j| (j + 5 * root) % 16).collect();
+            let k = round * 4 + root; // globally unique suffix per request
+            prompt.extend([k % 16; 8]);
+            let (id, rx) = server.submit(prompt, 2).expect("admission queue accepts");
+            let resp = rx.recv_timeout(Duration::from_secs(60)).expect("request served");
+            assert_eq!(resp.id, id);
+            streams.push(resp.tokens);
+        }
+    }
+    let snap = server.client().pool_snapshot();
+    let counters = server.metrics().counters();
+    assert_eq!(counters.completed, 12, "every request must complete");
+    assert_eq!(counters.rejected, 0, "the pressure ladder must absorb, not reject");
+    server.shutdown();
+    (streams, snap)
+}
+
+/// Spill-off runs are bit-identical to a spill-less build, and turning
+/// spill on under the same tight budget changes memory traffic — spills
+/// out, page-ins back — but not one served token.
+#[test]
+fn spill_tier_pages_back_evicted_roots_without_changing_tokens() {
+    // one active 50-token sequence = 50 tokens * 4 lh * 17 floats; a
+    // two-sequence budget holds the active request plus ~one cached
+    // root, so older roots are evicted (and spilled) between rounds
+    let tight = 2 * 50 * 4 * 17;
+    let base = KvPoolConfig { budget_floats: tight, block_tokens: 8, ..Default::default() };
+
+    let (off_streams, off_snap) = run_shared_root_workload(base.clone());
+    assert!(off_snap.spill.is_none(), "spill: None must not grow a snapshot block");
+    assert!(
+        off_streams.iter().all(|t| t.len() == 2),
+        "every request decodes its full budget"
+    );
+
+    let dir = std::env::temp_dir().join(format!("wildcat_spill_serve_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    let on_cfg = KvPoolConfig {
+        spill: Some(SpillParams {
+            dir: dir.clone(),
+            budget_bytes: spill_budget_bytes_from_mb(4.0),
+            replica: 0,
+        }),
+        ..base
+    };
+    let (on_streams, on_snap) = run_shared_root_workload(on_cfg);
+    assert_eq!(on_streams, off_streams, "the disk tier must never change served tokens");
+
+    let sp = on_snap.spill.expect("spill configured");
+    assert!(sp.spills > 0, "the tight budget must push evicted roots to disk");
+    assert!(sp.page_ins > 0, "repeat roots must page back from the cold index");
+    assert_eq!(sp.pagein_tokens % 8, 0, "page-ins are whole blocks");
+    assert_eq!(sp.spill_corrupt, 0);
+    assert_eq!(on_snap.admission_rejects, 0, "zero rejections with the disk rung in place");
+    assert!(sp.used_bytes <= sp.budget_bytes, "cold index must hold its byte budget");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// Token stream whose KV rows are a deterministic function of the token
+/// id, so exact row identity after a page-in or a fallback recompute is
+/// checkable.
+fn tagged_prefill(tokens: &[u32], n_lh: usize, d: usize) -> (Vec<Matrix>, Vec<Matrix>) {
+    let mk = |scale: f32| {
+        (0..n_lh)
+            .map(|lh| {
+                Matrix::from_fn(tokens.len(), d, |i, j| {
+                    scale * (tokens[i] as f32 + lh as f32 * 1000.0 + j as f32 * 0.01)
+                })
+            })
+            .collect::<Vec<_>>()
+    };
+    (mk(1.0), mk(-1.0))
+}
+
+/// Corrupt on-disk records are served as misses — the lookup falls back
+/// to cold prefill, `spill_corrupt` counts the detection, and the pool
+/// ends up with the exact original rows.
+#[test]
+fn corrupt_spill_records_fall_back_to_cold_prefill() {
+    let dir = std::env::temp_dir().join(format!("wildcat_spill_corrupt_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    let n = 32usize;
+    let floats_per_seq = n * 2 * (4 + 4 + 1); // n_lh=2, d_k=d_v=4
+    let cfg = KvPoolConfig {
+        budget_floats: floats_per_seq,
+        block_tokens: 8,
+        spill: Some(SpillParams {
+            dir: dir.clone(),
+            budget_bytes: spill_budget_bytes_from_mb(4.0),
+            replica: 0,
+        }),
+        ..Default::default()
+    };
+    let p = KvPool::new(cfg, Arc::new(StreamingLlm));
+    let a: Vec<u32> = (0..n as u32).collect();
+    let b: Vec<u32> = (0..n as u32).map(|t| t + 10_000).collect();
+    let (ka, va) = tagged_prefill(&a, 2, 4);
+    let (kb, vb) = tagged_prefill(&b, 2, 4);
+
+    // budget fits one prompt: admitting B evicts (and spills) A's roots
+    p.register_prefill(1, &a, &ka, &va).unwrap();
+    p.drop_sequence(1);
+    p.register_prefill(2, &b, &kb, &vb).unwrap();
+    p.drop_sequence(2);
+    p.register_prefill(3, &b, &kb, &vb).unwrap(); // keep B hot
+    assert!(p.snapshot().spill.unwrap().spills > 0, "A's eviction must spill");
+
+    // drain the writeback thread, then truncate every record on disk —
+    // the shape a torn write leaves after a crash
+    let store = p.spill_store().expect("spill configured");
+    store.flush();
+    let mut truncated = 0;
+    for entry in std::fs::read_dir(&dir).unwrap() {
+        let path = entry.unwrap().path();
+        if path.extension().is_some_and(|e| e == "wcsp") {
+            std::fs::OpenOptions::new().write(true).open(&path).unwrap().set_len(7).unwrap();
+            truncated += 1;
+        }
+    }
+    assert!(truncated > 0, "flush must have materialised the spilled records");
+
+    // the damaged records must read as a miss, never as rows
+    let h = p.lookup_prefix(&a);
+    assert_eq!(h.matched_tokens(), 0, "corrupt records must page in nothing");
+    p.release_prefix(h);
+    let sp = p.snapshot().spill.unwrap();
+    assert!(sp.spill_corrupt >= 1, "integrity failure must be counted");
+    assert_eq!(sp.page_ins, 0);
+
+    // fallback: the caller cold-prefills A from scratch and the pool
+    // holds the exact original rows afterwards (B released first so the
+    // one-sequence budget has an evictable tier to reclaim from)
+    p.drop_sequence(3);
+    let r = p.register_prefill(4, &a, &ka, &va).unwrap();
+    assert_eq!(r.matched_tokens, 0, "nothing to resume from after the corruption");
+    let layers = p.gather(4).expect("sequence registered");
+    assert_eq!(layers.len(), 2);
+    for (lh, (k, v, w)) in layers.iter().enumerate() {
+        assert_eq!(k, &ka[lh], "fallback keys must match the original rows");
+        assert_eq!(v, &va[lh], "fallback values must match the original rows");
+        assert!(w.iter().all(|&x| x == 1.0), "cold prefill rows carry unit weights");
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}
